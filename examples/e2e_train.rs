@@ -1,0 +1,132 @@
+//! End-to-end driver: the full three-layer system on a realistic
+//! workload, proving all layers compose.
+//!
+//! - L3 (this binary + the ranksvm coordinator): BMRM loop, tree oracle,
+//!   metrics, logging;
+//! - L2/L1 (AOT JAX/Pallas artifacts via PJRT): the dense score matvec
+//!   and gradient assembly, when `artifacts/` is present — the run
+//!   reports both backends and checks they agree;
+//! - workload: Reuters-like sparse similarity ranking (the paper's §5.1
+//!   construction) at m = 20 000, plus a dense Cadata-like run through
+//!   the XLA path.
+//!
+//! Emits a JSONL loss curve to `e2e_loss_curve.jsonl` and a summary to
+//! stdout; EXPERIMENTS.md records a reference run.
+//!
+//!     cargo run --release --example e2e_train
+
+use ranksvm::coordinator::{evaluate, train, BackendKind, Method, TrainConfig};
+use ranksvm::data::synthetic;
+use ranksvm::util::json::Json;
+use std::io::Write;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+
+    // ---------- Part 1: sparse Reuters-like workload (native backend) ----
+    let m = 20_000;
+    println!("== e2e part 1: sparse similarity ranking (reuters-like, m={m}) ==");
+    let ds = synthetic::reuters_like(m, 2024);
+    println!(
+        "built corpus: m={} vocab={} s={:.1} distinct-scores={}",
+        ds.len(),
+        ds.dim(),
+        ds.sparsity(),
+        ds.n_levels()
+    );
+    let (tr, te) = ds.split(4000, 1);
+    let cfg = TrainConfig {
+        method: Method::Tree,
+        lambda: 1e-5, // paper's Reuters value
+        epsilon: 1e-3,
+        ..Default::default()
+    };
+    let out = train(&tr, &cfg)?;
+    let test_err = evaluate(&out.model, &te);
+    println!(
+        "tree: {} iters in {:.2}s (oracle {:.1} ms/iter) objective={:.6} gap={:.2e} test_err={:.4}",
+        out.iterations,
+        out.train_secs,
+        1e3 * out.avg_oracle_secs(),
+        out.objective,
+        out.gap,
+        test_err
+    );
+
+    // Loss curve to JSONL.
+    let curve_path = "e2e_loss_curve.jsonl";
+    let mut f = std::fs::File::create(curve_path)?;
+    for (iter, objective, gap) in &out.trace {
+        writeln!(
+            f,
+            "{}",
+            Json::obj(vec![
+                ("iter", (*iter).into()),
+                ("objective", (*objective).into()),
+                ("gap", (*gap).into()),
+            ])
+            .to_string()
+        )?;
+    }
+    println!("loss curve ({} points) → {curve_path}", out.trace.len());
+
+    // Loss curve sanity: objective decreases, gap shrinks.
+    let first = out.trace.first().unwrap();
+    let last = out.trace.last().unwrap();
+    assert!(last.1 <= first.1, "objective did not improve");
+    assert!(last.2 < 1e-3, "gap did not reach epsilon");
+
+    // ---------- Part 2: dense workload through the XLA (PJRT) path -------
+    println!("\n== e2e part 2: dense ranking through AOT JAX/Pallas artifacts ==");
+    let artifacts = std::env::var("RANKSVM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&artifacts).join("manifest.txt").is_file() {
+        let dense = synthetic::cadata_like(8000, 7);
+        let (dtr, dte) = dense.split(2000, 2);
+        let native_cfg = TrainConfig { method: Method::Tree, lambda: 0.1, ..Default::default() };
+        let xla_cfg = TrainConfig {
+            method: Method::Tree,
+            backend: BackendKind::Xla,
+            lambda: 0.1,
+            artifacts_dir: artifacts.clone(),
+            ..Default::default()
+        };
+        let native = train(&dtr, &native_cfg)?;
+        let xla = train(&dtr, &xla_cfg)?;
+        let native_err = evaluate(&native.model, &dte);
+        let xla_err = evaluate(&xla.model, &dte);
+        println!(
+            "native backend: {} iters {:.2}s objective={:.6} test_err={:.4}",
+            native.iterations, native.train_secs, native.objective, native_err
+        );
+        println!(
+            "xla    backend: {} iters {:.2}s objective={:.6} test_err={:.4}",
+            xla.iterations, xla.train_secs, xla.objective, xla_err
+        );
+        assert!(
+            (native.objective - xla.objective).abs() < 5e-3 * (1.0 + native.objective.abs()),
+            "backends disagree"
+        );
+        println!("backends agree (|Δobjective| within f32 tolerance) ✓");
+    } else {
+        println!("artifacts/ missing — run `make artifacts` to exercise the PJRT path");
+    }
+
+    // ---------- Part 3: the paper's headline contrast on this testbed ----
+    println!("\n== e2e part 3: tree vs pair oracle at m=20k (Fig. 1 spot check) ==");
+    let spot = tr.prefix(tr.len().min(20_000));
+    for method in [Method::Tree, Method::Pair] {
+        let mut c = cfg.clone();
+        c.method = method;
+        c.max_iter = 5; // per-iteration cost comparison only
+        let out = train(&spot, &c)?;
+        println!(
+            "{:<5} avg oracle cost over {} iters: {:>9.1} ms",
+            out.method,
+            out.iterations,
+            1e3 * out.avg_oracle_secs()
+        );
+    }
+
+    println!("\ne2e complete in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

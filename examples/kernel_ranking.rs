@@ -1,0 +1,66 @@
+//! Kernelized RankSVM through the reduced-set (Nyström) approximation —
+//! the paper's §6 extension realized: a nonlinear ranking problem that
+//! defeats any linear ranker, solved by TreeRSVM on RBF Nyström features
+//! while keeping the O(ms + m log m) per-iteration cost (s = reduced-set
+//! size).
+//!
+//!     cargo run --release --example kernel_ranking
+
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::Dataset;
+use ranksvm::kernel::{train_kernel, Kernel};
+use ranksvm::linalg::CsrMatrix;
+use ranksvm::metrics;
+use ranksvm::util::rng::Rng;
+
+/// Ring-shaped utility: items closest to radius 2 are best — strictly
+/// non-monotone in every linear direction.
+fn ring_dataset(m: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut triplets = Vec::new();
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let a = rng.normal();
+        let b = rng.normal();
+        triplets.push((i, 0, a));
+        triplets.push((i, 1, b));
+        let r = (a * a + b * b).sqrt();
+        y.push(-(r - 2.0).abs() + 0.02 * rng.normal());
+    }
+    Dataset::new(CsrMatrix::from_triplets(m, 2, triplets), y, None, "ring")
+}
+
+fn main() -> anyhow::Result<()> {
+    let ds = ring_dataset(1200, 2024);
+    let (tr, te) = ds.split(400, 5);
+    let cfg = TrainConfig { method: Method::Tree, lambda: 1e-3, ..Default::default() };
+    // NDCG gains need non-negative labels; ranking metrics are invariant
+    // to the shift.
+    let y_min = te.y.iter().cloned().fold(f64::INFINITY, f64::min);
+    let te_gain: Vec<f64> = te.y.iter().map(|v| v - y_min).collect();
+
+    // Linear RankSVM: doomed on a ring.
+    let lin = train(&tr, &cfg)?;
+    let lin_pred = lin.model.predict(&te);
+    println!(
+        "linear  RankSVM: test pairwise error {:.4}  ndcg@10 {:.4}",
+        metrics::pairwise_error(&lin_pred, &te.y),
+        metrics::ndcg_at_k(&lin_pred, &te_gain, 10),
+    );
+
+    // RBF reduced-set RankSVM across reduced-set sizes.
+    for k in [10usize, 50, 200] {
+        let t = std::time::Instant::now();
+        let (km, outcome) = train_kernel(&tr, &cfg, Kernel::Rbf { gamma: 0.5 }, k, 7)?;
+        let pred = km.predict(&te);
+        println!(
+            "rbf k={k:<4} RankSVM: test pairwise error {:.4}  ndcg@10 {:.4}  ({} iters, {:.2}s)",
+            metrics::pairwise_error(&pred, &te.y),
+            metrics::ndcg_at_k(&pred, &te_gain, 10),
+            outcome.iterations,
+            t.elapsed().as_secs_f64(),
+        );
+    }
+    println!("\n(linear ≈ 0.5 = random on a ring; RBF reduced-set should reach < 0.1)");
+    Ok(())
+}

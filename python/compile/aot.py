@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the L2 graphs once to HLO text + manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces, for each configured shape:
+  scores_{M}x{N}.hlo.txt      (x: f32[M,N], w: f32[N]) -> (f32[M],)
+  grad_{M}x{N}.hlo.txt        (x: f32[M,N], c: f32[M]) -> (f32[N],)
+  paircount_{M}.hlo.txt       (p, y, v: f32[M]) -> (f32[M], f32[M])
+plus manifest.txt (one `op m n file` line per artifact — parsed by
+rust/src/runtime/manifest.rs).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Row-tile heights × feature widths for the matvec artifacts. N=8 covers
+# cadata-like data exactly; N=64 is the padding bucket for wider dense
+# sets. Taller tiles amortize per-execute overhead (the runtime prefers
+# the tallest fitting tile); M=256 serves small tests.
+MATVEC_SHAPES = [(256, 8), (1024, 8), (4096, 8), (1024, 64), (4096, 64)]
+# Tile sizes for the pair-count artifact (PairRSVM baseline / AUC tile).
+PAIRCOUNT_SIZES = [256, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scores(m: int, n: int) -> str:
+    x = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(jax.jit(model.scores_fn).lower(x, w))
+
+
+def lower_grad(m: int, n: int) -> str:
+    x = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    c = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return to_hlo_text(jax.jit(model.grad_fn).lower(x, c))
+
+
+def lower_paircount(m: int) -> str:
+    v = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return to_hlo_text(jax.jit(model.pair_count_fn).lower(v, v, v))
+
+
+def build(out_dir: str, matvec_shapes=None, paircount_sizes=None) -> list[str]:
+    """Lower everything into ``out_dir``; returns manifest lines."""
+    matvec_shapes = matvec_shapes or MATVEC_SHAPES
+    paircount_sizes = paircount_sizes or PAIRCOUNT_SIZES
+    os.makedirs(out_dir, exist_ok=True)
+    lines = ["# ranksvm AOT artifact manifest: op m n file"]
+
+    for m, n in matvec_shapes:
+        fname = f"scores_{m}x{n}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_scores(m, n))
+        lines.append(f"scores {m} {n} {fname}")
+        print(f"lowered {fname}")
+
+        fname = f"grad_{m}x{n}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_grad(m, n))
+        lines.append(f"grad {m} {n} {fname}")
+        print(f"lowered {fname}")
+
+    for m in paircount_sizes:
+        fname = f"paircount_{m}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_paircount(m))
+        lines.append(f"paircount {m} 0 {fname}")
+        print(f"lowered {fname}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote manifest with {len(lines) - 1} artifacts to {out_dir}")
+    return lines
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import grad, pair_count, ref, scores  # noqa: F401

@@ -1,0 +1,49 @@
+"""Pallas kernel: blocked subgradient assembly  a = X^T @ coeffs  (L1).
+
+The second `O(ms)` hot spot (Lemma 2 / Algorithm 3 line 24). The row
+blocks stream through VMEM exactly as in ``scores``; the `(n,)` output
+block is grid-invariant (index map pins it to block 0), so it stays
+VMEM-resident and accumulates across the grid — the standard Pallas
+reduction idiom, equivalent to a threadblock-level partial-sum + final
+reduction on GPU but with the accumulator held in the scratchpad.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 256
+
+
+def _grad_kernel(x_ref, c_ref, o_ref):
+    """Accumulate o += x_block^T @ c_block over the row-block grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def grad(x, coeffs, *, block_m=DEFAULT_BLOCK_M):
+    """a = X^T @ coeffs with X (m, n) f32, coeffs (m,) f32."""
+    m, n = x.shape
+    bm = min(block_m, m)
+    if m % bm != 0:
+        raise ValueError(f"m={m} not divisible by block_m={bm}")
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, coeffs)

@@ -1,0 +1,82 @@
+"""Pallas kernel: tiled O(m^2) pair-violation counting (L1).
+
+The compute hot spot of the PairRSVM baseline — eqs. (5)-(6) —
+expressed as a 2-D grid of (BI × BJ) tiles of masked outer comparisons:
+
+    c[i] = Σ_j [y_j > y_i] · [p_i > p_j − 1] · valid_i · valid_j
+    d[i] = Σ_j [y_j < y_i] · [p_i < p_j + 1] · valid_i · valid_j
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): where a CUDA formulation
+would assign a threadblock per (i, j) tile with shared-memory staging,
+here each grid step holds one `(BI,)` slice of p/y and one `(BJ,)` slice
+in VMEM and materializes the `(BI, BJ)` comparison tile as a broadcast
+compare on the VPU — no HBM traffic beyond the two input slices. The
+`j` grid dimension is innermost, so the `(BI,)` output blocks stay
+resident and accumulate across the j sweep.
+
+The `valid` mask makes padding exact: the rust runtime pads m up to the
+artifact tile and passes 0.0 for padding rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _pair_count_kernel(pi_ref, yi_ref, vi_ref, pj_ref, yj_ref, vj_ref, c_ref, d_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    pi = pi_ref[...][:, None]  # (BI, 1)
+    yi = yi_ref[...][:, None]
+    vi = vi_ref[...][:, None]
+    pj = pj_ref[...][None, :]  # (1, BJ)
+    yj = yj_ref[...][None, :]
+    vj = vj_ref[...][None, :]
+
+    vv = vi * vj
+    # Canonical hinge predicate (matches the rust oracles bit-for-bit).
+    c_tile = jnp.where((yj > yi) & (1.0 + pi - pj > 0.0), vv, 0.0)
+    d_tile = jnp.where((yj < yi) & (1.0 + pj - pi > 0.0), vv, 0.0)
+    c_ref[...] += jnp.sum(c_tile, axis=1)
+    d_ref[...] += jnp.sum(d_tile, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pair_count(p, y, valid, *, block=DEFAULT_BLOCK):
+    """(c, d) margin-violation counts; p/y/valid are (m,) f32."""
+    (m,) = p.shape
+    b = min(block, m)
+    if m % b != 0:
+        raise ValueError(f"m={m} not divisible by block={b}")
+    grid = (m // b, m // b)
+    vec = lambda index: pl.BlockSpec((b,), index)  # noqa: E731
+    return pl.pallas_call(
+        _pair_count_kernel,
+        grid=grid,
+        in_specs=[
+            vec(lambda i, j: (i,)),  # p rows
+            vec(lambda i, j: (i,)),  # y rows
+            vec(lambda i, j: (i,)),  # valid rows
+            vec(lambda i, j: (j,)),  # p cols
+            vec(lambda i, j: (j,)),  # y cols
+            vec(lambda i, j: (j,)),  # valid cols
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i, j: (i,)),
+            pl.BlockSpec((b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(p, y, valid, p, y, valid)

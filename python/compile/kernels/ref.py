@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package is validated against these
+references by ``python/tests/`` (hypothesis sweeps) before the AOT
+artifacts are built. They are also what the kernels lower to
+numerically: the rust integration test executes the AOT artifacts and
+compares against an independent Rust implementation of the same math.
+"""
+
+import jax.numpy as jnp
+
+
+def scores_ref(x, w):
+    """p = X @ w for a dense row-major tile.
+
+    Args:
+      x: (m, n) f32 feature tile.
+      w: (n,) f32 weight vector.
+    Returns:
+      (m,) f32 predicted scores.
+    """
+    return x @ w
+
+
+def grad_ref(x, coeffs):
+    """a = X^T @ coeffs — the subgradient assembly (Lemma 2).
+
+    Args:
+      x: (m, n) f32 feature tile.
+      coeffs: (m,) f32 per-example gradient coefficients (c - d)/N.
+    Returns:
+      (n,) f32 subgradient contribution of this tile.
+    """
+    return x.T @ coeffs
+
+
+def pair_count_ref(p, y, valid):
+    """Frequencies c, d of eqs. (5)-(6) by explicit O(m^2) broadcasting.
+
+    The baseline PairRSVM computation expressed as masked outer
+    comparisons — the reference for the tiled ``pair_count`` kernel.
+
+    Args:
+      p: (m,) f32 predicted scores.
+      y: (m,) f32 utility labels.
+      valid: (m,) f32 {0,1} mask (0 marks padding rows).
+    Returns:
+      (c, d): two (m,) f32 vectors of margin-violation counts.
+    """
+    pi = p[:, None]
+    pj = p[None, :]
+    yi = y[:, None]
+    yj = y[None, :]
+    vv = valid[:, None] * valid[None, :]
+    # Canonical hinge predicate 1 + p_low - p_high > 0 (same float
+    # expression as every rust oracle — see losses/tree.rs).
+    c = jnp.sum(jnp.where((yj > yi) & (1.0 + pi - pj > 0.0), vv, 0.0), axis=1)
+    d = jnp.sum(jnp.where((yj < yi) & (1.0 + pj - pi > 0.0), vv, 0.0), axis=1)
+    return c, d
+
+
+def hinge_loss_ref(p, y):
+    """Average pairwise hinge loss, eq. (4) — direct O(m^2) definition."""
+    diff = 1.0 + p[:, None] - p[None, :]
+    comparable = y[:, None] < y[None, :]
+    n = jnp.sum(comparable)
+    loss = jnp.sum(jnp.where(comparable, jnp.maximum(diff, 0.0), 0.0))
+    return jnp.where(n > 0, loss / n, 0.0)

@@ -1,0 +1,53 @@
+"""Pallas kernel: blocked dense score matvec  p = X @ w  (L1).
+
+The `O(ms)` hot spot of every TreeRSVM iteration (Algorithm 3 line 1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the feature tile is
+streamed HBM→VMEM in `(BM, n)` blocks via the BlockSpec grid while the
+weight vector stays VMEM-resident (`n ≤ 64` floats here — negligible);
+each block is one VPU-friendly contraction. VMEM footprint per grid step
+is `BM·n·4 + n·4 + BM·4` bytes — 128 KiB at the default `(512, 64)`,
+far under the ~16 MiB VMEM budget, leaving room for double buffering.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO with identical
+numerics (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block height. 8 sublanes × 64 ≈ a few VREGs per step on
+# real TPU; on CPU-interpret it only shapes the HLO loop structure.
+DEFAULT_BLOCK_M = 256
+
+
+def _scores_kernel(x_ref, w_ref, o_ref):
+    """One row block: o = x_block @ w."""
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def scores(x, w, *, block_m=DEFAULT_BLOCK_M):
+    """p = X @ w with X (m, n) f32, w (n,) f32; m must divide by block_m
+    (the AOT wrapper pads rows to the tile height).
+    """
+    m, n = x.shape
+    bm = min(block_m, m)
+    if m % bm != 0:
+        raise ValueError(f"m={m} not divisible by block_m={bm}")
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,48 @@
+"""L2: the jitted compute graphs that the AOT pipeline lowers.
+
+Each function composes the L1 Pallas kernels into the exact signature
+the rust runtime executes (fixed shapes, f32, tuple outputs — see
+``rust/src/runtime/``):
+
+- ``scores_fn(x, w) -> (p,)``       score matvec for one row tile
+- ``grad_fn(x, c) -> (a,)``         subgradient assembly for one tile
+- ``pair_count_fn(p, y, v) -> (c, d)``  tiled pair-violation counts
+- ``hinge_from_counts_fn``          Lemma-1 loss assembly (fused tail)
+
+Python runs only at build time: ``aot.py`` lowers these once to HLO
+text under ``artifacts/`` and the rust coordinator loads the artifacts
+via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import grad as grad_kernel
+from .kernels import pair_count as pair_count_kernel
+from .kernels import scores as scores_kernel
+
+
+def scores_fn(x, w):
+    """One row tile of p = X @ w. Returns a 1-tuple (AOT convention)."""
+    return (scores_kernel.scores(x, w),)
+
+
+def grad_fn(x, coeffs):
+    """One row tile of a = X^T @ coeffs. Returns a 1-tuple."""
+    return (grad_kernel.grad(x, coeffs),)
+
+
+def pair_count_fn(p, y, valid):
+    """Tiled pair-violation counts (c, d) — 2-tuple output."""
+    c, d = pair_count_kernel.pair_count(p, y, valid)
+    return (c, d)
+
+
+def hinge_from_counts_fn(p, c, d, inv_n):
+    """Lemma 1: loss = (1/N) Σ ((c_i − d_i)·p_i + c_i), fused reduction.
+
+    ``inv_n`` is a (1,) array so N stays a runtime input (the pair count
+    depends on the labels, not the shapes).
+    """
+    cd = c - d
+    loss = jnp.sum(cd * p + c) * inv_n[0]
+    return (loss.reshape((1,)),)

@@ -1,0 +1,35 @@
+"""AOT pipeline: artifacts lower to parseable HLO text + valid manifest."""
+
+import os
+
+from compile import aot
+
+
+def test_build_writes_artifacts_and_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    lines = aot.build(out, matvec_shapes=[(64, 8)], paircount_sizes=[32])
+    # manifest: header + scores + grad + paircount
+    assert len(lines) == 4
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    assert "scores 64 8 scores_64x8.hlo.txt" in manifest
+    assert "grad 64 8 grad_64x8.hlo.txt" in manifest
+    assert "paircount 32 0 paircount_32.hlo.txt" in manifest
+    for fname in ["scores_64x8.hlo.txt", "grad_64x8.hlo.txt", "paircount_32.hlo.txt"]:
+        text = open(os.path.join(out, fname)).read()
+        assert text.startswith("HloModule"), f"{fname} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_hlo_text_is_plain_ops_no_custom_calls(tmp_path):
+    """interpret=True must lower to plain HLO the CPU client can run —
+    a Mosaic custom-call here would break the rust runtime."""
+    text = aot.lower_scores(64, 8)
+    assert "custom-call" not in text.lower()
+    text = aot.lower_paircount(32)
+    assert "custom-call" not in text.lower()
+
+
+def test_lowering_is_deterministic():
+    a = aot.lower_scores(64, 8)
+    b = aot.lower_scores(64, 8)
+    assert a == b

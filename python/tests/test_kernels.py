@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value regimes; every comparison is
+assert_allclose at f32-appropriate tolerances (the kernels and the refs
+use different contraction orders).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import grad, pair_count, ref, scores
+
+RTOL = 3e-4
+ATOL = 1e-4
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# Block sizes must divide m; sample m as multiple of the block.
+blocks = st.sampled_from([8, 16, 64, 128])
+multipliers = st.integers(min_value=1, max_value=6)
+feature_dims = st.sampled_from([1, 3, 8, 17, 64])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(block=blocks, mult=multipliers, n=feature_dims, seed=seeds)
+def test_scores_matches_ref(block, mult, n, seed):
+    m = block * mult
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, n)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(n,)).astype(np.float32))
+    got = scores.scores(x, w, block_m=block)
+    want = ref.scores_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(block=blocks, mult=multipliers, n=feature_dims, seed=seeds)
+def test_grad_matches_ref(block, mult, n, seed):
+    m = block * mult
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, n)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    got = grad.grad(x, c, block_m=block)
+    want = ref.grad_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL * np.sqrt(m))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    block=st.sampled_from([8, 32, 64]),
+    mult=st.integers(min_value=1, max_value=4),
+    seed=seeds,
+    label_kind=st.sampled_from(["real", "levels", "bipartite", "tied"]),
+    pad=st.integers(min_value=0, max_value=7),
+)
+def test_pair_count_matches_ref(block, mult, seed, label_kind, pad):
+    m = block * mult
+    r = _rng(seed)
+    p = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    if label_kind == "real":
+        y = r.normal(size=(m,))
+    elif label_kind == "levels":
+        y = r.integers(0, 5, size=(m,))
+    elif label_kind == "bipartite":
+        y = r.integers(0, 2, size=(m,))
+    else:
+        y = np.zeros((m,))
+    y = jnp.asarray(y.astype(np.float32))
+    pad = min(pad, m - 1)
+    valid = jnp.asarray((np.arange(m) < m - pad).astype(np.float32))
+    c1, d1 = pair_count.pair_count(p, y, valid, block=block)
+    c2, d2 = ref.pair_count_ref(p, y, valid)
+    # Counts are small integers in f32 — exact equality holds for m ≤ a few
+    # thousand (well below 2^24).
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_pair_count_symmetry():
+    """Σc == Σd: each violating pair is counted once on each side."""
+    r = _rng(7)
+    m = 128
+    p = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    v = jnp.ones((m,), jnp.float32)
+    c, d = pair_count.pair_count(p, y, v, block=32)
+    assert float(jnp.sum(c)) == pytest.approx(float(jnp.sum(d)))
+
+
+def test_pair_count_padding_is_exact():
+    """Padding rows must contribute nothing — compare padded vs unpadded."""
+    r = _rng(11)
+    m, pad_to = 48, 64
+    p = r.normal(size=(m,)).astype(np.float32)
+    y = r.normal(size=(m,)).astype(np.float32)
+    c_small, d_small = pair_count.pair_count(
+        jnp.asarray(p), jnp.asarray(y), jnp.ones((m,), jnp.float32), block=16
+    )
+    p_pad = np.zeros((pad_to,), np.float32)
+    y_pad = np.zeros((pad_to,), np.float32)
+    p_pad[:m], y_pad[:m] = p, y
+    valid = (np.arange(pad_to) < m).astype(np.float32)
+    c_pad, d_pad = pair_count.pair_count(
+        jnp.asarray(p_pad), jnp.asarray(y_pad), jnp.asarray(valid), block=16
+    )
+    np.testing.assert_array_equal(np.asarray(c_pad)[:m], np.asarray(c_small))
+    np.testing.assert_array_equal(np.asarray(d_pad)[:m], np.asarray(d_small))
+    np.testing.assert_array_equal(np.asarray(c_pad)[m:], 0.0)
+    np.testing.assert_array_equal(np.asarray(d_pad)[m:], 0.0)
+
+
+def test_scores_rejects_indivisible_block():
+    x = jnp.zeros((10, 3), jnp.float32)
+    w = jnp.zeros((3,), jnp.float32)
+    with pytest.raises(ValueError):
+        scores.scores(x, w, block_m=4)
+
+
+def test_margin_boundary_is_strict():
+    """p_i == p_j − 1 exactly: not a violation (eq. 5 strict inequality)."""
+    p = jnp.asarray(np.array([-1.0, 0.0], np.float32))
+    y = jnp.asarray(np.array([0.0, 1.0], np.float32))
+    v = jnp.ones((2,), jnp.float32)
+    c, d = pair_count.pair_count(p, y, v, block=2)
+    np.testing.assert_array_equal(np.asarray(c), 0.0)
+    np.testing.assert_array_equal(np.asarray(d), 0.0)

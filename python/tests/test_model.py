@@ -1,0 +1,63 @@
+"""L2 correctness: the jitted model graphs and the Lemma-1 loss assembly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_scores_fn_tuple_contract():
+    r = _rng(0)
+    x = jnp.asarray(r.normal(size=(256, 8)).astype(np.float32))
+    w = jnp.asarray(r.normal(size=(8,)).astype(np.float32))
+    out = model.scores_fn(x, w)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(out[0], ref.scores_ref(x, w), rtol=3e-4, atol=1e-4)
+
+
+def test_grad_fn_tuple_contract():
+    r = _rng(1)
+    x = jnp.asarray(r.normal(size=(256, 8)).astype(np.float32))
+    c = jnp.asarray(r.normal(size=(256,)).astype(np.float32))
+    out = model.grad_fn(x, c)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(out[0], ref.grad_ref(x, c), rtol=3e-4, atol=1e-3)
+
+
+def test_pair_count_fn_two_outputs():
+    r = _rng(2)
+    m = 256
+    p = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    v = jnp.ones((m,), jnp.float32)
+    c, d = model.pair_count_fn(p, y, v)
+    c2, d2 = ref.pair_count_ref(p, y, v)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_lemma1_identity(seed):
+    """Loss assembled from (c, d) equals the direct eq.-(4) hinge."""
+    r = _rng(seed)
+    m = 64
+    p = jnp.asarray(r.normal(size=(m,)).astype(np.float32))
+    y = jnp.asarray(r.integers(0, 6, size=(m,)).astype(np.float32))
+    v = jnp.ones((m,), jnp.float32)
+    c, d = model.pair_count_fn(p, y, v)
+    n = float(np.sum(np.asarray(y)[:, None] < np.asarray(y)[None, :]))
+    if n == 0:
+        return
+    inv_n = jnp.asarray(np.array([1.0 / n], np.float32))
+    (loss,) = model.hinge_from_counts_fn(p, c, d, inv_n)
+    direct = ref.hinge_loss_ref(p, y)
+    assert float(loss[0]) == pytest.approx(float(direct), rel=1e-4, abs=1e-5)

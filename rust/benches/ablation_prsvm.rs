@@ -1,0 +1,87 @@
+//! Ablation C — materialized-pair PRSVM vs our linearithmic `prsvm-tree`
+//! (sum-augmented tree; DESIGN.md §7b). Oracle-level costs and full
+//! training runs across m with r ≈ m: the pair list is O(m²) in time and
+//! memory, the tree oracle O(m log m)/O(m).
+
+mod common;
+
+use common::{fmt_secs, header, record};
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::synthetic;
+use ranksvm::losses::{count_comparable_pairs, SquaredPairOracle, SquaredTreeOracle};
+use ranksvm::util::json::Json;
+
+fn main() {
+    header("Ablation C1: squared-hinge oracle eval cost (r ≈ m)");
+    println!("{:>9} {:>14} {:>14} {:>14}", "m", "pairs-eval", "tree-eval", "pairs-mem");
+    for m in [1000usize, 2000, 4000, 8000, 16000] {
+        let ds = synthetic::cadata_like(m, 500);
+        let p: Vec<f64> = ds.y.iter().map(|v| v * 0.4).collect();
+        let n = count_comparable_pairs(&ds.y) as f64;
+        let pair_cap = 16000;
+        let (t_pairs, mem) = if m <= pair_cap {
+            let mut o = SquaredPairOracle::new(&ds.y);
+            std::hint::black_box(o.eval_full(&p, n));
+            let t = std::time::Instant::now();
+            for _ in 0..3 {
+                std::hint::black_box(o.eval_full(&p, n));
+            }
+            (Some(t.elapsed().as_secs_f64() / 3.0), o.mem_bytes())
+        } else {
+            (None, 0)
+        };
+        let mut o = SquaredTreeOracle::new();
+        std::hint::black_box(o.eval_full(&p, &ds.y, n));
+        let t = std::time::Instant::now();
+        for _ in 0..3 {
+            std::hint::black_box(o.eval_full(&p, &ds.y, n));
+        }
+        let t_tree = t.elapsed().as_secs_f64() / 3.0;
+        println!(
+            "{:>9} {:>14} {:>14} {:>13.1}M",
+            m,
+            t_pairs.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
+            fmt_secs(t_tree),
+            mem as f64 / 1e6
+        );
+        record(
+            "ablation_prsvm",
+            Json::obj(vec![
+                ("m", m.into()),
+                ("pairs_secs", t_pairs.map(Json::Num).unwrap_or(Json::Null)),
+                ("tree_secs", t_tree.into()),
+                ("pairs_mem_bytes", mem.into()),
+            ]),
+        );
+    }
+
+    header("Ablation C2: full truncated-Newton training, prsvm vs prsvm-tree");
+    println!("{:>9} {:>14} {:>14}", "m", "prsvm", "prsvm-tree");
+    for m in [1000usize, 2000, 4000, 8000] {
+        let ds = synthetic::cadata_like(m, 501);
+        print!("{m:>9}");
+        for method in [Method::Prsvm, Method::PrsvmTree] {
+            if method == Method::Prsvm && m > 4000 {
+                print!(" {:>14}", "(skipped)");
+                continue;
+            }
+            let cfg = TrainConfig { method, lambda: 0.1, epsilon: 1e-3, ..Default::default() };
+            let t = std::time::Instant::now();
+            let out = train(&ds, &cfg).expect("train");
+            let secs = t.elapsed().as_secs_f64();
+            print!(" {:>14}", fmt_secs(secs));
+            record(
+                "ablation_prsvm",
+                Json::obj(vec![
+                    ("m", m.into()),
+                    ("method", method.name().into()),
+                    ("train_secs", secs.into()),
+                    ("objective", out.objective.into()),
+                ]),
+            );
+        }
+        println!();
+    }
+    println!("\nExpected: identical objectives; tree column linearithmic, pairs");
+    println!("column quadratic in both time and memory (Fig.-3 mechanism).");
+}

@@ -1,0 +1,97 @@
+//! Ablation A — counting-structure variants inside Algorithm 3:
+//!
+//! 1. plain order-statistics red-black tree (the paper's structure),
+//! 2. dedup (`nodesize`) variant — O(log r) ops (paper §4.2 last ¶),
+//! 3. Fenwick counter over the rank-compressed label universe (ours).
+//!
+//! Swept across the number of distinct utility levels r: the paper
+//! argues dedup helps when r ≪ m but cannot beat the O(m log m) sort
+//! barrier; the Fenwick variant tests how much of the tree's cost is
+//! pointer-chasing vs. algorithmic.
+//!
+//! Also reports the two-copies (CSR+CSC) backend trade-off the paper's
+//! Fig-3 discussion mentions (7× slowdown claim for one-copy column
+//! access; here: CSC gather vs CSR scatter for the gradient).
+
+mod common;
+
+use common::{fmt_secs, header, record};
+use ranksvm::data::synthetic;
+use ranksvm::losses::tree::{fenwick_oracle, TreeOracle};
+use ranksvm::losses::{count_comparable_pairs, RankingOracle};
+use ranksvm::util::json::Json;
+
+fn time_oracle(oracle: &mut dyn RankingOracle, p: &[f64], y: &[f64], n: f64, reps: usize) -> f64 {
+    std::hint::black_box(oracle.eval(p, y, n)); // warmup
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(oracle.eval(p, y, n));
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let m = 50_000;
+    header(&format!("Ablation A: counting structure vs distinct levels r (m={m})"));
+    println!(
+        "{:>8} {:>14} {:>14} {:>14}",
+        "r", "rb-tree", "rb-dedup", "fenwick"
+    );
+    for levels in [2usize, 5, 100, 10_000, m] {
+        // ordinal() quantizes to exactly `levels`; levels == m ≈ all-distinct.
+        let ds = if levels >= m {
+            synthetic::cadata_like(m, 300)
+        } else {
+            synthetic::ordinal(m, levels, 300)
+        };
+        let p: Vec<f64> = ds.y.iter().enumerate().map(|(i, v)| v * 0.3 + (i % 17) as f64 * 0.01).collect();
+        let n = count_comparable_pairs(&ds.y) as f64;
+        let reps = 3;
+        let t_plain = time_oracle(&mut TreeOracle::new(), &p, &ds.y, n, reps);
+        let t_dedup = time_oracle(&mut TreeOracle::new_dedup(), &p, &ds.y, n, reps);
+        let t_fenwick = time_oracle(&mut fenwick_oracle(&ds.y), &p, &ds.y, n, reps);
+        println!(
+            "{:>8} {:>14} {:>14} {:>14}",
+            levels,
+            fmt_secs(t_plain),
+            fmt_secs(t_dedup),
+            fmt_secs(t_fenwick)
+        );
+        record(
+            "ablation_tree",
+            Json::obj(vec![
+                ("m", m.into()),
+                ("r", levels.into()),
+                ("rb_tree_secs", t_plain.into()),
+                ("rb_dedup_secs", t_dedup.into()),
+                ("fenwick_secs", t_fenwick.into()),
+            ]),
+        );
+    }
+    println!("\nExpected: dedup/fenwick flat-to-falling as r shrinks; all three");
+    println!("converge at r ≈ m. None can beat the O(m log m) sort (paper §4.2).");
+
+    // --- two-copies backend trade-off --------------------------------
+    header("Ablation A2: CSR-scatter vs CSC-gather gradient (two-copies trade-off)");
+    use ranksvm::compute::{ComputeBackend, NativeBackend};
+    let ds = synthetic::reuters_like_with(40_000, 50_000, 50, 301);
+    let coeffs: Vec<f64> = (0..ds.len()).map(|i| ((i * 37) % 101) as f64 / 50.0 - 1.0).collect();
+    for (label, mut backend) in [
+        ("csr-scatter", NativeBackend::new()),
+        ("csr+csc-gather", NativeBackend::with_csc()),
+    ] {
+        backend.prepare(&ds.x);
+        std::hint::black_box(backend.grad(&ds.x, &coeffs));
+        let t = std::time::Instant::now();
+        for _ in 0..5 {
+            std::hint::black_box(backend.grad(&ds.x, &coeffs));
+        }
+        let secs = t.elapsed().as_secs_f64() / 5.0;
+        println!("{label:<16} grad: {}", fmt_secs(secs));
+        record(
+            "ablation_tree",
+            Json::obj(vec![("backend", label.into()), ("grad_secs", secs.into())]),
+        );
+    }
+    println!("(the paper kept both copies for a ~7× training-time win on Reuters)");
+}

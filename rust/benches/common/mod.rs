@@ -1,0 +1,43 @@
+//! Shared bench-harness plumbing (criterion substitute — DESIGN.md §6).
+//!
+//! Each bench binary prints a paper-figure-shaped table to stdout and
+//! appends machine-readable JSONL under `bench_results/`. `FULL=1`
+//! switches to the paper's full size grids (long-running); the default
+//! grids keep `cargo bench` in minutes.
+
+#![allow(dead_code)]
+
+use ranksvm::util::json::Json;
+use std::io::Write;
+
+/// True when the full paper-scale grids were requested.
+pub fn full_scale() -> bool {
+    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Append one JSON record to `bench_results/<name>.jsonl`.
+pub fn record(name: &str, json: Json) {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join(format!("{name}.jsonl"));
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path).unwrap();
+    writeln!(f, "{}", json.to_string()).unwrap();
+}
+
+/// Pretty separator for figure sections.
+pub fn header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+/// Format seconds adaptively.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}

@@ -1,0 +1,99 @@
+//! Figure 1 — average per-iteration subgradient cost: TreeRSVM vs
+//! PairRSVM, on Cadata-like (left panel) and Reuters-like (right panel)
+//! data over exponentially growing training sizes.
+//!
+//! The paper's claim: the tree oracle scales ~m log m, the pair oracle
+//! ~m²; at 512k Reuters examples the gap is 7 s vs 2760 s. We reproduce
+//! the *shape* (who wins, roughly what factor, crossover behaviour) on
+//! this testbed. `FULL=1 cargo bench --bench fig1_iteration_cost` runs
+//! the paper's grids.
+
+mod common;
+
+use common::{fmt_secs, full_scale, header, record};
+use ranksvm::bmrm::ScoreOracle;
+use ranksvm::coordinator::trainer::DatasetOracle;
+use ranksvm::compute::NativeBackend;
+use ranksvm::data::{synthetic, Dataset};
+use ranksvm::losses::{count_comparable_pairs, PairOracle, RankingOracle, TreeOracle};
+use ranksvm::util::json::Json;
+
+/// Average full oracle cost (matvec + loss/subgradient + grad assembly)
+/// over `reps` evaluations at a nontrivial w.
+fn oracle_cost(ds: &Dataset, oracle: Box<dyn RankingOracle>, reps: usize) -> f64 {
+    let n_pairs = count_comparable_pairs(&ds.y) as f64;
+    let mut dso = DatasetOracle::new(ds, Box::new(NativeBackend::new()), oracle, n_pairs);
+    // Nontrivial weight vector: one least-squares-flavoured step.
+    let mut w = vec![0.0; ds.dim()];
+    ds.x.matvec_t(&ds.y, &mut w);
+    let norm = ranksvm::linalg::ops::norm(&w).max(1e-12);
+    ranksvm::linalg::ops::scal(1.0 / norm, &mut w);
+
+    // warmup
+    let p = dso.scores(&w);
+    let (_, coeffs) = dso.risk_at(&p);
+    std::hint::black_box(dso.grad(&coeffs));
+
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        let p = dso.scores(&w);
+        let (_, coeffs) = dso.risk_at(&p);
+        std::hint::black_box(dso.grad(&coeffs));
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap: usize) {
+    header(&format!(
+        "Fig 1 ({name}): avg subgradient-computation cost per iteration"
+    ));
+    println!("{:>9} {:>14} {:>14} {:>9}", "m", "TreeRSVM", "PairRSVM", "speedup");
+    for &m in sizes {
+        let ds = make(m);
+        let reps = if m <= 4000 { 5 } else { 2 };
+        let tree = oracle_cost(&ds, Box::new(TreeOracle::new()), reps);
+        let (pair, speedup) = if m <= pair_cap {
+            let p = oracle_cost(&ds, Box::new(PairOracle::new()), reps.min(3));
+            (Some(p), p / tree)
+        } else {
+            (None, f64::NAN)
+        };
+        println!(
+            "{:>9} {:>14} {:>14} {:>9}",
+            m,
+            fmt_secs(tree),
+            pair.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
+            if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}×") },
+        );
+        record(
+            "fig1_iteration_cost",
+            Json::obj(vec![
+                ("panel", name.into()),
+                ("m", m.into()),
+                ("tree_secs", tree.into()),
+                ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
+            ]),
+        );
+    }
+}
+
+fn main() {
+    let full = full_scale();
+    // Paper grids: cadata to 16k; reuters to 512k (tree) / pair included
+    // throughout (it took 46 min/iter at 512k on 2006 hardware — the
+    // default grid caps the pair oracle earlier).
+    let cadata_sizes: Vec<usize> =
+        if full { vec![1000, 2000, 4000, 8000, 16000] } else { vec![1000, 2000, 4000, 8000, 16000] };
+    let reuters_sizes: Vec<usize> = if full {
+        vec![1000, 2000, 4000, 8000, 16000, 32000, 64000, 128000, 256000, 512000]
+    } else {
+        vec![1000, 2000, 4000, 8000, 16000, 32000, 64000]
+    };
+    let pair_cap = if full { 512000 } else { 16000 };
+
+    panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, pair_cap);
+    panel("reuters", &|m| synthetic::reuters_like(m, 200), &reuters_sizes, pair_cap);
+
+    println!("\nExpected shape (paper): tree ≈ m·log m (near-linear rows), pair ≈ m²");
+    println!("(4× more data → pair column grows ~16×, tree column ~4–5×).");
+}

@@ -1,0 +1,94 @@
+//! 1-D line search used by the optional OCAS-style BMRM variant.
+//!
+//! The paper's §6 names "a line search procedure similar to the one
+//! proposed by Franc and Sonnenburg (2009)" as future work; we implement
+//! it as golden-section search over `β ∈ [lo, hi]` on the segment between
+//! the best-so-far iterate and the master-problem solution. `J` restricted
+//! to the segment is convex (sum of a convex risk in affine scores and a
+//! quadratic), so golden-section converges linearly to the segment
+//! minimum without derivatives.
+
+/// Golden-section minimization of a convex `f` over `[lo, hi]` with
+/// `iters` interval reductions. Returns the argmin estimate; with
+/// `iters = 12` the bracket shrinks below 0.01·(hi−lo). The endpoints are
+/// also probed so the result is never worse than `min(f(lo), f(hi))` up
+/// to bracketing error.
+pub fn golden_section(mut f: impl FnMut(f64) -> f64, lo: f64, hi: f64, iters: usize) -> f64 {
+    debug_assert!(hi > lo);
+    const INV_PHI: f64 = 0.618_033_988_749_894_8; // 1/φ
+    let mut a = lo;
+    let mut b = hi;
+    let mut c = b - (b - a) * INV_PHI;
+    let mut d = a + (b - a) * INV_PHI;
+    let mut fc = f(c);
+    let mut fd = f(d);
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - (b - a) * INV_PHI;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + (b - a) * INV_PHI;
+            fd = f(d);
+        }
+    }
+    let mid = 0.5 * (a + b);
+    // Guard against flat/boundary optima: compare against the endpoints.
+    let candidates = [(mid, f(mid)), (lo, f(lo)), (hi, f(hi))];
+    candidates
+        .iter()
+        .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+        .unwrap()
+        .0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_quadratic_minimum() {
+        let x = golden_section(|b| (b - 0.3) * (b - 0.3), 0.0, 1.0, 30);
+        assert!((x - 0.3).abs() < 1e-4, "{x}");
+    }
+
+    #[test]
+    fn boundary_minimum_left() {
+        let x = golden_section(|b| b, 0.0, 1.0, 20);
+        assert!(x < 0.01, "{x}");
+    }
+
+    #[test]
+    fn boundary_minimum_right() {
+        let x = golden_section(|b| -b, 0.0, 1.0, 20);
+        assert!(x > 0.99, "{x}");
+    }
+
+    #[test]
+    fn piecewise_linear_convex() {
+        // V-shaped hinge at 0.7.
+        let x = golden_section(|b: f64| (b - 0.7).abs(), 0.0, 1.0, 30);
+        assert!((x - 0.7).abs() < 1e-3, "{x}");
+    }
+
+    #[test]
+    fn counts_probes_economically() {
+        let mut calls = 0;
+        let _ = golden_section(
+            |b| {
+                calls += 1;
+                b * b
+            },
+            0.0,
+            1.0,
+            12,
+        );
+        // 2 initial + 12 iterations + 3 final guards = 17.
+        assert_eq!(calls, 17);
+    }
+}

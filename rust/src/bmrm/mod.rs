@@ -1,0 +1,316 @@
+//! Bundle Methods for Regularized risk Minimization — Algorithm 1.
+//!
+//! Minimizes `J(w) = R_emp(w) + λ‖w‖²` by iteratively tightening a
+//! piecewise-linear lower bound `R_t` on the convex empirical risk from
+//! cutting planes `⟨·, a_t⟩ + b_t` (first-order Taylor minorants), solving
+//! the small regularized master problem exactly at each step
+//! (see [`qp::BundleQp`]), and — following Franc & Sonnenburg (2009), as
+//! the paper does — tracking the best-so-far iterate `w_b`, terminating
+//! when the gap `ε_t = J(w_b) − J_t(w_t)` drops below `ε`.
+//!
+//! Convergence is `O(1/(ελ))` iterations *independent of m and s*
+//! (Smola et al., 2007; Theorem 3 of the paper), so end-to-end training
+//! cost is dominated by the per-iteration oracle: `O(ms + m log m)` with
+//! the tree oracle, `O(ms + m²)` with the pair oracle.
+//!
+//! The oracle interface is split score-side/feature-side
+//! ([`ScoreOracle`]) so the optional line search (§6 future work of the
+//! paper, implemented in [`linesearch`]) can probe `J` along a segment
+//! using only `O(m log m)` score-space evaluations — scores are affine
+//! along the segment, no extra `O(ms)` matvecs.
+
+pub mod linesearch;
+pub mod qp;
+
+use crate::linalg::ops;
+
+/// Decoupled risk oracle: the `O(ms)` linear algebra (score matvec,
+/// gradient assembly) is separated from the `O(m log m)` (or `O(m²)`)
+/// score-space loss so BMRM and the line search can mix them freely.
+pub trait ScoreOracle {
+    /// Feature dimension `n`.
+    fn dim(&self) -> usize;
+    /// `p = X·w` — `O(ms)`.
+    fn scores(&mut self, w: &[f64]) -> Vec<f64>;
+    /// `(R_emp, ∂R/∂p)` at the given scores — `O(m log m)` for the tree.
+    fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>);
+    /// Risk value only (line-search probes; default falls back to full).
+    fn risk_value_at(&mut self, p: &[f64]) -> f64 {
+        self.risk_at(p).0
+    }
+    /// `a = Xᵀ·coeffs` — `O(ms)`.
+    fn grad(&mut self, coeffs: &[f64]) -> Vec<f64>;
+}
+
+/// BMRM hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct BmrmConfig {
+    /// Regularization λ (paper's objective: `R_emp + λ‖w‖²`).
+    pub lambda: f64,
+    /// Termination gap ε (paper uses 1e-3, SVM^rank's default).
+    pub epsilon: f64,
+    /// Hard iteration cap (safety; convergence theory is `O(1/ελ)`).
+    pub max_iter: usize,
+    /// Inner QP tolerance and sweep cap.
+    pub qp_tol: f64,
+    pub qp_max_sweeps: usize,
+    /// Enable the OCAS-style score-space line search.
+    pub line_search: bool,
+}
+
+impl Default for BmrmConfig {
+    fn default() -> Self {
+        BmrmConfig {
+            lambda: 1e-2,
+            epsilon: 1e-3,
+            max_iter: 2000,
+            qp_tol: 1e-9,
+            qp_max_sweeps: 2000,
+            line_search: false,
+        }
+    }
+}
+
+/// Per-iteration trace record (drives Fig. 1/2 style reporting).
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    pub iter: usize,
+    /// J(w_b) so far.
+    pub best_objective: f64,
+    /// Lower bound J_t(w_t) from the master problem.
+    pub lower_bound: f64,
+    /// Gap ε_t.
+    pub gap: f64,
+    /// Empirical risk at the evaluated point.
+    pub risk: f64,
+    /// Oracle wall-clock seconds for this iteration.
+    pub oracle_secs: f64,
+}
+
+/// Optimization result.
+#[derive(Clone, Debug)]
+pub struct BmrmResult {
+    /// Best weight vector `w_b`.
+    pub w: Vec<f64>,
+    /// `J(w_b)`.
+    pub objective: f64,
+    /// Final gap `ε_t`.
+    pub gap: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub trace: Vec<IterStats>,
+    /// Total seconds inside the loss/subgradient oracle (Fig. 1 metric).
+    pub oracle_secs_total: f64,
+}
+
+/// Run Algorithm 1 from `w0` (usually zeros).
+pub fn optimize<O: ScoreOracle>(oracle: &mut O, cfg: &BmrmConfig, w0: Vec<f64>) -> BmrmResult {
+    let n = oracle.dim();
+    assert_eq!(w0.len(), n);
+    let lambda = cfg.lambda;
+
+    let mut qp = qp::BundleQp::new(lambda);
+    // Stored plane vectors a_i (needed for Gram columns and w(α)).
+    let mut planes: Vec<Vec<f64>> = Vec::new();
+
+    let mut w_b = w0.clone();
+    let mut w_cur = w0;
+    // Scores at w_b, kept for the line search.
+    let mut p_b: Option<Vec<f64>> = None;
+
+    let mut trace = Vec::new();
+    let mut oracle_secs_total = 0.0;
+    let mut j_best = f64::INFINITY;
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for t in 1..=cfg.max_iter {
+        iterations = t;
+        let timer = std::time::Instant::now();
+
+        // --- Oracle at w_{t-1}: risk, subgradient (lines 5–6).
+        let p_cur = oracle.scores(&w_cur);
+
+        // Optional line search: evaluate the cut at the best point on the
+        // segment [w_b, w_cur] instead of at w_cur (Franc–Sonnenburg
+        // style). Scores are affine along the segment, so the probes cost
+        // no extra matvecs.
+        let (w_eval, p_eval) = if cfg.line_search && p_b.is_some() {
+            let pb = p_b.as_ref().unwrap();
+            let beta = linesearch::golden_section(
+                |beta| {
+                    let p_mix: Vec<f64> =
+                        pb.iter().zip(&p_cur).map(|(a, b)| a + beta * (b - a)).collect();
+                    let risk = oracle.risk_value_at(&p_mix);
+                    let mut reg = 0.0;
+                    for (wb_i, wc_i) in w_b.iter().zip(&w_cur) {
+                        let wm = wb_i + beta * (wc_i - wb_i);
+                        reg += wm * wm;
+                    }
+                    risk + lambda * reg
+                },
+                0.0,
+                1.0,
+                12,
+            );
+            let w_mix: Vec<f64> =
+                w_b.iter().zip(&w_cur).map(|(a, b)| a + beta * (b - a)).collect();
+            let p_mix: Vec<f64> = pb.iter().zip(&p_cur).map(|(a, b)| a + beta * (b - a)).collect();
+            (w_mix, p_mix)
+        } else {
+            (w_cur.clone(), p_cur.clone())
+        };
+
+        let (risk, coeffs) = oracle.risk_at(&p_eval);
+        let a_t = oracle.grad(&coeffs);
+        let oracle_secs = timer.elapsed().as_secs_f64();
+        oracle_secs_total += oracle_secs;
+
+        // b_t = R(w') − ⟨w', a_t⟩.
+        let b_t = risk - ops::dot(&w_eval, &a_t);
+
+        // Track best iterate (lines 9–11).
+        let j_eval = risk + lambda * ops::norm_sq(&w_eval);
+        if j_eval < j_best {
+            j_best = j_eval;
+            w_b.copy_from_slice(&w_eval);
+            p_b = Some(p_eval);
+        }
+
+        // Add the plane (line 7): Gram column against stored planes.
+        let mut col: Vec<f64> = planes.iter().map(|ai| ops::dot(&a_t, ai)).collect();
+        col.push(ops::dot(&a_t, &a_t));
+        planes.push(a_t);
+        qp.add_plane(b_t, col);
+
+        // Master problem (line 8): w_t = argmin J_t via the dual.
+        let lower = qp.solve(cfg.qp_tol, cfg.qp_max_sweeps);
+        let alpha = qp.alpha();
+        let mut w_next = vec![0.0; n];
+        for (k, ai) in planes.iter().enumerate() {
+            if alpha[k] != 0.0 {
+                ops::axpy(-alpha[k] / (2.0 * lambda), ai, &mut w_next);
+            }
+        }
+        w_cur = w_next;
+
+        // Gap (line 12): ε_t = J(w_b) − J_t(w_t).
+        gap = j_best - lower;
+        trace.push(IterStats {
+            iter: t,
+            best_objective: j_best,
+            lower_bound: lower,
+            gap,
+            risk,
+            oracle_secs,
+        });
+
+        if gap < cfg.epsilon {
+            converged = true;
+            break;
+        }
+    }
+
+    BmrmResult {
+        w: w_b,
+        objective: j_best,
+        gap,
+        iterations,
+        converged,
+        trace,
+        oracle_secs_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic test oracle: R(w) = ‖w − target‖² (convex, smooth) —
+    /// lets us check BMRM against the analytic optimum of
+    /// `min ‖w − c‖² + λ‖w‖²`, i.e. `w* = c/(1+λ)`.
+    struct QuadOracle {
+        target: Vec<f64>,
+    }
+
+    impl ScoreOracle for QuadOracle {
+        fn dim(&self) -> usize {
+            self.target.len()
+        }
+        fn scores(&mut self, w: &[f64]) -> Vec<f64> {
+            w.to_vec() // identity "matvec"
+        }
+        fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
+            let mut risk = 0.0;
+            let mut g = Vec::with_capacity(p.len());
+            for (pi, ti) in p.iter().zip(&self.target) {
+                risk += (pi - ti) * (pi - ti);
+                g.push(2.0 * (pi - ti));
+            }
+            (risk, g)
+        }
+        fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
+            coeffs.to_vec()
+        }
+    }
+
+    #[test]
+    fn converges_to_analytic_optimum() {
+        let target = vec![3.0, -1.0, 2.0];
+        let lambda = 0.5;
+        let mut oracle = QuadOracle { target: target.clone() };
+        let cfg = BmrmConfig { lambda, epsilon: 1e-8, max_iter: 500, ..Default::default() };
+        let res = optimize(&mut oracle, &cfg, vec![0.0; 3]);
+        assert!(res.converged, "gap {}", res.gap);
+        for (wi, ti) in res.w.iter().zip(&target) {
+            let expect = ti / (1.0 + lambda);
+            assert!((wi - expect).abs() < 1e-3, "{wi} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn bounds_are_valid_and_monotone() {
+        let mut oracle = QuadOracle { target: vec![1.0, 2.0, 3.0, 4.0] };
+        let cfg = BmrmConfig { lambda: 0.1, epsilon: 1e-9, max_iter: 300, ..Default::default() };
+        let res = optimize(&mut oracle, &cfg, vec![0.0; 4]);
+        for w in res.trace.windows(2) {
+            assert!(w[1].best_objective <= w[0].best_objective + 1e-12);
+            assert!(w[1].lower_bound >= w[0].lower_bound - 1e-9);
+        }
+        for s in &res.trace {
+            assert!(s.lower_bound <= s.best_objective + 1e-9);
+        }
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn line_search_variant_also_converges() {
+        let target = vec![2.0, -3.0];
+        let lambda = 0.25;
+        let mut oracle = QuadOracle { target: target.clone() };
+        let cfg = BmrmConfig {
+            lambda,
+            epsilon: 1e-8,
+            max_iter: 500,
+            line_search: true,
+            ..Default::default()
+        };
+        let res = optimize(&mut oracle, &cfg, vec![0.0; 2]);
+        assert!(res.converged);
+        for (wi, ti) in res.w.iter().zip(&target) {
+            let expect = ti / (1.0 + lambda);
+            assert!((wi - expect).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let mut oracle = QuadOracle { target: vec![5.0; 10] };
+        let cfg = BmrmConfig { lambda: 1e-4, epsilon: 1e-14, max_iter: 3, ..Default::default() };
+        let res = optimize(&mut oracle, &cfg, vec![0.0; 10]);
+        assert!(!res.converged);
+        assert_eq!(res.iterations, 3);
+        assert_eq!(res.trace.len(), 3);
+    }
+}

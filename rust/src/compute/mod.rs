@@ -1,0 +1,114 @@
+//! Pluggable compute backends for the per-iteration linear algebra.
+//!
+//! The two `O(ms)` operations of every training iteration — the score
+//! matvec `p = X·w` and the subgradient assembly `a = Xᵀ·coeffs` — are
+//! routed through this trait so the coordinator can execute them either
+//! with native Rust kernels ([`NativeBackend`], sparse CSR/CSC or dense)
+//! or with the AOT-compiled XLA executables lowered from JAX/Pallas
+//! ([`crate::runtime::XlaBackend`]). Python is never on this path: the
+//! XLA backend loads pre-built `artifacts/*.hlo.txt`.
+
+use crate::linalg::{CscMatrix, CsrMatrix};
+
+/// Backend interface. `prepare` is called once per dataset so backends
+/// can build auxiliary structures (CSC copy, padded dense tiles, device
+/// buffers) off the hot path.
+pub trait ComputeBackend {
+    fn name(&self) -> &'static str;
+    /// One-time per-dataset setup.
+    fn prepare(&mut self, _x: &CsrMatrix) {}
+    /// `p = X·w` (length = rows).
+    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64>;
+    /// `a = Xᵀ·coeffs` (length = cols).
+    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64>;
+}
+
+/// Native Rust kernels. With `use_csc`, the gradient runs over a
+/// column-compressed copy (gather instead of scatter) — the "two copies
+/// of the data matrix" trade-off the paper describes in its Fig.-3
+/// discussion; costs ~2× matrix memory.
+pub struct NativeBackend {
+    use_csc: bool,
+    csc: Option<CscMatrix>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { use_csc: false, csc: None }
+    }
+
+    pub fn with_csc() -> Self {
+        NativeBackend { use_csc: true, csc: None }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        if self.use_csc {
+            "native+csc"
+        } else {
+            "native"
+        }
+    }
+
+    fn prepare(&mut self, x: &CsrMatrix) {
+        if self.use_csc {
+            self.csc = Some(x.to_csc());
+        }
+    }
+
+    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
+        let mut p = vec![0.0; x.rows()];
+        x.matvec(w, &mut p);
+        p
+    }
+
+    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
+        let mut a = vec![0.0; x.cols()];
+        match (&self.csc, self.use_csc) {
+            (Some(csc), true) => csc.matvec_t(coeffs, &mut a),
+            _ => x.matvec_t(coeffs, &mut a),
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn csr_and_csc_paths_agree() {
+        let mut rng = Rng::new(701);
+        let mut triplets = Vec::new();
+        for i in 0..50 {
+            for j in 0..30 {
+                if rng.bool(0.2) {
+                    triplets.push((i, j, rng.normal()));
+                }
+            }
+        }
+        let x = CsrMatrix::from_triplets(50, 30, triplets);
+        let w: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+
+        let mut plain = NativeBackend::new();
+        let mut twocopy = NativeBackend::with_csc();
+        plain.prepare(&x);
+        twocopy.prepare(&x);
+
+        assert_eq!(plain.scores(&x, &w), twocopy.scores(&x, &w));
+        let g1 = plain.grad(&x, &c);
+        let g2 = twocopy.grad(&x, &c);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

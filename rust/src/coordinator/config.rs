@@ -1,0 +1,158 @@
+//! Training configuration: method registry, hyper-parameters, and the
+//! λ ↔ C conversion the paper describes (§5.1).
+
+/// Which loss/subgradient oracle (and hence which algorithm from the
+/// paper's evaluation) drives training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// TreeRSVM — Algorithm 3 with the order-statistics red-black tree.
+    Tree,
+    /// TreeRSVM with the duplicate-merging (`nodesize`) tree variant.
+    TreeDedup,
+    /// TreeRSVM with the Fenwick counter (ablation).
+    TreeFenwick,
+    /// PairRSVM — explicit O(m²) pair iteration under the same BMRM.
+    Pair,
+    /// SVM^rank stand-in — the r-level algorithm of Joachims (2006).
+    RLevel,
+    /// PRSVM — truncated Newton on the squared pairwise hinge, with the
+    /// faithful O(m²)-memory pair materialization.
+    Prsvm,
+    /// PRSVM objective with our O(m log m) sum-augmented-tree oracle
+    /// (the Chapelle & Keerthi "improved version" — extension feature).
+    PrsvmTree,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "tree" | "treersvm" => Method::Tree,
+            "tree-dedup" | "dedup" => Method::TreeDedup,
+            "tree-fenwick" | "fenwick" => Method::TreeFenwick,
+            "pair" | "pairrsvm" => Method::Pair,
+            "rlevel" | "svmrank" => Method::RLevel,
+            "prsvm" | "squared" | "newton" => Method::Prsvm,
+            "prsvm-tree" | "squared-tree" => Method::PrsvmTree,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Tree => "tree",
+            Method::TreeDedup => "tree-dedup",
+            Method::TreeFenwick => "tree-fenwick",
+            Method::Pair => "pair",
+            Method::RLevel => "rlevel",
+            Method::Prsvm => "prsvm",
+            Method::PrsvmTree => "prsvm-tree",
+        }
+    }
+
+    /// All methods, for bench sweeps.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Tree,
+            Method::TreeDedup,
+            Method::TreeFenwick,
+            Method::Pair,
+            Method::RLevel,
+            Method::Prsvm,
+            Method::PrsvmTree,
+        ]
+    }
+}
+
+/// Which backend executes the O(ms) linear algebra.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native CSR kernels.
+    Native,
+    /// Native with an extra CSC copy for the gradient (paper's
+    /// two-copies trade-off).
+    NativeCsc,
+    /// AOT-compiled XLA executables via PJRT (dense tiles); requires
+    /// `make artifacts`.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "native" => BackendKind::Native,
+            "native-csc" | "csc" => BackendKind::NativeCsc,
+            "xla" | "pjrt" => BackendKind::Xla,
+            _ => return None,
+        })
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub backend: BackendKind,
+    /// Regularizer weight λ in `R_emp + λ‖w‖²` (paper: 1e-1 for Cadata,
+    /// 1e-5 for Reuters).
+    pub lambda: f64,
+    /// BMRM gap tolerance ε (paper: 1e-3; for PRSVM the Newton decrement
+    /// tolerance 1e-6 is derived as `epsilon * 1e-3`).
+    pub epsilon: f64,
+    pub max_iter: usize,
+    /// Enable the OCAS-style line search extension.
+    pub line_search: bool,
+    /// Directory with `manifest.txt` + `*.hlo.txt` for the XLA backend.
+    pub artifacts_dir: String,
+    /// Emit per-iteration JSON lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::Tree,
+            backend: BackendKind::Native,
+            lambda: 1e-2,
+            epsilon: 1e-3,
+            max_iter: 2000,
+            line_search: false,
+            artifacts_dir: "artifacts".to_string(),
+            verbose: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// SVM^rank / PRSVM use `C` multiplied into an *unnormalized* risk;
+    /// the paper gives the conversion `C = 1/(λN)`.
+    pub fn c_equivalent(&self, n_pairs: f64) -> f64 {
+        1.0 / (self.lambda * n_pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("svmrank"), Some(Method::RLevel));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("zzz"), None);
+    }
+
+    #[test]
+    fn c_conversion() {
+        let cfg = TrainConfig { lambda: 0.1, ..Default::default() };
+        assert!((cfg.c_equivalent(100.0) - 0.1).abs() < 1e-12);
+    }
+}

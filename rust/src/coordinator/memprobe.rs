@@ -1,0 +1,113 @@
+//! Memory probing for the Fig.-3 benchmark.
+//!
+//! Peak RSS of an in-process run is contaminated by earlier allocations,
+//! so the benchmark measures each (method, m) point in a *fresh child
+//! process*: the bench spawns `ranksvm mem-probe ...`, the child trains
+//! for a bounded number of iterations, reads its own `VmHWM`, and prints
+//! one JSON line the parent parses. std::process only — no extra deps.
+
+use crate::coordinator::{train, Method, TrainConfig};
+use crate::data::synthetic;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Child-side entry: build the dataset, train, print `{peak_rss_kib, ...}`.
+pub fn run_probe(dataset: &str, m: usize, method: Method, lambda: f64, max_iter: usize, seed: u64) -> Result<()> {
+    let ds = match dataset {
+        "cadata" => synthetic::cadata_like(m, seed),
+        "reuters" => synthetic::reuters_like(m, seed),
+        // smaller vocabulary for quick tests
+        "reuters-small" => synthetic::reuters_like_with(m, 5000, 30, seed),
+        other => anyhow::bail!("unknown synthetic dataset {other:?}"),
+    };
+    let cfg = TrainConfig { method, lambda, max_iter, ..Default::default() };
+    let out = train(&ds, &cfg)?;
+    let peak = crate::util::peak_rss_kib().context("VmHWM unavailable")?;
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("dataset", dataset.into()),
+            ("m", m.into()),
+            ("method", method.name().into()),
+            ("iterations", out.iterations.into()),
+            ("peak_rss_kib", (peak as usize).into()),
+        ])
+        .to_string()
+    );
+    Ok(())
+}
+
+/// Locate the `ranksvm` CLI binary for probe spawning: `$RANKSVM_BIN`,
+/// else a `ranksvm` sibling of the current executable (bench binaries
+/// live in `target/release/deps/`, the CLI one level up), else
+/// `target/release/ranksvm` relative to the working directory.
+pub fn find_cli_bin() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("RANKSVM_BIN") {
+        return Ok(p.into());
+    }
+    if let Ok(exe) = std::env::current_exe() {
+        if exe.file_name().map(|f| f.to_string_lossy().starts_with("ranksvm")).unwrap_or(false)
+            && !exe.parent().map(|p| p.ends_with("deps")).unwrap_or(false)
+        {
+            return Ok(exe);
+        }
+        for anc in exe.ancestors().skip(1) {
+            let cand = anc.join("ranksvm");
+            if cand.is_file() {
+                return Ok(cand);
+            }
+        }
+    }
+    let fallback = std::path::Path::new("target/release/ranksvm");
+    anyhow::ensure!(fallback.is_file(), "ranksvm binary not found; build with `cargo build --release` or set RANKSVM_BIN");
+    Ok(fallback.to_path_buf())
+}
+
+/// Parent-side helper: spawn the CLI binary as a probe child and
+/// return its peak RSS in KiB.
+pub fn spawn_probe(dataset: &str, m: usize, method: Method, lambda: f64, max_iter: usize) -> Result<u64> {
+    let exe = find_cli_bin()?;
+    let out = std::process::Command::new(exe)
+        .args([
+            "mem-probe",
+            "--dataset",
+            dataset,
+            "--m",
+            &m.to_string(),
+            "--method",
+            method.name(),
+            "--lambda",
+            &lambda.to_string(),
+            "--max-iter",
+            &max_iter.to_string(),
+        ])
+        .output()
+        .context("spawning mem-probe child")?;
+    anyhow::ensure!(
+        out.status.success(),
+        "probe failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    parse_peak(&stdout).context("parsing probe output")
+}
+
+/// Extract `peak_rss_kib` from the probe's JSON line (tiny ad-hoc parse —
+/// the format is ours).
+pub fn parse_peak(stdout: &str) -> Option<u64> {
+    let key = "\"peak_rss_kib\":";
+    let pos = stdout.find(key)? + key.len();
+    let rest = &stdout[pos..];
+    let end = rest.find(['}', ','])?;
+    rest[..end].trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn parse_peak_extracts_value() {
+        let s = r#"{"dataset":"cadata","m":100,"method":"tree","iterations":5,"peak_rss_kib":12345}"#;
+        assert_eq!(super::parse_peak(s), Some(12345));
+        assert_eq!(super::parse_peak("{}"), None);
+    }
+}

@@ -1,0 +1,18 @@
+//! The L3 coordinator: configuration, the training entry point, model
+//! persistence, and the memory-probe subprocess protocol.
+//!
+//! The paper's contribution (the tree-based oracle) lives in
+//! [`crate::losses::tree`]; this module is the framework face that a
+//! downstream user touches: [`TrainConfig`] → [`train`] → [`TrainOutcome`]
+//! (+ [`evaluate`], [`RankModel::save`]).
+
+pub mod config;
+pub mod memprobe;
+pub mod model;
+pub mod modelsel;
+pub mod trainer;
+
+pub use config::{BackendKind, Method, TrainConfig};
+pub use model::RankModel;
+pub use modelsel::{cross_validate, select_lambda, CvPoint};
+pub use trainer::{evaluate, train, TrainOutcome};

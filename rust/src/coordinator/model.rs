@@ -1,0 +1,143 @@
+//! Trained ranking model: the weight vector, prediction, and a plain-text
+//! on-disk format.
+
+use crate::data::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// A linear ranking function `f(x) = ⟨w, x⟩`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankModel {
+    pub w: Vec<f64>,
+}
+
+impl RankModel {
+    pub fn new(w: Vec<f64>) -> Self {
+        RankModel { w }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Scores for every example of a dataset. Feature dimensions may
+    /// differ (train/test splits of sparse data): missing trailing
+    /// features contribute zero either way.
+    pub fn predict(&self, ds: &Dataset) -> Vec<f64> {
+        let mut out = Vec::with_capacity(ds.len());
+        for i in 0..ds.len() {
+            let (idx, val) = ds.x.row(i);
+            let mut s = 0.0;
+            for (&j, &v) in idx.iter().zip(val) {
+                if (j as usize) < self.w.len() {
+                    s += v * self.w[j as usize];
+                }
+            }
+            out.push(s);
+        }
+        out
+    }
+
+    /// Rank a set of examples: indices sorted by descending score.
+    pub fn rank(&self, ds: &Dataset) -> Vec<usize> {
+        let p = self.predict(ds);
+        let mut idx: Vec<usize> = (0..p.len()).collect();
+        idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+        idx
+    }
+
+    /// Save as plain text: header line + one weight per line.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "ranksvm-model v1 dim={}", self.w.len())?;
+        for w in &self.w {
+            writeln!(f, "{w:.17e}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RankModel> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        let header = lines.next().context("empty model file")??;
+        if !header.starts_with("ranksvm-model v1") {
+            bail!("not a ranksvm model file: {header:?}");
+        }
+        let dim: usize = header
+            .split("dim=")
+            .nth(1)
+            .context("missing dim")?
+            .trim()
+            .parse()?;
+        let mut w = Vec::with_capacity(dim);
+        for line in lines {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            w.push(line.trim().parse::<f64>()?);
+        }
+        if w.len() != dim {
+            bail!("model dim mismatch: header {dim}, got {}", w.len());
+        }
+        Ok(RankModel { w })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn predict_matches_matvec() {
+        let ds = synthetic::cadata_like(30, 5);
+        let w: Vec<f64> = (0..ds.dim()).map(|j| j as f64 * 0.1).collect();
+        let model = RankModel::new(w.clone());
+        let p = model.predict(&ds);
+        let mut expect = vec![0.0; ds.len()];
+        ds.x.matvec(&w, &mut expect);
+        for (a, b) in p.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let model = RankModel::new(vec![1.5, -2.25e-10, 0.0, 3.7e8]);
+        let tmp = std::env::temp_dir().join("ranksvm_model_roundtrip.txt");
+        model.save(&tmp).unwrap();
+        let back = RankModel::load(&tmp).unwrap();
+        assert_eq!(model, back);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn rank_orders_by_score_desc() {
+        let ds = synthetic::cadata_like(10, 6);
+        let model = RankModel::new(vec![1.0; ds.dim()]);
+        let order = model.rank(&ds);
+        let p = model.predict(&ds);
+        for w in order.windows(2) {
+            assert!(p[w[0]] >= p[w[1]]);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let tmp = std::env::temp_dir().join("ranksvm_model_bad.txt");
+        std::fs::write(&tmp, "not a model\n1.0\n").unwrap();
+        assert!(RankModel::load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn predict_handles_dim_mismatch() {
+        let ds = synthetic::cadata_like(5, 7);
+        let model = RankModel::new(vec![1.0; 2]); // fewer dims than data
+        let p = model.predict(&ds);
+        assert_eq!(p.len(), 5);
+    }
+}

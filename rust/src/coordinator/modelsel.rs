@@ -1,0 +1,168 @@
+//! Model selection: k-fold cross-validation over the regularization path.
+//!
+//! The paper fixes λ per dataset ("observed to lead to good test
+//! performance"); a framework user needs the machinery that produces such
+//! a choice. Query-grouped data is split by whole queries (splitting a
+//! query across folds would leak its per-query offset).
+
+use super::config::TrainConfig;
+use super::trainer::{evaluate, train};
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One (λ, per-fold errors) row of a CV sweep.
+#[derive(Clone, Debug)]
+pub struct CvPoint {
+    pub lambda: f64,
+    pub fold_errors: Vec<f64>,
+    pub mean_error: f64,
+}
+
+/// Deterministic k-fold index split. Grouped data splits by distinct qid.
+pub fn kfold_indices(ds: &Dataset, folds: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(folds >= 2, "need at least 2 folds");
+    let mut rng = Rng::new(seed);
+    match &ds.qid {
+        None => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            let mut out = vec![Vec::new(); folds];
+            for (i, &e) in idx.iter().enumerate() {
+                out[i % folds].push(e);
+            }
+            out
+        }
+        Some(qid) => {
+            let mut queries: Vec<u64> = {
+                let mut q = qid.clone();
+                q.sort_unstable();
+                q.dedup();
+                q
+            };
+            rng.shuffle(&mut queries);
+            let mut fold_of: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            for (i, &q) in queries.iter().enumerate() {
+                fold_of.insert(q, i % folds);
+            }
+            let mut out = vec![Vec::new(); folds];
+            for (i, q) in qid.iter().enumerate() {
+                out[fold_of[q]].push(i);
+            }
+            out
+        }
+    }
+}
+
+/// Sweep λ over `lambdas` with `folds`-fold CV; returns one [`CvPoint`]
+/// per λ, in input order.
+pub fn cross_validate(
+    ds: &Dataset,
+    base: &TrainConfig,
+    lambdas: &[f64],
+    folds: usize,
+    seed: u64,
+) -> Result<Vec<CvPoint>> {
+    let fold_idx = kfold_indices(ds, folds, seed);
+    // Pre-materialize fold datasets once (not per λ).
+    let splits: Vec<(Dataset, Dataset)> = (0..folds)
+        .map(|f| {
+            let test_rows = &fold_idx[f];
+            let train_rows: Vec<usize> =
+                (0..folds).filter(|&g| g != f).flat_map(|g| fold_idx[g].iter().copied()).collect();
+            (ds.subset(&train_rows, &format!("cv{f}train")), ds.subset(test_rows, &format!("cv{f}test")))
+        })
+        .collect();
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        let mut fold_errors = Vec::with_capacity(folds);
+        for (tr, te) in &splits {
+            let cfg = TrainConfig { lambda, ..base.clone() };
+            let res = train(tr, &cfg)?;
+            fold_errors.push(evaluate(&res.model, te));
+        }
+        let mean_error = fold_errors.iter().sum::<f64>() / folds as f64;
+        out.push(CvPoint { lambda, fold_errors, mean_error });
+    }
+    Ok(out)
+}
+
+/// Pick the λ minimizing mean CV error (ties → larger λ, i.e. the
+/// simpler model).
+pub fn select_lambda(points: &[CvPoint]) -> f64 {
+    assert!(!points.is_empty());
+    let mut best = &points[0];
+    for p in points {
+        if p.mean_error < best.mean_error - 1e-12
+            || ((p.mean_error - best.mean_error).abs() <= 1e-12 && p.lambda > best.lambda)
+        {
+            best = p;
+        }
+    }
+    best.lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+    use crate::data::synthetic;
+
+    #[test]
+    fn kfold_partitions_everything_once() {
+        let ds = synthetic::cadata_like(103, 3);
+        let folds = kfold_indices(&ds, 5, 1);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // balanced within 1
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn grouped_kfold_keeps_queries_whole() {
+        let ds = synthetic::queries(12, 10, 4, 5);
+        let folds = kfold_indices(&ds, 3, 2);
+        let qid = ds.qid.as_ref().unwrap();
+        for fold in &folds {
+            let qs: std::collections::HashSet<u64> = fold.iter().map(|&i| qid[i]).collect();
+            // every query in this fold must be fully contained here
+            for q in qs {
+                let total = qid.iter().filter(|&&x| x == q).count();
+                let here = fold.iter().filter(|&&i| qid[i] == q).count();
+                assert_eq!(total, here, "query {q} split across folds");
+            }
+        }
+    }
+
+    #[test]
+    fn cv_selects_reasonable_lambda() {
+        let ds = synthetic::cadata_like(400, 8);
+        let base = TrainConfig { method: Method::Tree, ..Default::default() };
+        let lambdas = [1e-3, 1e-1, 1e3];
+        let points = cross_validate(&ds, &base, &lambdas, 3, 7).unwrap();
+        assert_eq!(points.len(), 3);
+        let best = select_lambda(&points);
+        // Over-regularization hurts (ranking is scale-invariant, so the
+        // damage is under-fitting of the direction, not w → 0): the
+        // degenerate λ must not win and the winner must actually rank.
+        assert!(best < 1e3, "CV picked the degenerate λ: {points:?}");
+        let worst = points.iter().find(|p| p.lambda == 1e3).unwrap();
+        let chosen = points.iter().find(|p| p.lambda == best).unwrap();
+        assert!(
+            worst.mean_error > chosen.mean_error + 0.05,
+            "λ=1e3 should clearly underperform: {points:?}"
+        );
+        assert!(chosen.mean_error < 0.25, "winner should rank well: {points:?}");
+    }
+
+    #[test]
+    fn select_lambda_tie_breaks_to_simpler() {
+        let points = vec![
+            CvPoint { lambda: 0.01, fold_errors: vec![0.2], mean_error: 0.2 },
+            CvPoint { lambda: 1.0, fold_errors: vec![0.2], mean_error: 0.2 },
+        ];
+        assert_eq!(select_lambda(&points), 1.0);
+    }
+}

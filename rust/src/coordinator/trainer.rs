@@ -1,0 +1,394 @@
+//! Training orchestration: wires a dataset, a compute backend, a loss
+//! oracle, and an optimizer into one call — the coordinator face of the
+//! library.
+
+use super::config::{BackendKind, Method, TrainConfig};
+use super::model::RankModel;
+use crate::bmrm::{self, BmrmConfig, ScoreOracle};
+use crate::compute::{ComputeBackend, NativeBackend};
+use crate::data::Dataset;
+use crate::losses::{
+    count_comparable_pairs, tree::fenwick_oracle, PairOracle, QueryGrouped, RLevelOracle,
+    RankingOracle, SquaredPairOracle, TreeOracle,
+};
+use crate::newton::{self, HessianOracle, NewtonConfig};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Outcome of a training run, with everything the benches report.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub model: RankModel,
+    pub method: &'static str,
+    pub backend: &'static str,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Final objective J(w_b).
+    pub objective: f64,
+    /// Final optimality gap (BMRM gap or Newton decrement).
+    pub gap: f64,
+    /// Wall-clock seconds for the whole optimization.
+    pub train_secs: f64,
+    /// Seconds spent inside loss/subgradient evaluations (Fig. 1).
+    pub oracle_secs: f64,
+    /// (iteration, objective, gap) trace — the loss curve.
+    pub trace: Vec<(usize, f64, f64)>,
+    /// Comparable pairs N in the training set.
+    pub n_pairs: f64,
+}
+
+impl TrainOutcome {
+    /// Average per-iteration oracle cost — the Fig. 1 quantity.
+    pub fn avg_oracle_secs(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.oracle_secs / self.iterations as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", self.method.into()),
+            ("backend", self.backend.into()),
+            ("iterations", self.iterations.into()),
+            ("converged", self.converged.into()),
+            ("objective", self.objective.into()),
+            ("gap", self.gap.into()),
+            ("train_secs", self.train_secs.into()),
+            ("oracle_secs", self.oracle_secs.into()),
+            ("avg_oracle_secs", self.avg_oracle_secs().into()),
+            ("n_pairs", self.n_pairs.into()),
+        ])
+    }
+}
+
+/// Adapter: dataset + backend + score-space loss oracle → [`ScoreOracle`]
+/// for the optimizers.
+pub struct DatasetOracle<'a> {
+    ds: &'a Dataset,
+    backend: Box<dyn ComputeBackend>,
+    inner: Box<dyn RankingOracle>,
+    n_pairs: f64,
+}
+
+impl<'a> DatasetOracle<'a> {
+    pub fn new(
+        ds: &'a Dataset,
+        mut backend: Box<dyn ComputeBackend>,
+        inner: Box<dyn RankingOracle>,
+        n_pairs: f64,
+    ) -> Self {
+        backend.prepare(&ds.x);
+        DatasetOracle { ds, backend, inner, n_pairs }
+    }
+}
+
+impl ScoreOracle for DatasetOracle<'_> {
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+    fn scores(&mut self, w: &[f64]) -> Vec<f64> {
+        self.backend.scores(&self.ds.x, w)
+    }
+    fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
+        let out = self.inner.eval(p, &self.ds.y, self.n_pairs);
+        (out.loss, out.coeffs)
+    }
+    fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
+        self.backend.grad(&self.ds.x, coeffs)
+    }
+}
+
+/// Which squared-hinge implementation backs a PRSVM run.
+enum SquaredImpl {
+    /// Faithful PRSVM: explicit pair materialization (O(m²) memory).
+    Pairs(SquaredPairOracle),
+    /// Extension: sum-augmented-tree oracle (O(m log m) time, O(m) mem).
+    Tree(crate::losses::SquaredTreeOracle),
+}
+
+/// PRSVM adapter: like [`DatasetOracle`] but holding the squared-hinge
+/// oracle concretely so the truncated Newton solver can request
+/// generalized Hessian products.
+pub struct SquaredDatasetOracle<'a> {
+    ds: &'a Dataset,
+    backend: Box<dyn ComputeBackend>,
+    oracle: SquaredImpl,
+    n_pairs: f64,
+}
+
+impl<'a> SquaredDatasetOracle<'a> {
+    /// Faithful pair-materializing PRSVM oracle.
+    pub fn new(ds: &'a Dataset, mut backend: Box<dyn ComputeBackend>) -> Self {
+        backend.prepare(&ds.x);
+        let oracle = match &ds.qid {
+            Some(q) => SquaredPairOracle::new_grouped(&ds.y, q),
+            None => SquaredPairOracle::new(&ds.y),
+        };
+        let n_pairs = oracle.n_pairs() as f64;
+        SquaredDatasetOracle { ds, backend, oracle: SquaredImpl::Pairs(oracle), n_pairs }
+    }
+
+    /// Linearithmic tree-based PRSVM oracle (extension). Query-grouped
+    /// data falls back to pair materialization per group.
+    pub fn new_tree(ds: &'a Dataset, mut backend: Box<dyn ComputeBackend>) -> Self {
+        if ds.qid.is_some() {
+            return Self::new(ds, backend);
+        }
+        backend.prepare(&ds.x);
+        let n_pairs = count_comparable_pairs(&ds.y) as f64;
+        SquaredDatasetOracle {
+            ds,
+            backend,
+            oracle: SquaredImpl::Tree(crate::losses::SquaredTreeOracle::new()),
+            n_pairs,
+        }
+    }
+
+    /// Materialized-pair memory, for the Fig.-3 accounting (0 for tree).
+    pub fn pair_mem_bytes(&self) -> usize {
+        match &self.oracle {
+            SquaredImpl::Pairs(o) => o.mem_bytes(),
+            SquaredImpl::Tree(_) => 0,
+        }
+    }
+}
+
+impl ScoreOracle for SquaredDatasetOracle<'_> {
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+    fn scores(&mut self, w: &[f64]) -> Vec<f64> {
+        self.backend.scores(&self.ds.x, w)
+    }
+    fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
+        let out = match &mut self.oracle {
+            SquaredImpl::Pairs(o) => o.eval_full(p, self.n_pairs),
+            SquaredImpl::Tree(o) => o.eval_full(p, &self.ds.y, self.n_pairs),
+        };
+        (out.loss, out.coeffs)
+    }
+    fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
+        self.backend.grad(&self.ds.x, coeffs)
+    }
+}
+
+impl HessianOracle for SquaredDatasetOracle<'_> {
+    fn hess_apply(&mut self, u: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; u.len()];
+        match &mut self.oracle {
+            SquaredImpl::Pairs(o) => o.hessian_apply(u, self.n_pairs, &mut out),
+            SquaredImpl::Tree(o) => o.hessian_apply(u, self.n_pairs, &mut out),
+        }
+        out
+    }
+}
+
+/// Build the configured compute backend.
+pub fn make_backend(cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
+    Ok(match cfg.backend {
+        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::NativeCsc => Box::new(NativeBackend::with_csc()),
+        BackendKind::Xla => Box::new(crate::runtime::XlaBackend::load(&cfg.artifacts_dir)?),
+    })
+}
+
+/// Build the score-space oracle for a BMRM-family method, wrapping in the
+/// query-grouped averager when the dataset has query structure.
+fn make_ranking_oracle(method: Method, ds: &Dataset) -> Box<dyn RankingOracle> {
+    let base: Box<dyn RankingOracle> = match method {
+        Method::Tree => Box::new(TreeOracle::new()),
+        Method::TreeDedup => Box::new(TreeOracle::new_dedup()),
+        Method::TreeFenwick => Box::new(fenwick_oracle(&ds.y)),
+        Method::Pair => Box::new(PairOracle::new()),
+        Method::RLevel => Box::new(RLevelOracle::new()),
+        Method::Prsvm | Method::PrsvmTree => {
+            unreachable!("PRSVM goes through SquaredDatasetOracle")
+        }
+    };
+    match &ds.qid {
+        Some(q) => Box::new(QueryGrouped::new(base, q, &ds.y)),
+        None => base,
+    }
+}
+
+/// Effective pair count for normalization/reporting.
+fn effective_pairs(ds: &Dataset) -> f64 {
+    match &ds.qid {
+        Some(q) => QueryGrouped::new(TreeOracle::new(), q, &ds.y).total_pairs(),
+        None => count_comparable_pairs(&ds.y) as f64,
+    }
+}
+
+/// Train a linear ranking SVM on `ds` per the configuration. This is the
+/// library's main entry point.
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let timer = std::time::Instant::now();
+    let backend = make_backend(cfg)?;
+    let backend_name = backend.name();
+
+    let outcome = if cfg.method == Method::Prsvm || cfg.method == Method::PrsvmTree {
+        let mut oracle = if cfg.method == Method::Prsvm {
+            SquaredDatasetOracle::new(ds, backend)
+        } else {
+            SquaredDatasetOracle::new_tree(ds, backend)
+        };
+        let ncfg = NewtonConfig {
+            lambda: cfg.lambda,
+            // Paper §5.1: Newton decrement 1e-6 ~ BMRM ε 1e-3.
+            decrement_tol: cfg.epsilon * 1e-3,
+            max_iter: cfg.max_iter,
+            ..Default::default()
+        };
+        let res = newton::optimize(&mut oracle, &ncfg, vec![0.0; ds.dim()]);
+        TrainOutcome {
+            model: RankModel::new(res.w),
+            method: cfg.method.name(),
+            backend: backend_name,
+            iterations: res.iterations,
+            converged: res.converged,
+            objective: res.objective,
+            gap: res.trace.last().map(|t| t.2).unwrap_or(f64::INFINITY),
+            train_secs: timer.elapsed().as_secs_f64(),
+            oracle_secs: res.oracle_secs_total,
+            trace: res.trace,
+            n_pairs: oracle.n_pairs,
+        }
+    } else {
+        let n_pairs = effective_pairs(ds);
+        let inner = make_ranking_oracle(cfg.method, ds);
+        let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
+        let bcfg = BmrmConfig {
+            lambda: cfg.lambda,
+            epsilon: cfg.epsilon,
+            max_iter: cfg.max_iter,
+            line_search: cfg.line_search,
+            ..Default::default()
+        };
+        let res = bmrm::optimize(&mut oracle, &bcfg, vec![0.0; ds.dim()]);
+        if cfg.verbose {
+            for s in &res.trace {
+                eprintln!(
+                    "{}",
+                    Json::obj(vec![
+                        ("iter", s.iter.into()),
+                        ("objective", s.best_objective.into()),
+                        ("lower_bound", s.lower_bound.into()),
+                        ("gap", s.gap.into()),
+                        ("risk", s.risk.into()),
+                        ("oracle_secs", s.oracle_secs.into()),
+                    ])
+                    .to_string()
+                );
+            }
+        }
+        TrainOutcome {
+            model: RankModel::new(res.w),
+            method: cfg.method.name(),
+            backend: backend_name,
+            iterations: res.iterations,
+            converged: res.converged,
+            objective: res.objective,
+            gap: res.gap,
+            train_secs: timer.elapsed().as_secs_f64(),
+            oracle_secs: res.oracle_secs_total,
+            trace: res.trace.iter().map(|s| (s.iter, s.best_objective, s.gap)).collect(),
+            n_pairs,
+        }
+    };
+    Ok(outcome)
+}
+
+/// Evaluate a trained model: pairwise ranking error on a dataset
+/// (query-grouped if the dataset has qids).
+pub fn evaluate(model: &RankModel, ds: &Dataset) -> f64 {
+    let p = model.predict(ds);
+    match &ds.qid {
+        Some(q) => crate::metrics::grouped_pairwise_error(&p, &ds.y, q),
+        None => crate::metrics::pairwise_error(&p, &ds.y),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn cfg(method: Method) -> TrainConfig {
+        TrainConfig { method, lambda: 0.1, epsilon: 1e-3, ..Default::default() }
+    }
+
+    #[test]
+    fn tree_training_learns_ranking() {
+        let ds = synthetic::cadata_like(600, 21);
+        let (train_ds, test_ds) = ds.split(150, 1);
+        let out = train(&train_ds, &cfg(Method::Tree)).unwrap();
+        assert!(out.converged, "gap={}", out.gap);
+        let err = evaluate(&out.model, &test_ds);
+        assert!(err < 0.25, "test error {err}");
+        // sanity: better than random
+        let rand_err = evaluate(&RankModel::new(vec![0.0; train_ds.dim()]), &test_ds);
+        assert!((rand_err - 0.5).abs() < 1e-9); // all-zero scores → all ties → 0.5
+    }
+
+    #[test]
+    fn all_bmrm_methods_reach_same_objective() {
+        // Fig. 4's claim: implementations reach the same solution.
+        let ds = synthetic::cadata_like(200, 33);
+        let mut objectives = Vec::new();
+        for m in [Method::Tree, Method::TreeDedup, Method::TreeFenwick, Method::Pair, Method::RLevel]
+        {
+            let out = train(&ds, &cfg(m)).unwrap();
+            assert!(out.converged, "{:?} failed to converge", m);
+            objectives.push(out.objective);
+        }
+        for o in &objectives[1..] {
+            assert!(
+                (o - objectives[0]).abs() < 2e-3 * (1.0 + objectives[0].abs()),
+                "objectives diverge: {objectives:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prsvm_reaches_similar_test_error() {
+        let ds = synthetic::cadata_like(400, 44);
+        let (tr, te) = ds.split(100, 2);
+        let t_out = train(&tr, &cfg(Method::Tree)).unwrap();
+        let p_out = train(&tr, &cfg(Method::Prsvm)).unwrap();
+        let te_tree = evaluate(&t_out.model, &te);
+        let te_prsvm = evaluate(&p_out.model, &te);
+        assert!((te_tree - te_prsvm).abs() < 0.05, "tree {te_tree} vs prsvm {te_prsvm}");
+    }
+
+    #[test]
+    fn query_grouped_training() {
+        let ds = synthetic::queries(20, 15, 6, 55);
+        let out = train(&ds, &cfg(Method::Tree)).unwrap();
+        assert!(out.converged);
+        let err = evaluate(&out.model, &ds);
+        assert!(err < 0.35, "grouped error {err}");
+    }
+
+    #[test]
+    fn line_search_converges_not_slower() {
+        let ds = synthetic::cadata_like(300, 66);
+        let base = train(&ds, &cfg(Method::Tree)).unwrap();
+        let mut c = cfg(Method::Tree);
+        c.line_search = true;
+        let ls = train(&ds, &c).unwrap();
+        assert!(ls.converged);
+        // Same objective ballpark.
+        assert!((ls.objective - base.objective).abs() < 5e-3 * (1.0 + base.objective.abs()));
+    }
+
+    #[test]
+    fn outcome_json_is_well_formed() {
+        let ds = synthetic::cadata_like(100, 77);
+        let out = train(&ds, &cfg(Method::Tree)).unwrap();
+        let s = out.to_json().to_string();
+        assert!(s.contains("\"method\":\"tree\""));
+        assert!(s.contains("\"converged\":true"));
+    }
+}

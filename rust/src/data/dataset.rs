@@ -1,0 +1,143 @@
+//! The core dataset container used by every training method and bench.
+
+use crate::linalg::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// A ranking dataset: sparse feature matrix (rows = examples), real-valued
+/// utility scores, and optional query ids (document-retrieval setting).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: CsrMatrix,
+    pub y: Vec<f64>,
+    /// Per-example query id; `None` means one global ranking.
+    pub qid: Option<Vec<u64>>,
+    /// Human-readable provenance for logs.
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: CsrMatrix, y: Vec<f64>, qid: Option<Vec<u64>>, name: impl Into<String>) -> Self {
+        assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
+        if let Some(q) = &qid {
+            assert_eq!(q.len(), y.len(), "qid/label count mismatch");
+        }
+        Dataset { x, y, qid, name: name.into() }
+    }
+
+    /// Number of examples `m`.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature dimension `n`.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Average non-zero features per example — the paper's `s`.
+    pub fn sparsity(&self) -> f64 {
+        self.x.avg_nnz_per_row()
+    }
+
+    /// Number of distinct utility levels — the paper's `r`.
+    pub fn n_levels(&self) -> usize {
+        let mut l = self.y.clone();
+        l.sort_by(|a, b| a.partial_cmp(b).expect("NaN label"));
+        l.dedup();
+        l.len()
+    }
+
+    /// Take the first `m` examples (the scalability benches' growing
+    /// prefixes, mirroring the paper's exponentially growing train sizes).
+    pub fn prefix(&self, m: usize) -> Dataset {
+        assert!(m <= self.len());
+        Dataset {
+            x: self.x.row_range(0, m),
+            y: self.y[..m].to_vec(),
+            qid: self.qid.as_ref().map(|q| q[..m].to_vec()),
+            name: format!("{}[:{}]", self.name, m),
+        }
+    }
+
+    /// Random shuffled split into (train, test) with `test_size` examples
+    /// held out. Deterministic given the seed.
+    pub fn split(&self, test_size: usize, seed: u64) -> (Dataset, Dataset) {
+        assert!(test_size < self.len(), "test split must leave training data");
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let (test_idx, train_idx) = idx.split_at(test_size);
+        (self.subset(train_idx, "train"), self.subset(test_idx, "test"))
+    }
+
+    /// Gather an arbitrary subset of examples.
+    pub fn subset(&self, rows: &[usize], tag: &str) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+            qid: self.qid.as_ref().map(|q| rows.iter().map(|&i| q[i]).collect()),
+            name: format!("{}/{}", self.name, tag),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = CsrMatrix::from_triplets(
+            4,
+            2,
+            vec![(0, 0, 1.0), (1, 1, 2.0), (2, 0, 3.0), (3, 1, 4.0)],
+        );
+        Dataset::new(x, vec![1.0, 2.0, 2.0, 3.0], None, "tiny")
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_levels(), 3);
+        assert_eq!(d.sparsity(), 1.0);
+    }
+
+    #[test]
+    fn prefix_keeps_order() {
+        let d = tiny().prefix(2);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.y, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn split_partitions_without_overlap() {
+        let d = tiny();
+        let (train, test) = d.split(1, 7);
+        assert_eq!(train.len(), 3);
+        assert_eq!(test.len(), 1);
+        // label multiset preserved
+        let mut all: Vec<f64> = train.y.iter().chain(test.y.iter()).cloned().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, vec![1.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let d = tiny();
+        let (a, _) = d.split(2, 99);
+        let (b, _) = d.split(2, 99);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_labels_panic() {
+        let x = CsrMatrix::from_triplets(2, 1, vec![]);
+        Dataset::new(x, vec![1.0], None, "bad");
+    }
+}

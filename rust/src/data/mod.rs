@@ -1,0 +1,8 @@
+//! Data substrate: dataset container, libsvm I/O, and the synthetic
+//! generators standing in for Cadata and Reuters RCV1 (DESIGN.md §6).
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synthetic;
+
+pub use dataset::Dataset;

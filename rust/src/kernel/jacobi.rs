@@ -1,0 +1,165 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Used to form `K_bb^{-1/2}` in the Nyström map. Jacobi is slow for
+//! large matrices but bullet-proof and accurate for the reduced-set
+//! sizes we target (k ≤ a few hundred); no LAPACK exists in the offline
+//! crate set (DESIGN.md §6).
+
+use crate::linalg::DenseMatrix;
+
+/// Eigendecomposition of a symmetric matrix: returns `(values, vectors)`
+/// with `A = V diag(λ) Vᵀ`, eigenvectors in the *columns* of `V`.
+/// Panics on non-square input; symmetry is assumed (upper triangle used).
+pub fn eigen_sym(a: &DenseMatrix) -> (Vec<f64>, DenseMatrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigen_sym needs a square matrix");
+    let mut m = a.clone();
+    let mut v = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        v.set(i, i, 1.0);
+    }
+    if n <= 1 {
+        return ((0..n).map(|i| m.get(i, i)).collect(), v);
+    }
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + frob(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation angle (Golub & Van Loan 8.4).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A ← JᵀAJ (rows/cols p and q).
+                for k in 0..n {
+                    let akp = m.get(k, p);
+                    let akq = m.get(k, q);
+                    m.set(k, p, c * akp - s * akq);
+                    m.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = m.get(p, k);
+                    let aqk = m.get(q, k);
+                    m.set(p, k, c * apk - s * aqk);
+                    m.set(q, k, s * apk + c * aqk);
+                }
+                // V ← VJ.
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    ((0..n).map(|i| m.get(i, i)).collect(), v)
+}
+
+fn frob(m: &DenseMatrix) -> f64 {
+    m.data().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> DenseMatrix {
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(91);
+        for &n in &[1usize, 2, 5, 20, 50] {
+            let a = random_sym(n, &mut rng);
+            let (vals, vecs) = eigen_sym(&a);
+            // A ?= V diag(vals) Vᵀ
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for t in 0..n {
+                        s += vecs.get(i, t) * vals[t] * vecs.get(j, t);
+                    }
+                    assert!(
+                        (s - a.get(i, j)).abs() < 1e-8 * (1.0 + a.get(i, j).abs()),
+                        "n={n} A[{i}][{j}]: {s} vs {}",
+                        a.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::new(93);
+        let a = random_sym(30, &mut rng);
+        let (_, vecs) = eigen_sym(&a);
+        for i in 0..30 {
+            for j in 0..30 {
+                let mut s = 0.0;
+                for t in 0..30 {
+                    s += vecs.get(t, i) * vecs.get(t, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-9, "VᵀV[{i}][{j}] = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut a = DenseMatrix::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -1.0);
+        a.set(2, 2, 7.0);
+        let (mut vals, _) = eigen_sym(&a);
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(vals, vec![-1.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        // Gram matrices (what Nyström feeds in) must get λ ≥ −ε.
+        let mut rng = Rng::new(95);
+        let k = 25;
+        let feats: Vec<Vec<f64>> = (0..k).map(|_| (0..10).map(|_| rng.normal()).collect()).collect();
+        let mut g = DenseMatrix::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                g.set(i, j, crate::linalg::ops::dot(&feats[i], &feats[j]));
+            }
+        }
+        let (vals, _) = eigen_sym(&g);
+        for v in vals {
+            assert!(v > -1e-9, "negative eigenvalue {v} from PSD Gram");
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # ranksvm — linearithmic linear RankSVM training
+//!
+//! A production-grade reproduction of Airola, Pahikkala & Salakoski,
+//! *"Training linear ranking SVMs in linearithmic time using red-black
+//! trees"* (Pattern Recognition Letters, 2010).
+//!
+//! The crate implements the full system of the paper:
+//!
+//! - [`rbtree`] — the order-statistics red-black tree (Definition 1) with
+//!   `Tree-Insert` / `Count-Smaller` / `Count-Larger` in `O(log m)`;
+//! - [`losses`] — the `O(ms + m log m)` loss/subgradient oracle
+//!   (Algorithm 3, "TreeRSVM") plus every baseline the paper evaluates:
+//!   the explicit-pairs `O(m²)` oracle ("PairRSVM"), the r-level
+//!   algorithm of Joachims (2006) ("SVM^rank"), and the squared pairwise
+//!   hinge of Chapelle & Keerthi (2010) ("PRSVM");
+//! - [`bmrm`] — bundle-method / cutting-plane optimization (Algorithm 1)
+//!   with a dual coordinate-descent inner QP and an optional OCAS-style
+//!   line search;
+//! - [`newton`] — truncated-Newton optimizer for the PRSVM baseline;
+//! - [`data`], [`metrics`], [`linalg`] — dataset substrates
+//!   (libsvm I/O, Cadata-like and Reuters-like synthetic generators),
+//!   `O(m log m)` ranking metrics, and dense/CSR/CSC kernels;
+//! - [`compute`] + [`runtime`] — a pluggable compute backend: native Rust
+//!   kernels, or AOT-compiled XLA executables (lowered from JAX/Pallas by
+//!   `python/compile/aot.py`) executed via PJRT;
+//! - [`coordinator`] — training orchestration, config, CLI, and the
+//!   memory-probe subprocess used by the Fig.-3 benchmark.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use ranksvm::coordinator::{TrainConfig, train};
+//! use ranksvm::data::synthetic;
+//!
+//! let ds = synthetic::cadata_like(4000, 42);
+//! let cfg = TrainConfig { lambda: 0.1, ..TrainConfig::default() };
+//! let outcome = train(&ds, &cfg).unwrap();
+//! println!("trained in {} iterations", outcome.iterations);
+//! ```
+
+pub mod bmrm;
+pub mod compute;
+pub mod coordinator;
+pub mod data;
+pub mod kernel;
+pub mod linalg;
+pub mod losses;
+pub mod metrics;
+pub mod newton;
+pub mod rbtree;
+pub mod runtime;
+pub mod util;

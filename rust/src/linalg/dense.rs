@@ -1,0 +1,176 @@
+//! Dense row-major matrix.
+//!
+//! Examples are stored as rows (`m × n`); the paper writes `X ∈ R^{n×m}`
+//! with examples as columns, so our `p = X·w` is the paper's `Xᵀw` and our
+//! `Xᵀ·v` is the paper's `X·v`. The row-major layout serves both the score
+//! matvec (row-wise dot products) and the subgradient accumulation
+//! (row-wise axpy) with sequential memory access.
+
+/// Dense `rows × cols` matrix, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a row-major data vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length must be rows*cols");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// From a slice of rows. Panics on ragged input.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        DenseMatrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `p = X·w` (length `rows`). Panics if `w.len() != cols`.
+    pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = super::ops::dot(self.row(i), w);
+        }
+    }
+
+    /// `a = Xᵀ·v` (length `cols`), accumulated row-wise. Panics on shape
+    /// mismatch. `out` is overwritten.
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi != 0.0 {
+                super::ops::axpy(vi, self.row(i), out);
+            }
+        }
+    }
+
+    /// View of a contiguous row range `[lo, hi)` as a borrowed sub-matrix.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> DenseView<'_> {
+        assert!(lo <= hi && hi <= self.rows);
+        DenseView { rows: hi - lo, cols: self.cols, data: &self.data[lo * self.cols..hi * self.cols] }
+    }
+}
+
+/// Borrowed row-major view (used by the XLA backend to feed row tiles).
+#[derive(Clone, Copy, Debug)]
+pub struct DenseView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f64],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        let x = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let w = [10.0, 1.0];
+        let mut p = vec![0.0; 3];
+        x.matvec(&w, &mut p);
+        assert_eq!(p, vec![12.0, 34.0, 56.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_manual() {
+        let x = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let v = [1.0, -1.0];
+        let mut a = vec![0.0; 2];
+        x.matvec_t(&v, &mut a);
+        assert_eq!(a, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn transpose_consistency_property() {
+        // <Xw, v> == <w, Xᵀv> for random data.
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..20 {
+            let m = 1 + rng.below(30);
+            let n = 1 + rng.below(20);
+            let mut x = DenseMatrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    x.set(i, j, rng.normal());
+                }
+            }
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut p = vec![0.0; m];
+            x.matvec(&w, &mut p);
+            let mut a = vec![0.0; n];
+            x.matvec_t(&v, &mut a);
+            let lhs = crate::linalg::ops::dot(&p, &v);
+            let rhs = crate::linalg::ops::dot(&w, &a);
+            assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn row_slice_views() {
+        let x = DenseMatrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let v = x.row_slice(1, 3);
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.data, &[2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let x = DenseMatrix::zeros(2, 3);
+        let mut p = vec![0.0; 2];
+        x.matvec(&[1.0, 2.0], &mut p); // w too short
+    }
+}

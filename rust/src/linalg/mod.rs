@@ -1,0 +1,13 @@
+//! Dense and sparse linear algebra substrate.
+//!
+//! The paper's per-iteration linear algebra is two matrix–vector products
+//! (`p = Xᵀw`, `a = X(c−d)/N` in the paper's column-example convention;
+//! row-example here) plus O(m) vector work. This module provides those in
+//! `O(ms)` for sparse and `O(mn)` for dense data.
+
+pub mod dense;
+pub mod ops;
+pub mod sparse;
+
+pub use dense::DenseMatrix;
+pub use sparse::{CscMatrix, CsrMatrix};

@@ -1,0 +1,127 @@
+//! Dense vector kernels used throughout the optimizers and losses.
+//!
+//! Written as straightforward slice loops; rustc auto-vectorizes the
+//! chunked forms. `dot` is the innermost hot operation of the native
+//! compute backend (score matvec) and of the BMRM inner QP.
+
+/// Dot product. Panics if lengths differ (debug) / truncates never.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation helps the auto-vectorizer and reduces
+    // the sequential FP dependency chain.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x` (copy).
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(x: &[f64]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Argsort: indices that sort `v` ascending (stable). This is the
+/// `π` construction on line 4 of Algorithm 3.
+pub fn argsort(v: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).expect("NaN in sort key"));
+    idx
+}
+
+/// Argsort reusing a caller-owned index buffer (avoids the per-iteration
+/// allocation in the BMRM loop — §Perf optimization).
+pub fn argsort_into(v: &[f64], idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..v.len());
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).expect("NaN in sort key"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_small_and_remainder() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0; 5]), 15.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+    }
+
+    #[test]
+    fn axpy_and_scal() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        scal(0.5, &mut y);
+        assert_eq!(y, vec![3.5, 4.5]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(norm_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(norm(&[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn argsort_orders_and_is_stable() {
+        let v = [3.0, 1.0, 2.0, 1.0];
+        let idx = argsort(&v);
+        assert_eq!(idx, vec![1, 3, 2, 0]); // stable: 1 before 3
+        let mut buf = Vec::new();
+        argsort_into(&v, &mut buf);
+        assert_eq!(buf, idx);
+    }
+
+    #[test]
+    fn dot_matches_naive_randomized() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..50 {
+            let n = rng.below(200);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9 * (1.0 + naive.abs()));
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! Compressed sparse row (CSR) and column (CSC) matrices.
+//!
+//! The Reuters-like workload is high-dimensional tf-idf-style data with
+//! ~50 non-zeros per row; both score computation (`p = X·w`) and
+//! subgradient accumulation (`a = Xᵀ·v`) run in `O(nnz)` over CSR. A CSC
+//! copy is optional: the paper notes its implementation kept both a
+//! row-optimized and a column-optimized copy of the data matrix, trading
+//! 2× memory for speed (Fig. 3 discussion); `ablation_tree`/§Perf revisit
+//! that trade-off here.
+
+/// CSR sparse matrix (`rows × cols`), f64 values, usize column indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row start offsets, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, length nnz, ascending within each row.
+    indices: Vec<u32>,
+    /// Values, length nnz.
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from triplets `(row, col, value)`. Duplicate entries are
+    /// summed; zero values are kept (callers may prune beforehand).
+    pub fn from_triplets(rows: usize, cols: usize, mut triplets: Vec<(usize, usize, f64)>) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r + 1] += 1;
+                indices.push(c as u32);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Build directly from CSR arrays (validated).
+    pub fn from_raw(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64>) -> Self {
+        assert_eq!(indptr.len(), rows + 1);
+        assert_eq!(indices.len(), values.len());
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        for w in indptr.windows(2) {
+            assert!(w[0] <= w[1], "indptr must be non-decreasing");
+        }
+        assert!(indices.iter().all(|&c| (c as usize) < cols), "column index out of bounds");
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Dense → CSR (drops exact zeros).
+    pub fn from_dense(x: &super::dense::DenseMatrix) -> Self {
+        let mut triplets = Vec::new();
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(x.rows(), x.cols(), triplets)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Average non-zeros per row — the paper's sparsity parameter `s`.
+    pub fn avg_nnz_per_row(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+
+    /// Non-zeros of row `i` as `(indices, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `p = X·w` (length `rows`), `O(nnz)`.
+    pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut s = 0.0;
+            for (&j, &v) in idx.iter().zip(val) {
+                s += v * w[j as usize];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// `a = Xᵀ·v` (length `cols`), `O(nnz)` scatter. `out` overwritten.
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi != 0.0 {
+                let (idx, val) = self.row(i);
+                for (&j, &x) in idx.iter().zip(val) {
+                    out[j as usize] += vi * x;
+                }
+            }
+        }
+    }
+
+    /// Dot product of row `i` with a dense vector (prediction path).
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut s = 0.0;
+        for (&j, &v) in idx.iter().zip(val) {
+            s += v * w[j as usize];
+        }
+        s
+    }
+
+    /// Extract a row-range submatrix `[lo, hi)` (used by train/test splits
+    /// and the query-grouped loss).
+    pub fn row_range(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let (a, b) = (self.indptr[lo], self.indptr[hi]);
+        let indptr: Vec<usize> = self.indptr[lo..=hi].iter().map(|&p| p - a).collect();
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[a..b].to_vec(),
+            values: self.values[a..b].to_vec(),
+        }
+    }
+
+    /// Gather an arbitrary subset of rows into a new matrix.
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut triplets = Vec::new();
+        for (new_i, &i) in rows.iter().enumerate() {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                triplets.push((new_i, j as usize, v));
+            }
+        }
+        CsrMatrix::from_triplets(rows.len(), self.cols, triplets)
+    }
+
+    /// Convert to CSC (column-optimized copy).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut colptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            colptr[c as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut next = colptr.clone();
+        let mut row_indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                let slot = next[j as usize];
+                row_indices[slot] = i as u32;
+                values[slot] = v;
+                next[j as usize] += 1;
+            }
+        }
+        CscMatrix { rows: self.rows, cols: self.cols, colptr, row_indices, values }
+    }
+
+    /// Materialize as dense (tests / XLA tile feeding on small data).
+    pub fn to_dense(&self) -> super::dense::DenseMatrix {
+        let mut d = super::dense::DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                d.set(i, j as usize, v);
+            }
+        }
+        d
+    }
+
+    /// Approximate heap footprint in bytes (Fig-3 memory accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// CSC sparse matrix — column-major twin of [`CsrMatrix`]. Provides the
+/// column-oriented `matvec_t` used by the two-copies ablation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    colptr: Vec<usize>,
+    row_indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zeros of column `j` as `(row indices, values)`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.row_indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `a = Xᵀ·v` computed column-wise: each `a[j]` is a gather over the
+    /// column — no scatter, better locality when `v` is hot in cache.
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            let (idx, val) = self.col(j);
+            let mut s = 0.0;
+            for (&i, &x) in idx.iter().zip(val) {
+                s += x * v[i as usize];
+            }
+            out[j] = s;
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.colptr.len() * std::mem::size_of::<usize>()
+            + self.row_indices.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> CsrMatrix {
+        let mut t = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.bool(density) {
+                    t.push((i, j, rng.normal()));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(rows, cols, t)
+    }
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let m = CsrMatrix::from_triplets(2, 2, vec![(0, 1, 2.0), (0, 1, 3.0), (1, 0, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+        let (idx, val) = m.row(0);
+        assert_eq!(idx, &[1]);
+        assert_eq!(val, &[5.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let rows = 1 + rng.below(40);
+            let cols = 1 + rng.below(30);
+            let m = random_csr(&mut rng, rows, cols, 0.3);
+            let d = m.to_dense();
+            let w: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let mut p1 = vec![0.0; rows];
+            let mut p2 = vec![0.0; rows];
+            m.matvec(&w, &mut p1);
+            d.matvec(&w, &mut p2);
+            for (a, b) in p1.iter().zip(&p2) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_dense_and_csc() {
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let rows = 1 + rng.below(40);
+            let cols = 1 + rng.below(30);
+            let m = random_csr(&mut rng, rows, cols, 0.25);
+            let d = m.to_dense();
+            let csc = m.to_csc();
+            let v: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+            let mut a1 = vec![0.0; cols];
+            let mut a2 = vec![0.0; cols];
+            let mut a3 = vec![0.0; cols];
+            m.matvec_t(&v, &mut a1);
+            d.matvec_t(&v, &mut a2);
+            csc.matvec_t(&v, &mut a3);
+            for i in 0..cols {
+                assert!((a1[i] - a2[i]).abs() < 1e-10);
+                assert!((a1[i] - a3[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn row_range_and_select() {
+        let m = CsrMatrix::from_triplets(4, 3, vec![(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0), (3, 0, 4.0)]);
+        let r = m.row_range(1, 3);
+        assert_eq!(r.rows(), 2);
+        assert_eq!(r.row(0), (&[1u32][..], &[2.0][..]));
+        assert_eq!(r.row(1), (&[2u32][..], &[3.0][..]));
+        let s = m.select_rows(&[3, 0]);
+        assert_eq!(s.row(0), (&[0u32][..], &[4.0][..]));
+        assert_eq!(s.row(1), (&[0u32][..], &[1.0][..]));
+    }
+
+    #[test]
+    fn round_trip_dense() {
+        let d = DenseMatrix::from_rows(&[vec![0.0, 1.5], vec![2.5, 0.0]]);
+        let m = CsrMatrix::from_dense(&d);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense(), d);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::from_triplets(0, 5, vec![]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.avg_nnz_per_row(), 0.0);
+        let mut out = vec![];
+        m.matvec(&[0.0; 5], &mut out);
+    }
+
+    #[test]
+    fn row_dot_matches_matvec() {
+        let mut rng = Rng::new(29);
+        let m = random_csr(&mut rng, 10, 8, 0.4);
+        let w: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let mut p = vec![0.0; 10];
+        m.matvec(&w, &mut p);
+        for i in 0..10 {
+            assert!((m.row_dot(i, &w) - p[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_triplet_panics() {
+        CsrMatrix::from_triplets(2, 2, vec![(2, 0, 1.0)]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Loss / subgradient oracles for pairwise ranking.
+//!
+//! Every training method in the paper reduces to an *oracle* that, given
+//! the predicted scores `p = X·w` and the utility labels `y`, returns the
+//! empirical risk and its gradient with respect to `p`:
+//!
+//! - [`tree::TreeOracle`] — Algorithm 3, `O(m log m)` via the
+//!   order-statistics red-black tree (the paper's contribution);
+//! - [`pairwise::PairOracle`] — the explicit `O(m²)` pair loop
+//!   ("PairRSVM");
+//! - [`rlevel::RLevelOracle`] — Joachims (2006), `O(m log m + rm)` with
+//!   `r` distinct utility levels (what SVM^rank implements);
+//! - [`squared::SquaredPairOracle`] — the squared pairwise hinge of
+//!   Chapelle & Keerthi (2010) ("PRSVM"), with explicit pair
+//!   materialization (quadratic memory, reproducing Fig. 3);
+//! - [`query::QueryGrouped`] — per-query averaging wrapper (§2, §4.3 end).
+//!
+//! The gradient w.r.t. `w` is then `a = Xᵀ·coeffs` (row-example
+//! convention), computed by a [`crate::compute::ComputeBackend`], so the
+//! oracles stay independent of dense/sparse/XLA execution.
+
+pub mod pairwise;
+pub mod query;
+pub mod rlevel;
+pub mod squared;
+pub mod squared_tree;
+pub mod tree;
+
+pub use pairwise::PairOracle;
+pub use query::QueryGrouped;
+pub use rlevel::RLevelOracle;
+pub use squared::SquaredPairOracle;
+pub use squared_tree::SquaredTreeOracle;
+pub use tree::TreeOracle;
+
+/// Result of one oracle evaluation.
+#[derive(Clone, Debug)]
+pub struct OracleOutput {
+    /// Empirical risk `R_emp(w)` (already normalized by the pair count N).
+    pub loss: f64,
+    /// `∂R_emp/∂p` per example; the subgradient w.r.t. `w` is
+    /// `Xᵀ·coeffs`. For the hinge losses this is `(c_i − d_i)/N`.
+    pub coeffs: Vec<f64>,
+}
+
+/// A pairwise ranking loss oracle. Implementations may keep internal
+/// buffers (`&mut self`) so repeated calls inside the BMRM loop do not
+/// reallocate.
+pub trait RankingOracle {
+    /// Evaluate loss and per-example gradient coefficients.
+    ///
+    /// `n_pairs` is the number of comparable pairs `N = |{(i,j): y_i <
+    /// y_j}|`, precomputed once per training set with
+    /// [`count_comparable_pairs`]. Implementations must return zero loss
+    /// and zero coefficients when `n_pairs == 0`.
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput;
+
+    /// Human-readable name used in logs and bench reports.
+    fn name(&self) -> &'static str;
+}
+
+impl RankingOracle for Box<dyn RankingOracle> {
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        (**self).eval(p, y, n_pairs)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Count comparable pairs `N = |{(i,j) : y_i < y_j}|` in `O(m log m)`:
+/// total pairs minus tied pairs, via one sort.
+pub fn count_comparable_pairs(y: &[f64]) -> u64 {
+    let m = y.len() as u64;
+    if m < 2 {
+        return 0;
+    }
+    let mut s: Vec<f64> = y.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN utility score"));
+    let total = m * (m - 1) / 2;
+    let mut ties = 0u64;
+    let mut run = 1u64;
+    for w in s.windows(2) {
+        if w[0] == w[1] {
+            run += 1;
+        } else {
+            ties += run * (run - 1) / 2;
+            run = 1;
+        }
+    }
+    ties += run * (run - 1) / 2;
+    total - ties
+}
+
+/// Shared helper: assemble loss from the frequency vectors via Lemma 1,
+/// `loss = (1/N) Σ ((c_i − d_i)·p_i + c_i)`, and the gradient
+/// coefficients `(c_i − d_i)/N` (Lemma 2).
+pub(crate) fn assemble_from_counts(p: &[f64], c: &[u64], d: &[u64], n_pairs: f64) -> OracleOutput {
+    debug_assert_eq!(p.len(), c.len());
+    debug_assert_eq!(p.len(), d.len());
+    if n_pairs == 0.0 {
+        return OracleOutput { loss: 0.0, coeffs: vec![0.0; p.len()] };
+    }
+    let inv_n = 1.0 / n_pairs;
+    let mut loss = 0.0;
+    let mut coeffs = Vec::with_capacity(p.len());
+    for i in 0..p.len() {
+        let cd = c[i] as f64 - d[i] as f64;
+        loss += cd * p[i] + c[i] as f64;
+        coeffs.push(cd * inv_n);
+    }
+    OracleOutput { loss: loss * inv_n, coeffs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_count_all_distinct() {
+        assert_eq!(count_comparable_pairs(&[3.0, 1.0, 2.0]), 3);
+        assert_eq!(count_comparable_pairs(&[1.0, 2.0, 3.0, 4.0]), 6);
+    }
+
+    #[test]
+    fn pair_count_with_ties() {
+        assert_eq!(count_comparable_pairs(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(count_comparable_pairs(&[1.0, 1.0, 2.0]), 2);
+        // bipartite: 2 positives, 3 negatives → 6 comparable pairs
+        assert_eq!(count_comparable_pairs(&[0.0, 1.0, 0.0, 1.0, 0.0]), 6);
+    }
+
+    #[test]
+    fn pair_count_degenerate() {
+        assert_eq!(count_comparable_pairs(&[]), 0);
+        assert_eq!(count_comparable_pairs(&[5.0]), 0);
+    }
+
+    #[test]
+    fn pair_count_matches_naive_randomized() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..30 {
+            let m = rng.below(60);
+            let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
+            let mut naive = 0u64;
+            for i in 0..m {
+                for j in 0..m {
+                    if y[i] < y[j] {
+                        naive += 1;
+                    }
+                }
+            }
+            assert_eq!(count_comparable_pairs(&y), naive);
+        }
+    }
+
+    #[test]
+    fn assemble_zero_pairs() {
+        let out = assemble_from_counts(&[1.0, 2.0], &[0, 0], &[0, 0], 0.0);
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(out.coeffs, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,122 @@
+//! PairRSVM baseline: the "most obvious approach" of §4.1 — iterate
+//! explicitly over all comparable pairs to accumulate the frequencies
+//! (5)–(6). `O(m²)` time, `O(m)` extra memory. Identical output to
+//! [`super::tree::TreeOracle`] (the paper trains both under the same
+//! BMRM and notes they reach exactly the same solution), so Fig. 1/2
+//! measure pure oracle-cost differences.
+
+use super::{assemble_from_counts, OracleOutput, RankingOracle};
+
+/// Explicit-pairs oracle.
+pub struct PairOracle {
+    c: Vec<u64>,
+    d: Vec<u64>,
+}
+
+impl PairOracle {
+    pub fn new() -> Self {
+        PairOracle { c: Vec::new(), d: Vec::new() }
+    }
+
+    /// Raw frequency computation by the double loop.
+    pub fn compute_counts(&mut self, p: &[f64], y: &[f64]) -> (&[u64], &[u64]) {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        self.c.clear();
+        self.c.resize(m, 0);
+        self.d.clear();
+        self.d.resize(m, 0);
+        // One triangular pass: for each unordered pair, orient by y and
+        // apply the margin test of eqs. (5)/(6). A pair with y_i < y_j and
+        // p_i > p_j − 1 contributes to c_i and to d_j (the two sets are
+        // mirror images).
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let (lo, hi) = if y[i] < y[j] {
+                    (i, j)
+                } else if y[j] < y[i] {
+                    (j, i)
+                } else {
+                    continue;
+                };
+                // lo has the smaller label; canonical margin violation
+                // test (same float expression in every oracle):
+                if 1.0 + p[lo] - p[hi] > 0.0 {
+                    self.c[lo] += 1;
+                    self.d[hi] += 1;
+                }
+            }
+        }
+        (&self.c, &self.d)
+    }
+}
+
+impl Default for PairOracle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RankingOracle for PairOracle {
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        self.compute_counts(p, y);
+        assemble_from_counts(p, &self.c, &self.d, n_pairs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pair"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{count_comparable_pairs, tree::TreeOracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn agrees_exactly_with_tree_oracle() {
+        let mut rng = Rng::new(101);
+        for trial in 0..40 {
+            let m = 1 + rng.below(150);
+            let y: Vec<f64> = match trial % 4 {
+                0 => (0..m).map(|_| rng.normal()).collect(),
+                1 => (0..m).map(|_| rng.below(3) as f64).collect(),
+                2 => (0..m).map(|_| rng.below(2) as f64).collect(),
+                _ => vec![1.0; m], // fully tied
+            };
+            let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let n = count_comparable_pairs(&y) as f64;
+            let mut pair = PairOracle::new();
+            let mut tree = TreeOracle::new();
+            let op = pair.eval(&p, &y, n);
+            let ot = tree.eval(&p, &y, n);
+            assert_eq!(op.coeffs, ot.coeffs, "trial {trial}");
+            assert!((op.loss - ot.loss).abs() < 1e-12, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn counts_are_symmetric_totals() {
+        // Σc_i == Σd_i (every violating pair is counted once on each side).
+        let mut rng = Rng::new(103);
+        let m = 80;
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut pair = PairOracle::new();
+        let (c, d) = pair.compute_counts(&p, &y);
+        assert_eq!(c.iter().sum::<u64>(), d.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn boundary_margin_is_open_interval() {
+        // p_i == p_j − 1 exactly → NOT a violation (strict inequality
+        // in eq. (5)): hinge is max(0, 1 + p_i − p_j) = 0.
+        let y = [0.0, 1.0];
+        let p = [-1.0, 0.0];
+        let mut pair = PairOracle::new();
+        let (c, d) = pair.compute_counts(&p, &y);
+        assert_eq!(c, &[0, 0]);
+        assert_eq!(d, &[0, 0]);
+    }
+}

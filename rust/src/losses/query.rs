@@ -1,0 +1,192 @@
+//! Query-grouped ranking (§2 / end of §4.3).
+//!
+//! In document-retrieval settings preferences are induced only *within*
+//! a query's document set, never across queries: the training data is
+//! partitioned into `R` disjoint subsets, the loss/subgradient is
+//! computed per subset, and the final value is the average over subsets.
+//! With a tree oracle the total complexity is
+//! `O(Σ_g (m_g log m_g)) = O(m log(m/R))` plus the `O(ms)` linear algebra
+//! (paper, end of §4.3).
+
+use super::{count_comparable_pairs, OracleOutput, RankingOracle};
+
+/// Wraps any per-group oracle and averages over query groups.
+pub struct QueryGrouped<O: RankingOracle> {
+    inner: O,
+    /// Example indices per group.
+    groups: Vec<Vec<usize>>,
+    /// Comparable-pair count per group (fixed by the labels at build).
+    group_pairs: Vec<f64>,
+    /// Scratch buffers.
+    p_buf: Vec<f64>,
+    y_buf: Vec<f64>,
+}
+
+impl<O: RankingOracle> QueryGrouped<O> {
+    /// Build from per-example query ids (`qid[i]` arbitrary integers) and
+    /// the fixed label vector.
+    pub fn new(inner: O, qid: &[u64], y: &[f64]) -> Self {
+        assert_eq!(qid.len(), y.len());
+        // Group indices by qid preserving first-seen order.
+        let mut order: Vec<u64> = Vec::new();
+        let mut map: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, &q) in qid.iter().enumerate() {
+            let g = *map.entry(q).or_insert_with(|| {
+                order.push(q);
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(i);
+        }
+        let group_pairs = groups
+            .iter()
+            .map(|g| {
+                let yg: Vec<f64> = g.iter().map(|&i| y[i]).collect();
+                count_comparable_pairs(&yg) as f64
+            })
+            .collect();
+        QueryGrouped { inner, groups, group_pairs, p_buf: Vec::new(), y_buf: Vec::new() }
+    }
+
+    /// Number of query groups.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of groups with at least one comparable pair — the effective
+    /// `R` used for averaging (groups with all-tied labels contribute no
+    /// preference information; including them would only rescale).
+    pub fn n_effective_groups(&self) -> usize {
+        self.group_pairs.iter().filter(|&&n| n > 0.0).count()
+    }
+
+    /// Total comparable pairs across groups (for reporting).
+    pub fn total_pairs(&self) -> f64 {
+        self.group_pairs.iter().sum()
+    }
+}
+
+impl<O: RankingOracle> RankingOracle for QueryGrouped<O> {
+    /// `n_pairs` is ignored — the per-group counts fixed at construction
+    /// are authoritative (callers pass `total_pairs()` for uniformity).
+    fn eval(&mut self, p: &[f64], y: &[f64], _n_pairs: f64) -> OracleOutput {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        let r_eff = self.n_effective_groups().max(1) as f64;
+        let mut loss = 0.0;
+        let mut coeffs = vec![0.0; m];
+        for (g, idx) in self.groups.iter().enumerate() {
+            let ng = self.group_pairs[g];
+            if ng == 0.0 {
+                continue;
+            }
+            self.p_buf.clear();
+            self.y_buf.clear();
+            self.p_buf.extend(idx.iter().map(|&i| p[i]));
+            self.y_buf.extend(idx.iter().map(|&i| y[i]));
+            let out = self.inner.eval(&self.p_buf, &self.y_buf, ng);
+            loss += out.loss / r_eff;
+            for (k, &i) in idx.iter().enumerate() {
+                coeffs[i] = out.coeffs[k] / r_eff;
+            }
+        }
+        OracleOutput { loss, coeffs }
+    }
+
+    fn name(&self) -> &'static str {
+        "query-grouped"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{PairOracle, TreeOracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_group_equals_plain_oracle() {
+        let mut rng = Rng::new(401);
+        let m = 60;
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let qid = vec![7u64; m];
+        let n = count_comparable_pairs(&y) as f64;
+        let mut plain = TreeOracle::new();
+        let mut grouped = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        let a = plain.eval(&p, &y, n);
+        let b = grouped.eval(&p, &y, n);
+        assert!((a.loss - b.loss).abs() < 1e-12);
+        for (x, z) in a.coeffs.iter().zip(&b.coeffs) {
+            assert!((x - z).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_manual_per_group_average() {
+        let mut rng = Rng::new(403);
+        // 3 groups of different sizes, interleaved qids.
+        let qid: Vec<u64> = (0..90).map(|i| (i % 3) as u64).collect();
+        let y: Vec<f64> = (0..90).map(|_| rng.below(4) as f64).collect();
+        let p: Vec<f64> = (0..90).map(|_| rng.normal()).collect();
+        let mut grouped = QueryGrouped::new(PairOracle::new(), &qid, &y);
+        let out = grouped.eval(&p, &y, grouped.total_pairs());
+
+        // Manual: evaluate each group separately and average.
+        let mut manual_loss = 0.0;
+        let mut manual_coeffs = vec![0.0; 90];
+        let mut r_eff = 0.0;
+        for g in 0..3u64 {
+            let idx: Vec<usize> = (0..90).filter(|&i| qid[i] == g).collect();
+            let yg: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            let ng = count_comparable_pairs(&yg) as f64;
+            if ng > 0.0 {
+                r_eff += 1.0;
+            }
+        }
+        for g in 0..3u64 {
+            let idx: Vec<usize> = (0..90).filter(|&i| qid[i] == g).collect();
+            let yg: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            let pg: Vec<f64> = idx.iter().map(|&i| p[i]).collect();
+            let ng = count_comparable_pairs(&yg) as f64;
+            if ng == 0.0 {
+                continue;
+            }
+            let mut o = PairOracle::new();
+            let og = o.eval(&pg, &yg, ng);
+            manual_loss += og.loss / r_eff;
+            for (k, &i) in idx.iter().enumerate() {
+                manual_coeffs[i] = og.coeffs[k] / r_eff;
+            }
+        }
+        assert!((out.loss - manual_loss).abs() < 1e-12);
+        for (a, b) in out.coeffs.iter().zip(&manual_coeffs) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn no_cross_group_preferences() {
+        // Two groups each internally tied: no pairs at all, even though
+        // labels differ across groups.
+        let qid = [0u64, 0, 1, 1];
+        let y = [1.0, 1.0, 2.0, 2.0];
+        let p = [9.0, -9.0, 3.0, -3.0];
+        let mut grouped = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        assert_eq!(grouped.n_groups(), 2);
+        assert_eq!(grouped.n_effective_groups(), 0);
+        assert_eq!(grouped.total_pairs(), 0.0);
+        let out = grouped.eval(&p, &y, 0.0);
+        assert_eq!(out.loss, 0.0);
+        assert!(out.coeffs.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut grouped = QueryGrouped::new(TreeOracle::new(), &[], &[]);
+        let out = grouped.eval(&[], &[], 0.0);
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(grouped.n_groups(), 0);
+    }
+}

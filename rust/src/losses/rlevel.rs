@@ -1,0 +1,161 @@
+//! The r-level algorithm of Joachims (2006) — what SVM^rank implements.
+//!
+//! After sorting by predicted score (`O(m log m)`), the frequencies
+//! (5)–(6) are computed with one two-pointer merge *per distinct utility
+//! level*: for level `ℓ`, the examples labelled `ℓ` are merged against
+//! the examples with larger (for `c`) / smaller (for `d`) labels, both
+//! streams already in score order. Cost `O(rm)` after the sort, i.e.
+//! `O(ms + m log m + rm)` per training iteration — efficient when `r` is
+//! a small constant (bipartite, 5-star ratings) and quadratic when
+//! `r ≈ m` (the regime Figs. 1–2 probe; the paper's Table-less evaluation
+//! hinges on this contrast with the tree oracle).
+
+use super::{assemble_from_counts, OracleOutput, RankingOracle};
+use crate::linalg::ops::argsort_into;
+
+/// r-level oracle (SVM^rank stand-in; see DESIGN.md §6).
+pub struct RLevelOracle {
+    pi: Vec<usize>,
+    c: Vec<u64>,
+    d: Vec<u64>,
+    /// Scratch: indices (in score order) for the current level / others.
+    level_buf: Vec<usize>,
+    other_buf: Vec<usize>,
+}
+
+impl RLevelOracle {
+    pub fn new() -> Self {
+        RLevelOracle {
+            pi: Vec::new(),
+            c: Vec::new(),
+            d: Vec::new(),
+            level_buf: Vec::new(),
+            other_buf: Vec::new(),
+        }
+    }
+
+    /// Distinct sorted utility levels — the paper's `r`.
+    pub fn levels(y: &[f64]) -> Vec<f64> {
+        let mut l: Vec<f64> = y.to_vec();
+        l.sort_by(|a, b| a.partial_cmp(b).expect("NaN utility score"));
+        l.dedup();
+        l
+    }
+
+    /// Frequency computation with O(r) passes over the score-sorted data.
+    pub fn compute_counts(&mut self, p: &[f64], y: &[f64]) -> (&[u64], &[u64]) {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        self.c.clear();
+        self.c.resize(m, 0);
+        self.d.clear();
+        self.d.resize(m, 0);
+        argsort_into(p, &mut self.pi);
+        let levels = Self::levels(y);
+
+        for &level in &levels {
+            // --- c for this level: merge against examples with y > level.
+            self.level_buf.clear();
+            self.other_buf.clear();
+            for &k in &self.pi {
+                if y[k] == level {
+                    self.level_buf.push(k);
+                } else if y[k] > level {
+                    self.other_buf.push(k);
+                }
+            }
+            // Two-pointer: both lists ascend in p. For i in level order
+            // (the low-label side), count j violating the canonical
+            // hinge predicate 1 + p_i − p_j > 0 (eq. 5).
+            let mut j = 0usize;
+            for &i in &self.level_buf {
+                while j < self.other_buf.len() && 1.0 + p[i] - p[self.other_buf[j]] > 0.0 {
+                    j += 1;
+                }
+                self.c[i] = j as u64;
+            }
+
+            // --- d for this level: merge against examples with y < level,
+            // descending in p. Count j with p[j] > p[i] − 1 (eq. 6).
+            self.other_buf.clear();
+            for &k in &self.pi {
+                if y[k] < level {
+                    self.other_buf.push(k);
+                }
+            }
+            // i is now the high-label side: violation ⇔ 1 + p_j − p_i > 0.
+            let mut j = self.other_buf.len();
+            for &i in self.level_buf.iter().rev() {
+                while j > 0 && 1.0 + p[self.other_buf[j - 1]] - p[i] > 0.0 {
+                    j -= 1;
+                }
+                self.d[i] = (self.other_buf.len() - j) as u64;
+            }
+        }
+        (&self.c, &self.d)
+    }
+}
+
+impl Default for RLevelOracle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RankingOracle for RLevelOracle {
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        self.compute_counts(p, y);
+        assemble_from_counts(p, &self.c, &self.d, n_pairs)
+    }
+
+    fn name(&self) -> &'static str {
+        "rlevel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{count_comparable_pairs, PairOracle, RankingOracle, TreeOracle};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn agrees_with_tree_and_pair_oracles() {
+        let mut rng = Rng::new(202);
+        for trial in 0..40 {
+            let m = 1 + rng.below(120);
+            let y: Vec<f64> = match trial % 4 {
+                0 => (0..m).map(|_| rng.below(2) as f64).collect(),   // bipartite
+                1 => (0..m).map(|_| 1.0 + rng.below(5) as f64).collect(), // 5-star
+                2 => (0..m).map(|_| rng.normal()).collect(),           // r ≈ m
+                _ => vec![2.0; m],
+            };
+            let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let n = count_comparable_pairs(&y) as f64;
+            let mut rl = RLevelOracle::new();
+            let mut tr = TreeOracle::new();
+            let mut pr = PairOracle::new();
+            let o1 = rl.eval(&p, &y, n);
+            let o2 = tr.eval(&p, &y, n);
+            let o3 = pr.eval(&p, &y, n);
+            assert_eq!(o1.coeffs, o2.coeffs, "trial {trial}");
+            assert_eq!(o1.coeffs, o3.coeffs, "trial {trial}");
+            assert!((o1.loss - o2.loss).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn levels_helper() {
+        assert_eq!(RLevelOracle::levels(&[2.0, 1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+        assert!(RLevelOracle::levels(&[]).is_empty());
+    }
+
+    #[test]
+    fn bipartite_counts_manual() {
+        // y: [0,1], p: [0.5, 0.0] — pair (0,1) violates: 0.5 > 0 − 1.
+        let mut rl = RLevelOracle::new();
+        let (c, d) = rl.compute_counts(&[0.5, 0.0], &[0.0, 1.0]);
+        assert_eq!(c, &[1, 0]);
+        assert_eq!(d, &[0, 1]);
+    }
+}

@@ -1,0 +1,242 @@
+//! `ranksvm` CLI — the leader entry point of the coordinator.
+//!
+//! Subcommands:
+//!
+//! - `train`      — train a model on a libsvm file or a synthetic set
+//! - `eval`       — pairwise ranking error of a saved model on a dataset
+//! - `gen-data`   — write a synthetic dataset in libsvm format
+//! - `mem-probe`  — child process used by the Fig.-3 memory benchmark
+//! - `info`       — dataset statistics (m, n, s, r, N)
+//!
+//! Run with no args for usage.
+
+use anyhow::{bail, Context, Result};
+use ranksvm::coordinator::{evaluate, memprobe, train, BackendKind, Method, RankModel, TrainConfig};
+use ranksvm::data::{libsvm, synthetic, Dataset};
+use ranksvm::util::cli::Args;
+use ranksvm::util::json::Json;
+
+fn usage() -> ! {
+    eprintln!(
+        "ranksvm — linearithmic linear RankSVM training (TreeRSVM reproduction)
+
+USAGE:
+  ranksvm train     (--data F | --synthetic K --m M) [--method tree|pair|rlevel|prsvm|tree-dedup|tree-fenwick]
+                    [--lambda L] [--epsilon E] [--max-iter I] [--backend native|native-csc|xla]
+                    [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
+  ranksvm eval      --model MODEL --data F
+  ranksvm gen-data  --synthetic K --m M --out F [--seed S]
+  ranksvm info      (--data F | --synthetic K --m M)
+  ranksvm mem-probe --dataset K --m M --method NAME [--lambda L] [--max-iter I]
+
+  synthetic kinds K: cadata | reuters | reuters-small | ordinal | queries"
+    );
+    std::process::exit(2);
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    let seed = args.u64_or("seed", 42);
+    if let Some(path) = args.get("data") {
+        return libsvm::read(path);
+    }
+    let m = args.usize_or("m", 1000);
+    match args.get("synthetic") {
+        Some("cadata") => Ok(synthetic::cadata_like(m, seed)),
+        Some("reuters") => Ok(synthetic::reuters_like(m, seed)),
+        Some("reuters-small") => Ok(synthetic::reuters_like_with(m, 5000, 30, seed)),
+        Some("ordinal") => Ok(synthetic::ordinal(m, args.usize_or("levels", 5), seed)),
+        Some("queries") => {
+            let per = args.usize_or("per-query", 20);
+            Ok(synthetic::queries(m.div_ceil(per), per, args.usize_or("features", 10), seed))
+        }
+        Some(k) => bail!("unknown synthetic kind {k:?}"),
+        None => bail!("need --data or --synthetic"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let method = Method::parse(&args.str_or("method", "tree"))
+        .context("bad --method (tree|tree-dedup|tree-fenwick|pair|rlevel|prsvm)")?;
+    let backend = BackendKind::parse(&args.str_or("backend", "native")).context("bad --backend")?;
+    let cfg = TrainConfig {
+        method,
+        backend,
+        lambda: args.f64_or("lambda", 1e-2),
+        epsilon: args.f64_or("epsilon", 1e-3),
+        max_iter: args.usize_or("max-iter", 2000),
+        line_search: args.flag("line-search"),
+        artifacts_dir: args.str_or("artifacts", "artifacts"),
+        verbose: args.flag("verbose"),
+    };
+    let test_size = args.usize_or("test-size", 0);
+    let (train_ds, test_ds) = if test_size > 0 {
+        let (tr, te) = ds.split(test_size, args.u64_or("seed", 42));
+        (tr, Some(te))
+    } else {
+        (ds, None)
+    };
+    let out = train(&train_ds, &cfg)?;
+    let mut record = vec![
+        ("dataset".to_string(), Json::Str(train_ds.name.clone())),
+        ("m".to_string(), train_ds.len().into()),
+        ("n".to_string(), train_ds.dim().into()),
+        ("s".to_string(), train_ds.sparsity().into()),
+        ("levels".to_string(), train_ds.n_levels().into()),
+    ];
+    if let Json::Obj(base) = out.to_json() {
+        record.extend(base);
+    }
+    if let Some(te) = &test_ds {
+        record.push(("test_error".to_string(), evaluate(&out.model, te).into()));
+        record.push(("test_m".to_string(), te.len().into()));
+    }
+    println!("{}", Json::Obj(record).to_string());
+    if let Some(path) = args.get("out") {
+        out.model.save(path)?;
+        eprintln!("model saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = RankModel::load(args.get("model").context("need --model")?)?;
+    let ds = load_dataset(args)?;
+    let err = evaluate(&model, &ds);
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("dataset", Json::Str(ds.name.clone())),
+            ("m", ds.len().into()),
+            ("pairwise_error", err.into()),
+        ])
+        .to_string()
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let out = args.get("out").context("need --out")?;
+    libsvm::write(&ds, out)?;
+    eprintln!("wrote {} examples ({} features) to {out}", ds.len(), ds.dim());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("dataset", Json::Str(ds.name.clone())),
+            ("m", ds.len().into()),
+            ("n", ds.dim().into()),
+            ("nnz", ds.x.nnz().into()),
+            ("s", ds.sparsity().into()),
+            ("levels", ds.n_levels().into()),
+            ("n_pairs", (ranksvm::losses::count_comparable_pairs(&ds.y) as usize).into()),
+            ("grouped", ds.qid.is_some().into()),
+        ])
+        .to_string()
+    );
+    Ok(())
+}
+
+/// §Perf probe: break one TreeRSVM oracle call into its phases
+/// (score matvec / argsort / c-sweep / d-sweep / gradient) at growing m.
+fn cmd_perf(args: &Args) -> Result<()> {
+    use ranksvm::losses::{count_comparable_pairs, RankingOracle, TreeOracle};
+    let sizes = args.usize_list_or("sizes", &[10_000, 50_000, 200_000]);
+    let reps = args.usize_or("reps", 5);
+    let kind = args.str_or("synthetic", "reuters");
+    println!(
+        "{:>9} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11}",
+        "m", "matvec", "sort", "sweep_c", "sweep_d", "grad", "total"
+    );
+    for &m in &sizes {
+        let ds = match kind.as_str() {
+            "cadata" => synthetic::cadata_like(m, 7),
+            _ => synthetic::reuters_like(m, 7),
+        };
+        let n_pairs = count_comparable_pairs(&ds.y) as f64;
+        let mut w = vec![0.0; ds.dim()];
+        ds.x.matvec_t(&ds.y, &mut w);
+        let nrm = ranksvm::linalg::ops::norm(&w).max(1e-12);
+        ranksvm::linalg::ops::scal(1.0 / nrm, &mut w);
+        let use_fenwick = args.str_or("method", "tree") == "tree-fenwick";
+        if use_fenwick {
+            // Fenwick comparison path: report eval total only.
+            let mut oracle = ranksvm::losses::tree::fenwick_oracle(&ds.y);
+            let mut p = vec![0.0; ds.len()];
+            ds.x.matvec(&w, &mut p);
+            std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
+            }
+            println!("{:>9} fenwick eval total: {:.2}ms", m, 1e3 * t.elapsed().as_secs_f64() / reps as f64);
+            continue;
+        }
+        let mut oracle = TreeOracle::new();
+        let mut p = vec![0.0; ds.len()];
+        let mut a = vec![0.0; ds.dim()];
+        // warmup
+        ds.x.matvec(&w, &mut p);
+        let out = oracle.eval(&p, &ds.y, n_pairs);
+        ds.x.matvec_t(&out.coeffs, &mut a);
+        oracle.phases = ranksvm::util::timer::PhaseTimes::new();
+        let mut t_matvec = 0.0;
+        let mut t_grad = 0.0;
+        let total_timer = std::time::Instant::now();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            ds.x.matvec(&w, &mut p);
+            t_matvec += t.elapsed().as_secs_f64();
+            let out = oracle.eval(&p, &ds.y, n_pairs);
+            let t = std::time::Instant::now();
+            ds.x.matvec_t(&out.coeffs, &mut a);
+            t_grad += t.elapsed().as_secs_f64();
+        }
+        let total = total_timer.elapsed().as_secs_f64() / reps as f64;
+        let ph = &oracle.phases;
+        let r = reps as f64;
+        println!(
+            "{:>9} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.2}ms",
+            m,
+            1e3 * t_matvec / r,
+            1e3 * ph.get("sort").as_secs_f64() / r,
+            1e3 * ph.get("sweep_c").as_secs_f64() / r,
+            1e3 * ph.get("sweep_d").as_secs_f64() / r,
+            1e3 * t_grad / r,
+            1e3 * total,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mem_probe(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "reuters-small");
+    let m = args.usize_or("m", 1000);
+    let method = Method::parse(&args.str_or("method", "tree")).context("bad --method")?;
+    memprobe::run_probe(
+        &dataset,
+        m,
+        method,
+        args.f64_or("lambda", 1e-4),
+        args.usize_or("max-iter", 10),
+        args.u64_or("seed", 42),
+    )
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("info") => cmd_info(&args),
+        Some("mem-probe") => cmd_mem_probe(&args),
+        Some("perf") => cmd_perf(&args),
+        _ => usage(),
+    }
+}

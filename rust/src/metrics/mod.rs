@@ -1,0 +1,268 @@
+//! Ranking performance metrics.
+//!
+//! The paper's eq. (1) — the pairwise ranking error, i.e. the fraction of
+//! comparable pairs ordered incorrectly by the predictions — evaluated in
+//! `O(m log m)` by counting inversions with a Fenwick tree over
+//! rank-compressed predictions (the naive definition is `O(m²)`; a
+//! property test pins them equal). Special cases: AUC (bipartite labels)
+//! and a query-grouped average.
+
+use crate::rbtree::FenwickCounter;
+
+/// Pairwise ranking error (eq. 1): fraction of pairs with `y_i < y_j`
+/// where the prediction orders them wrongly. Ties in predictions count
+/// as half an error (the standard convention, consistent with the
+/// Wilcoxon-Mann-Whitney statistic / AUC in the bipartite case).
+/// Returns 0 when no comparable pairs exist.
+pub fn pairwise_error(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let m = pred.len();
+    if m < 2 {
+        return 0.0;
+    }
+    // Sort by label ascending; ties in label grouped. For each label
+    // group, all previously inserted examples have strictly smaller y.
+    // A pair (prev, cur) is wrong if pred_prev > pred_cur, half-wrong if
+    // equal. Count via two Fenwick queries per example over compressed
+    // prediction values.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| y[a].partial_cmp(&y[b]).expect("NaN label"));
+    let f_larger = |f: &FenwickCounter, v: f64| f.count_larger(v);
+    let f_smaller = |f: &FenwickCounter, v: f64| f.count_smaller(v);
+
+    let mut fen = FenwickCounter::new(pred);
+    let mut wrong = 0.0f64;
+    let mut total = 0u64;
+    let mut i = 0;
+    while i < m {
+        // label-tie group [i, j)
+        let mut j = i;
+        while j < m && y[order[j]] == y[order[i]] {
+            j += 1;
+        }
+        let inserted = fen.len(); // examples with strictly smaller label
+        for k in i..j {
+            let p = pred[order[k]];
+            let larger = f_larger(&fen, p); // prev pred > cur pred → wrong
+            let smaller = f_smaller(&fen, p);
+            let ties = inserted - larger - smaller;
+            wrong += larger as f64 + 0.5 * ties as f64;
+            total += inserted;
+        }
+        for k in i..j {
+            fen.insert(pred[order[k]]);
+        }
+        i = j;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        wrong / total as f64
+    }
+}
+
+/// AUC for bipartite labels (y ∈ {neg, pos} with neg < pos):
+/// `AUC = 1 − pairwise_error` by the Wilcoxon–Mann–Whitney identity.
+pub fn auc(pred: &[f64], y: &[f64]) -> f64 {
+    1.0 - pairwise_error(pred, y)
+}
+
+/// Query-grouped pairwise error: eq. (1) per group, averaged over groups
+/// that contain at least one comparable pair (paper §2).
+pub fn grouped_pairwise_error(pred: &[f64], y: &[f64], qid: &[u64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    assert_eq!(pred.len(), qid.len());
+    let mut groups: std::collections::HashMap<u64, Vec<usize>> = std::collections::HashMap::new();
+    for (i, &q) in qid.iter().enumerate() {
+        groups.entry(q).or_default().push(i);
+    }
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for idx in groups.values() {
+        let yg: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+        if crate::losses::count_comparable_pairs(&yg) == 0 {
+            continue;
+        }
+        let pg: Vec<f64> = idx.iter().map(|&i| pred[i]).collect();
+        sum += pairwise_error(&pg, &yg);
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Kendall's τ-a over comparable pairs: `1 − 2·error` (in [−1, 1]).
+pub fn kendall_tau(pred: &[f64], y: &[f64]) -> f64 {
+    1.0 - 2.0 * pairwise_error(pred, y)
+}
+
+/// NDCG@k with exponential gains `(2^y − 1)` and log2 discounts — the
+/// standard listwise retrieval metric (complements the paper's pairwise
+/// criterion in the document-retrieval examples). Ties in `pred` are
+/// broken by original index (deterministic). Returns 1.0 for an ideal
+/// ordering, 0.0 when there is no gain at all.
+pub fn ndcg_at_k(pred: &[f64], y: &[f64], k: usize) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let m = pred.len();
+    if m == 0 || k == 0 {
+        return 0.0;
+    }
+    let k = k.min(m);
+    let gain = |v: f64| (2f64.powf(v) - 1.0).max(0.0);
+    let dcg = |order: &[usize]| -> f64 {
+        order
+            .iter()
+            .take(k)
+            .enumerate()
+            .map(|(rank, &i)| gain(y[i]) / ((rank + 2) as f64).log2())
+            .sum()
+    };
+    let mut by_pred: Vec<usize> = (0..m).collect();
+    by_pred.sort_by(|&a, &b| pred[b].partial_cmp(&pred[a]).unwrap().then(a.cmp(&b)));
+    let mut ideal: Vec<usize> = (0..m).collect();
+    ideal.sort_by(|&a, &b| y[b].partial_cmp(&y[a]).unwrap().then(a.cmp(&b)));
+    let idcg = dcg(&ideal);
+    if idcg <= 0.0 {
+        0.0
+    } else {
+        dcg(&by_pred) / idcg
+    }
+}
+
+/// Precision@k for bipartite labels (`y > threshold` is relevant):
+/// fraction of the top-k predictions that are relevant.
+pub fn precision_at_k(pred: &[f64], y: &[f64], k: usize, threshold: f64) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let m = pred.len();
+    if m == 0 || k == 0 {
+        return 0.0;
+    }
+    let k = k.min(m);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| pred[b].partial_cmp(&pred[a]).unwrap().then(a.cmp(&b)));
+    order.iter().take(k).filter(|&&i| y[i] > threshold).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_error(pred: &[f64], y: &[f64]) -> f64 {
+        let m = pred.len();
+        let mut wrong = 0.0;
+        let mut total = 0u64;
+        for i in 0..m {
+            for j in 0..m {
+                if y[i] < y[j] {
+                    total += 1;
+                    if pred[i] > pred[j] {
+                        wrong += 1.0;
+                    } else if pred[i] == pred[j] {
+                        wrong += 0.5;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            wrong / total as f64
+        }
+    }
+
+    #[test]
+    fn perfect_and_reversed() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pairwise_error(&[1.0, 2.0, 3.0, 4.0], &y), 0.0);
+        assert_eq!(pairwise_error(&[4.0, 3.0, 2.0, 1.0], &y), 1.0);
+        assert_eq!(kendall_tau(&[1.0, 2.0, 3.0, 4.0], &y), 1.0);
+        assert_eq!(kendall_tau(&[4.0, 3.0, 2.0, 1.0], &y), -1.0);
+    }
+
+    #[test]
+    fn all_tied_predictions_give_half() {
+        let y = [1.0, 2.0, 3.0];
+        assert!((pairwise_error(&[0.0, 0.0, 0.0], &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_naive_randomized() {
+        let mut rng = Rng::new(601);
+        for trial in 0..40 {
+            let m = 1 + rng.below(100);
+            let y: Vec<f64> = match trial % 3 {
+                0 => (0..m).map(|_| rng.normal()).collect(),
+                1 => (0..m).map(|_| rng.below(4) as f64).collect(),
+                _ => (0..m).map(|_| rng.below(2) as f64).collect(),
+            };
+            // predictions with deliberate ties
+            let p: Vec<f64> = (0..m).map(|_| (rng.below(20) as f64) / 4.0).collect();
+            let fast = pairwise_error(&p, &y);
+            let naive = naive_error(&p, &y);
+            assert!((fast - naive).abs() < 1e-12, "trial {trial}: {fast} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn auc_identity() {
+        let y = [0.0, 0.0, 1.0, 1.0];
+        let p = [0.1, 0.4, 0.35, 0.8];
+        // pairs: (0,2):ok (0,3):ok (1,2):wrong (1,3):ok → auc = 3/4
+        assert!((auc(&p, &y) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouped_error_averages_groups() {
+        let y = [1.0, 2.0, 1.0, 2.0];
+        let qid = [0u64, 0, 1, 1];
+        let p = [0.0, 1.0, 1.0, 0.0]; // group 0 perfect, group 1 reversed
+        assert!((grouped_pairwise_error(&p, &y, &qid) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(pairwise_error(&[], &[]), 0.0);
+        assert_eq!(pairwise_error(&[1.0], &[1.0]), 0.0);
+        assert_eq!(pairwise_error(&[1.0, 2.0], &[3.0, 3.0]), 0.0); // no comparable pairs
+    }
+
+    #[test]
+    fn ndcg_perfect_and_reversed() {
+        let y = [3.0, 2.0, 1.0, 0.0];
+        assert!((ndcg_at_k(&[4.0, 3.0, 2.0, 1.0], &y, 4) - 1.0).abs() < 1e-12);
+        let rev = ndcg_at_k(&[1.0, 2.0, 3.0, 4.0], &y, 4);
+        assert!(rev < 1.0 && rev > 0.0);
+        // k=1 with the best item on top
+        assert!((ndcg_at_k(&[9.0, 0.0, 0.0, 0.0], &y, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_matches_manual_small_case() {
+        // y = [1, 0], pred puts the irrelevant one first:
+        // DCG = 0/log2(2) + 1/log2(3); IDCG = 1/log2(2) = 1.
+        let got = ndcg_at_k(&[2.0, 1.0], &[0.0, 1.0], 2);
+        let want = 1.0 / 3f64.log2();
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn ndcg_degenerate() {
+        assert_eq!(ndcg_at_k(&[], &[], 5), 0.0);
+        assert_eq!(ndcg_at_k(&[1.0, 2.0], &[0.0, 0.0], 2), 0.0); // no gain anywhere
+        assert_eq!(ndcg_at_k(&[1.0], &[1.0], 0), 0.0);
+    }
+
+    #[test]
+    fn precision_at_k_basics() {
+        let y = [1.0, 0.0, 1.0, 0.0];
+        let p = [4.0, 3.0, 2.0, 1.0]; // top-2 = items 0,1 → one relevant
+        assert!((precision_at_k(&p, &y, 2, 0.5) - 0.5).abs() < 1e-12);
+        assert!((precision_at_k(&p, &y, 1, 0.5) - 1.0).abs() < 1e-12);
+        assert!((precision_at_k(&p, &y, 4, 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(precision_at_k(&[], &[], 3, 0.5), 0.0);
+    }
+}

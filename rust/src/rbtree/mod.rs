@@ -1,0 +1,59 @@
+//! Order-statistics search structures — the paper's §4.2.
+//!
+//! [`OsTree`] is the faithful reproduction: a red-black tree augmented
+//! with subtree sizes supporting `Tree-Insert`, `Count-Smaller`
+//! (Algorithm 2) and `Count-Larger` in `O(log m)` (Lemmas 3–5), plus the
+//! duplicate-merging `nodesize` variant with `O(log r)` operations.
+//! [`FenwickCounter`] is an ablation alternative exploiting the fixed key
+//! universe of Algorithm 3 (see `benches/ablation_tree.rs`).
+
+pub mod fenwick;
+pub mod ostree;
+pub mod sumtree;
+
+pub use fenwick::FenwickCounter;
+pub use ostree::OsTree;
+pub use sumtree::{Agg, SumTree};
+
+/// Common interface over the counting structures so Algorithm 3 can be
+/// instantiated with either (used by the ablation bench and tests).
+pub trait RankCounter {
+    /// Insert one occurrence of `key`.
+    fn insert(&mut self, key: f64);
+    /// Stored keys strictly smaller than `key`.
+    fn count_smaller(&self, key: f64) -> u64;
+    /// Stored keys strictly larger than `key`.
+    fn count_larger(&self, key: f64) -> u64;
+    /// Remove everything, keeping capacity.
+    fn clear(&mut self);
+}
+
+impl RankCounter for OsTree {
+    fn insert(&mut self, key: f64) {
+        OsTree::insert(self, key)
+    }
+    fn count_smaller(&self, key: f64) -> u64 {
+        OsTree::count_smaller(self, key)
+    }
+    fn count_larger(&self, key: f64) -> u64 {
+        OsTree::count_larger(self, key)
+    }
+    fn clear(&mut self) {
+        OsTree::clear(self)
+    }
+}
+
+impl RankCounter for FenwickCounter {
+    fn insert(&mut self, key: f64) {
+        FenwickCounter::insert(self, key)
+    }
+    fn count_smaller(&self, key: f64) -> u64 {
+        FenwickCounter::count_smaller(self, key)
+    }
+    fn count_larger(&self, key: f64) -> u64 {
+        FenwickCounter::count_larger(self, key)
+    }
+    fn clear(&mut self) {
+        FenwickCounter::clear(self)
+    }
+}

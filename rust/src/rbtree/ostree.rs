@@ -1,0 +1,535 @@
+//! Order-statistics red-black tree (Definition 1 of the paper).
+//!
+//! A self-balancing binary search tree over real-valued keys, augmented
+//! with subtree sizes so that the number of stored keys strictly smaller
+//! (`Count-Smaller`, Algorithm 2) or strictly larger (`Count-Larger`) than
+//! a query value is computed in `O(log m)`. Together with `Tree-Insert`
+//! (Lemma 3) these are the three operations Algorithm 3 needs.
+//!
+//! Implementation notes:
+//! - **Array-backed nodes** (`Vec<Node>`, `u32` links, index 0 is the NIL
+//!   sentinel): no per-node allocation, cache-friendly, and `clear()`
+//!   lets the BMRM loop reuse one tree across iterations (§Perf).
+//! - **Duplicate keys** are supported two ways, matching §4.2 of the
+//!   paper: the default inserts a distinct node per duplicate; the
+//!   *dedup* mode (`OsTree::new_dedup`) stores a multiplicity counter
+//!   `nodesize` per distinct key, bounding the height by `O(log r)` where
+//!   `r` is the number of distinct keys.
+//! - Counting is **strict** (`<` / `>`), exactly what eqs. (5)–(6) need:
+//!   ties in `y` contribute to neither `c_i` nor `d_i`.
+
+const NIL: u32 = 0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Color {
+    Red,
+    Black,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: f64,
+    left: u32,
+    right: u32,
+    parent: u32,
+    color: Color,
+    /// Total multiplicity stored in this subtree (`size` of Definition 1,
+    /// generalized by the dedup variant's `nodesize` re-definition).
+    size: u32,
+    /// Multiplicity at this node (1 unless dedup mode merges duplicates).
+    nodesize: u32,
+}
+
+/// Order-statistics red-black tree over `f64` keys.
+#[derive(Clone, Debug)]
+pub struct OsTree {
+    nodes: Vec<Node>,
+    root: u32,
+    dedup: bool,
+    /// Free list head for reuse after `clear()` — we simply truncate, so
+    /// this tracks nothing today, but `clear` keeps capacity.
+    len: u64,
+}
+
+impl OsTree {
+    /// New tree; every insert creates a node (paper's base variant).
+    pub fn new() -> Self {
+        Self::with_mode(false)
+    }
+
+    /// New tree merging duplicate keys into one node with a multiplicity
+    /// counter (the `nodesize` variant from §4.2; height `O(log r)`).
+    pub fn new_dedup() -> Self {
+        Self::with_mode(true)
+    }
+
+    fn with_mode(dedup: bool) -> Self {
+        let sentinel = Node {
+            key: f64::NAN,
+            left: NIL,
+            right: NIL,
+            parent: NIL,
+            color: Color::Black,
+            size: 0,
+            nodesize: 0,
+        };
+        OsTree { nodes: vec![sentinel], root: NIL, dedup, len: 0 }
+    }
+
+    /// Pre-allocate node storage for `cap` inserts.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut t = Self::new();
+        t.nodes.reserve(cap);
+        t
+    }
+
+    /// Number of keys stored (counting multiplicity).
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of tree nodes (distinct keys in dedup mode).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Remove all keys, retaining allocated capacity for reuse.
+    pub fn clear(&mut self) {
+        self.nodes.truncate(1);
+        self.root = NIL;
+        self.len = 0;
+    }
+
+    #[inline]
+    fn n(&self, i: u32) -> &Node {
+        &self.nodes[i as usize]
+    }
+
+    #[inline]
+    fn nm(&mut self, i: u32) -> &mut Node {
+        &mut self.nodes[i as usize]
+    }
+
+    #[inline]
+    fn fix_size(&mut self, x: u32) {
+        let l = self.n(self.n(x).left).size;
+        let r = self.n(self.n(x).right).size;
+        let ns = self.n(x).nodesize;
+        self.nm(x).size = l + r + ns;
+    }
+
+    /// `Tree-Insert(T, key)` — Lemma 3: `O(log m)` (`O(log r)` in dedup
+    /// mode). NaN keys are rejected (would break the search-tree order).
+    pub fn insert(&mut self, key: f64) {
+        assert!(!key.is_nan(), "NaN keys are not orderable");
+        self.len += 1;
+        if self.root == NIL {
+            let id = self.alloc(key, NIL);
+            self.nm(id).color = Color::Black;
+            self.root = id;
+            return;
+        }
+        // Descend, bumping subtree sizes on the way (every ancestor of the
+        // new/incremented node gains one unit of multiplicity).
+        let mut x = self.root;
+        loop {
+            self.nm(x).size += 1;
+            let k = self.n(x).key;
+            if self.dedup && key == k {
+                self.nm(x).nodesize += 1;
+                return;
+            }
+            if key < k {
+                let l = self.n(x).left;
+                if l == NIL {
+                    let id = self.alloc(key, x);
+                    self.nm(x).left = id;
+                    self.insert_fixup(id);
+                    return;
+                }
+                x = l;
+            } else {
+                let r = self.n(x).right;
+                if r == NIL {
+                    let id = self.alloc(key, x);
+                    self.nm(x).right = id;
+                    self.insert_fixup(id);
+                    return;
+                }
+                x = r;
+            }
+        }
+    }
+
+    fn alloc(&mut self, key: f64, parent: u32) -> u32 {
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            key,
+            left: NIL,
+            right: NIL,
+            parent,
+            color: Color::Red,
+            size: 1,
+            nodesize: 1,
+        });
+        id
+    }
+
+    /// CLRS left rotation with size-augmentation maintenance: the rotated
+    /// pair exchange subtree roles, so `y` inherits `x`'s old size and
+    /// `x` is recomputed from its new children.
+    fn rotate_left(&mut self, x: u32) {
+        let y = self.n(x).right;
+        debug_assert_ne!(y, NIL);
+        let yl = self.n(y).left;
+        self.nm(x).right = yl;
+        if yl != NIL {
+            self.nm(yl).parent = x;
+        }
+        let xp = self.n(x).parent;
+        self.nm(y).parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.n(xp).left == x {
+            self.nm(xp).left = y;
+        } else {
+            self.nm(xp).right = y;
+        }
+        self.nm(y).left = x;
+        self.nm(x).parent = y;
+        // Augmentation: y takes over x's old subtree size; x shrinks.
+        self.nm(y).size = self.n(x).size;
+        self.fix_size(x);
+    }
+
+    fn rotate_right(&mut self, x: u32) {
+        let y = self.n(x).left;
+        debug_assert_ne!(y, NIL);
+        let yr = self.n(y).right;
+        self.nm(x).left = yr;
+        if yr != NIL {
+            self.nm(yr).parent = x;
+        }
+        let xp = self.n(x).parent;
+        self.nm(y).parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.n(xp).left == x {
+            self.nm(xp).left = y;
+        } else {
+            self.nm(xp).right = y;
+        }
+        self.nm(y).right = x;
+        self.nm(x).parent = y;
+        self.nm(y).size = self.n(x).size;
+        self.fix_size(x);
+    }
+
+    /// CLRS RB-Insert-Fixup: restore red-black invariants after inserting
+    /// the red node `z`.
+    fn insert_fixup(&mut self, mut z: u32) {
+        while self.n(self.n(z).parent).color == Color::Red {
+            let p = self.n(z).parent;
+            let g = self.n(p).parent;
+            if p == self.n(g).left {
+                let u = self.n(g).right;
+                if self.n(u).color == Color::Red {
+                    self.nm(p).color = Color::Black;
+                    self.nm(u).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.n(p).right {
+                        z = p;
+                        self.rotate_left(z);
+                    }
+                    let p = self.n(z).parent;
+                    let g = self.n(p).parent;
+                    self.nm(p).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    self.rotate_right(g);
+                }
+            } else {
+                let u = self.n(g).left;
+                if self.n(u).color == Color::Red {
+                    self.nm(p).color = Color::Black;
+                    self.nm(u).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.n(p).left {
+                        z = p;
+                        self.rotate_right(z);
+                    }
+                    let p = self.n(z).parent;
+                    let g = self.n(p).parent;
+                    self.nm(p).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    self.rotate_left(g);
+                }
+            }
+        }
+        let r = self.root;
+        self.nm(r).color = Color::Black;
+    }
+
+    /// `Count-Smaller(root, k)` — Algorithm 2 / Lemma 4: number of stored
+    /// keys strictly smaller than `k`, counting multiplicity. `O(log m)`.
+    pub fn count_smaller(&self, k: f64) -> u64 {
+        let mut c: u64 = 0;
+        let mut x = self.root;
+        while x != NIL {
+            let node = self.n(x);
+            if node.key < k {
+                c += (self.n(node.left).size + node.nodesize) as u64;
+                x = node.right;
+            } else {
+                x = node.left;
+            }
+        }
+        c
+    }
+
+    /// `Count-Larger(root, k)` — mirror of Algorithm 2: keys strictly
+    /// larger than `k`. `O(log m)`.
+    pub fn count_larger(&self, k: f64) -> u64 {
+        let mut c: u64 = 0;
+        let mut x = self.root;
+        while x != NIL {
+            let node = self.n(x);
+            if node.key > k {
+                c += (self.n(node.right).size + node.nodesize) as u64;
+                x = node.left;
+            } else {
+                x = node.right;
+            }
+        }
+        c
+    }
+
+    /// Height of the tree (root-to-deepest-leaf edge count; -1 for empty).
+    /// Exposed for the balance tests and the ablation bench.
+    pub fn height(&self) -> i64 {
+        fn h(t: &OsTree, x: u32) -> i64 {
+            if x == NIL {
+                -1
+            } else {
+                1 + h(t, t.n(x).left).max(h(t, t.n(x).right))
+            }
+        }
+        h(self, self.root)
+    }
+
+    /// Validate every invariant of Definition 1 plus the red-black rules;
+    /// panics with a description on violation. Test-support API.
+    pub fn check_invariants(&self) {
+        if self.root == NIL {
+            assert_eq!(self.len, 0);
+            return;
+        }
+        assert_eq!(self.n(self.root).color, Color::Black, "root must be black");
+        assert_eq!(self.n(self.root).parent, NIL, "root parent must be NIL");
+        let (size, _black_height) = self.check_node(self.root, f64::NEG_INFINITY, f64::INFINITY);
+        assert_eq!(size as u64, self.len, "root size must equal total multiplicity");
+    }
+
+    fn check_node(&self, x: u32, lo: f64, hi: f64) -> (u32, u32) {
+        if x == NIL {
+            return (0, 1);
+        }
+        let node = self.n(x);
+        assert!(node.key >= lo && node.key <= hi, "BST property violated");
+        assert!(node.nodesize >= 1);
+        if !self.dedup {
+            assert_eq!(node.nodesize, 1, "non-dedup tree must have unit nodesize");
+        }
+        if node.color == Color::Red {
+            assert_eq!(self.n(node.left).color, Color::Black, "red node with red left child");
+            assert_eq!(self.n(node.right).color, Color::Black, "red node with red right child");
+        }
+        if node.left != NIL {
+            assert_eq!(self.n(node.left).parent, x, "broken parent link (left)");
+        }
+        if node.right != NIL {
+            assert_eq!(self.n(node.right).parent, x, "broken parent link (right)");
+        }
+        let (ls, lb) = self.check_node(node.left, lo, node.key);
+        let (rs, rb) = self.check_node(node.right, node.key, hi);
+        assert_eq!(lb, rb, "black-height mismatch");
+        assert_eq!(node.size, ls + rs + node.nodesize, "size augmentation wrong");
+        let bh = lb + if node.color == Color::Black { 1 } else { 0 };
+        (node.size, bh)
+    }
+}
+
+impl Default for OsTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Brute-force oracle: counts over a plain vector.
+    struct Oracle(Vec<f64>);
+    impl Oracle {
+        fn count_smaller(&self, k: f64) -> u64 {
+            self.0.iter().filter(|&&x| x < k).count() as u64
+        }
+        fn count_larger(&self, k: f64) -> u64 {
+            self.0.iter().filter(|&&x| x > k).count() as u64
+        }
+    }
+
+    #[test]
+    fn empty_tree_counts_zero() {
+        let t = OsTree::new();
+        assert_eq!(t.count_smaller(0.0), 0);
+        assert_eq!(t.count_larger(0.0), 0);
+        assert!(t.is_empty());
+        t.check_invariants();
+    }
+
+    #[test]
+    fn single_element() {
+        let mut t = OsTree::new();
+        t.insert(5.0);
+        assert_eq!(t.count_smaller(5.0), 0);
+        assert_eq!(t.count_larger(5.0), 0);
+        assert_eq!(t.count_smaller(6.0), 1);
+        assert_eq!(t.count_larger(4.0), 1);
+        t.check_invariants();
+    }
+
+    #[test]
+    fn strictness_with_duplicates() {
+        for dedup in [false, true] {
+            let mut t = OsTree::with_mode(dedup);
+            for &k in &[1.0, 2.0, 2.0, 2.0, 3.0] {
+                t.insert(k);
+            }
+            assert_eq!(t.len(), 5);
+            assert_eq!(t.count_smaller(2.0), 1);
+            assert_eq!(t.count_larger(2.0), 1);
+            assert_eq!(t.count_smaller(2.5), 4);
+            assert_eq!(t.count_larger(1.5), 4);
+            t.check_invariants();
+            if dedup {
+                assert_eq!(t.node_count(), 3);
+            } else {
+                assert_eq!(t.node_count(), 5);
+            }
+        }
+    }
+
+    #[test]
+    fn ascending_descending_insertions_stay_balanced() {
+        for dir in 0..2 {
+            let mut t = OsTree::new();
+            for i in 0..4096 {
+                let k = if dir == 0 { i as f64 } else { (4096 - i) as f64 };
+                t.insert(k);
+            }
+            t.check_invariants();
+            // RB height bound: 2*log2(n+1) ≈ 24 for n=4096.
+            assert!(t.height() <= 26, "height {} too large", t.height());
+        }
+    }
+
+    #[test]
+    fn randomized_against_oracle() {
+        let mut rng = Rng::new(1234);
+        for trial in 0..30 {
+            let dedup = trial % 2 == 0;
+            let mut t = OsTree::with_mode(dedup);
+            let mut oracle = Oracle(Vec::new());
+            let n = 1 + rng.below(400);
+            // Small key universe to force many duplicates.
+            let universe = 1 + rng.below(50);
+            for _ in 0..n {
+                let k = rng.below(universe) as f64;
+                t.insert(k);
+                oracle.0.push(k);
+            }
+            t.check_invariants();
+            for _ in 0..50 {
+                let q = rng.range(-2.0, universe as f64 + 2.0);
+                assert_eq!(t.count_smaller(q), oracle.count_smaller(q), "smaller({q})");
+                assert_eq!(t.count_larger(q), oracle.count_larger(q), "larger({q})");
+            }
+            // Also query exact stored keys (tie behaviour).
+            for &k in oracle.0.iter().take(20) {
+                assert_eq!(t.count_smaller(k), oracle.count_smaller(k));
+                assert_eq!(t.count_larger(k), oracle.count_larger(k));
+            }
+        }
+    }
+
+    #[test]
+    fn invariants_hold_after_every_insert() {
+        let mut rng = Rng::new(99);
+        let mut t = OsTree::new();
+        for _ in 0..600 {
+            t.insert(rng.normal());
+            t.check_invariants();
+        }
+    }
+
+    #[test]
+    fn clear_reuses_storage() {
+        let mut t = OsTree::new();
+        for i in 0..100 {
+            t.insert(i as f64);
+        }
+        let cap = t.nodes.capacity();
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.count_smaller(50.0), 0);
+        for i in 0..100 {
+            t.insert(i as f64);
+        }
+        t.check_invariants();
+        assert_eq!(t.nodes.capacity(), cap);
+        assert_eq!(t.count_smaller(50.0), 50);
+    }
+
+    #[test]
+    fn dedup_height_bounded_by_distinct_keys() {
+        let mut t = OsTree::new_dedup();
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            t.insert(rng.below(8) as f64); // r = 8 distinct keys
+        }
+        t.check_invariants();
+        assert_eq!(t.node_count(), 8);
+        assert!(t.height() <= 7); // 2*log2(9) ≈ 6.3
+        assert_eq!(t.len(), 10_000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nan_key_rejected() {
+        let mut t = OsTree::new();
+        t.insert(f64::NAN);
+    }
+
+    #[test]
+    fn negative_and_extreme_keys() {
+        let mut t = OsTree::new();
+        for &k in &[f64::MIN, -1e300, -1.0, 0.0, 1.0, 1e300, f64::MAX] {
+            t.insert(k);
+        }
+        t.check_invariants();
+        assert_eq!(t.count_smaller(0.0), 3);
+        assert_eq!(t.count_larger(0.0), 3);
+        assert_eq!(t.count_smaller(f64::INFINITY), 7);
+        assert_eq!(t.count_larger(f64::NEG_INFINITY), 7);
+    }
+}

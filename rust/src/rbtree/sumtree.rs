@@ -1,0 +1,403 @@
+//! Sum-augmented order-statistics tree.
+//!
+//! Extends the paper's Definition-1 structure: besides the subtree
+//! *count*, every node maintains subtree sums of an auxiliary per-key
+//! value and of its square. `count_smaller` / `count_larger` then return
+//! the aggregate `(count, Σv, Σv²)` over the matching keys in the same
+//! `O(log m)` descent.
+//!
+//! This is what upgrades Algorithm 3 from hinge to *squared* hinge: the
+//! per-example squared-hinge statistics
+//! `Σ_j (1 + p_i − p_j)² = n(1+p_i)² − 2(1+p_i)·Σp_j + Σp_j²`
+//! need exactly these three aggregates over the margin window — giving
+//! an `O(ms + m log m)` PRSVM-objective oracle (the "improved version"
+//! of Chapelle & Keerthi (2010) that the paper notes has no public
+//! implementation; see `losses/squared_tree.rs`).
+
+const NIL: u32 = 0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Color {
+    Red,
+    Black,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: f64,
+    /// Auxiliary value attached to this key occurrence (e.g. the
+    /// predicted score p_j while the key is the label y_j).
+    val: f64,
+    val_sq: f64,
+    left: u32,
+    right: u32,
+    parent: u32,
+    color: Color,
+    size: u32,
+    /// Subtree aggregates (including this node).
+    sum: f64,
+    sum_sq: f64,
+}
+
+/// Aggregate returned by the range queries.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Agg {
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+}
+
+/// Order-statistics red-black tree with per-subtree value sums.
+#[derive(Clone, Debug)]
+pub struct SumTree {
+    nodes: Vec<Node>,
+    root: u32,
+    len: u64,
+}
+
+impl SumTree {
+    pub fn new() -> Self {
+        let sentinel = Node {
+            key: f64::NAN,
+            val: 0.0,
+            val_sq: 0.0,
+            left: NIL,
+            right: NIL,
+            parent: NIL,
+            color: Color::Black,
+            size: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        };
+        SumTree { nodes: vec![sentinel], root: NIL, len: 0 }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.nodes.truncate(1);
+        self.root = NIL;
+        self.len = 0;
+    }
+
+    #[inline]
+    fn n(&self, i: u32) -> &Node {
+        &self.nodes[i as usize]
+    }
+
+    #[inline]
+    fn nm(&mut self, i: u32) -> &mut Node {
+        &mut self.nodes[i as usize]
+    }
+
+    #[inline]
+    fn fix_aggregates(&mut self, x: u32) {
+        let (l, r) = (self.n(x).left, self.n(x).right);
+        let (ls, lsum, lsq) = (self.n(l).size, self.n(l).sum, self.n(l).sum_sq);
+        let (rs, rsum, rsq) = (self.n(r).size, self.n(r).sum, self.n(r).sum_sq);
+        let node = self.nm(x);
+        node.size = ls + rs + 1;
+        node.sum = lsum + rsum + node.val;
+        node.sum_sq = lsq + rsq + node.val_sq;
+    }
+
+    /// Insert `(key, val)` — `O(log m)`. NaN keys rejected.
+    pub fn insert(&mut self, key: f64, val: f64) {
+        assert!(!key.is_nan(), "NaN keys are not orderable");
+        self.len += 1;
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node {
+            key,
+            val,
+            val_sq: val * val,
+            left: NIL,
+            right: NIL,
+            parent: NIL,
+            color: Color::Red,
+            size: 1,
+            sum: val,
+            sum_sq: val * val,
+        });
+        if self.root == NIL {
+            self.nm(id).color = Color::Black;
+            self.root = id;
+            return;
+        }
+        // Descend, updating aggregates on the path.
+        let mut x = self.root;
+        loop {
+            {
+                let node = self.nm(x);
+                node.size += 1;
+                node.sum += val;
+                node.sum_sq += val * val;
+            }
+            let k = self.n(x).key;
+            let next = if key < k { self.n(x).left } else { self.n(x).right };
+            if next == NIL {
+                if key < k {
+                    self.nm(x).left = id;
+                } else {
+                    self.nm(x).right = id;
+                }
+                self.nm(id).parent = x;
+                self.insert_fixup(id);
+                return;
+            }
+            x = next;
+        }
+    }
+
+    fn rotate_left(&mut self, x: u32) {
+        let y = self.n(x).right;
+        let yl = self.n(y).left;
+        self.nm(x).right = yl;
+        if yl != NIL {
+            self.nm(yl).parent = x;
+        }
+        let xp = self.n(x).parent;
+        self.nm(y).parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.n(xp).left == x {
+            self.nm(xp).left = y;
+        } else {
+            self.nm(xp).right = y;
+        }
+        self.nm(y).left = x;
+        self.nm(x).parent = y;
+        self.fix_aggregates(x);
+        self.fix_aggregates(y);
+    }
+
+    fn rotate_right(&mut self, x: u32) {
+        let y = self.n(x).left;
+        let yr = self.n(y).right;
+        self.nm(x).left = yr;
+        if yr != NIL {
+            self.nm(yr).parent = x;
+        }
+        let xp = self.n(x).parent;
+        self.nm(y).parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.n(xp).left == x {
+            self.nm(xp).left = y;
+        } else {
+            self.nm(xp).right = y;
+        }
+        self.nm(y).right = x;
+        self.nm(x).parent = y;
+        self.fix_aggregates(x);
+        self.fix_aggregates(y);
+    }
+
+    fn insert_fixup(&mut self, mut z: u32) {
+        while self.n(self.n(z).parent).color == Color::Red {
+            let p = self.n(z).parent;
+            let g = self.n(p).parent;
+            if p == self.n(g).left {
+                let u = self.n(g).right;
+                if self.n(u).color == Color::Red {
+                    self.nm(p).color = Color::Black;
+                    self.nm(u).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.n(p).right {
+                        z = p;
+                        self.rotate_left(z);
+                    }
+                    let p = self.n(z).parent;
+                    let g = self.n(p).parent;
+                    self.nm(p).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    self.rotate_right(g);
+                }
+            } else {
+                let u = self.n(g).left;
+                if self.n(u).color == Color::Red {
+                    self.nm(p).color = Color::Black;
+                    self.nm(u).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.n(p).left {
+                        z = p;
+                        self.rotate_right(z);
+                    }
+                    let p = self.n(z).parent;
+                    let g = self.n(p).parent;
+                    self.nm(p).color = Color::Black;
+                    self.nm(g).color = Color::Red;
+                    self.rotate_left(g);
+                }
+            }
+        }
+        let r = self.root;
+        self.nm(r).color = Color::Black;
+    }
+
+    /// Aggregate over keys strictly smaller than `k` — `O(log m)`.
+    pub fn agg_smaller(&self, k: f64) -> Agg {
+        let mut out = Agg::default();
+        let mut x = self.root;
+        while x != NIL {
+            let node = self.n(x);
+            if node.key < k {
+                let l = self.n(node.left);
+                out.count += (l.size + 1) as u64;
+                out.sum += l.sum + node.val;
+                out.sum_sq += l.sum_sq + node.val_sq;
+                x = node.right;
+            } else {
+                x = node.left;
+            }
+        }
+        out
+    }
+
+    /// Aggregate over keys strictly larger than `k` — `O(log m)`.
+    pub fn agg_larger(&self, k: f64) -> Agg {
+        let mut out = Agg::default();
+        let mut x = self.root;
+        while x != NIL {
+            let node = self.n(x);
+            if node.key > k {
+                let r = self.n(node.right);
+                out.count += (r.size + 1) as u64;
+                out.sum += r.sum + node.val;
+                out.sum_sq += r.sum_sq + node.val_sq;
+                x = node.left;
+            } else {
+                x = node.right;
+            }
+        }
+        out
+    }
+
+    /// Invariant checker (tests): RB rules, BST order, aggregates.
+    pub fn check_invariants(&self) {
+        if self.root == NIL {
+            assert_eq!(self.len, 0);
+            return;
+        }
+        assert_eq!(self.n(self.root).color, Color::Black);
+        let (size, _, sum, _) = self.check_node(self.root, f64::NEG_INFINITY, f64::INFINITY);
+        assert_eq!(size as u64, self.len);
+        let direct: f64 = (1..self.nodes.len()).map(|i| self.nodes[i].val).sum();
+        assert!((sum - direct).abs() < 1e-9 * (1.0 + direct.abs()), "sum aggregate drift");
+    }
+
+    fn check_node(&self, x: u32, lo: f64, hi: f64) -> (u32, u32, f64, f64) {
+        if x == NIL {
+            return (0, 1, 0.0, 0.0);
+        }
+        let node = self.n(x);
+        assert!(node.key >= lo && node.key <= hi, "BST violated");
+        if node.color == Color::Red {
+            assert_eq!(self.n(node.left).color, Color::Black);
+            assert_eq!(self.n(node.right).color, Color::Black);
+        }
+        let (ls, lb, lsum, lsq) = self.check_node(node.left, lo, node.key);
+        let (rs, rb, rsum, rsq) = self.check_node(node.right, node.key, hi);
+        assert_eq!(lb, rb, "black height");
+        assert_eq!(node.size, ls + rs + 1, "size augmentation");
+        let sum = lsum + rsum + node.val;
+        let sq = lsq + rsq + node.val_sq;
+        assert!((node.sum - sum).abs() < 1e-9 * (1.0 + sum.abs()), "sum augmentation");
+        assert!((node.sum_sq - sq).abs() < 1e-9 * (1.0 + sq.abs()), "sum_sq augmentation");
+        let bh = lb + if node.color == Color::Black { 1 } else { 0 };
+        (node.size, bh, sum, sq)
+    }
+}
+
+impl Default for SumTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn aggregates_match_bruteforce() {
+        let mut rng = Rng::new(71);
+        for _ in 0..25 {
+            let mut t = SumTree::new();
+            let n = 1 + rng.below(300);
+            let mut items: Vec<(f64, f64)> = Vec::new();
+            let universe = 1 + rng.below(40);
+            for _ in 0..n {
+                let k = rng.below(universe) as f64;
+                let v = rng.normal();
+                t.insert(k, v);
+                items.push((k, v));
+            }
+            t.check_invariants();
+            for _ in 0..30 {
+                let q = rng.range(-1.0, universe as f64 + 1.0);
+                let smaller = t.agg_smaller(q);
+                let want_c = items.iter().filter(|(k, _)| *k < q).count() as u64;
+                let want_s: f64 = items.iter().filter(|(k, _)| *k < q).map(|(_, v)| v).sum();
+                let want_q: f64 = items.iter().filter(|(k, _)| *k < q).map(|(_, v)| v * v).sum();
+                assert_eq!(smaller.count, want_c);
+                assert!((smaller.sum - want_s).abs() < 1e-9 * (1.0 + want_s.abs()));
+                assert!((smaller.sum_sq - want_q).abs() < 1e-9 * (1.0 + want_q.abs()));
+                let larger = t.agg_larger(q);
+                let want_c = items.iter().filter(|(k, _)| *k > q).count() as u64;
+                assert_eq!(larger.count, want_c);
+            }
+        }
+    }
+
+    #[test]
+    fn invariants_after_adversarial_order() {
+        let mut t = SumTree::new();
+        for i in 0..2000 {
+            t.insert(i as f64, i as f64 * 0.5);
+        }
+        t.check_invariants();
+        let a = t.agg_smaller(1000.0);
+        assert_eq!(a.count, 1000);
+        assert!((a.sum - (0..1000).map(|i| i as f64 * 0.5).sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clear_and_reuse() {
+        let mut t = SumTree::new();
+        t.insert(1.0, 2.0);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.agg_smaller(10.0), Agg::default());
+        t.insert(3.0, 4.0);
+        assert_eq!(t.agg_smaller(10.0).count, 1);
+    }
+
+    #[test]
+    fn counts_match_plain_ostree() {
+        use crate::rbtree::OsTree;
+        let mut rng = Rng::new(73);
+        let mut sum_tree = SumTree::new();
+        let mut os_tree = OsTree::new();
+        for _ in 0..500 {
+            let k = rng.below(20) as f64;
+            sum_tree.insert(k, rng.normal());
+            os_tree.insert(k);
+        }
+        for q in 0..21 {
+            let q = q as f64 - 0.5;
+            assert_eq!(sum_tree.agg_smaller(q).count, os_tree.count_smaller(q));
+            assert_eq!(sum_tree.agg_larger(q).count, os_tree.count_larger(q));
+        }
+    }
+}

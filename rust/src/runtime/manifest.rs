@@ -1,0 +1,123 @@
+//! Line-based artifact manifest written by `python/compile/aot.py`.
+//!
+//! Format (one artifact per line, `#` comments):
+//!
+//! ```text
+//! <op> <m> <n> <file>
+//! scores 1024 8 scores_1024x8.hlo.txt
+//! grad   1024 8 grad_1024x8.hlo.txt
+//! paircount 512 0 paircount_512.hlo.txt
+//! ```
+//!
+//! `m` is the row-tile height; `n` the feature width (0 when not
+//! applicable). A plain-text format instead of JSON keeps the build-time
+//! contract trivially greppable and diff-able (and the offline crate set
+//! has no serde — DESIGN.md §6).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One artifact record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub op: String,
+    /// Row-tile height.
+    pub m: usize,
+    /// Feature width (0 = n/a).
+    pub n: usize,
+    /// File name relative to the artifact directory.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_ascii_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected `op m n file`, got {line:?}", lineno + 1);
+            }
+            entries.push(ManifestEntry {
+                op: parts[0].to_string(),
+                m: parts[1].parse().with_context(|| format!("line {}: bad m", lineno + 1))?,
+                n: parts[2].parse().with_context(|| format!("line {}: bad n", lineno + 1))?,
+                file: parts[3].to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// All entries for an op.
+    pub fn for_op<'a>(&'a self, op: &'a str) -> impl Iterator<Item = &'a ManifestEntry> + 'a {
+        self.entries.iter().filter(move |e| e.op == op)
+    }
+
+    /// Entry of `op` whose feature width fits `n` with the least padding,
+    /// preferring the tallest row tile among equal widths (fewer
+    /// executions per matvec — §Perf).
+    pub fn best_for(&self, op: &str, n: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.n >= n)
+            .min_by_key(|e| (e.n, usize::MAX - e.m))
+    }
+
+    /// Entry of `op` with the largest row tile (for big batches).
+    pub fn largest_tile(&self, op: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().filter(|e| e.op == op).max_by_key(|e| e.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifact manifest
+scores 1024 8 scores_1024x8.hlo.txt
+scores 1024 64 scores_1024x64.hlo.txt
+grad 1024 8 grad_1024x8.hlo.txt
+paircount 512 0 paircount_512.hlo.txt
+";
+
+    #[test]
+    fn parses_and_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.for_op("scores").count(), 2);
+        assert_eq!(m.best_for("scores", 8).unwrap().n, 8);
+        assert_eq!(m.best_for("scores", 9).unwrap().n, 64);
+        assert_eq!(m.best_for("scores", 65), None);
+        assert_eq!(m.largest_tile("paircount").unwrap().m, 512);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("scores 1024 8\n").is_err());
+        assert!(Manifest::parse("scores x 8 f.txt\n").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let m = Manifest::parse("# nothing\n").unwrap();
+        assert!(m.entries.is_empty());
+        assert!(m.best_for("scores", 1).is_none());
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny command-line argument parser (the offline registry has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, bare flags (`--flag`), and
+//! positional arguments. Typed getters with defaults keep call sites short.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags/options plus positionals, in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); `std::env::args().skip(1)`
+    /// in production.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 1000,2000,4000`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name} expects comma-separated integers"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = args(&["train", "--m", "1000", "--lambda=0.1", "--verbose", "--out", "x.json"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("m", 0), 1000);
+        assert!((a.f64_or("lambda", 0.0) - 0.1).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str_or("out", ""), "x.json");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("m", 7), 7);
+        assert_eq!(a.str_or("method", "tree"), "tree");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args(&["--quiet"]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = args(&["--sizes", "1,2,30"]);
+        assert_eq!(a.usize_list_or("sizes", &[]), vec![1, 2, 30]);
+        assert_eq!(a.usize_list_or("other", &[5]), vec![5]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lambda -0.5" — the "-0.5" does not start with "--", so it binds.
+        let a = args(&["--lambda", "-0.5"]);
+        assert!((a.f64_or("lambda", 0.0) + 0.5).abs() < 1e-12);
+    }
+}

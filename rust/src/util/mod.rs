@@ -1,0 +1,48 @@
+//! Shared utilities: seeded RNG, JSON emission, timing, CLI parsing,
+//! and process memory probes.
+//!
+//! These replace crates absent from the offline registry (`rand`,
+//! `serde_json`, `criterion`, `clap`) — see DESIGN.md §6 toolchain
+//! substitutions.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+/// Peak resident set size (VmHWM) of the current process in KiB, read from
+/// /proc/self/status. Used by the Fig-3 memory benchmark. Returns None on
+/// non-Linux or if the field is missing.
+pub fn peak_rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb);
+        }
+    }
+    None
+}
+
+/// Current resident set size (VmRSS) in KiB.
+pub fn current_rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn rss_probes_work_on_linux() {
+        let peak = super::peak_rss_kib().expect("VmHWM should parse on Linux");
+        let cur = super::current_rss_kib().expect("VmRSS should parse on Linux");
+        assert!(peak > 0 && cur > 0);
+        assert!(peak >= cur || peak + 1024 > cur); // peak ≈>= current
+    }
+}

@@ -1,0 +1,136 @@
+//! Timing helpers for the bench harness and the trainer's per-phase
+//! instrumentation (sort / tree / matvec split recorded in §Perf).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates durations per named phase; used to break an oracle call
+/// into its sort / tree / linalg components without external profilers.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, Duration)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and accumulate under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.entries.push((name.to_string(), d));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn entries(&self) -> &[(String, Duration)] {
+        &self.entries
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded runs then `reps` timed runs;
+/// returns (median, min, mean) seconds. The bench binaries use this in
+/// place of criterion (absent from the offline registry).
+pub fn bench_runs<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_times(times)
+}
+
+/// Summary statistics of repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub times: Vec<f64>,
+    pub median: f64,
+    pub min: f64,
+    pub mean: f64,
+}
+
+impl BenchStats {
+    pub fn from_times(mut times: Vec<f64>) -> Self {
+        assert!(!times.is_empty());
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = times[0];
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        BenchStats { times, median, min, mean }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("sort", Duration::from_millis(5));
+        p.add("sort", Duration::from_millis(7));
+        p.add("tree", Duration::from_millis(3));
+        assert_eq!(p.get("sort"), Duration::from_millis(12));
+        assert_eq!(p.get("tree"), Duration::from_millis(3));
+        assert_eq!(p.total(), Duration::from_millis(15));
+        assert_eq!(p.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn bench_stats_order() {
+        let s = BenchStats::from_times(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.elapsed_secs() > 0.0);
+    }
+}

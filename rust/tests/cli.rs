@@ -1,0 +1,140 @@
+//! CLI smoke tests: drive the `ranksvm` binary end-to-end through
+//! subprocesses (gen-data → info → train → eval → mem-probe), checking
+//! exit codes and output contracts. Skipped when the release binary has
+//! not been built yet.
+
+use ranksvm::coordinator::memprobe;
+use std::process::Command;
+
+fn bin() -> Option<std::path::PathBuf> {
+    memprobe::find_cli_bin().ok()
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(bin().unwrap()).args(args).output().expect("spawn ranksvm");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn full_cli_workflow() {
+    if bin().is_none() {
+        eprintln!("skipping: ranksvm binary not built (cargo build --release)");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("ranksvm_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("data.libsvm");
+    let model = dir.join("model.txt");
+
+    // gen-data
+    let (ok, _, err) = run(&[
+        "gen-data",
+        "--synthetic",
+        "cadata",
+        "--m",
+        "400",
+        "--out",
+        data.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen-data failed: {err}");
+    assert!(data.is_file());
+
+    // info
+    let (ok, stdout, _) = run(&["info", "--data", data.to_str().unwrap()]);
+    assert!(ok);
+    assert!(stdout.contains("\"m\":400"), "info output: {stdout}");
+    assert!(stdout.contains("\"n_pairs\""));
+
+    // train with held-out split + model output
+    let (ok, stdout, err) = run(&[
+        "train",
+        "--data",
+        data.to_str().unwrap(),
+        "--method",
+        "tree",
+        "--lambda",
+        "0.1",
+        "--test-size",
+        "100",
+        "--out",
+        model.to_str().unwrap(),
+    ]);
+    assert!(ok, "train failed: {err}");
+    assert!(stdout.contains("\"converged\":true"), "train output: {stdout}");
+    assert!(stdout.contains("\"test_error\":"));
+    assert!(model.is_file());
+
+    // eval the saved model
+    let (ok, stdout, _) = run(&[
+        "eval",
+        "--model",
+        model.to_str().unwrap(),
+        "--data",
+        data.to_str().unwrap(),
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("\"pairwise_error\":"), "eval output: {stdout}");
+
+    // mem-probe protocol
+    let (ok, stdout, err) = run(&[
+        "mem-probe",
+        "--dataset",
+        "reuters-small",
+        "--m",
+        "500",
+        "--method",
+        "tree",
+        "--max-iter",
+        "3",
+    ]);
+    assert!(ok, "mem-probe failed: {err}");
+    assert!(memprobe::parse_peak(&stdout).is_some(), "probe output: {stdout}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_rejects_bad_inputs() {
+    if bin().is_none() {
+        return;
+    }
+    // unknown subcommand → usage, nonzero exit
+    let (ok, _, _) = run(&["frobnicate"]);
+    assert!(!ok);
+    // bad method
+    let (ok, _, err) = run(&["train", "--synthetic", "cadata", "--m", "50", "--method", "magic"]);
+    assert!(!ok);
+    assert!(err.contains("method"), "stderr: {err}");
+    // missing data source
+    let (ok, _, _) = run(&["train", "--m", "50"]);
+    assert!(!ok);
+    // nonexistent file
+    let (ok, _, _) = run(&["info", "--data", "/nonexistent/file.libsvm"]);
+    assert!(!ok);
+}
+
+#[test]
+fn cli_train_all_methods_smoke() {
+    if bin().is_none() {
+        return;
+    }
+    for method in ["tree", "tree-dedup", "tree-fenwick", "pair", "rlevel", "prsvm", "prsvm-tree"] {
+        let (ok, stdout, err) = run(&[
+            "train",
+            "--synthetic",
+            "cadata",
+            "--m",
+            "200",
+            "--method",
+            method,
+            "--lambda",
+            "0.1",
+        ]);
+        assert!(ok, "method {method} failed: {err}");
+        assert!(stdout.contains(&format!("\"method\":\"{method}\"")), "{method}: {stdout}");
+    }
+}

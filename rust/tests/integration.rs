@@ -1,0 +1,146 @@
+//! Cross-module integration tests: full training runs over every method,
+//! dataset regime, and the claims of the paper's Fig. 4 (all
+//! implementations reach equivalent solutions) as executable assertions.
+
+use ranksvm::coordinator::{evaluate, train, Method, RankModel, TrainConfig};
+use ranksvm::data::{libsvm, synthetic};
+use ranksvm::losses::{count_comparable_pairs, RankingOracle, TreeOracle};
+use ranksvm::metrics;
+
+fn cfg(method: Method, lambda: f64) -> TrainConfig {
+    TrainConfig { method, lambda, epsilon: 1e-3, ..Default::default() }
+}
+
+#[test]
+fn fig4_sanity_all_methods_similar_test_error() {
+    // The paper's Fig. 4: despite implementation differences, every
+    // method lands at a similar test pairwise error.
+    let ds = synthetic::cadata_like(1200, 4);
+    let (tr, te) = ds.split(300, 9);
+    let mut errors = Vec::new();
+    for &m in Method::all() {
+        let out = train(&tr, &cfg(m, 0.1)).unwrap();
+        let err = evaluate(&out.model, &te);
+        errors.push((m.name(), err));
+    }
+    let base = errors[0].1;
+    for (name, err) in &errors {
+        assert!(
+            (err - base).abs() < 0.03,
+            "method {name} deviates: {err} vs tree {base} ({errors:?})"
+        );
+        assert!(*err < 0.30, "method {name} failed to learn: {err}");
+    }
+}
+
+#[test]
+fn bipartite_training_maximizes_auc() {
+    // Two utility levels → RankSVM == AUC maximization (§1).
+    let base = synthetic::ordinal(800, 2, 13);
+    let (tr, te) = base.split(200, 5);
+    let out = train(&tr, &cfg(Method::Tree, 0.05)).unwrap();
+    let p = out.model.predict(&te);
+    let auc = metrics::auc(&p, &te.y);
+    assert!(auc > 0.8, "AUC {auc}");
+}
+
+#[test]
+fn ordinal_ratings_r_level_matches_tree() {
+    let ds = synthetic::ordinal(600, 5, 14);
+    let t = train(&ds, &cfg(Method::Tree, 0.05)).unwrap();
+    let r = train(&ds, &cfg(Method::RLevel, 0.05)).unwrap();
+    assert!((t.objective - r.objective).abs() < 2e-3 * (1.0 + t.objective));
+}
+
+#[test]
+fn grouped_and_global_differ_when_expected() {
+    // With per-query offsets, grouped training must beat treating the
+    // data as one global ranking.
+    let ds = synthetic::queries(30, 20, 8, 15);
+    let grouped_out = train(&ds, &cfg(Method::Tree, 0.01)).unwrap();
+    let grouped_err = evaluate(&grouped_out.model, &ds);
+
+    let mut global = ds.clone();
+    global.qid = None;
+    let global_out = train(&global, &cfg(Method::Tree, 0.01)).unwrap();
+    // Evaluate BOTH on the grouped criterion (the true task).
+    let global_err = {
+        let p = global_out.model.predict(&ds);
+        metrics::grouped_pairwise_error(&p, &ds.y, ds.qid.as_ref().unwrap())
+    };
+    assert!(
+        grouped_err <= global_err + 0.02,
+        "grouped {grouped_err} should not lose to global {global_err}"
+    );
+}
+
+#[test]
+fn model_persistence_round_trip_through_cli_format() {
+    let ds = synthetic::cadata_like(300, 16);
+    let out = train(&ds, &cfg(Method::Tree, 0.1)).unwrap();
+    let tmp = std::env::temp_dir().join("ranksvm_integration_model.txt");
+    out.model.save(&tmp).unwrap();
+    let loaded = RankModel::load(&tmp).unwrap();
+    assert_eq!(loaded, out.model);
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn libsvm_export_import_preserves_training_behaviour() {
+    let ds = synthetic::cadata_like(250, 17);
+    let tmp = std::env::temp_dir().join("ranksvm_integration_data.libsvm");
+    libsvm::write(&ds, &tmp).unwrap();
+    let back = libsvm::read(&tmp).unwrap();
+    let a = train(&ds, &cfg(Method::Tree, 0.1)).unwrap();
+    let b = train(&back, &cfg(Method::Tree, 0.1)).unwrap();
+    assert!((a.objective - b.objective).abs() < 1e-9 * (1.0 + a.objective));
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn regularization_path_is_monotone_in_norm() {
+    // Larger λ → smaller ‖w‖ (textbook sanity on the full pipeline).
+    let ds = synthetic::cadata_like(400, 18);
+    let mut prev_norm = f64::INFINITY;
+    for &lambda in &[0.01, 0.1, 1.0, 10.0] {
+        let out = train(&ds, &cfg(Method::Tree, lambda)).unwrap();
+        let norm = ranksvm::linalg::ops::norm(&out.model.w);
+        assert!(
+            norm <= prev_norm + 1e-6,
+            "‖w‖ not decreasing along λ path: {norm} after {prev_norm}"
+        );
+        prev_norm = norm;
+    }
+}
+
+#[test]
+fn oracle_scaling_shape_tree_vs_pair() {
+    // Micro-version of Fig. 1's asymptotic contrast, as a test: growing m
+    // by 4× grows the pair oracle's cost ~16× but the tree oracle's by
+    // only ~4–6×. Timing-based but with a generous margin.
+    let ds = synthetic::cadata_like(8000, 19);
+    let p: Vec<f64> = ds.y.iter().map(|v| v * 0.5).collect(); // any scores
+    let time_oracle = |oracle: &mut dyn RankingOracle, m: usize| {
+        let n = count_comparable_pairs(&ds.y[..m]) as f64;
+        // warmup + best of 3
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(oracle.eval(&p[..m], &ds.y[..m], n));
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let mut tree = TreeOracle::new();
+    let mut pair = ranksvm::losses::PairOracle::new();
+    let t_small = time_oracle(&mut tree, 2000);
+    let t_big = time_oracle(&mut tree, 8000);
+    let p_small = time_oracle(&mut pair, 2000);
+    let p_big = time_oracle(&mut pair, 8000);
+    let tree_ratio = t_big / t_small.max(1e-9);
+    let pair_ratio = p_big / p_small.max(1e-9);
+    assert!(
+        pair_ratio > tree_ratio * 1.5,
+        "expected quadratic pair scaling ≫ tree scaling: pair {pair_ratio:.1}× vs tree {tree_ratio:.1}×"
+    );
+}

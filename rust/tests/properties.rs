@@ -1,0 +1,185 @@
+//! Randomized property tests over the crate's core invariants —
+//! the proptest substitute (DESIGN.md §6): seeded xoshiro generation,
+//! many iterations, failing inputs printed for replay.
+
+use ranksvm::losses::{
+    count_comparable_pairs, PairOracle, RLevelOracle, RankingOracle, SquaredPairOracle, TreeOracle,
+};
+use ranksvm::metrics;
+use ranksvm::rbtree::{FenwickCounter, OsTree, RankCounter};
+use ranksvm::util::rng::Rng;
+
+/// Run `f` over `iters` seeded cases; on panic, report the failing seed.
+fn for_cases(iters: u64, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for seed in 0..iters {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xABCD_0000 + seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Property: the tree oracle equals the brute-force pair oracle on
+/// arbitrary (p, y) — the heart of Theorem 1.
+#[test]
+fn prop_tree_equals_pair_oracle() {
+    for_cases(60, |rng| {
+        let m = 1 + rng.below(200);
+        let levels = 1 + rng.below(m); // any tie structure
+        let y: Vec<f64> = (0..m).map(|_| rng.below(levels) as f64).collect();
+        // Include exact ties and near-margin values in p.
+        let p: Vec<f64> = (0..m).map(|_| (rng.below(40) as f64) / 7.0 - 3.0).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut tree = TreeOracle::new();
+        let mut pair = PairOracle::new();
+        let a = tree.eval(&p, &y, n);
+        let b = pair.eval(&p, &y, n);
+        assert_eq!(a.coeffs, b.coeffs);
+        assert!((a.loss - b.loss).abs() <= 1e-12 * (1.0 + b.loss));
+    });
+}
+
+/// Property: all three counting structures agree after arbitrary insert
+/// sequences (tree plain/dedup, Fenwick over the same universe).
+#[test]
+fn prop_counters_agree() {
+    for_cases(60, |rng| {
+        let n_keys = 1 + rng.below(30);
+        let universe: Vec<f64> = (0..n_keys).map(|_| rng.normal()).collect();
+        let mut plain = OsTree::new();
+        let mut dedup = OsTree::new_dedup();
+        let mut fen = FenwickCounter::new(&universe);
+        let ops = rng.below(300);
+        for _ in 0..ops {
+            let k = universe[rng.below(n_keys)];
+            plain.insert(k);
+            dedup.insert(k);
+            fen.insert(k);
+        }
+        plain.check_invariants();
+        dedup.check_invariants();
+        for &q in &universe {
+            let s = RankCounter::count_smaller(&plain, q);
+            assert_eq!(s, RankCounter::count_smaller(&dedup, q));
+            assert_eq!(s, RankCounter::count_smaller(&fen, q));
+            let l = RankCounter::count_larger(&plain, q);
+            assert_eq!(l, RankCounter::count_larger(&dedup, q));
+            assert_eq!(l, RankCounter::count_larger(&fen, q));
+        }
+    });
+}
+
+/// Property: subgradient validity — for random w, w', the first-order
+/// lower bound R(w') ≥ R(w) + ⟨w' − w, ∇R(w)⟩ holds (convexity + correct
+/// subgradient), exercised through score space with X = I.
+#[test]
+fn prop_subgradient_lower_bounds_risk() {
+    for_cases(40, |rng| {
+        let m = 2 + rng.below(60);
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        if n == 0.0 {
+            return;
+        }
+        let p1: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let p2: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut tree = TreeOracle::new();
+        let at1 = tree.eval(&p1, &y, n);
+        let at2 = tree.eval(&p2, &y, n);
+        let inner: f64 = at1
+            .coeffs
+            .iter()
+            .zip(p2.iter().zip(&p1))
+            .map(|(g, (b, a))| g * (b - a))
+            .sum();
+        assert!(
+            at2.loss + 1e-9 >= at1.loss + inner,
+            "subgradient inequality violated: {} < {} + {}",
+            at2.loss,
+            at1.loss,
+            inner
+        );
+    });
+}
+
+/// Property: the same convexity bound for the squared hinge.
+#[test]
+fn prop_squared_subgradient_lower_bounds() {
+    for_cases(30, |rng| {
+        let m = 2 + rng.below(40);
+        let y: Vec<f64> = (0..m).map(|_| rng.below(5) as f64).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        if n == 0.0 {
+            return;
+        }
+        let mut o = SquaredPairOracle::new(&y);
+        let p1: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let p2: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let a1 = o.eval_full(&p1, n);
+        let a2 = o.eval_full(&p2, n);
+        let inner: f64 = a1
+            .coeffs
+            .iter()
+            .zip(p2.iter().zip(&p1))
+            .map(|(g, (b, a))| g * (b - a))
+            .sum();
+        assert!(a2.loss + 1e-9 >= a1.loss + inner);
+    });
+}
+
+/// Property: pairwise error is invariant under strictly monotone
+/// transformations of the predictions (ranking-only criterion).
+#[test]
+fn prop_metric_monotone_invariance() {
+    for_cases(40, |rng| {
+        let m = 2 + rng.below(80);
+        let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let e1 = metrics::pairwise_error(&p, &y);
+        let p2: Vec<f64> = p.iter().map(|v| 3.0 * v + 7.0).collect(); // affine
+        let p3: Vec<f64> = p.iter().map(|v| v.exp()).collect(); // nonlinear monotone
+        assert!((metrics::pairwise_error(&p2, &y) - e1).abs() < 1e-12);
+        assert!((metrics::pairwise_error(&p3, &y) - e1).abs() < 1e-12);
+    });
+}
+
+/// Property: r-level oracle equals the tree oracle across tie regimes
+/// including the degenerate single-level case.
+#[test]
+fn prop_rlevel_equals_tree() {
+    for_cases(40, |rng| {
+        let m = 1 + rng.below(120);
+        let r = 1 + rng.below(12);
+        let y: Vec<f64> = (0..m).map(|_| rng.below(r) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal() * 2.0).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut a = RLevelOracle::new();
+        let mut b = TreeOracle::new();
+        let oa = a.eval(&p, &y, n);
+        let ob = b.eval(&p, &y, n);
+        assert_eq!(oa.coeffs, ob.coeffs);
+    });
+}
+
+/// Property: loss is translation-invariant in scores (only differences
+/// p_i − p_j enter eq. 4), and scales the subgradient coherently.
+#[test]
+fn prop_loss_translation_invariant() {
+    for_cases(40, |rng| {
+        let m = 2 + rng.below(60);
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let shift = rng.range(-5.0, 5.0);
+        let p_shifted: Vec<f64> = p.iter().map(|v| v + shift).collect();
+        let mut tree = TreeOracle::new();
+        let a = tree.eval(&p, &y, n);
+        let b = tree.eval(&p_shifted, &y, n);
+        assert!((a.loss - b.loss).abs() < 1e-9 * (1.0 + a.loss));
+        assert_eq!(a.coeffs, b.coeffs);
+    });
+}

@@ -1,0 +1,171 @@
+//! Integration: python-AOT artifacts executed from Rust via PJRT must
+//! match the native Rust kernels — the full L1/L2 ↔ L3 bridge.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so
+//! `cargo test` stays green on a fresh checkout).
+
+use ranksvm::compute::{ComputeBackend, NativeBackend};
+use ranksvm::data::synthetic;
+use ranksvm::losses::{count_comparable_pairs, PairOracle, RankingOracle, TreeOracle};
+use ranksvm::runtime::{literal_1d, XlaBackend, XlaRuntime};
+use ranksvm::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("RANKSVM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.txt").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir}/ — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn xla_backend_matches_native_on_dense_data() {
+    let Some(dir) = artifacts_dir() else { return };
+    // 700 examples → pads to the 1024-row tile; n = 8 exact match.
+    let ds = synthetic::cadata_like(700, 5);
+    let mut rng = Rng::new(17);
+    let w: Vec<f64> = (0..ds.dim()).map(|_| rng.normal()).collect();
+    let coeffs: Vec<f64> = (0..ds.len()).map(|_| rng.normal()).collect();
+
+    let mut native = NativeBackend::new();
+    let mut xla = XlaBackend::load(&dir).expect("load artifacts");
+    native.prepare(&ds.x);
+    xla.prepare(&ds.x);
+
+    let p_native = native.scores(&ds.x, &w);
+    let p_xla = xla.scores(&ds.x, &w);
+    assert_eq!(p_native.len(), p_xla.len());
+    for (i, (a, b)) in p_native.iter().zip(&p_xla).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+            "score {i}: native {a} vs xla {b}"
+        );
+    }
+
+    let g_native = native.grad(&ds.x, &coeffs);
+    let g_xla = xla.grad(&ds.x, &coeffs);
+    assert_eq!(g_native.len(), g_xla.len());
+    for (i, (a, b)) in g_native.iter().zip(&g_xla).enumerate() {
+        // f32 accumulation over 700 rows: tolerance scaled accordingly.
+        assert!(
+            (a - b).abs() < 5e-3 * (1.0 + a.abs()),
+            "grad {i}: native {a} vs xla {b}"
+        );
+    }
+}
+
+#[test]
+fn xla_backend_pads_feature_dim() {
+    let Some(dir) = artifacts_dir() else { return };
+    // 10-feature dense data → pads to the n=64 artifact bucket.
+    let ds = synthetic::queries(5, 30, 10, 6); // 150 rows, 10 features
+    let mut rng = Rng::new(23);
+    let w: Vec<f64> = (0..ds.dim()).map(|_| rng.normal()).collect();
+    let mut native = NativeBackend::new();
+    let mut xla = XlaBackend::load(&dir).expect("load artifacts");
+    native.prepare(&ds.x);
+    xla.prepare(&ds.x);
+    let p1 = native.scores(&ds.x, &w);
+    let p2 = xla.scores(&ds.x, &w);
+    for (a, b) in p1.iter().zip(&p2) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
+    }
+    let c: Vec<f64> = (0..ds.len()).map(|_| rng.normal()).collect();
+    let g1 = native.grad(&ds.x, &c);
+    let g2 = xla.grad(&ds.x, &c);
+    assert_eq!(g1.len(), 10);
+    assert_eq!(g2.len(), 10);
+    for (a, b) in g1.iter().zip(&g2) {
+        assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()));
+    }
+}
+
+#[test]
+fn paircount_artifact_matches_rust_oracles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(&dir).expect("open runtime");
+    let entry = rt
+        .manifest()
+        .best_for("paircount", 0)
+        .expect("paircount artifact")
+        .clone();
+    let tile = entry.m;
+
+    let mut rng = Rng::new(31);
+    let m = tile - 37; // force padding
+    let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..m).map(|_| rng.below(11) as f64).collect();
+
+    // Rust oracles (tree and pair agree; use pair here).
+    let mut oracle = PairOracle::new();
+    let (c_rs, d_rs) = oracle.compute_counts(&p, &y);
+    let (c_rs, d_rs) = (c_rs.to_vec(), d_rs.to_vec());
+
+    // XLA kernel on the padded tile.
+    let mut p32 = vec![0.0f32; tile];
+    let mut y32 = vec![0.0f32; tile];
+    let mut v32 = vec![0.0f32; tile];
+    for i in 0..m {
+        p32[i] = p[i] as f32;
+        y32[i] = y[i] as f32;
+        v32[i] = 1.0;
+    }
+    let (c_xla, d_xla) = rt
+        .run2(&entry, &[literal_1d(&p32), literal_1d(&y32), literal_1d(&v32)])
+        .expect("paircount execution");
+    for i in 0..m {
+        assert_eq!(c_xla[i] as u64, c_rs[i], "c[{i}]");
+        assert_eq!(d_xla[i] as u64, d_rs[i], "d[{i}]");
+    }
+    for i in m..tile {
+        assert_eq!(c_xla[i], 0.0, "padding row {i} leaked into c");
+        assert_eq!(d_xla[i], 0.0, "padding row {i} leaked into d");
+    }
+
+    // Also cross-check Lemma 1 through the tree oracle's loss.
+    let n_pairs = count_comparable_pairs(&y) as f64;
+    let mut tree = TreeOracle::new();
+    let out = tree.eval(&p, &y, n_pairs);
+    let mut loss_from_xla = 0.0;
+    for i in 0..m {
+        loss_from_xla += (c_xla[i] as f64 - d_xla[i] as f64) * p[i] + c_xla[i] as f64;
+    }
+    loss_from_xla /= n_pairs;
+    assert!(
+        (loss_from_xla - out.loss).abs() < 1e-9 * (1.0 + out.loss),
+        "{loss_from_xla} vs {}",
+        out.loss
+    );
+}
+
+#[test]
+fn end_to_end_training_with_xla_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    use ranksvm::coordinator::{evaluate, train, BackendKind, Method, TrainConfig};
+    let ds = synthetic::cadata_like(900, 41);
+    let (tr, te) = ds.split(200, 3);
+    let cfg_native = TrainConfig { method: Method::Tree, lambda: 0.1, ..Default::default() };
+    let cfg_xla = TrainConfig {
+        method: Method::Tree,
+        backend: BackendKind::Xla,
+        lambda: 0.1,
+        artifacts_dir: dir,
+        ..Default::default()
+    };
+    let out_native = train(&tr, &cfg_native).expect("native train");
+    let out_xla = train(&tr, &cfg_xla).expect("xla train");
+    assert!(out_xla.converged);
+    // f32 vs f64 arithmetic: same objective to ~1e-3, same test error.
+    assert!(
+        (out_native.objective - out_xla.objective).abs()
+            < 5e-3 * (1.0 + out_native.objective.abs()),
+        "objectives: native {} vs xla {}",
+        out_native.objective,
+        out_xla.objective
+    );
+    let e1 = evaluate(&out_native.model, &te);
+    let e2 = evaluate(&out_xla.model, &te);
+    assert!((e1 - e2).abs() < 0.02, "test errors: {e1} vs {e2}");
+}
