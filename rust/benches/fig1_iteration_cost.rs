@@ -15,8 +15,14 @@ use ranksvm::bmrm::ScoreOracle;
 use ranksvm::coordinator::trainer::DatasetOracle;
 use ranksvm::compute::NativeBackend;
 use ranksvm::data::{synthetic, Dataset};
-use ranksvm::losses::{count_comparable_pairs, PairOracle, RankingOracle, TreeOracle};
+use ranksvm::losses::{
+    count_comparable_pairs, PairOracle, RankingOracle, ShardedTreeOracle, TreeOracle,
+};
 use ranksvm::util::json::Json;
+
+fn host_threads() -> usize {
+    ranksvm::util::resolve_threads(0)
+}
 
 /// Average full oracle cost (matvec + loss/subgradient + grad assembly)
 /// over `reps` evaluations at a nontrivial w.
@@ -44,14 +50,25 @@ fn oracle_cost(ds: &Dataset, oracle: Box<dyn RankingOracle>, reps: usize) -> f64
 }
 
 fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap: usize) {
+    let threads = host_threads();
     header(&format!(
         "Fig 1 ({name}): avg subgradient-computation cost per iteration"
     ));
-    println!("{:>9} {:>14} {:>14} {:>9}", "m", "TreeRSVM", "PairRSVM", "speedup");
+    println!(
+        "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "m",
+        "TreeRSVM",
+        format!("Sharded({threads})"),
+        "PairRSVM",
+        "par ×",
+        "pair ×"
+    );
     for &m in sizes {
         let ds = make(m);
         let reps = if m <= 4000 { 5 } else { 2 };
         let tree = oracle_cost(&ds, Box::new(TreeOracle::new()), reps);
+        let sharded_oracle = ShardedTreeOracle::new(threads, None, &ds.y);
+        let sharded = oracle_cost(&ds, Box::new(sharded_oracle), reps);
         let (pair, speedup) = if m <= pair_cap {
             let p = oracle_cost(&ds, Box::new(PairOracle::new()), reps.min(3));
             (Some(p), p / tree)
@@ -59,10 +76,12 @@ fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap:
             (None, f64::NAN)
         };
         println!(
-            "{:>9} {:>14} {:>14} {:>9}",
+            "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
             m,
             fmt_secs(tree),
+            fmt_secs(sharded),
             pair.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
+            format!("{:.2}×", tree / sharded.max(1e-12)),
             if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}×") },
         );
         record(
@@ -71,6 +90,8 @@ fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap:
                 ("panel", name.into()),
                 ("m", m.into()),
                 ("tree_secs", tree.into()),
+                ("sharded_secs", sharded.into()),
+                ("threads", threads.into()),
                 ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
             ]),
         );
@@ -96,4 +117,9 @@ fn main() {
 
     println!("\nExpected shape (paper): tree ≈ m·log m (near-linear rows), pair ≈ m²");
     println!("(4× more data → pair column grows ~16×, tree column ~4–5×).");
+    println!(
+        "Sharded column: same exact counts, {} scope workers — \"par ×\" should",
+        host_threads()
+    );
+    println!("exceed 1 on multi-core hosts at the larger sizes (tiny m is spawn-bound).");
 }

@@ -5,8 +5,8 @@
 //! routed through this trait so the coordinator can execute them either
 //! with native Rust kernels ([`NativeBackend`], sparse CSR/CSC or dense)
 //! or with the AOT-compiled XLA executables lowered from JAX/Pallas
-//! ([`crate::runtime::XlaBackend`]). Python is never on this path: the
-//! XLA backend loads pre-built `artifacts/*.hlo.txt`.
+//! (`runtime::XlaBackend`, behind the `xla` feature). Python is never on
+//! this path: the XLA backend loads pre-built `artifacts/*.hlo.txt`.
 
 use crate::linalg::{CscMatrix, CsrMatrix};
 
@@ -79,6 +79,142 @@ impl ComputeBackend for NativeBackend {
     }
 }
 
+/// Fixed chunk count for the parallel gradient's row partition. Constant
+/// (independent of the thread count and the data) so the reduction
+/// topology — and therefore the floating-point result — is stable: the
+/// same dataset and coefficients produce bit-identical gradients whether
+/// one thread or sixteen execute the chunks.
+const GRAD_CHUNKS: usize = 16;
+
+/// Multi-threaded native kernels over `std::thread::scope` workers.
+///
+/// - `scores`: rows are dealt to `n_threads` contiguous ranges; each
+///   output score is a single row dot product, so the result is
+///   bit-identical to the serial [`NativeBackend`] regardless of the
+///   partition.
+/// - `grad`: rows are dealt to [`GRAD_CHUNKS`] fixed chunks, each
+///   accumulating a dense partial `Xᵀ·coeffs`; the partials are then
+///   combined by a fixed-topology pairwise tree reduction. Float sums
+///   re-associate relative to the serial scatter, so the gradient can
+///   differ from [`NativeBackend`] in the last bits — but never between
+///   runs or across thread counts.
+pub struct ParallelBackend {
+    n_threads: usize,
+    /// Per-chunk gradient partials, reused across iterations.
+    grad_parts: Vec<Vec<f64>>,
+}
+
+impl ParallelBackend {
+    pub fn new(n_threads: usize) -> Self {
+        ParallelBackend { n_threads: n_threads.max(1), grad_parts: Vec::new() }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+}
+
+impl ComputeBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "native-par"
+    }
+
+    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), x.cols());
+        let m = x.rows();
+        let mut out = vec![0.0; m];
+        let workers = self.n_threads.min(m.max(1));
+        if workers <= 1 {
+            x.matvec(w, &mut out);
+            return out;
+        }
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = &mut out;
+            let mut lo = 0usize;
+            for t in 0..workers {
+                let hi = m * (t + 1) / workers;
+                // Move the remainder out before splitting so the tail can
+                // be carried to the next iteration.
+                let (head, tail) = { rest }.split_at_mut(hi - lo);
+                let base = lo;
+                scope.spawn(move || {
+                    for (r, o) in head.iter_mut().enumerate() {
+                        *o = x.row_dot(base + r, w);
+                    }
+                });
+                rest = tail;
+                lo = hi;
+            }
+        });
+        out
+    }
+
+    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
+        let m = x.rows();
+        let n = x.cols();
+        assert_eq!(coeffs.len(), m);
+        let chunks = GRAD_CHUNKS.min(m).max(1);
+        self.grad_parts.resize_with(chunks, Vec::new);
+        for part in self.grad_parts.iter_mut() {
+            part.clear();
+            part.resize(n, 0.0);
+        }
+        let workers = self.n_threads.min(chunks);
+        let fill = |part: &mut Vec<f64>, c: usize| {
+            let lo = m * c / chunks;
+            let hi = m * (c + 1) / chunks;
+            for i in lo..hi {
+                let vi = coeffs[i];
+                if vi != 0.0 {
+                    let (idx, val) = x.row(i);
+                    for (&j, &v) in idx.iter().zip(val) {
+                        part[j as usize] += vi * v;
+                    }
+                }
+            }
+        };
+        if workers <= 1 {
+            for (c, part) in self.grad_parts.iter_mut().enumerate() {
+                fill(part, c);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let mut rest: &mut [Vec<f64>] = &mut self.grad_parts;
+                let mut c_lo = 0usize;
+                for t in 0..workers {
+                    let c_hi = chunks * (t + 1) / workers;
+                    let (head, tail) = { rest }.split_at_mut(c_hi - c_lo);
+                    let base = c_lo;
+                    let fill = &fill;
+                    scope.spawn(move || {
+                        for (ci, part) in head.iter_mut().enumerate() {
+                            fill(part, base + ci);
+                        }
+                    });
+                    rest = tail;
+                    c_lo = c_hi;
+                }
+            });
+        }
+        // Fixed-topology pairwise tree reduction over the chunk partials.
+        let mut stride = 1usize;
+        while stride < chunks {
+            let mut base = 0usize;
+            while base + stride < chunks {
+                let (left, right) = self.grad_parts.split_at_mut(base + stride);
+                let dst = &mut left[base];
+                let src = &right[0];
+                for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                    *d += s;
+                }
+                base += 2 * stride;
+            }
+            stride *= 2;
+        }
+        self.grad_parts[0].clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +246,57 @@ mod tests {
         for (a, b) in g1.iter().zip(&g2) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn parallel_backend_matches_serial_and_is_thread_count_invariant() {
+        let mut rng = Rng::new(702);
+        let mut triplets = Vec::new();
+        for i in 0..137 {
+            for j in 0..40 {
+                if rng.bool(0.15) {
+                    triplets.push((i, j, rng.normal()));
+                }
+            }
+        }
+        let x = CsrMatrix::from_triplets(137, 40, triplets);
+        let w: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..137).map(|_| rng.normal()).collect();
+
+        let mut serial = NativeBackend::new();
+        serial.prepare(&x);
+        let p_ref = serial.scores(&x, &w);
+        let g_ref = serial.grad(&x, &c);
+
+        let mut g_one: Option<Vec<f64>> = None;
+        for threads in [1, 2, 5, 32] {
+            let mut par = ParallelBackend::new(threads);
+            par.prepare(&x);
+            // Scores are per-row dot products: bit-identical to serial.
+            assert_eq!(par.scores(&x, &w), p_ref, "{threads} threads");
+            let g = par.grad(&x, &c);
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-10, "{threads} threads: {a} vs {b}");
+            }
+            // Fixed chunk plan + fixed reduction topology: the gradient
+            // is bit-identical across thread counts.
+            match &g_one {
+                None => g_one = Some(g),
+                Some(first) => assert_eq!(&g, first, "{threads} threads"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_backend_degenerate_shapes() {
+        let x = CsrMatrix::from_triplets(0, 3, vec![]);
+        let mut par = ParallelBackend::new(4);
+        assert!(par.scores(&x, &[0.0; 3]).is_empty());
+        assert_eq!(par.grad(&x, &[]), vec![0.0; 3]);
+
+        let x = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]);
+        let mut par = ParallelBackend::new(8);
+        assert_eq!(par.scores(&x, &[3.0, 4.0]), vec![3.0, 8.0]);
+        assert_eq!(par.grad(&x, &[1.0, 1.0]), vec![1.0, 2.0]);
     }
 }

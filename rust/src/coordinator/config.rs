@@ -105,6 +105,13 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Emit per-iteration JSON lines to stderr.
     pub verbose: bool,
+    /// Worker threads for the sharded oracle and the parallel native
+    /// backend; `0` (the default) resolves to the host's available
+    /// parallelism. Any value produces bit-identical training results —
+    /// the shard/chunk reductions are order-fixed (see
+    /// [`crate::losses::ShardedTreeOracle`] and
+    /// [`crate::compute::ParallelBackend`]).
+    pub n_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -118,6 +125,7 @@ impl Default for TrainConfig {
             line_search: false,
             artifacts_dir: "artifacts".to_string(),
             verbose: false,
+            n_threads: 0,
         }
     }
 }
@@ -127,6 +135,12 @@ impl TrainConfig {
     /// the paper gives the conversion `C = 1/(λN)`.
     pub fn c_equivalent(&self, n_pairs: f64) -> f64 {
         1.0 / (self.lambda * n_pairs)
+    }
+
+    /// The concrete worker count: `n_threads`, with `0` resolved to the
+    /// host's available parallelism (1 if that probe fails).
+    pub fn resolved_threads(&self) -> usize {
+        crate::util::resolve_threads(self.n_threads)
     }
 }
 
@@ -154,5 +168,14 @@ mod tests {
     fn c_conversion() {
         let cfg = TrainConfig { lambda: 0.1, ..Default::default() };
         assert!((cfg.c_equivalent(100.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thread_resolution() {
+        let auto = TrainConfig::default();
+        assert_eq!(auto.n_threads, 0);
+        assert!(auto.resolved_threads() >= 1);
+        let fixed = TrainConfig { n_threads: 3, ..Default::default() };
+        assert_eq!(fixed.resolved_threads(), 3);
     }
 }

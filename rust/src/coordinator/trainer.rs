@@ -5,11 +5,11 @@
 use super::config::{BackendKind, Method, TrainConfig};
 use super::model::RankModel;
 use crate::bmrm::{self, BmrmConfig, ScoreOracle};
-use crate::compute::{ComputeBackend, NativeBackend};
+use crate::compute::{ComputeBackend, NativeBackend, ParallelBackend};
 use crate::data::Dataset;
 use crate::losses::{
     count_comparable_pairs, tree::fenwick_oracle, PairOracle, QueryGrouped, RLevelOracle,
-    RankingOracle, SquaredPairOracle, TreeOracle,
+    RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
 };
 use crate::newton::{self, HessianOracle, NewtonConfig};
 use crate::util::json::Json;
@@ -185,20 +185,41 @@ impl HessianOracle for SquaredDatasetOracle<'_> {
     }
 }
 
-/// Build the configured compute backend.
+/// Build the configured compute backend. The plain native kind runs the
+/// `O(ms)` linear algebra on the sharded [`ParallelBackend`]; its chunk
+/// plan and reduction topology are fixed, so results do not depend on
+/// the thread count.
 pub fn make_backend(cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
     Ok(match cfg.backend {
-        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Native => Box::new(ParallelBackend::new(cfg.resolved_threads())),
         BackendKind::NativeCsc => Box::new(NativeBackend::with_csc()),
-        BackendKind::Xla => Box::new(crate::runtime::XlaBackend::load(&cfg.artifacts_dir)?),
+        BackendKind::Xla => make_xla_backend(cfg)?,
     })
 }
 
-/// Build the score-space oracle for a BMRM-family method, wrapping in the
-/// query-grouped averager when the dataset has query structure.
-fn make_ranking_oracle(method: Method, ds: &Dataset) -> Box<dyn RankingOracle> {
+#[cfg(feature = "xla")]
+fn make_xla_backend(cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
+    Ok(Box::new(crate::runtime::XlaBackend::load(&cfg.artifacts_dir)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn make_xla_backend(_cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
+    anyhow::bail!(
+        "this build has no XLA support — enable the `xla` cargo feature \
+         and add the `xla` bindings dependency (see rust/Cargo.toml)"
+    )
+}
+
+/// Build the score-space oracle for a BMRM-family method. The paper's
+/// main method runs on the query-sharded parallel engine (which also
+/// subsumes the query-grouped averaging); the ablation variants stay
+/// serial, wrapped in the grouped averager when the dataset has query
+/// structure.
+fn make_ranking_oracle(method: Method, ds: &Dataset, n_threads: usize) -> Box<dyn RankingOracle> {
     let base: Box<dyn RankingOracle> = match method {
-        Method::Tree => Box::new(TreeOracle::new()),
+        Method::Tree => {
+            return Box::new(ShardedTreeOracle::new(n_threads, ds.qid.as_deref(), &ds.y))
+        }
         Method::TreeDedup => Box::new(TreeOracle::new_dedup()),
         Method::TreeFenwick => Box::new(fenwick_oracle(&ds.y)),
         Method::Pair => Box::new(PairOracle::new()),
@@ -257,7 +278,7 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
         }
     } else {
         let n_pairs = effective_pairs(ds);
-        let inner = make_ranking_oracle(cfg.method, ds);
+        let inner = make_ranking_oracle(cfg.method, ds, cfg.resolved_threads());
         let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
         let bcfg = BmrmConfig {
             lambda: cfg.lambda,
@@ -381,6 +402,35 @@ mod tests {
         assert!(ls.converged);
         // Same objective ballpark.
         assert!((ls.objective - base.objective).abs() < 5e-3 * (1.0 + base.objective.abs()));
+    }
+
+    #[test]
+    fn training_is_bitwise_invariant_to_thread_count() {
+        // The sharded oracle's counts are exact integers and the backend's
+        // chunk plan/reduction topology are fixed, so the whole BMRM run
+        // must produce the same model to the last bit for any n_threads.
+        for (ds, tag) in [
+            (synthetic::cadata_like(300, 88), "global"),
+            (synthetic::queries(12, 18, 5, 89), "grouped"),
+        ] {
+            let mut reference: Option<TrainOutcome> = None;
+            for threads in [1usize, 2, 8] {
+                let c = TrainConfig { n_threads: threads, ..cfg(Method::Tree) };
+                let out = train(&ds, &c).unwrap();
+                match &reference {
+                    None => reference = Some(out),
+                    Some(base) => {
+                        assert_eq!(out.model.w, base.model.w, "{tag}: {threads} threads");
+                        assert_eq!(
+                            out.objective.to_bits(),
+                            base.objective.to_bits(),
+                            "{tag}: {threads} threads"
+                        );
+                        assert_eq!(out.iterations, base.iterations, "{tag}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

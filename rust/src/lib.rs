@@ -12,7 +12,10 @@
 //!   (Algorithm 3, "TreeRSVM") plus every baseline the paper evaluates:
 //!   the explicit-pairs `O(m²)` oracle ("PairRSVM"), the r-level
 //!   algorithm of Joachims (2006) ("SVM^rank"), and the squared pairwise
-//!   hinge of Chapelle & Keerthi (2010) ("PRSVM");
+//!   hinge of Chapelle & Keerthi (2010) ("PRSVM") — and the
+//!   query-sharded parallel engine ([`losses::ShardedTreeOracle`]) that
+//!   runs Algorithm 3 across `std::thread::scope` workers with
+//!   bit-identical results for any thread count;
 //! - [`bmrm`] — bundle-method / cutting-plane optimization (Algorithm 1)
 //!   with a dual coordinate-descent inner QP and an optional OCAS-style
 //!   line search;
@@ -21,8 +24,10 @@
 //!   (libsvm I/O, Cadata-like and Reuters-like synthetic generators),
 //!   `O(m log m)` ranking metrics, and dense/CSR/CSC kernels;
 //! - [`compute`] + [`runtime`] — a pluggable compute backend: native Rust
-//!   kernels, or AOT-compiled XLA executables (lowered from JAX/Pallas by
-//!   `python/compile/aot.py`) executed via PJRT;
+//!   kernels (serial, or row-sharded with a fixed reduction topology in
+//!   [`compute::ParallelBackend`]), or AOT-compiled XLA executables
+//!   (lowered from JAX/Pallas by `python/compile/aot.py`) executed via
+//!   PJRT behind the `xla` cargo feature;
 //! - [`coordinator`] — training orchestration, config, CLI, and the
 //!   memory-probe subprocess used by the Fig.-3 benchmark.
 //!

@@ -13,7 +13,11 @@
 //! - [`squared::SquaredPairOracle`] — the squared pairwise hinge of
 //!   Chapelle & Keerthi (2010) ("PRSVM"), with explicit pair
 //!   materialization (quadratic memory, reproducing Fig. 3);
-//! - [`query::QueryGrouped`] — per-query averaging wrapper (§2, §4.3 end).
+//! - [`query::QueryGrouped`] — per-query averaging wrapper (§2, §4.3 end);
+//! - [`sharded::ShardedTreeOracle`] — the tree oracle sharded across
+//!   `std::thread::scope` workers (by query group, or by contiguous
+//!   chunks of the score-sorted order for a single global ranking), with
+//!   bit-identical output to the serial path for any shard count.
 //!
 //! The gradient w.r.t. `w` is then `a = Xᵀ·coeffs` (row-example
 //! convention), computed by a [`crate::compute::ComputeBackend`], so the
@@ -22,6 +26,7 @@
 pub mod pairwise;
 pub mod query;
 pub mod rlevel;
+pub mod sharded;
 pub mod squared;
 pub mod squared_tree;
 pub mod tree;
@@ -29,6 +34,7 @@ pub mod tree;
 pub use pairwise::PairOracle;
 pub use query::QueryGrouped;
 pub use rlevel::RLevelOracle;
+pub use sharded::ShardedTreeOracle;
 pub use squared::SquaredPairOracle;
 pub use squared_tree::SquaredTreeOracle;
 pub use tree::TreeOracle;

@@ -10,6 +10,32 @@
 
 use super::{count_comparable_pairs, OracleOutput, RankingOracle};
 
+/// Partition examples into query groups (first-seen qid order) and
+/// count each group's comparable pairs. The single source of truth for
+/// the grouping convention — shared by [`QueryGrouped`] and the sharded
+/// engine ([`super::ShardedTreeOracle`]), whose bit-identity contract
+/// depends on both sides agreeing on group order and pair counts.
+pub(crate) fn build_groups(qid: &[u64], y: &[f64]) -> (Vec<Vec<usize>>, Vec<f64>) {
+    assert_eq!(qid.len(), y.len(), "qid/label count mismatch");
+    let mut map = std::collections::HashMap::<u64, usize>::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, &q) in qid.iter().enumerate() {
+        let g = *map.entry(q).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(i);
+    }
+    let group_pairs = groups
+        .iter()
+        .map(|g| {
+            let yg: Vec<f64> = g.iter().map(|&i| y[i]).collect();
+            count_comparable_pairs(&yg) as f64
+        })
+        .collect();
+    (groups, group_pairs)
+}
+
 /// Wraps any per-group oracle and averages over query groups.
 pub struct QueryGrouped<O: RankingOracle> {
     inner: O,
@@ -26,26 +52,7 @@ impl<O: RankingOracle> QueryGrouped<O> {
     /// Build from per-example query ids (`qid[i]` arbitrary integers) and
     /// the fixed label vector.
     pub fn new(inner: O, qid: &[u64], y: &[f64]) -> Self {
-        assert_eq!(qid.len(), y.len());
-        // Group indices by qid preserving first-seen order.
-        let mut order: Vec<u64> = Vec::new();
-        let mut map: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
-        let mut groups: Vec<Vec<usize>> = Vec::new();
-        for (i, &q) in qid.iter().enumerate() {
-            let g = *map.entry(q).or_insert_with(|| {
-                order.push(q);
-                groups.push(Vec::new());
-                groups.len() - 1
-            });
-            groups[g].push(i);
-        }
-        let group_pairs = groups
-            .iter()
-            .map(|g| {
-                let yg: Vec<f64> = g.iter().map(|&i| y[i]).collect();
-                count_comparable_pairs(&yg) as f64
-            })
-            .collect();
+        let (groups, group_pairs) = build_groups(qid, y);
         QueryGrouped { inner, groups, group_pairs, p_buf: Vec::new(), y_buf: Vec::new() }
     }
 

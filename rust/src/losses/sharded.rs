@@ -1,0 +1,658 @@
+//! Query-sharded parallel subgradient oracle.
+//!
+//! The loss of §2 decomposes over disjoint example subsets two ways, and
+//! this engine exploits both with `std::thread::scope` workers that keep
+//! per-shard reusable tree buffers alive across BMRM iterations:
+//!
+//! **Query-grouped data** (the document-retrieval setting): the risk is
+//! an average of per-query losses, so whole query groups are dealt to
+//! shards (contiguous runs of groups, balanced by example count) and
+//! each worker runs its own [`TreeOracle`] over its groups — the same
+//! batch-parallel decomposition pursued by WMRB (Liu, 2017). Per-group
+//! results are reduced serially *in group order*, so the output is
+//! bit-identical to the serial [`super::QueryGrouped`] wrapper for every
+//! shard count.
+//!
+//! **One global ranking**: the frequencies `c_i`/`d_i` of eqs. (5)–(6)
+//! are *integer* dominance counts over the margin window
+//! `W(i) = {j : 1 + p_i − p_j > 0}` (a prefix of the score-sorted order).
+//! We split the sorted order into contiguous chunks; the worker owning
+//! the chunk where `W(i)` *ends* computes `c_i` as
+//!
+//! - an incremental red-black-tree count over the partial chunk (exactly
+//!   Algorithm 3's sweep, restricted to the chunk), plus
+//! - one binary search per fully-covered earlier chunk against that
+//!   chunk's pre-sorted label array (phase A, also parallel).
+//!
+//! `d_i` is the mirror image over suffix windows. Because every per-`i`
+//! count is an exact integer decomposed by chunk, the assembled
+//! `(loss, coeffs)` is **bit-identical to the single-threaded
+//! [`TreeOracle`] for any shard count** — no floating-point reduction
+//! enters until [`super::assemble_from_counts`], which runs serially on
+//! the full count vectors. Wall-time per worker is
+//! `O((m/S)·(log(m/S) + S·log(m/S)))` tree/binary-search steps; the
+//! binary searches stream flat sorted arrays, which is what makes the
+//! sharded oracle faster in practice on multi-core hosts (see
+//! `benches/fig1_iteration_cost.rs`).
+//!
+//! Degenerate score distributions (e.g. all predictions within one
+//! margin of each other, as at `w = 0`) collapse every window onto the
+//! last chunk and serialize the sweep — correctness is unaffected.
+
+use super::{assemble_from_counts, OracleOutput, RankingOracle};
+use crate::linalg::ops::argsort_into;
+use crate::losses::tree::TreeOracle;
+use crate::rbtree::OsTree;
+
+/// How examples are dealt to shards.
+enum Plan {
+    /// One global ranking: contiguous chunks of the score-sorted order.
+    Global,
+    /// Disjoint query groups (first-seen order, as in
+    /// [`super::QueryGrouped`]), dealt to shards as contiguous group
+    /// runs balanced by example count.
+    Grouped {
+        /// Example indices per group.
+        groups: Vec<Vec<usize>>,
+        /// Comparable pairs per group (fixed by the labels at build).
+        group_pairs: Vec<f64>,
+        /// Effective group count for averaging (groups with pairs).
+        r_eff: f64,
+        /// Per shard: `[lo, hi)` range of group indices.
+        ranges: Vec<(usize, usize)>,
+    },
+}
+
+/// Per-shard worker state, reused across oracle calls (and hence across
+/// BMRM cutting-plane iterations — the trees and buffers are allocated
+/// once and only grow).
+struct ShardState {
+    /// Incremental counter for the partial-chunk sweep (global mode).
+    tree: OsTree,
+    /// Counts for this shard's owned queries, in sweep order.
+    c_out: Vec<u64>,
+    d_out: Vec<u64>,
+    /// Grouped mode: a full per-shard tree oracle plus gather buffers.
+    oracle: TreeOracle,
+    p_buf: Vec<f64>,
+    y_buf: Vec<f64>,
+    /// Grouped mode: concatenated per-group coefficient outputs plus
+    /// `(group, offset, len, loss)` records.
+    coeff_buf: Vec<f64>,
+    meta: Vec<(usize, usize, usize, f64)>,
+}
+
+impl ShardState {
+    fn new() -> Self {
+        ShardState {
+            tree: OsTree::new(),
+            c_out: Vec::new(),
+            d_out: Vec::new(),
+            oracle: TreeOracle::new(),
+            p_buf: Vec::new(),
+            y_buf: Vec::new(),
+            coeff_buf: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+}
+
+/// Shared read-only view handed to the global-mode workers.
+struct GlobalView<'a> {
+    /// Chunk boundaries over sorted positions, length `n_shards + 1`.
+    bounds: &'a [usize],
+    /// Owned query ranges `[lo, hi)` per shard, forward sweep.
+    fwd: &'a [(usize, usize)],
+    /// Owned query ranges per shard, backward sweep.
+    bwd: &'a [(usize, usize)],
+    y_sorted: &'a [f64],
+    /// Forward window ends `w(k)` (exclusive), nondecreasing in `k`.
+    w_end: &'a [usize],
+    /// Backward window starts `v(k)` (inclusive), nondecreasing in `k`.
+    v_start: &'a [usize],
+    /// Per-chunk sorted label arrays (phase A output).
+    labels: &'a [Vec<f64>],
+}
+
+/// The parallel sharded oracle engine. Construct once per training set
+/// (like [`super::QueryGrouped`]); evaluate once per BMRM iteration.
+pub struct ShardedTreeOracle {
+    n_shards: usize,
+    plan: Plan,
+    shards: Vec<ShardState>,
+    /// Per-chunk sorted labels, outside [`ShardState`] so phase-B workers
+    /// can read every *other* shard's array.
+    sorted_labels: Vec<Vec<f64>>,
+    // Per-eval scratch (global mode), reused across calls.
+    pi: Vec<usize>,
+    p_sorted: Vec<f64>,
+    y_sorted: Vec<f64>,
+    w_end: Vec<usize>,
+    v_start: Vec<usize>,
+    c: Vec<u64>,
+    d: Vec<u64>,
+}
+
+impl ShardedTreeOracle {
+    /// Build for `n_threads` workers over a fixed training label vector;
+    /// `qid` enables query-group sharding (must align with `y`).
+    pub fn new(n_threads: usize, qid: Option<&[u64]>, y: &[f64]) -> Self {
+        let n_shards = n_threads.max(1);
+        let plan = match qid {
+            None => Plan::Global,
+            Some(q) => {
+                let (groups, group_pairs) = crate::losses::query::build_groups(q, y);
+                let r_eff = group_pairs.iter().filter(|&&n| n > 0.0).count().max(1) as f64;
+                let ranges = split_groups(&groups, n_shards);
+                Plan::Grouped { groups, group_pairs, r_eff, ranges }
+            }
+        };
+        ShardedTreeOracle {
+            n_shards,
+            plan,
+            shards: (0..n_shards).map(|_| ShardState::new()).collect(),
+            sorted_labels: Vec::new(),
+            pi: Vec::new(),
+            p_sorted: Vec::new(),
+            y_sorted: Vec::new(),
+            w_end: Vec::new(),
+            v_start: Vec::new(),
+            c: Vec::new(),
+            d: Vec::new(),
+        }
+    }
+
+    /// Number of shard workers.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Query-group count (None for a single global ranking).
+    pub fn n_groups(&self) -> Option<usize> {
+        match &self.plan {
+            Plan::Global => None,
+            Plan::Grouped { groups, .. } => Some(groups.len()),
+        }
+    }
+
+    /// Per-shard `[lo, hi)` group-index ranges (None in global mode).
+    /// Ranges are contiguous and non-overlapping: a query group is never
+    /// split across shards.
+    pub fn group_ranges(&self) -> Option<&[(usize, usize)]> {
+        match &self.plan {
+            Plan::Global => None,
+            Plan::Grouped { ranges, .. } => Some(ranges),
+        }
+    }
+
+    /// Total comparable pairs across groups (grouped mode reporting).
+    pub fn total_pairs(&self) -> Option<f64> {
+        match &self.plan {
+            Plan::Global => None,
+            Plan::Grouped { group_pairs, .. } => Some(group_pairs.iter().sum()),
+        }
+    }
+
+    fn eval_global(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        if m == 0 {
+            return OracleOutput { loss: 0.0, coeffs: Vec::new() };
+        }
+        let n_shards = self.n_shards.min(m);
+
+        // Shared setup — exactly TreeOracle's sort + gather.
+        argsort_into(p, &mut self.pi);
+        self.p_sorted.clear();
+        self.p_sorted.extend(self.pi.iter().map(|&k| p[k]));
+        self.y_sorted.clear();
+        self.y_sorted.extend(self.pi.iter().map(|&k| y[k]));
+
+        // Window extents via two-pointer scans, with the *same* float
+        // predicates as the serial sweeps so the counted sets match
+        // exactly. Forward: W(k) = [0, w_end[k]) with
+        // w_end[k] = first j failing 1 + p_k − p_j > 0 (nondecreasing,
+        // and ≥ k+1 since j = k always passes). Backward:
+        // V(k) = [v_start[k], m) with v_start[k] = first j passing
+        // 1 + p_j − p_k > 0 (nondecreasing, and ≤ k).
+        self.w_end.clear();
+        self.w_end.reserve(m);
+        {
+            let ps = &self.p_sorted;
+            let mut j = 0usize;
+            for k in 0..m {
+                let pk = ps[k];
+                while j < m && 1.0 + pk - ps[j] > 0.0 {
+                    j += 1;
+                }
+                self.w_end.push(j);
+            }
+        }
+        self.v_start.clear();
+        self.v_start.reserve(m);
+        {
+            let ps = &self.p_sorted;
+            let mut j = 0usize;
+            for k in 0..m {
+                let pk = ps[k];
+                // Advance past the js that fail the serial predicate
+                // 1 + p_j − p_k > 0 (labels are NaN-free here, so the
+                // `<=` form is its exact negation).
+                while j < m && 1.0 + ps[j] - pk <= 0.0 {
+                    j += 1;
+                }
+                self.v_start.push(j);
+            }
+        }
+
+        // Contiguous chunks of the sorted order.
+        let bounds: Vec<usize> = (0..=n_shards).map(|s| s * m / n_shards).collect();
+
+        // Ownership: shard s owns the forward queries whose window ends
+        // inside its chunk, and the backward queries whose window starts
+        // inside it. Both extent arrays are monotone, so the owned query
+        // sets are contiguous `k` ranges found by binary search.
+        let fwd: Vec<(usize, usize)> = (0..n_shards)
+            .map(|s| {
+                (
+                    self.w_end.partition_point(|&w| w <= bounds[s]),
+                    self.w_end.partition_point(|&w| w <= bounds[s + 1]),
+                )
+            })
+            .collect();
+        let bwd: Vec<(usize, usize)> = (0..n_shards)
+            .map(|s| {
+                (
+                    self.v_start.partition_point(|&v| v < bounds[s]),
+                    self.v_start.partition_point(|&v| v < bounds[s + 1]),
+                )
+            })
+            .collect();
+
+        // Phase A: per-chunk sorted label arrays (cross-chunk counting
+        // substrate). Skipped for a single shard — there is no other
+        // chunk to count against.
+        self.sorted_labels.resize_with(n_shards, Vec::new);
+        if n_shards > 1 {
+            let y_sorted = &self.y_sorted;
+            std::thread::scope(|scope| {
+                for (s, lab) in self.sorted_labels.iter_mut().enumerate() {
+                    let (lo, hi) = (bounds[s], bounds[s + 1]);
+                    scope.spawn(move || {
+                        lab.clear();
+                        lab.extend_from_slice(&y_sorted[lo..hi]);
+                        lab.sort_unstable_by(|a, b| {
+                            a.partial_cmp(b).expect("NaN utility score")
+                        });
+                    });
+                }
+            });
+        }
+
+        // Phase B: each worker counts its owned queries.
+        let view = GlobalView {
+            bounds: &bounds,
+            fwd: &fwd,
+            bwd: &bwd,
+            y_sorted: &self.y_sorted,
+            w_end: &self.w_end,
+            v_start: &self.v_start,
+            labels: &self.sorted_labels,
+        };
+        if n_shards == 1 {
+            global_worker(0, &view, &mut self.shards[0]);
+        } else {
+            std::thread::scope(|scope| {
+                for (s, state) in self.shards.iter_mut().take(n_shards).enumerate() {
+                    let view = &view;
+                    scope.spawn(move || global_worker(s, view, state));
+                }
+            });
+        }
+
+        // Scatter the per-shard counts back to original example order and
+        // assemble — serial and order-fixed, so the float result cannot
+        // depend on the shard count.
+        self.c.clear();
+        self.c.resize(m, 0);
+        self.d.clear();
+        self.d.resize(m, 0);
+        for s in 0..n_shards {
+            let st = &self.shards[s];
+            let (q_lo, q_hi) = fwd[s];
+            for (t, k) in (q_lo..q_hi).enumerate() {
+                self.c[self.pi[k]] = st.c_out[t];
+            }
+            let (b_lo, b_hi) = bwd[s];
+            for (t, k) in (b_lo..b_hi).rev().enumerate() {
+                self.d[self.pi[k]] = st.d_out[t];
+            }
+        }
+        assemble_from_counts(p, &self.c, &self.d, n_pairs)
+    }
+
+    fn eval_grouped(&mut self, p: &[f64], y: &[f64]) -> OracleOutput {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        let Plan::Grouped { groups, group_pairs, r_eff, ranges } = &self.plan else {
+            unreachable!("eval_grouped requires a grouped plan")
+        };
+        let r_eff = *r_eff;
+        let shards = &mut self.shards;
+
+        if shards.len() == 1 {
+            grouped_worker(&mut shards[0], ranges[0], groups, group_pairs, p, y);
+        } else {
+            std::thread::scope(|scope| {
+                for (s, state) in shards.iter_mut().enumerate() {
+                    let range = ranges[s];
+                    scope.spawn(move || grouped_worker(state, range, groups, group_pairs, p, y));
+                }
+            });
+        }
+
+        // Reduce in group order. Shards hold contiguous ascending group
+        // runs, so iterating shards then their records reproduces the
+        // serial QueryGrouped accumulation order bit-for-bit.
+        let mut loss = 0.0;
+        let mut coeffs = vec![0.0; m];
+        for state in shards.iter() {
+            for &(g, off, len, group_loss) in &state.meta {
+                loss += group_loss / r_eff;
+                let idx = &groups[g];
+                debug_assert_eq!(len, idx.len());
+                for (k, &i) in idx.iter().enumerate() {
+                    coeffs[i] = state.coeff_buf[off + k] / r_eff;
+                }
+            }
+        }
+        OracleOutput { loss, coeffs }
+    }
+}
+
+impl RankingOracle for ShardedTreeOracle {
+    /// `n_pairs` normalizes the global mode; in grouped mode the
+    /// per-group counts fixed at construction are authoritative (same
+    /// contract as [`super::QueryGrouped`]).
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        if matches!(self.plan, Plan::Global) {
+            self.eval_global(p, y, n_pairs)
+        } else {
+            self.eval_grouped(p, y)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-tree"
+    }
+}
+
+/// Deal groups to `n_shards` contiguous runs balanced by example count.
+/// Deterministic in the inputs; the last shard absorbs the remainder.
+fn split_groups(groups: &[Vec<usize>], n_shards: usize) -> Vec<(usize, usize)> {
+    let total: usize = groups.iter().map(|g| g.len()).sum();
+    let mut ranges = Vec::with_capacity(n_shards);
+    let mut lo = 0usize;
+    let mut cum = 0usize;
+    for s in 0..n_shards {
+        let mut hi = lo;
+        if s + 1 == n_shards {
+            hi = groups.len();
+        } else {
+            let target = total * (s + 1) / n_shards;
+            while hi < groups.len() && cum < target {
+                cum += groups[hi].len();
+                hi += 1;
+            }
+        }
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    ranges
+}
+
+/// Grouped-mode worker: evaluate this shard's query groups with its own
+/// reusable tree oracle, recording per-group losses and coefficients.
+fn grouped_worker(
+    state: &mut ShardState,
+    range: (usize, usize),
+    groups: &[Vec<usize>],
+    group_pairs: &[f64],
+    p: &[f64],
+    y: &[f64],
+) {
+    state.meta.clear();
+    state.coeff_buf.clear();
+    for g in range.0..range.1 {
+        let ng = group_pairs[g];
+        if ng == 0.0 {
+            continue;
+        }
+        let idx = &groups[g];
+        state.p_buf.clear();
+        state.p_buf.extend(idx.iter().map(|&i| p[i]));
+        state.y_buf.clear();
+        state.y_buf.extend(idx.iter().map(|&i| y[i]));
+        let out = state.oracle.eval(&state.p_buf, &state.y_buf, ng);
+        let off = state.coeff_buf.len();
+        state.coeff_buf.extend_from_slice(&out.coeffs);
+        state.meta.push((g, off, idx.len(), out.loss));
+    }
+}
+
+/// Global-mode worker: exact `c`/`d` counts for the queries whose margin
+/// window ends (forward) or starts (backward) inside this shard's chunk.
+fn global_worker(s: usize, v: &GlobalView, state: &mut ShardState) {
+    let n_shards = v.fwd.len();
+
+    // Forward sweep: c_k = |{j ∈ W(k) : y_j > y_k}|, decomposed as the
+    // incremental tree over the partial chunk plus one binary search per
+    // fully-covered earlier chunk.
+    state.c_out.clear();
+    state.tree.clear();
+    let (q_lo, q_hi) = v.fwd[s];
+    let mut j = v.bounds[s];
+    for k in q_lo..q_hi {
+        while j < v.w_end[k] {
+            state.tree.insert(v.y_sorted[j]);
+            j += 1;
+        }
+        let yk = v.y_sorted[k];
+        let mut cnt = state.tree.count_larger(yk);
+        for lab in &v.labels[..s] {
+            cnt += (lab.len() - lab.partition_point(|&x| x <= yk)) as u64;
+        }
+        state.c_out.push(cnt);
+    }
+
+    // Backward sweep (descending k): d_k = |{j ∈ V(k) : y_j < y_k}|.
+    state.d_out.clear();
+    state.tree.clear();
+    let (b_lo, b_hi) = v.bwd[s];
+    let mut j = v.bounds[s + 1];
+    for k in (b_lo..b_hi).rev() {
+        while j > v.v_start[k] {
+            j -= 1;
+            state.tree.insert(v.y_sorted[j]);
+        }
+        let yk = v.y_sorted[k];
+        let mut cnt = state.tree.count_smaller(yk);
+        for lab in &v.labels[s + 1..n_shards] {
+            cnt += lab.partition_point(|&x| x < yk) as u64;
+        }
+        state.d_out.push(cnt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::{count_comparable_pairs, PairOracle, QueryGrouped};
+    use crate::util::rng::Rng;
+
+    fn random_case(rng: &mut Rng, trial: usize) -> (Vec<f64>, Vec<f64>) {
+        let m = 1 + rng.below(250);
+        let y: Vec<f64> = match trial % 4 {
+            0 => (0..m).map(|_| rng.normal()).collect(), // r ≈ m
+            1 => (0..m).map(|_| rng.below(5) as f64).collect(), // heavy ties
+            2 => (0..m).map(|_| rng.below(2) as f64).collect(), // bipartite
+            _ => vec![3.0; m],                           // fully tied
+        };
+        // Quantized scores land exactly on margins; mix in ties.
+        let p: Vec<f64> = match trial % 3 {
+            0 => (0..m).map(|_| rng.normal() * 2.0).collect(),
+            1 => (0..m).map(|_| (rng.below(30) as f64) / 7.0 - 2.0).collect(),
+            _ => (0..m).map(|_| rng.below(3) as f64).collect(),
+        };
+        (p, y)
+    }
+
+    #[test]
+    fn global_mode_bit_identical_to_tree_oracle() {
+        let mut rng = Rng::new(9001);
+        for trial in 0..60 {
+            let (p, y) = random_case(&mut rng, trial);
+            let n = count_comparable_pairs(&y) as f64;
+            let mut reference = TreeOracle::new();
+            let expect = reference.eval(&p, &y, n);
+            for threads in [1, 2, 3, 8, 33] {
+                let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+                let got = sharded.eval(&p, &y, n);
+                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} shards");
+                assert_eq!(
+                    got.loss.to_bits(),
+                    expect.loss.to_bits(),
+                    "trial {trial}, {threads} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn global_mode_matches_pair_oracle_counts() {
+        let mut rng = Rng::new(9002);
+        for trial in 0..40 {
+            let (p, y) = random_case(&mut rng, trial);
+            let n = count_comparable_pairs(&y) as f64;
+            let mut pair = PairOracle::new();
+            let expect = pair.eval(&p, &y, n);
+            let mut sharded = ShardedTreeOracle::new(4, None, &y);
+            let got = sharded.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "trial {trial}");
+            assert!((got.loss - expect.loss).abs() <= 1e-12 * (1.0 + expect.loss));
+        }
+    }
+
+    #[test]
+    fn grouped_mode_bit_identical_to_query_grouped() {
+        let mut rng = Rng::new(9003);
+        for trial in 0..40 {
+            let m = 1 + rng.below(200);
+            let n_queries = 1 + rng.below(12);
+            let qid: Vec<u64> = (0..m).map(|_| rng.below(n_queries) as u64 * 17).collect();
+            let y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+            let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+            let expect = serial.eval(&p, &y, serial.total_pairs());
+            for threads in [1, 2, 8, 40] {
+                let mut sharded = ShardedTreeOracle::new(threads, Some(&qid), &y);
+                let got = sharded.eval(&p, &y, 0.0);
+                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} shards");
+                assert_eq!(
+                    got.loss.to_bits(),
+                    expect.loss.to_bits(),
+                    "trial {trial}, {threads} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_respects_query_boundaries() {
+        let mut rng = Rng::new(9004);
+        let m = 300;
+        let qid: Vec<u64> = (0..m).map(|i| (i / 7) as u64).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        for threads in [1, 3, 8] {
+            let oracle = ShardedTreeOracle::new(threads, Some(&qid), &y);
+            let ranges = oracle.group_ranges().unwrap();
+            let n_groups = oracle.n_groups().unwrap();
+            assert_eq!(ranges.len(), threads);
+            // Contiguous, non-overlapping cover of all groups: groups are
+            // assigned whole — no group index appears in two shards.
+            let mut expect_lo = 0;
+            for &(lo, hi) in ranges {
+                assert_eq!(lo, expect_lo);
+                assert!(hi >= lo);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, n_groups);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let mut o = ShardedTreeOracle::new(4, None, &[]);
+        let out = o.eval(&[], &[], 0.0);
+        assert_eq!(out.loss, 0.0);
+        assert!(out.coeffs.is_empty());
+
+        // Fewer examples than shards.
+        let y = [1.0, 2.0];
+        let mut o = ShardedTreeOracle::new(8, None, &y);
+        let out = o.eval(&[0.0, 0.5], &y, 1.0);
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(&[0.0, 0.5], &y, 1.0);
+        assert_eq!(out.coeffs, expect.coeffs);
+
+        // All-tied predictions: every window spans everything (the
+        // worst-case serialization path).
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let p = [0.0, 0.0, 0.0, 0.0];
+        let n = count_comparable_pairs(&y) as f64;
+        let mut o = ShardedTreeOracle::new(3, None, &y);
+        let out = o.eval(&p, &y, n);
+        assert!((out.loss - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffers_reused_across_calls_and_sizes() {
+        let mut o = ShardedTreeOracle::new(4, None, &[1.0, 2.0]);
+        let a = o.eval(&[0.5, 0.0], &[1.0, 2.0], 1.0);
+        assert!(a.loss > 0.0);
+        let b = o.eval(&[0.0, 5.0], &[1.0, 2.0], 1.0);
+        assert_eq!(b.loss, 0.0);
+        // Growing and shrinking sizes across calls.
+        let y: Vec<f64> = (0..100).map(|i| (i % 7) as f64).collect();
+        let p: Vec<f64> = (0..100).map(|i| ((i * 13) % 29) as f64 * 0.1).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let big = o.eval(&p, &y, n);
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(&p, &y, n);
+        assert_eq!(big.coeffs, expect.coeffs);
+        let small = o.eval(&[0.1, 0.0, 2.0], &[1.0, 2.0, 3.0], 3.0);
+        let expect_small = reference.eval(&[0.1, 0.0, 2.0], &[1.0, 2.0, 3.0], 3.0);
+        assert_eq!(small.coeffs, expect_small.coeffs);
+    }
+
+    #[test]
+    fn split_groups_balances_and_covers() {
+        let groups: Vec<Vec<usize>> = vec![
+            (0..50).collect(),
+            (50..60).collect(),
+            (60..100).collect(),
+            (100..105).collect(),
+            (105..200).collect(),
+        ];
+        for s in 1..=7 {
+            let ranges = split_groups(&groups, s);
+            assert_eq!(ranges.len(), s);
+            let mut lo = 0;
+            for &(a, b) in &ranges {
+                assert_eq!(a, lo);
+                lo = b;
+            }
+            assert_eq!(lo, groups.len());
+        }
+    }
+}

@@ -23,6 +23,7 @@ fn usage() -> ! {
 USAGE:
   ranksvm train     (--data F | --synthetic K --m M) [--method tree|pair|rlevel|prsvm|tree-dedup|tree-fenwick]
                     [--lambda L] [--epsilon E] [--max-iter I] [--backend native|native-csc|xla]
+                    [--threads T]  (0 = all cores; results are identical for any T)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
   ranksvm eval      --model MODEL --data F
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
@@ -68,6 +69,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         line_search: args.flag("line-search"),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
         verbose: args.flag("verbose"),
+        n_threads: args.usize_or("threads", 0),
     };
     let test_size = args.usize_or("test-size", 0);
     let (train_ds, test_ds) = if test_size > 0 {
@@ -83,6 +85,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("n".to_string(), train_ds.dim().into()),
         ("s".to_string(), train_ds.sparsity().into()),
         ("levels".to_string(), train_ds.n_levels().into()),
+        ("threads".to_string(), cfg.resolved_threads().into()),
     ];
     if let Json::Obj(base) = out.to_json() {
         record.extend(base);
@@ -163,8 +166,8 @@ fn cmd_perf(args: &Args) -> Result<()> {
         ds.x.matvec_t(&ds.y, &mut w);
         let nrm = ranksvm::linalg::ops::norm(&w).max(1e-12);
         ranksvm::linalg::ops::scal(1.0 / nrm, &mut w);
-        let use_fenwick = args.str_or("method", "tree") == "tree-fenwick";
-        if use_fenwick {
+        let method = args.str_or("method", "tree");
+        if method == "tree-fenwick" {
             // Fenwick comparison path: report eval total only.
             let mut oracle = ranksvm::losses::tree::fenwick_oracle(&ds.y);
             let mut p = vec![0.0; ds.len()];
@@ -175,6 +178,24 @@ fn cmd_perf(args: &Args) -> Result<()> {
                 std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
             }
             println!("{:>9} fenwick eval total: {:.2}ms", m, 1e3 * t.elapsed().as_secs_f64() / reps as f64);
+            continue;
+        }
+        if method == "sharded" {
+            // Sharded-oracle path: eval total at the requested thread count.
+            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0));
+            let mut oracle = ranksvm::losses::ShardedTreeOracle::new(threads, None, &ds.y);
+            let mut p = vec![0.0; ds.len()];
+            ds.x.matvec(&w, &mut p);
+            std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
+            }
+            println!(
+                "{:>9} sharded({threads}) eval total: {:.2}ms",
+                m,
+                1e3 * t.elapsed().as_secs_f64() / reps as f64
+            );
             continue;
         }
         let mut oracle = TreeOracle::new();

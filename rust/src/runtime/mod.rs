@@ -2,254 +2,25 @@
 //!
 //! `python/compile/aot.py` lowers the JAX/Pallas compute graphs (L1/L2)
 //! once, at build time, to **HLO text** under `artifacts/` together with
-//! a line-based `manifest.txt`. This module loads those artifacts with
-//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU client
-//! and executes them from the training hot path — Python is never
-//! invoked at runtime. (Text, not serialized protos: jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; see
+//! a line-based `manifest.txt`. The [`backend`] module loads those
+//! artifacts with `HloModuleProto::from_text_file`, compiles them on the
+//! PJRT CPU client and executes them from the training hot path — Python
+//! is never invoked at runtime. (Text, not serialized protos: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; see
 //! /opt/xla-example/README.md.)
 //!
-//! Artifacts come in fixed shapes (AOT requires static shapes), so the
-//! [`XlaBackend`] pads each dataset to row tiles of `TM` and features to
-//! the nearest available `N`, then accumulates per-tile results.
-//! Arithmetic is f32 on the XLA side (MXU-native on real TPUs); the
-//! trainer's f64 vectors are converted at the boundary.
+//! The PJRT execution path depends on the external `xla` bindings crate,
+//! which the offline registry does not carry, so it is gated behind the
+//! `xla` cargo feature. The artifact [`Manifest`] parser is plain Rust
+//! and stays available unconditionally (the AOT pipeline and its tests
+//! don't need a device runtime).
 
 mod manifest;
 
 pub use manifest::{Manifest, ManifestEntry};
 
-use crate::compute::ComputeBackend;
-use crate::linalg::CsrMatrix;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+mod backend;
 
-/// Shared PJRT client + compiled-executable cache over an artifact
-/// directory.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaRuntime {
-    /// Open the artifact directory (must contain `manifest.txt`).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.txt"))
-            .with_context(|| format!("loading manifest from {} — run `make artifacts`", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(XlaRuntime { client, dir, manifest, cache: HashMap::new() })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) the executable for a manifest entry.
-    pub fn executable(&mut self, entry: &ManifestEntry) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&entry.file) {
-            let path = self.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-            self.cache.insert(entry.file.clone(), exe);
-        }
-        Ok(self.cache.get(&entry.file).unwrap())
-    }
-
-    /// Execute a single-output artifact on f32 input literals; returns the
-    /// flat f32 output (tuple-unwrapped).
-    pub fn run1<L: std::borrow::Borrow<xla::Literal>>(
-        &mut self,
-        entry: &ManifestEntry,
-        inputs: &[L],
-    ) -> Result<Vec<f32>> {
-        let exe = self.executable(entry)?;
-        let result = exe
-            .execute(inputs)
-            .map_err(|e| anyhow!("executing {}: {e:?}", entry.file))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Execute a two-output artifact; returns both flat f32 outputs.
-    pub fn run2<L: std::borrow::Borrow<xla::Literal>>(
-        &mut self,
-        entry: &ManifestEntry,
-        inputs: &[L],
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let exe = self.executable(entry)?;
-        let result = exe
-            .execute(inputs)
-            .map_err(|e| anyhow!("executing {}: {e:?}", entry.file))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let (a, b) = result.to_tuple2().map_err(|e| anyhow!("untuple2: {e:?}"))?;
-        Ok((
-            a.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
-            b.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
-        ))
-    }
-}
-
-/// f32 literal of the given shape from a slice.
-pub fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    assert_eq!(data.len(), rows * cols);
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
-
-pub fn literal_1d(data: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-/// Dense, tile-padded copy of a dataset's feature matrix, resident as
-/// per-tile literals so the per-iteration hot path uploads only the
-/// small vectors.
-struct TiledData {
-    tiles: Vec<xla::Literal>, // each (tm × n_pad) f32
-    m: usize,
-    tm: usize,
-    n_pad: usize,
-}
-
-/// [`ComputeBackend`] that runs the score matvec and gradient assembly
-/// through the AOT XLA executables. Dense-data oriented: each row tile is
-/// materialized densely (sparse corpora should use the native backend —
-/// DESIGN.md §2).
-pub struct XlaBackend {
-    rt: XlaRuntime,
-    scores_entry: Option<ManifestEntry>,
-    grad_entry: Option<ManifestEntry>,
-    data: Option<TiledData>,
-}
-
-impl XlaBackend {
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let rt = XlaRuntime::open(dir)?;
-        Ok(XlaBackend { rt, scores_entry: None, grad_entry: None, data: None })
-    }
-
-    /// Runtime handle (for tests / the pair-count kernel round trip).
-    pub fn runtime(&mut self) -> &mut XlaRuntime {
-        &mut self.rt
-    }
-
-    fn tile_data(&mut self, x: &CsrMatrix) -> Result<()> {
-        let n = x.cols();
-        // Smallest artifact feature width that fits this dataset; rows
-        // pad to the artifact's tile height.
-        let entry = self
-            .rt
-            .manifest()
-            .best_for("scores", n)
-            .ok_or_else(|| anyhow!("no scores artifact with n ≥ {n}; regenerate artifacts"))?
-            .clone();
-        let grad_entry = self
-            .rt
-            .manifest()
-            .best_for("grad", n)
-            .ok_or_else(|| anyhow!("no grad artifact with n ≥ {n}"))?
-            .clone();
-        anyhow::ensure!(
-            grad_entry.m == entry.m && grad_entry.n == entry.n,
-            "scores/grad artifact shapes diverge"
-        );
-        let (tm, n_pad) = (entry.m, entry.n);
-        let m = x.rows();
-        let n_tiles = m.div_ceil(tm).max(1);
-        let mut tiles = Vec::with_capacity(n_tiles);
-        let mut buf = vec![0.0f32; tm * n_pad];
-        for t in 0..n_tiles {
-            buf.iter_mut().for_each(|v| *v = 0.0);
-            let lo = t * tm;
-            let hi = ((t + 1) * tm).min(m);
-            for i in lo..hi {
-                let (idx, val) = x.row(i);
-                let row_off = (i - lo) * n_pad;
-                for (&j, &v) in idx.iter().zip(val) {
-                    buf[row_off + j as usize] = v as f32;
-                }
-            }
-            tiles.push(literal_2d(&buf, tm, n_pad)?);
-        }
-        self.data = Some(TiledData { tiles, m, tm, n_pad });
-        self.scores_entry = Some(entry);
-        self.grad_entry = Some(grad_entry);
-        Ok(())
-    }
-}
-
-impl ComputeBackend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn prepare(&mut self, x: &CsrMatrix) {
-        self.tile_data(x).expect("XLA backend prepare failed");
-    }
-
-    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
-        if self.data.is_none() {
-            self.prepare(x);
-        }
-        let data = self.data.as_ref().unwrap();
-        assert_eq!(data.m, x.rows(), "backend prepared for a different dataset");
-        let entry = self.scores_entry.as_ref().unwrap();
-        let mut w32 = vec![0.0f32; data.n_pad];
-        for (dst, &src) in w32.iter_mut().zip(w) {
-            *dst = src as f32;
-        }
-        let w_lit = literal_1d(&w32);
-        let mut out = Vec::with_capacity(data.m);
-        for (t, tile) in data.tiles.iter().enumerate() {
-            // Borrow-based execute: the resident tile literal is not cloned.
-            let args: Vec<&xla::Literal> = vec![tile, &w_lit];
-            let p = self.rt.run1(entry, &args).expect("scores artifact execution failed");
-            let lo = t * data.tm;
-            let hi = ((t + 1) * data.tm).min(data.m);
-            out.extend(p[..hi - lo].iter().map(|&v| v as f64));
-        }
-        out
-    }
-
-    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
-        if self.data.is_none() {
-            self.prepare(x);
-        }
-        let data = self.data.as_ref().unwrap();
-        assert_eq!(data.m, x.rows());
-        let entry = self.grad_entry.as_ref().unwrap();
-        let (tm, n_pad, m) = (data.tm, data.n_pad, data.m);
-        let mut acc = vec![0.0f64; n_pad];
-        let mut c32 = vec![0.0f32; tm];
-        for (t, tile) in data.tiles.iter().enumerate() {
-            c32.iter_mut().for_each(|v| *v = 0.0);
-            let lo = t * tm;
-            let hi = ((t + 1) * tm).min(m);
-            for (k, &c) in coeffs[lo..hi].iter().enumerate() {
-                c32[k] = c as f32;
-            }
-            let c_lit = literal_1d(&c32);
-            let args: Vec<&xla::Literal> = vec![tile, &c_lit];
-            let a = self.rt.run1(entry, &args).expect("grad artifact execution failed");
-            for (dst, &src) in acc.iter_mut().zip(&a) {
-                *dst += src as f64;
-            }
-        }
-        acc.truncate(x.cols());
-        acc
-    }
-}
+#[cfg(feature = "xla")]
+pub use backend::{literal_1d, literal_2d, XlaBackend, XlaRuntime};

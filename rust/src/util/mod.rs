@@ -10,6 +10,18 @@ pub mod json;
 pub mod rng;
 pub mod timer;
 
+/// Resolve a worker-thread request: `0` means "all cores" (the host's
+/// available parallelism, 1 if that probe fails), anything else is taken
+/// literally. The single source of truth for the `--threads`/`n_threads`
+/// convention across the trainer, the CLI perf probe, and the benches.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 /// Peak resident set size (VmHWM) of the current process in KiB, read from
 /// /proc/self/status. Used by the Fig-3 memory benchmark. Returns None on
 /// non-Linux or if the field is missing.

@@ -1,0 +1,233 @@
+//! Differential test suite: every fast oracle in the crate is checked
+//! against the exact `O(m²)` explicit-pair reference on seeded random
+//! datasets spanning the tie regimes of the paper (arbitrary real-valued
+//! utilities, few-level ordinal, bipartite, fully tied) and score
+//! distributions that land exactly on the hinge margin. This is the
+//! lock-down the sharded engine is developed under: any decomposition
+//! bug shows up as a count mismatch here before it can reach training.
+
+use ranksvm::compute::{ComputeBackend, NativeBackend, ParallelBackend};
+use ranksvm::losses::{
+    count_comparable_pairs, PairOracle, QueryGrouped, RLevelOracle, RankingOracle,
+    ShardedTreeOracle, SquaredPairOracle, SquaredTreeOracle, TreeOracle,
+};
+use ranksvm::util::rng::Rng;
+
+/// Labels across the paper's tie regimes.
+fn labels(rng: &mut Rng, m: usize, regime: usize) -> Vec<f64> {
+    match regime % 4 {
+        0 => (0..m).map(|_| rng.normal() * 3.0).collect(), // r ≈ m real-valued
+        1 => (0..m).map(|_| rng.below(5) as f64).collect(), // 5-level ordinal
+        2 => (0..m).map(|_| rng.below(2) as f64).collect(), // bipartite
+        _ => vec![7.5; m],                                 // all tied (N = 0)
+    }
+}
+
+/// Scores including exact-margin and exact-tie collisions.
+fn scores(rng: &mut Rng, m: usize, regime: usize) -> Vec<f64> {
+    match regime % 3 {
+        0 => (0..m).map(|_| rng.normal() * 2.0).collect(),
+        // Integer-valued: pairs land exactly on the p_i = p_j − 1 margin.
+        1 => (0..m).map(|_| rng.below(6) as f64 - 2.0).collect(),
+        _ => (0..m).map(|_| (rng.below(40) as f64) / 8.0).collect(),
+    }
+}
+
+#[test]
+fn tree_oracle_matches_pair_oracle() {
+    let mut rng = Rng::new(0xD1FF_0001);
+    for trial in 0..80 {
+        let m = 1 + rng.below(220);
+        let y = labels(&mut rng, m, trial);
+        let p = scores(&mut rng, m, trial / 4);
+        let n = count_comparable_pairs(&y) as f64;
+        let mut tree = TreeOracle::new();
+        let mut pair = PairOracle::new();
+        let a = tree.eval(&p, &y, n);
+        let b = pair.eval(&p, &y, n);
+        // Integer counts under a shared hinge predicate: the coefficients
+        // are exactly equal, the loss to well under the 1e-10 contract.
+        assert_eq!(a.coeffs, b.coeffs, "trial {trial}");
+        assert!(
+            (a.loss - b.loss).abs() <= 1e-10 * (1.0 + b.loss.abs()),
+            "trial {trial}: {} vs {}",
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn rlevel_oracle_matches_pair_oracle() {
+    let mut rng = Rng::new(0xD1FF_0002);
+    for trial in 0..80 {
+        let m = 1 + rng.below(180);
+        let y = labels(&mut rng, m, trial);
+        let p = scores(&mut rng, m, trial / 4);
+        let n = count_comparable_pairs(&y) as f64;
+        let mut rl = RLevelOracle::new();
+        let mut pair = PairOracle::new();
+        let a = rl.eval(&p, &y, n);
+        let b = pair.eval(&p, &y, n);
+        assert_eq!(a.coeffs, b.coeffs, "trial {trial}");
+        assert!((a.loss - b.loss).abs() <= 1e-10 * (1.0 + b.loss.abs()), "trial {trial}");
+    }
+}
+
+#[test]
+fn squared_tree_oracle_matches_squared_pair_oracle() {
+    let mut rng = Rng::new(0xD1FF_0003);
+    for trial in 0..60 {
+        let m = 1 + rng.below(150);
+        let y = labels(&mut rng, m, trial);
+        let p = scores(&mut rng, m, trial / 4);
+        let n = count_comparable_pairs(&y) as f64;
+        let mut tree = SquaredTreeOracle::new();
+        let mut pair = SquaredPairOracle::new(&y);
+        let a = tree.eval_full(&p, &y, n);
+        let b = pair.eval_full(&p, n);
+        // The two oracles sum O(m)-term aggregates in different orders;
+        // 1e-10 per accumulated unit is the agreement contract.
+        let tol = 1e-10 * (1.0 + m as f64 + b.loss.abs());
+        assert!(
+            (a.loss - b.loss).abs() <= tol,
+            "trial {trial}: loss {} vs {}",
+            a.loss,
+            b.loss
+        );
+        for (i, (x, z)) in a.coeffs.iter().zip(&b.coeffs).enumerate() {
+            assert!((x - z).abs() <= tol, "trial {trial}, coeff {i}: {x} vs {z}");
+        }
+    }
+}
+
+#[test]
+fn sharded_oracle_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xD1FF_0004);
+    for trial in 0..50 {
+        let m = 1 + rng.below(300);
+        let y = labels(&mut rng, m, trial);
+        let p = scores(&mut rng, m, trial / 4);
+        let n = count_comparable_pairs(&y) as f64;
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(&p, &y, n);
+        for threads in [1usize, 2, 8] {
+            let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+            let got = sharded.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} threads");
+            assert_eq!(
+                got.loss.to_bits(),
+                expect.loss.to_bits(),
+                "trial {trial}, {threads} threads"
+            );
+            // Repeated evaluation on reused worker state stays identical.
+            let again = sharded.eval(&p, &y, n);
+            assert_eq!(again.coeffs, expect.coeffs);
+            assert_eq!(again.loss.to_bits(), expect.loss.to_bits());
+        }
+    }
+}
+
+#[test]
+fn sharded_grouped_respects_query_boundaries_and_matches_serial() {
+    let mut rng = Rng::new(0xD1FF_0005);
+    for trial in 0..40 {
+        let m = 2 + rng.below(240);
+        let n_queries = 1 + rng.below(15);
+        // Interleaved, non-contiguous qids.
+        let qid: Vec<u64> = (0..m).map(|_| rng.below(n_queries) as u64 * 13 + 5).collect();
+        let y = labels(&mut rng, m, trial);
+        let p = scores(&mut rng, m, trial / 4);
+        let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        let expect = serial.eval(&p, &y, serial.total_pairs());
+        for threads in [1usize, 2, 8] {
+            let mut sharded = ShardedTreeOracle::new(threads, Some(&qid), &y);
+            // Whole groups per shard: contiguous, disjoint, covering.
+            let ranges = sharded.group_ranges().unwrap();
+            let mut lo = 0;
+            for &(a, b) in ranges {
+                assert_eq!(a, lo, "trial {trial}");
+                lo = b;
+            }
+            assert_eq!(lo, sharded.n_groups().unwrap(), "trial {trial}");
+            let got = sharded.eval(&p, &y, 0.0);
+            assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} threads");
+            assert_eq!(
+                got.loss.to_bits(),
+                expect.loss.to_bits(),
+                "trial {trial}, {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_backend_grad_matches_native_and_thread_invariant() {
+    let mut rng = Rng::new(0xD1FF_0006);
+    for trial in 0..15 {
+        let rows = 1 + rng.below(400);
+        let cols = 1 + rng.below(60);
+        let mut triplets = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.bool(0.1) {
+                    triplets.push((i, j, rng.normal()));
+                }
+            }
+        }
+        let x = ranksvm::linalg::CsrMatrix::from_triplets(rows, cols, triplets);
+        let w: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let coeffs: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+
+        let mut serial = NativeBackend::new();
+        serial.prepare(&x);
+        let p_ref = serial.scores(&x, &w);
+        let g_ref = serial.grad(&x, &coeffs);
+
+        let mut first: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 8] {
+            let mut par = ParallelBackend::new(threads);
+            par.prepare(&x);
+            assert_eq!(par.scores(&x, &w), p_ref, "trial {trial}, {threads} threads");
+            let g = par.grad(&x, &coeffs);
+            for (a, b) in g.iter().zip(&g_ref) {
+                assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()), "trial {trial}");
+            }
+            match &first {
+                None => first = Some(g),
+                Some(f) => assert_eq!(&g, f, "trial {trial}, {threads} threads"),
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_oracle_handles_adversarial_score_distributions() {
+    // Distributions that stress the window/ownership logic: constant
+    // scores (every window = everything), one outlier far away (empty
+    // cross-chunk windows), and a monotone staircase exactly 1.0 apart
+    // (boundary-exact margins).
+    let cases: Vec<Vec<f64>> = vec![
+        vec![0.0; 64],
+        {
+            let mut v = vec![0.0; 64];
+            v[0] = 1e9;
+            v
+        },
+        (0..64).map(|i| i as f64).collect(),
+        (0..64).map(|i| (i as f64) * 0.5).collect(),
+    ];
+    let mut rng = Rng::new(0xD1FF_0007);
+    for (ci, p) in cases.iter().enumerate() {
+        let y: Vec<f64> = (0..p.len()).map(|_| rng.below(4) as f64).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(p, &y, n);
+        for threads in [2usize, 7] {
+            let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+            let got = sharded.eval(p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "case {ci}, {threads} threads");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "case {ci}");
+        }
+    }
+}

@@ -6,7 +6,7 @@ use ranksvm::losses::{
     count_comparable_pairs, PairOracle, RLevelOracle, RankingOracle, SquaredPairOracle, TreeOracle,
 };
 use ranksvm::metrics;
-use ranksvm::rbtree::{FenwickCounter, OsTree, RankCounter};
+use ranksvm::rbtree::{FenwickCounter, OsTree, RankCounter, SumTree};
 use ranksvm::util::rng::Rng;
 
 /// Run `f` over `iters` seeded cases; on panic, report the failing seed.
@@ -70,6 +70,150 @@ fn prop_counters_agree() {
             assert_eq!(l, RankCounter::count_larger(&dedup, q));
             assert_eq!(l, RankCounter::count_larger(&fen, q));
         }
+    });
+}
+
+/// Property: `Count-Smaller` / `Count-Larger` match naive O(m²)-style
+/// counting over the raw insert sequence, for both OsTree variants and
+/// the Fenwick counter, under duplicate-heavy and all-distinct regimes,
+/// querying both stored keys and keys absent from the tree.
+#[test]
+fn prop_rank_counts_match_naive_counting() {
+    for_cases(60, |rng| {
+        let duplicate_heavy = rng.bool(0.5);
+        let n_keys = 1 + rng.below(40);
+        let universe: Vec<f64> = if duplicate_heavy {
+            (0..n_keys).map(|i| (i as f64) * 0.25 - 2.0).collect()
+        } else {
+            (0..n_keys).map(|_| rng.normal() * 10.0).collect()
+        };
+        let mut plain = OsTree::new();
+        let mut dedup = OsTree::new_dedup();
+        let mut fen = FenwickCounter::new(&universe);
+        let mut inserted: Vec<f64> = Vec::new();
+        let ops = 1 + rng.below(400);
+        for _ in 0..ops {
+            let k = universe[rng.below(n_keys)];
+            plain.insert(k);
+            dedup.insert(k);
+            fen.insert(k);
+            inserted.push(k);
+        }
+        plain.check_invariants();
+        dedup.check_invariants();
+        // Queries: every universe key (tie behaviour) plus off-universe
+        // probes for the trees (Fenwick requires universe keys).
+        for &q in &universe {
+            let naive_s = inserted.iter().filter(|&&x| x < q).count() as u64;
+            let naive_l = inserted.iter().filter(|&&x| x > q).count() as u64;
+            assert_eq!(plain.count_smaller(q), naive_s, "plain smaller({q})");
+            assert_eq!(plain.count_larger(q), naive_l, "plain larger({q})");
+            assert_eq!(dedup.count_smaller(q), naive_s, "dedup smaller({q})");
+            assert_eq!(dedup.count_larger(q), naive_l, "dedup larger({q})");
+            assert_eq!(fen.count_smaller(q), naive_s, "fenwick smaller({q})");
+            assert_eq!(fen.count_larger(q), naive_l, "fenwick larger({q})");
+        }
+        for _ in 0..20 {
+            let q = rng.range(-15.0, 15.0);
+            let naive_s = inserted.iter().filter(|&&x| x < q).count() as u64;
+            let naive_l = inserted.iter().filter(|&&x| x > q).count() as u64;
+            assert_eq!(plain.count_smaller(q), naive_s);
+            assert_eq!(plain.count_larger(q), naive_l);
+            assert_eq!(dedup.count_smaller(q), naive_s);
+            assert_eq!(dedup.count_larger(q), naive_l);
+        }
+    });
+}
+
+/// Property: the Fenwick counter's internal prefix sums are consistent —
+/// for any universe key, smaller + equal + larger partitions the
+/// multiset, and counts are monotone along the sorted universe.
+#[test]
+fn prop_fenwick_prefix_sums_partition() {
+    for_cases(40, |rng| {
+        let n_keys = 1 + rng.below(30);
+        let universe: Vec<f64> = (0..n_keys).map(|i| i as f64).collect();
+        let mut fen = FenwickCounter::new(&universe);
+        let mut inserted: Vec<f64> = Vec::new();
+        for _ in 0..rng.below(300) {
+            let k = universe[rng.below(n_keys)];
+            fen.insert(k);
+            inserted.push(k);
+        }
+        let mut prev_prefix = 0u64;
+        for &q in &universe {
+            let eq = inserted.iter().filter(|&&x| x == q).count() as u64;
+            assert_eq!(fen.count_smaller(q) + eq + fen.count_larger(q), fen.len());
+            // count_smaller along the sorted universe is a nondecreasing
+            // prefix-sum sequence.
+            assert!(fen.count_smaller(q) >= prev_prefix, "prefix sums not monotone");
+            prev_prefix = fen.count_smaller(q) + eq;
+        }
+    });
+}
+
+/// Property: SumTree aggregates (count, Σv, Σv²) over strict key ranges
+/// match the naive sweep over the insert sequence, including duplicate
+/// keys carrying different auxiliary values.
+#[test]
+fn prop_sumtree_aggregates_match_naive() {
+    for_cases(40, |rng| {
+        let n_keys = 1 + rng.below(20); // small universe → many duplicates
+        let mut tree = SumTree::new();
+        let mut inserted: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..1 + rng.below(250) {
+            let k = rng.below(n_keys) as f64 * 0.5;
+            let v = rng.normal();
+            tree.insert(k, v);
+            inserted.push((k, v));
+        }
+        tree.check_invariants();
+        for q in 0..n_keys {
+            let q = q as f64 * 0.5;
+            for larger in [false, true] {
+                let agg = if larger { tree.agg_larger(q) } else { tree.agg_smaller(q) };
+                let matching: Vec<f64> = inserted
+                    .iter()
+                    .filter(|(k, _)| if larger { *k > q } else { *k < q })
+                    .map(|(_, v)| *v)
+                    .collect();
+                assert_eq!(agg.count, matching.len() as u64, "count({q}, larger={larger})");
+                let sum: f64 = matching.iter().sum();
+                let sum_sq: f64 = matching.iter().map(|v| v * v).sum();
+                assert!(
+                    (agg.sum - sum).abs() < 1e-9 * (1.0 + sum.abs()),
+                    "sum({q}): {} vs {sum}",
+                    agg.sum
+                );
+                assert!(
+                    (agg.sum_sq - sum_sq).abs() < 1e-9 * (1.0 + sum_sq.abs()),
+                    "sum_sq({q}): {} vs {sum_sq}",
+                    agg.sum_sq
+                );
+            }
+        }
+    });
+}
+
+/// Property: the sharded oracle equals the serial tree oracle bit-for-bit
+/// on arbitrary (p, y) for any shard count — the engine's core contract,
+/// hammered here with the same adversarial generators as the rest of the
+/// property suite.
+#[test]
+fn prop_sharded_equals_tree_bitwise() {
+    for_cases(50, |rng| {
+        let m = 1 + rng.below(160);
+        let levels = 1 + rng.below(m);
+        let y: Vec<f64> = (0..m).map(|_| rng.below(levels) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| (rng.below(40) as f64) / 7.0 - 3.0).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut tree = TreeOracle::new();
+        let expect = tree.eval(&p, &y, n);
+        let threads = 1 + rng.below(9);
+        let mut sharded = ranksvm::losses::ShardedTreeOracle::new(threads, None, &y);
+        let got = sharded.eval(&p, &y, n);
+        assert_eq!(got.coeffs, expect.coeffs, "{threads} shards");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits());
     });
 }
 

@@ -1,0 +1,220 @@
+//! Minimal, dependency-free shim of the `anyhow` API surface this
+//! workspace uses. The offline registry has no crates.io access, so the
+//! real crate cannot be pulled; this path dependency provides the same
+//! names with the same semantics for the subset we need:
+//!
+//! - [`Error`]: an opaque error carrying a context chain (outermost
+//!   first). Unlike the real crate it stores rendered strings rather
+//!   than live trait objects — nothing here ever downcasts.
+//! - [`Result<T>`]: alias defaulting the error type.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`]: ad-hoc error construction.
+//!
+//! `Error` deliberately does **not** implement `std::error::Error`, so
+//! the blanket `From<E: std::error::Error>` conversion (what makes `?`
+//! work on `io::Result` etc. inside `anyhow::Result` functions) does not
+//! collide with `impl From<T> for T` — the same trick the real crate
+//! uses.
+
+use std::fmt;
+
+/// Opaque error value: a chain of rendered messages, outermost context
+/// first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (becomes the new outermost entry).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// Renders the whole chain joined with `": "` (outermost first).
+    /// Real anyhow prints only the outermost message here; the shim joins
+    /// so that re-contexting an `Error` through the string-flattening
+    /// [`Context`] impl cannot silently drop root causes.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    /// Mirrors the real crate's report format so `fn main() -> Result<()>`
+    /// prints the full context chain on failure.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for cause in rest {
+                        write!(f, "\n    {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { chain: vec![context.to_string(), e.to_string()] })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { chain: vec![f().to_string(), e.to_string()] })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let err = io_fail().unwrap_err();
+        let chain: Vec<&str> = err.chain().collect();
+        assert_eq!(chain[0], "reading config");
+        assert!(chain.len() >= 2);
+        assert!(format!("{err:?}").contains("Caused by:"));
+        assert!(err.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn recontexting_an_error_keeps_root_causes() {
+        let err: Error = io_fail().context("loading model").unwrap_err();
+        let rendered = err.to_string();
+        assert!(rendered.starts_with("loading model: reading config"), "{rendered}");
+        // The io root cause survives the string flattening.
+        let prefix = "loading model: reading config";
+        assert!(rendered.len() > prefix.len(), "{rendered}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let err = v.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            if !flag {
+                bail!("unreachable");
+            }
+            Err(anyhow!("fell through with {}", 42))
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "fell through with 42");
+    }
+
+    #[test]
+    fn double_question_mark_pattern() {
+        // Option<io::Result<T>>.context(..)?? — the model-file read idiom.
+        fn g() -> Result<String> {
+            let lines: Option<std::io::Result<String>> =
+                Some(Ok("header".to_string()));
+            let header = lines.context("empty file")??;
+            Ok(header)
+        }
+        assert_eq!(g().unwrap(), "header");
+    }
+}
