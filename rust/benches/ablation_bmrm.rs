@@ -25,8 +25,12 @@ fn main() {
     header("Ablation B1: line search on/off (cadata-like m=8000, λ=0.1)");
     println!("{:>12} {:>8} {:>12} {:>14}", "line-search", "iters", "objective", "time");
     for ls in [false, true] {
-        let mut oracle =
-            DatasetOracle::new(&ds, Box::new(NativeBackend::new()), Box::new(TreeOracle::new()), n_pairs);
+        let mut oracle = DatasetOracle::new(
+            &ds,
+            Box::new(NativeBackend::new()),
+            Box::new(TreeOracle::new()),
+            n_pairs,
+        );
         let cfg = BmrmConfig { lambda, epsilon: 1e-3, line_search: ls, ..Default::default() };
         let t = std::time::Instant::now();
         let res = optimize(&mut oracle, &cfg, vec![0.0; ds.dim()]);
@@ -53,13 +57,22 @@ fn main() {
     header("Ablation B2: inner QP tolerance");
     println!("{:>10} {:>8} {:>12} {:>14}", "qp_tol", "iters", "objective", "time");
     for qp_tol in [1e-3, 1e-6, 1e-9, 1e-12] {
-        let mut oracle =
-            DatasetOracle::new(&ds, Box::new(NativeBackend::new()), Box::new(TreeOracle::new()), n_pairs);
+        let mut oracle = DatasetOracle::new(
+            &ds,
+            Box::new(NativeBackend::new()),
+            Box::new(TreeOracle::new()),
+            n_pairs,
+        );
         let cfg = BmrmConfig { lambda, epsilon: 1e-3, qp_tol, ..Default::default() };
         let t = std::time::Instant::now();
         let res = optimize(&mut oracle, &cfg, vec![0.0; ds.dim()]);
         let secs = t.elapsed().as_secs_f64();
-        println!("{qp_tol:>10.0e} {:>8} {:>12.6} {:>14}", res.iterations, res.objective, fmt_secs(secs));
+        println!(
+            "{qp_tol:>10.0e} {:>8} {:>12.6} {:>14}",
+            res.iterations,
+            res.objective,
+            fmt_secs(secs)
+        );
         record(
             "ablation_bmrm",
             Json::obj(vec![
@@ -74,8 +87,12 @@ fn main() {
     header("Ablation B3: ε sweep (iterations ≈ O(1/ελ), Smola et al. 2007)");
     println!("{:>10} {:>8} {:>12}", "epsilon", "iters", "gap");
     for epsilon in [1e-1, 1e-2, 1e-3, 1e-4] {
-        let mut oracle =
-            DatasetOracle::new(&ds, Box::new(NativeBackend::new()), Box::new(TreeOracle::new()), n_pairs);
+        let mut oracle = DatasetOracle::new(
+            &ds,
+            Box::new(NativeBackend::new()),
+            Box::new(TreeOracle::new()),
+            n_pairs,
+        );
         let cfg = BmrmConfig { lambda, epsilon, ..Default::default() };
         let res = optimize(&mut oracle, &cfg, vec![0.0; ds.dim()]);
         println!("{epsilon:>10.0e} {:>8} {:>12.2e}", res.iterations, res.gap);

@@ -44,7 +44,8 @@ fn main() {
         } else {
             synthetic::ordinal(m, levels, 300)
         };
-        let p: Vec<f64> = ds.y.iter().enumerate().map(|(i, v)| v * 0.3 + (i % 17) as f64 * 0.01).collect();
+        let p: Vec<f64> =
+            ds.y.iter().enumerate().map(|(i, v)| v * 0.3 + (i % 17) as f64 * 0.01).collect();
         let n = count_comparable_pairs(&ds.y) as f64;
         let reps = 3;
         let t_plain = time_oracle(&mut TreeOracle::new(), &p, &ds.y, n, reps);

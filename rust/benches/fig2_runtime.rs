@@ -38,7 +38,8 @@ fn panel(
         let ds = make(m);
         print!("{m:>9}");
         for &method in &methods {
-            let cap = caps.iter().find(|(mm, _)| *mm == method).map(|(_, c)| *c).unwrap_or(usize::MAX);
+            let cap =
+                caps.iter().find(|(mm, _)| *mm == method).map(|(_, c)| *c).unwrap_or(usize::MAX);
             if m > cap {
                 print!(" {:>14}", "(skipped)");
                 continue;

@@ -63,12 +63,22 @@ fn panel(
 fn main() {
     let full = full_scale();
     let cadata_sizes = vec![1000, 2000, 4000, 8000, 16000];
-    let reuters_sizes: Vec<usize> =
-        if full { vec![1000, 2000, 4000, 8000, 16000, 32000, 64000] } else { vec![1000, 2000, 4000, 8000] };
+    let reuters_sizes: Vec<usize> = if full {
+        vec![1000, 2000, 4000, 8000, 16000, 32000, 64000]
+    } else {
+        vec![1000, 2000, 4000, 8000]
+    };
     let (cadata_test, reuters_test) = if full { (4000, 20000) } else { (4000, 5000) };
     let prsvm_cap = if full { 8000 } else { 4000 };
 
-    panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, cadata_test, 1e-1, prsvm_cap);
+    panel(
+        "cadata",
+        &|m| synthetic::cadata_like(m, 100),
+        &cadata_sizes,
+        cadata_test,
+        1e-1,
+        prsvm_cap,
+    );
     panel(
         "reuters",
         &|m| synthetic::reuters_like(m, 200),

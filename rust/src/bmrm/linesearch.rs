@@ -42,7 +42,7 @@ pub fn golden_section(mut f: impl FnMut(f64) -> f64, lo: f64, hi: f64, iters: us
     let candidates = [(mid, f(mid)), (lo, f(lo)), (hi, f(hi))];
     candidates
         .iter()
-        .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+        .min_by(|x, y| x.1.total_cmp(&y.1))
         .unwrap()
         .0
 }

@@ -131,7 +131,11 @@ impl BundleQp {
                 // κ = (G_uu − 2G_uv + G_vv)/(2λ) ≥ 0; optimum δ* = gap/κ,
                 // clipped to δ ≤ α_v.
                 let kappa = (self.gram[u][u] - 2.0 * self.gram[u][v] + self.gram[v][v]) * inv2l;
-                let delta = if kappa <= 1e-300 { self.alpha[v] } else { (gap / kappa).min(self.alpha[v]) };
+                let delta = if kappa <= 1e-300 {
+                    self.alpha[v]
+                } else {
+                    (gap / kappa).min(self.alpha[v])
+                };
                 if delta <= 0.0 {
                     break;
                 }

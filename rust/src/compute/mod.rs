@@ -9,6 +9,8 @@
 //! this path: the XLA backend loads pre-built `artifacts/*.hlo.txt`.
 
 use crate::linalg::{CscMatrix, CsrMatrix};
+use crate::runtime::pool::{Task, WorkerPool};
+use std::sync::Arc;
 
 /// Backend interface. `prepare` is called once per dataset so backends
 /// can build auxiliary structures (CSC copy, padded dense tiles, device
@@ -86,7 +88,7 @@ impl ComputeBackend for NativeBackend {
 /// one thread or sixteen execute the chunks.
 const GRAD_CHUNKS: usize = 16;
 
-/// Multi-threaded native kernels over `std::thread::scope` workers.
+/// Multi-threaded native kernels on a persistent [`WorkerPool`].
 ///
 /// - `scores`: rows are dealt to `n_threads` contiguous ranges; each
 ///   output score is a single row dot product, so the result is
@@ -97,20 +99,34 @@ const GRAD_CHUNKS: usize = 16;
 ///   combined by a fixed-topology pairwise tree reduction. Float sums
 ///   re-associate relative to the serial scatter, so the gradient can
 ///   differ from [`NativeBackend`] in the last bits — but never between
-///   runs or across thread counts.
+///   runs or across thread counts: the chunk *contents* and the
+///   reduction order are fixed, and the pool only decides which thread
+///   runs which chunk.
 pub struct ParallelBackend {
-    n_threads: usize,
+    pool: Arc<WorkerPool>,
     /// Per-chunk gradient partials, reused across iterations.
     grad_parts: Vec<Vec<f64>>,
 }
 
 impl ParallelBackend {
+    /// Build with a private pool. Prefer [`Self::with_pool`] inside the
+    /// trainer so the backend and the sharded oracle share one pool.
     pub fn new(n_threads: usize) -> Self {
-        ParallelBackend { n_threads: n_threads.max(1), grad_parts: Vec::new() }
+        Self::with_pool(Arc::new(WorkerPool::new(n_threads)))
+    }
+
+    /// Build on an existing persistent pool.
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        ParallelBackend { pool, grad_parts: Vec::new() }
     }
 
     pub fn n_threads(&self) -> usize {
-        self.n_threads
+        self.pool.n_threads()
+    }
+
+    /// The persistent pool this backend executes on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 }
 
@@ -123,12 +139,13 @@ impl ComputeBackend for ParallelBackend {
         assert_eq!(w.len(), x.cols());
         let m = x.rows();
         let mut out = vec![0.0; m];
-        let workers = self.n_threads.min(m.max(1));
+        let workers = self.n_threads().min(m.max(1));
         if workers <= 1 {
             x.matvec(w, &mut out);
             return out;
         }
-        std::thread::scope(|scope| {
+        let mut tasks: Vec<Task> = Vec::with_capacity(workers);
+        {
             let mut rest: &mut [f64] = &mut out;
             let mut lo = 0usize;
             for t in 0..workers {
@@ -137,15 +154,16 @@ impl ComputeBackend for ParallelBackend {
                 // be carried to the next iteration.
                 let (head, tail) = { rest }.split_at_mut(hi - lo);
                 let base = lo;
-                scope.spawn(move || {
+                tasks.push(Box::new(move || {
                     for (r, o) in head.iter_mut().enumerate() {
                         *o = x.row_dot(base + r, w);
                     }
-                });
+                }));
                 rest = tail;
                 lo = hi;
             }
-        });
+        }
+        self.pool.run(tasks);
         out
     }
 
@@ -159,7 +177,6 @@ impl ComputeBackend for ParallelBackend {
             part.clear();
             part.resize(n, 0.0);
         }
-        let workers = self.n_threads.min(chunks);
         let fill = |part: &mut Vec<f64>, c: usize| {
             let lo = m * c / chunks;
             let hi = m * (c + 1) / chunks;
@@ -173,28 +190,20 @@ impl ComputeBackend for ParallelBackend {
                 }
             }
         };
-        if workers <= 1 {
+        if self.n_threads() <= 1 {
             for (c, part) in self.grad_parts.iter_mut().enumerate() {
                 fill(part, c);
             }
         } else {
-            std::thread::scope(|scope| {
-                let mut rest: &mut [Vec<f64>] = &mut self.grad_parts;
-                let mut c_lo = 0usize;
-                for t in 0..workers {
-                    let c_hi = chunks * (t + 1) / workers;
-                    let (head, tail) = { rest }.split_at_mut(c_hi - c_lo);
-                    let base = c_lo;
-                    let fill = &fill;
-                    scope.spawn(move || {
-                        for (ci, part) in head.iter_mut().enumerate() {
-                            fill(part, base + ci);
-                        }
-                    });
-                    rest = tail;
-                    c_lo = c_hi;
-                }
-            });
+            // One task per fixed chunk; the pool's queue balances them
+            // across however many workers are free. Chunk contents are
+            // fixed, so scheduling cannot influence the result.
+            let fill = &fill;
+            let mut tasks: Vec<Task> = Vec::with_capacity(chunks);
+            for (c, part) in self.grad_parts.iter_mut().enumerate() {
+                tasks.push(Box::new(move || fill(part, c)));
+            }
+            self.pool.run(tasks);
         }
         // Fixed-topology pairwise tree reduction over the chunk partials.
         let mut stride = 1usize;

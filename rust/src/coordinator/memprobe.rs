@@ -12,7 +12,14 @@ use crate::util::json::Json;
 use anyhow::{Context, Result};
 
 /// Child-side entry: build the dataset, train, print `{peak_rss_kib, ...}`.
-pub fn run_probe(dataset: &str, m: usize, method: Method, lambda: f64, max_iter: usize, seed: u64) -> Result<()> {
+pub fn run_probe(
+    dataset: &str,
+    m: usize,
+    method: Method,
+    lambda: f64,
+    max_iter: usize,
+    seed: u64,
+) -> Result<()> {
     let ds = match dataset {
         "cadata" => synthetic::cadata_like(m, seed),
         "reuters" => synthetic::reuters_like(m, seed),
@@ -59,13 +66,22 @@ pub fn find_cli_bin() -> Result<std::path::PathBuf> {
         }
     }
     let fallback = std::path::Path::new("target/release/ranksvm");
-    anyhow::ensure!(fallback.is_file(), "ranksvm binary not found; build with `cargo build --release` or set RANKSVM_BIN");
+    anyhow::ensure!(
+        fallback.is_file(),
+        "ranksvm binary not found; build with `cargo build --release` or set RANKSVM_BIN"
+    );
     Ok(fallback.to_path_buf())
 }
 
 /// Parent-side helper: spawn the CLI binary as a probe child and
 /// return its peak RSS in KiB.
-pub fn spawn_probe(dataset: &str, m: usize, method: Method, lambda: f64, max_iter: usize) -> Result<u64> {
+pub fn spawn_probe(
+    dataset: &str,
+    m: usize,
+    method: Method,
+    lambda: f64,
+    max_iter: usize,
+) -> Result<u64> {
     let exe = find_cli_bin()?;
     let out = std::process::Command::new(exe)
         .args([

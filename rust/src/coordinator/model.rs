@@ -39,11 +39,13 @@ impl RankModel {
         out
     }
 
-    /// Rank a set of examples: indices sorted by descending score.
+    /// Rank a set of examples: indices sorted by descending score (ties
+    /// and non-finite scores ordered deterministically via `total_cmp`
+    /// then original index — a NaN score cannot panic the ranking).
     pub fn rank(&self, ds: &Dataset) -> Vec<usize> {
         let p = self.predict(ds);
         let mut idx: Vec<usize> = (0..p.len()).collect();
-        idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+        idx.sort_unstable_by(|&a, &b| p[b].total_cmp(&p[a]).then(a.cmp(&b)));
         idx
     }
 

@@ -41,7 +41,8 @@ pub fn kfold_indices(ds: &Dataset, folds: usize, seed: u64) -> Vec<Vec<usize>> {
                 q
             };
             rng.shuffle(&mut queries);
-            let mut fold_of: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            let mut fold_of: std::collections::HashMap<u64, usize> =
+                std::collections::HashMap::new();
             for (i, &q) in queries.iter().enumerate() {
                 fold_of.insert(q, i % folds);
             }
@@ -70,7 +71,10 @@ pub fn cross_validate(
             let test_rows = &fold_idx[f];
             let train_rows: Vec<usize> =
                 (0..folds).filter(|&g| g != f).flat_map(|g| fold_idx[g].iter().copied()).collect();
-            (ds.subset(&train_rows, &format!("cv{f}train")), ds.subset(test_rows, &format!("cv{f}test")))
+            (
+                ds.subset(&train_rows, &format!("cv{f}train")),
+                ds.subset(test_rows, &format!("cv{f}test")),
+            )
         })
         .collect();
     let mut out = Vec::with_capacity(lambdas.len());

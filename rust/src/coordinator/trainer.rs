@@ -12,8 +12,10 @@ use crate::losses::{
     RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
 };
 use crate::newton::{self, HessianOracle, NewtonConfig};
+use crate::runtime::WorkerPool;
 use crate::util::json::Json;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Outcome of a training run, with everything the benches report.
 #[derive(Clone, Debug)]
@@ -185,13 +187,13 @@ impl HessianOracle for SquaredDatasetOracle<'_> {
     }
 }
 
-/// Build the configured compute backend. The plain native kind runs the
-/// `O(ms)` linear algebra on the sharded [`ParallelBackend`]; its chunk
-/// plan and reduction topology are fixed, so results do not depend on
-/// the thread count.
-pub fn make_backend(cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
+/// Build the configured compute backend on the trainer's persistent
+/// worker pool. The plain native kind runs the `O(ms)` linear algebra on
+/// the sharded [`ParallelBackend`]; its chunk plan and reduction
+/// topology are fixed, so results do not depend on the thread count.
+pub fn make_backend(cfg: &TrainConfig, pool: &Arc<WorkerPool>) -> Result<Box<dyn ComputeBackend>> {
     Ok(match cfg.backend {
-        BackendKind::Native => Box::new(ParallelBackend::new(cfg.resolved_threads())),
+        BackendKind::Native => Box::new(ParallelBackend::with_pool(Arc::clone(pool))),
         BackendKind::NativeCsc => Box::new(NativeBackend::with_csc()),
         BackendKind::Xla => make_xla_backend(cfg)?,
     })
@@ -212,13 +214,22 @@ fn make_xla_backend(_cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
 
 /// Build the score-space oracle for a BMRM-family method. The paper's
 /// main method runs on the query-sharded parallel engine (which also
-/// subsumes the query-grouped averaging); the ablation variants stay
+/// subsumes the query-grouped averaging), sharing the trainer's
+/// persistent pool with the compute backend; the ablation variants stay
 /// serial, wrapped in the grouped averager when the dataset has query
 /// structure.
-fn make_ranking_oracle(method: Method, ds: &Dataset, n_threads: usize) -> Box<dyn RankingOracle> {
+fn make_ranking_oracle(
+    method: Method,
+    ds: &Dataset,
+    pool: &Arc<WorkerPool>,
+) -> Box<dyn RankingOracle> {
     let base: Box<dyn RankingOracle> = match method {
         Method::Tree => {
-            return Box::new(ShardedTreeOracle::new(n_threads, ds.qid.as_deref(), &ds.y))
+            return Box::new(ShardedTreeOracle::with_pool(
+                Arc::clone(pool),
+                ds.qid.as_deref(),
+                &ds.y,
+            ))
         }
         Method::TreeDedup => Box::new(TreeOracle::new_dedup()),
         Method::TreeFenwick => Box::new(fenwick_oracle(&ds.y)),
@@ -246,7 +257,11 @@ fn effective_pairs(ds: &Dataset) -> f64 {
 /// library's main entry point.
 pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let timer = std::time::Instant::now();
-    let backend = make_backend(cfg)?;
+    // One persistent worker pool for the whole run: the sharded oracle,
+    // the parallel backend, and the parallel argsort all submit to it,
+    // so threads are spawned once here rather than per oracle call.
+    let pool = Arc::new(WorkerPool::new(cfg.resolved_threads()));
+    let backend = make_backend(cfg, &pool)?;
     let backend_name = backend.name();
 
     let outcome = if cfg.method == Method::Prsvm || cfg.method == Method::PrsvmTree {
@@ -278,7 +293,7 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
         }
     } else {
         let n_pairs = effective_pairs(ds);
-        let inner = make_ranking_oracle(cfg.method, ds, cfg.resolved_threads());
+        let inner = make_ranking_oracle(cfg.method, ds, &pool);
         let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
         let bcfg = BmrmConfig {
             lambda: cfg.lambda,
@@ -358,8 +373,9 @@ mod tests {
         // Fig. 4's claim: implementations reach the same solution.
         let ds = synthetic::cadata_like(200, 33);
         let mut objectives = Vec::new();
-        for m in [Method::Tree, Method::TreeDedup, Method::TreeFenwick, Method::Pair, Method::RLevel]
-        {
+        let methods =
+            [Method::Tree, Method::TreeDedup, Method::TreeFenwick, Method::Pair, Method::RLevel];
+        for m in methods {
             let out = train(&ds, &cfg(m)).unwrap();
             assert!(out.converged, "{:?} failed to converge", m);
             objectives.push(out.objective);

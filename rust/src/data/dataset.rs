@@ -46,7 +46,7 @@ impl Dataset {
     /// Number of distinct utility levels — the paper's `r`.
     pub fn n_levels(&self) -> usize {
         let mut l = self.y.clone();
-        l.sort_by(|a, b| a.partial_cmp(b).expect("NaN label"));
+        l.sort_unstable_by(|a, b| a.total_cmp(b));
         l.dedup();
         l.len()
     }
@@ -122,7 +122,7 @@ mod tests {
         assert_eq!(test.len(), 1);
         // label multiset preserved
         let mut all: Vec<f64> = train.y.iter().chain(test.y.iter()).cloned().collect();
-        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all.sort_unstable_by(|a, b| a.total_cmp(b));
         assert_eq!(all, vec![1.0, 2.0, 2.0, 3.0]);
     }
 

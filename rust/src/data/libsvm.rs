@@ -20,6 +20,20 @@ pub fn read(path: impl AsRef<Path>) -> Result<Dataset> {
 }
 
 /// Parse from any reader (testable).
+///
+/// Hardened beyond the loose libsvm convention — every rejection carries
+/// `name:line`:
+///
+/// - labels and feature values must be finite (a NaN/Inf would otherwise
+///   surface much later, mid-training);
+/// - feature indices must be strictly increasing within a row (the
+///   format's sorted convention) — duplicates or out-of-order indices
+///   are rejected instead of silently emitting duplicate CSR triplets;
+/// - a `qid:<q>` token is accepted anywhere among the feature tokens
+///   (some exporters emit it last), but two conflicting `qid`s on one
+///   line are rejected;
+/// - CRLF line endings are accepted (`BufRead::lines` strips the full
+///   CRLF pair; a regression test pins it).
 pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
     let mut y = Vec::new();
     let mut qids: Vec<u64> = Vec::new();
@@ -28,6 +42,7 @@ pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
     let mut max_col = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
+        let lno = lineno + 1;
         let line = line.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
@@ -38,22 +53,47 @@ pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
             .next()
             .unwrap()
             .parse()
-            .with_context(|| format!("{name}:{}: bad label", lineno + 1))?;
+            .with_context(|| format!("{name}:{lno}: bad label"))?;
+        if !label.is_finite() {
+            bail!("{name}:{lno}: non-finite label {label}");
+        }
         y.push(label);
         let mut qid_here = None;
+        let mut prev_idx = 0usize;
         for tok in parts {
             let (k, v) = tok
                 .split_once(':')
-                .with_context(|| format!("{name}:{}: expected idx:val, got {tok:?}", lineno + 1))?;
+                .with_context(|| format!("{name}:{lno}: expected idx:val, got {tok:?}"))?;
             if k == "qid" {
-                qid_here = Some(v.parse::<u64>().with_context(|| format!("{name}:{}: bad qid", lineno + 1))?);
+                let q = v.parse::<u64>().with_context(|| format!("{name}:{lno}: bad qid"))?;
+                if let Some(prev) = qid_here {
+                    if prev != q {
+                        bail!("{name}:{lno}: conflicting qids {prev} and {q}");
+                    }
+                }
+                qid_here = Some(q);
                 continue;
             }
-            let idx: usize = k.parse().with_context(|| format!("{name}:{}: bad index {k:?}", lineno + 1))?;
+            let idx: usize =
+                k.parse().with_context(|| format!("{name}:{lno}: bad index {k:?}"))?;
             if idx == 0 {
-                bail!("{name}:{}: libsvm feature indices are 1-based", lineno + 1);
+                bail!("{name}:{lno}: libsvm feature indices are 1-based");
             }
-            let val: f64 = v.parse().with_context(|| format!("{name}:{}: bad value {v:?}", lineno + 1))?;
+            if idx == prev_idx {
+                bail!("{name}:{lno}: duplicate feature index {idx}");
+            }
+            if idx < prev_idx {
+                bail!(
+                    "{name}:{lno}: feature index {idx} after {prev_idx} \
+                     (indices must be strictly increasing)"
+                );
+            }
+            prev_idx = idx;
+            let val: f64 =
+                v.parse().with_context(|| format!("{name}:{lno}: bad value {v:?}"))?;
+            if !val.is_finite() {
+                bail!("{name}:{lno}: non-finite value {val} for feature {idx}");
+            }
             max_col = max_col.max(idx);
             if val != 0.0 {
                 triplets.push((row, idx - 1, val));
@@ -120,6 +160,50 @@ mod tests {
     fn rejects_garbage() {
         assert!(parse(std::io::Cursor::new("abc 1:2\n"), "t").is_err());
         assert!(parse(std::io::Cursor::new("1 nocolon\n"), "t").is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_labels_and_values_with_line_numbers() {
+        for bad in ["nan", "inf", "-inf", "NaN", "Infinity"] {
+            let text = format!("1 1:2.0\n{bad} 1:2.0\n");
+            let err = parse(std::io::Cursor::new(text), "t").unwrap_err();
+            assert!(err.to_string().contains("t:2"), "{bad}: {err}");
+        }
+        let err = parse(std::io::Cursor::new("1 1:2.0\n2 1:nan\n"), "t").unwrap_err();
+        assert!(err.to_string().contains("t:2"), "{err}");
+        let err = parse(std::io::Cursor::new("2 1:1 2:inf\n"), "t").unwrap_err();
+        assert!(err.to_string().contains("t:1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_and_decreasing_indices() {
+        let err = parse(std::io::Cursor::new("1 1:2.0 1:3.0\n"), "t").unwrap_err();
+        assert!(err.to_string().contains("t:1"), "{err}");
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let err = parse(std::io::Cursor::new("1 1:2.0\n1 3:1.0 2:1.0\n"), "t").unwrap_err();
+        assert!(err.to_string().contains("t:2"), "{err}");
+        assert!(err.to_string().contains("strictly increasing"), "{err}");
+    }
+
+    #[test]
+    fn accepts_qid_after_features_and_rejects_conflicts() {
+        let text = "3 1:0.5 qid:1\n1 qid:1 2:0.5\n2 1:1.0 qid:2 2:2.0\n";
+        let ds = parse(std::io::Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.qid, Some(vec![1, 1, 2]));
+        // The same qid twice is tolerated; two different qids are not.
+        assert!(parse(std::io::Cursor::new("1 qid:1 1:1 qid:1\n"), "t").is_ok());
+        let err = parse(std::io::Cursor::new("1 qid:1 1:1 qid:2\n"), "t").unwrap_err();
+        assert!(err.to_string().contains("conflicting"), "{err}");
+    }
+
+    #[test]
+    fn accepts_crlf_line_endings() {
+        let text = "1.5 1:2.0 3:4.0\r\n-0.5 2:1.0 # comment\r\n2 qid:7 1:1\r\n";
+        let ds = parse(std::io::Cursor::new(text), "t").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.y, vec![1.5, -0.5, 2.0]);
+        assert_eq!(ds.qid, Some(vec![0, 0, 7]));
+        assert_eq!(ds.x.row(0), (&[0u32, 2][..], &[2.0, 4.0][..]));
     }
 
     #[test]

@@ -103,7 +103,7 @@ pub fn ordinal(m: usize, levels: usize, seed: u64) -> Dataset {
     // Quantize the real-valued utilities into `levels` buckets by rank so
     // the classes are balanced.
     let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| base.y[a].partial_cmp(&base.y[b]).unwrap());
+    order.sort_unstable_by(|&a, &b| base.y[a].total_cmp(&base.y[b]).then(a.cmp(&b)));
     let mut y = vec![0.0; m];
     for (rank, &i) in order.iter().enumerate() {
         y[i] = 1.0 + ((rank * levels) / m.max(1)) as f64;

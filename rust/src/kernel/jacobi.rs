@@ -141,7 +141,7 @@ mod tests {
         a.set(1, 1, -1.0);
         a.set(2, 2, 7.0);
         let (mut vals, _) = eigen_sym(&a);
-        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        vals.sort_unstable_by(|x, y| x.total_cmp(y));
         assert_eq!(vals, vec![-1.0, 3.0, 7.0]);
     }
 
@@ -150,7 +150,8 @@ mod tests {
         // Gram matrices (what Nyström feeds in) must get λ ≥ −ε.
         let mut rng = Rng::new(95);
         let k = 25;
-        let feats: Vec<Vec<f64>> = (0..k).map(|_| (0..10).map(|_| rng.normal()).collect()).collect();
+        let feats: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..10).map(|_| rng.normal()).collect()).collect();
         let mut g = DenseMatrix::zeros(k, k);
         for i in 0..k {
             for j in 0..k {

@@ -14,8 +14,9 @@
 //!   algorithm of Joachims (2006) ("SVM^rank"), and the squared pairwise
 //!   hinge of Chapelle & Keerthi (2010) ("PRSVM") — and the
 //!   query-sharded parallel engine ([`losses::ShardedTreeOracle`]) that
-//!   runs Algorithm 3 across `std::thread::scope` workers with
-//!   bit-identical results for any thread count;
+//!   runs Algorithm 3 across a persistent [`runtime::WorkerPool`] with
+//!   bit-identical results for any thread count (including a
+//!   deterministic parallel argsort, [`linalg::ops::par_argsort_into`]);
 //! - [`bmrm`] — bundle-method / cutting-plane optimization (Algorithm 1)
 //!   with a dual coordinate-descent inner QP and an optional OCAS-style
 //!   line search;

@@ -99,7 +99,11 @@ impl DenseMatrix {
     /// View of a contiguous row range `[lo, hi)` as a borrowed sub-matrix.
     pub fn row_slice(&self, lo: usize, hi: usize) -> DenseView<'_> {
         assert!(lo <= hi && hi <= self.rows);
-        DenseView { rows: hi - lo, cols: self.cols, data: &self.data[lo * self.cols..hi * self.cols] }
+        DenseView {
+            rows: hi - lo,
+            cols: self.cols,
+            data: &self.data[lo * self.cols..hi * self.cols],
+        }
     }
 }
 

@@ -2,7 +2,12 @@
 //!
 //! Written as straightforward slice loops; rustc auto-vectorizes the
 //! chunked forms. `dot` is the innermost hot operation of the native
-//! compute backend (score matvec) and of the BMRM inner QP.
+//! compute backend (score matvec) and of the BMRM inner QP. The argsort
+//! family implements the `π` construction of Algorithm 3, including the
+//! deterministic parallel merge sort [`par_argsort_into`] that removes
+//! the oracle's last serial `O(m log m)` term.
+
+use crate::runtime::pool::{Task, WorkerPool};
 
 /// Dot product. Panics if lengths differ (debug) / truncates never.
 #[inline]
@@ -61,11 +66,23 @@ pub fn norm(x: &[f64]) -> f64 {
     norm_sq(x).sqrt()
 }
 
+/// The canonical argsort order: ascending by `f64::total_cmp` on the
+/// value, ties broken by ascending index. This is a *strict total* order
+/// on positions — no two positions compare equal — so the sorted
+/// permutation is unique, and every argsort in the crate (serial or
+/// parallel, any algorithm) produces bit-identical output. `total_cmp`
+/// also makes the order total over NaN/±0.0 payloads, so a rogue score
+/// can no longer panic a sort mid-training (NaNs order after +∞).
+#[inline]
+fn key_cmp(v: &[f64], a: usize, b: usize) -> std::cmp::Ordering {
+    v[a].total_cmp(&v[b]).then(a.cmp(&b))
+}
+
 /// Argsort: indices that sort `v` ascending (stable). This is the
 /// `π` construction on line 4 of Algorithm 3.
 pub fn argsort(v: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..v.len()).collect();
-    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).expect("NaN in sort key"));
+    idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
     idx
 }
 
@@ -74,7 +91,155 @@ pub fn argsort(v: &[f64]) -> Vec<usize> {
 pub fn argsort_into(v: &[f64], idx: &mut Vec<usize>) {
     idx.clear();
     idx.extend(0..v.len());
-    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).expect("NaN in sort key"));
+    idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
+}
+
+/// Fixed chunk count for [`par_argsort_into`]'s merge plan. Constant
+/// (independent of the thread count and the data) so the chunk sort and
+/// every merge span are the same work units for any pool size; a power
+/// of two so the pairwise merge tree has no remainder chunks and an even
+/// number of levels (the ping-pong ends back in the caller's buffer).
+pub const SORT_CHUNKS: usize = 16;
+
+/// Below this length the serial sort wins over chunk + merge scheduling.
+pub const PAR_SORT_MIN: usize = 1024;
+
+/// Parallel argsort on a [`WorkerPool`]: deterministic merge sort over a
+/// fixed [`SORT_CHUNKS`]-chunk plan with fixed-topology pairwise merges
+/// (stride 1, 2, 4, …). Each merge level is cut into `SORT_CHUNKS`
+/// output spans along the same chunk boundaries, located in the two
+/// input runs by merge-path co-rank binary searches, so every level
+/// keeps all workers busy — including the final whole-array merge that
+/// would otherwise re-serialize the sort. Because the comparator is the
+/// strict total order of [`argsort_into`] (value, then index), the
+/// permutation is **bit-identical to the serial argsort for any thread
+/// count**; `scratch` is a caller-owned ping-pong buffer reused across
+/// BMRM iterations.
+pub fn par_argsort_into(
+    v: &[f64],
+    idx: &mut Vec<usize>,
+    scratch: &mut Vec<usize>,
+    pool: &WorkerPool,
+) {
+    let m = v.len();
+    idx.clear();
+    idx.extend(0..m);
+    if m < PAR_SORT_MIN.max(SORT_CHUNKS) || pool.n_threads() <= 1 {
+        idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
+        return;
+    }
+    let bounds: Vec<usize> = (0..=SORT_CHUNKS).map(|c| c * m / SORT_CHUNKS).collect();
+
+    // Phase 1: sort each chunk independently.
+    {
+        let mut tasks: Vec<Task> = Vec::with_capacity(SORT_CHUNKS);
+        let mut rest: &mut [usize] = idx;
+        for c in 0..SORT_CHUNKS {
+            // Move `rest` out before splitting so the tail can be
+            // carried to the next iteration.
+            let (head, tail) = { rest }.split_at_mut(bounds[c + 1] - bounds[c]);
+            tasks.push(Box::new(move || head.sort_unstable_by(|&a, &b| key_cmp(v, a, b))));
+            rest = tail;
+        }
+        pool.run(tasks);
+    }
+
+    // Phase 2: pairwise merge levels, ping-ponging between `idx` and
+    // `scratch`. SORT_CHUNKS = 16 gives four levels, so the final merge
+    // lands back in `idx`.
+    scratch.clear();
+    scratch.resize(m, 0);
+    let mut src: &mut [usize] = idx;
+    let mut dst: &mut [usize] = scratch;
+    let mut stride = 1;
+    let mut in_idx = true;
+    while stride < SORT_CHUNKS {
+        merge_level(v, src, dst, &bounds, stride, pool);
+        std::mem::swap(&mut src, &mut dst);
+        in_idx = !in_idx;
+        stride *= 2;
+    }
+    if !in_idx {
+        // Defensive: only reachable if SORT_CHUNKS stops being 2^(2k).
+        dst.copy_from_slice(src);
+    }
+}
+
+/// One merge level: merge run pairs of `stride` chunks from `src` into
+/// `dst`, each pair's output cut into spans along the global chunk
+/// boundaries so the level parallelizes `SORT_CHUNKS` ways regardless of
+/// how few pairs remain.
+fn merge_level(
+    v: &[f64],
+    src: &[usize],
+    dst: &mut [usize],
+    bounds: &[usize],
+    stride: usize,
+    pool: &WorkerPool,
+) {
+    let n_chunks = bounds.len() - 1;
+    let mut tasks: Vec<Task> = Vec::with_capacity(n_chunks);
+    let mut rest: &mut [usize] = dst;
+    let mut base = 0;
+    while base < n_chunks {
+        let pair_hi = (base + 2 * stride).min(n_chunks);
+        let lo = bounds[base];
+        let mid = bounds[(base + stride).min(n_chunks)];
+        let hi = bounds[pair_hi];
+        for t in base..pair_hi {
+            let s0 = bounds[t] - lo;
+            let s1 = bounds[t + 1] - lo;
+            let i0 = co_rank(v, src, lo, mid, hi, s0);
+            let i1 = co_rank(v, src, lo, mid, hi, s1);
+            let (j0, j1) = (s0 - i0, s1 - i1);
+            let (span, tail) = { rest }.split_at_mut(s1 - s0);
+            rest = tail;
+            let left = &src[lo + i0..lo + i1];
+            let right = &src[mid + j0..mid + j1];
+            tasks.push(Box::new(move || merge_runs(v, left, right, span)));
+        }
+        base += 2 * stride;
+    }
+    pool.run(tasks);
+}
+
+/// Merge-path co-rank: for the pair of sorted runs `src[lo..mid]` (A)
+/// and `src[mid..hi]` (B), return the unique `i` such that the first
+/// `k` elements of their merge are exactly `A[..i] ∪ B[..k−i]`. Unique
+/// because [`key_cmp`] is a strict total order (distinct indices never
+/// compare equal), which is what makes the span decomposition exact.
+fn co_rank(v: &[f64], src: &[usize], lo: usize, mid: usize, hi: usize, k: usize) -> usize {
+    let nl = mid - lo;
+    let nr = hi - mid;
+    let mut i_lo = k.saturating_sub(nr);
+    let mut i_hi = k.min(nl);
+    while i_lo < i_hi {
+        let i = (i_lo + i_hi) / 2;
+        // i < i_hi ≤ min(k, nl) ⇒ A[i] and B[k−i−1] are both in range.
+        if key_cmp(v, src[lo + i], src[mid + k - i - 1]) == std::cmp::Ordering::Less {
+            i_lo = i + 1;
+        } else {
+            i_hi = i;
+        }
+    }
+    i_lo
+}
+
+/// Sequential two-run merge into `out` under [`key_cmp`].
+fn merge_runs(v: &[f64], a: &[usize], b: &[usize], out: &mut [usize]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0, 0);
+    for slot in out.iter_mut() {
+        let take_a = j == b.len()
+            || (i < a.len() && key_cmp(v, a[i], b[j]) == std::cmp::Ordering::Less);
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +276,80 @@ mod tests {
         let mut buf = Vec::new();
         argsort_into(&v, &mut buf);
         assert_eq!(buf, idx);
+    }
+
+    #[test]
+    fn argsort_totals_nan_and_signed_zero() {
+        // NaN orders after +∞ under total_cmp instead of panicking.
+        let v = [f64::NAN, 2.0, f64::INFINITY, 1.0];
+        assert_eq!(argsort(&v), vec![3, 1, 2, 0]);
+        // −0.0 orders before +0.0 (total order), not by index.
+        let v = [0.0, -0.0, -1.0];
+        assert_eq!(argsort(&v), vec![2, 1, 0]);
+    }
+
+    fn sort_cases(rng: &mut crate::util::rng::Rng) -> Vec<Vec<f64>> {
+        let m = PAR_SORT_MIN + rng.below(4 * PAR_SORT_MIN);
+        vec![
+            (0..m).map(|_| rng.normal()).collect(),
+            // Heavy ties: the index tie-break does the ordering.
+            (0..m).map(|_| rng.below(7) as f64).collect(),
+            vec![42.0; m],
+            // Already sorted / reversed.
+            (0..m).map(|i| i as f64).collect(),
+            (0..m).map(|i| (m - i) as f64).collect(),
+            // Signed zeros and NaNs mixed in.
+            (0..m)
+                .map(|i| match i % 5 {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f64::NAN,
+                    _ => rng.normal(),
+                })
+                .collect(),
+        ]
+    }
+
+    #[test]
+    fn par_argsort_bit_identical_to_serial_for_any_thread_count() {
+        let mut rng = crate::util::rng::Rng::new(303);
+        for _ in 0..3 {
+            for v in sort_cases(&mut rng) {
+                let mut expect = Vec::new();
+                argsort_into(&v, &mut expect);
+                for threads in [1usize, 2, 3, 8] {
+                    let pool = WorkerPool::new(threads);
+                    let mut idx = Vec::new();
+                    let mut scratch = Vec::new();
+                    par_argsort_into(&v, &mut idx, &mut scratch, &pool);
+                    assert_eq!(idx, expect, "{threads} threads, m={}", v.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_argsort_small_inputs_take_serial_path() {
+        let pool = WorkerPool::new(4);
+        let mut idx = Vec::new();
+        let mut scratch = Vec::new();
+        for v in [vec![], vec![5.0], vec![3.0, 1.0, 2.0, 1.0]] {
+            par_argsort_into(&v, &mut idx, &mut scratch, &pool);
+            assert_eq!(idx, argsort(&v));
+        }
+    }
+
+    #[test]
+    fn par_argsort_buffers_reused_across_sizes() {
+        let pool = WorkerPool::new(4);
+        let mut rng = crate::util::rng::Rng::new(304);
+        let mut idx = Vec::new();
+        let mut scratch = Vec::new();
+        for m in [PAR_SORT_MIN * 3, 10, PAR_SORT_MIN + 1, PAR_SORT_MIN * 2] {
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            par_argsort_into(&v, &mut idx, &mut scratch, &pool);
+            assert_eq!(idx, argsort(&v), "m={m}");
+        }
     }
 
     #[test]

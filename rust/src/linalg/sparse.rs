@@ -48,7 +48,13 @@ impl CsrMatrix {
     }
 
     /// Build directly from CSR arrays (validated).
-    pub fn from_raw(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f64>) -> Self {
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
         assert_eq!(indptr.len(), rows + 1);
         assert_eq!(indices.len(), values.len());
         assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
@@ -341,7 +347,8 @@ mod tests {
 
     #[test]
     fn row_range_and_select() {
-        let m = CsrMatrix::from_triplets(4, 3, vec![(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0), (3, 0, 4.0)]);
+        let triplets = vec![(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0), (3, 0, 4.0)];
+        let m = CsrMatrix::from_triplets(4, 3, triplets);
         let r = m.row_range(1, 3);
         assert_eq!(r.rows(), 2);
         assert_eq!(r.row(0), (&[1u32][..], &[2.0][..]));

@@ -14,10 +14,11 @@
 //!   Chapelle & Keerthi (2010) ("PRSVM"), with explicit pair
 //!   materialization (quadratic memory, reproducing Fig. 3);
 //! - [`query::QueryGrouped`] — per-query averaging wrapper (§2, §4.3 end);
-//! - [`sharded::ShardedTreeOracle`] — the tree oracle sharded across
-//!   `std::thread::scope` workers (by query group, or by contiguous
-//!   chunks of the score-sorted order for a single global ranking), with
-//!   bit-identical output to the serial path for any shard count.
+//! - [`sharded::ShardedTreeOracle`] — the tree oracle sharded across a
+//!   persistent [`crate::runtime::WorkerPool`] (by query group, or by
+//!   balanced query ranges over the score-sorted order for a single
+//!   global ranking), with bit-identical output to the serial path for
+//!   any shard count.
 //!
 //! The gradient w.r.t. `w` is then `a = Xᵀ·coeffs` (row-example
 //! convention), computed by a [`crate::compute::ComputeBackend`], so the
@@ -82,7 +83,7 @@ pub fn count_comparable_pairs(y: &[f64]) -> u64 {
         return 0;
     }
     let mut s: Vec<f64> = y.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN utility score"));
+    s.sort_unstable_by(|a, b| a.total_cmp(b));
     let total = m * (m - 1) / 2;
     let mut ties = 0u64;
     let mut run = 1u64;

@@ -37,7 +37,7 @@ impl RLevelOracle {
     /// Distinct sorted utility levels — the paper's `r`.
     pub fn levels(y: &[f64]) -> Vec<f64> {
         let mut l: Vec<f64> = y.to_vec();
-        l.sort_by(|a, b| a.partial_cmp(b).expect("NaN utility score"));
+        l.sort_unstable_by(|a, b| a.total_cmp(b));
         l.dedup();
         l
     }

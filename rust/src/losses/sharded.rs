@@ -1,8 +1,10 @@
 //! Query-sharded parallel subgradient oracle.
 //!
 //! The loss of §2 decomposes over disjoint example subsets two ways, and
-//! this engine exploits both with `std::thread::scope` workers that keep
-//! per-shard reusable tree buffers alive across BMRM iterations:
+//! this engine exploits both on a persistent [`WorkerPool`] (shared with
+//! the parallel compute backend and the parallel argsort — one pool per
+//! trainer, no per-call thread spawns) while keeping per-shard reusable
+//! tree buffers alive across BMRM iterations:
 //!
 //! **Query-grouped data** (the document-retrieval setting): the risk is
 //! an average of per-query losses, so whole query groups are dealt to
@@ -16,33 +18,42 @@
 //! **One global ranking**: the frequencies `c_i`/`d_i` of eqs. (5)–(6)
 //! are *integer* dominance counts over the margin window
 //! `W(i) = {j : 1 + p_i − p_j > 0}` (a prefix of the score-sorted order).
-//! We split the sorted order into contiguous chunks; the worker owning
-//! the chunk where `W(i)` *ends* computes `c_i` as
+//! The sorted order is split into one contiguous chunk per shard, and
+//! the *queries* (sorted positions `k`) are dealt to shards as equal
+//! contiguous ranges. The shard owning query `k` computes `c_k` as
 //!
-//! - an incremental red-black-tree count over the partial chunk (exactly
-//!   Algorithm 3's sweep, restricted to the chunk), plus
-//! - one binary search per fully-covered earlier chunk against that
-//!   chunk's pre-sorted label array (phase A, also parallel).
+//! - an incremental red-black-tree count over
+//!   `[base, w_end(k))`, where `base` is the chunk boundary at or below
+//!   the shard's *first* window end (exactly Algorithm 3's sweep,
+//!   restricted to the tail the shard actually owns), plus
+//! - one binary search per chunk fully below `base` against that chunk's
+//!   pre-sorted label array (phase A, also parallel).
 //!
 //! `d_i` is the mirror image over suffix windows. Because every per-`i`
 //! count is an exact integer decomposed by chunk, the assembled
 //! `(loss, coeffs)` is **bit-identical to the single-threaded
 //! [`TreeOracle`] for any shard count** — no floating-point reduction
 //! enters until [`super::assemble_from_counts`], which runs serially on
-//! the full count vectors. Wall-time per worker is
-//! `O((m/S)·(log(m/S) + S·log(m/S)))` tree/binary-search steps; the
-//! binary searches stream flat sorted arrays, which is what makes the
-//! sharded oracle faster in practice on multi-core hosts (see
+//! the full count vectors. Each shard owns `m/S` queries and its tree
+//! sweep spans at most the growth of the window extents across them plus
+//! one chunk (the extents are monotone, so the sweeps telescope to
+//! `O(m)` insertions in total), which is what makes the sharded oracle
+//! faster in practice on multi-core hosts (see
 //! `benches/fig1_iteration_cost.rs`).
 //!
 //! Degenerate score distributions (e.g. all predictions within one
-//! margin of each other, as at `w = 0`) collapse every window onto the
-//! last chunk and serialize the sweep — correctness is unaffected.
+//! margin of each other, as at `w = 0`) make every window span the whole
+//! array; query-balanced ownership then sends *zero* work through the
+//! trees — every count is a round of per-chunk binary searches, which is
+//! embarrassingly parallel. (The previous window-end ownership collapsed
+//! this case onto one shard; see ROADMAP history.)
 
 use super::{assemble_from_counts, OracleOutput, RankingOracle};
-use crate::linalg::ops::argsort_into;
+use crate::linalg::ops::par_argsort_into;
 use crate::losses::tree::TreeOracle;
 use crate::rbtree::OsTree;
+use crate::runtime::pool::{Task, WorkerPool};
+use std::sync::Arc;
 
 /// How examples are dealt to shards.
 enum Plan {
@@ -101,22 +112,25 @@ impl ShardState {
 struct GlobalView<'a> {
     /// Chunk boundaries over sorted positions, length `n_shards + 1`.
     bounds: &'a [usize],
-    /// Owned query ranges `[lo, hi)` per shard, forward sweep.
-    fwd: &'a [(usize, usize)],
-    /// Owned query ranges per shard, backward sweep.
-    bwd: &'a [(usize, usize)],
+    /// Owned query range `[lo, hi)` per shard (sorted positions `k`),
+    /// used by both the forward and the backward sweep.
+    owned: &'a [(usize, usize)],
     y_sorted: &'a [f64],
     /// Forward window ends `w(k)` (exclusive), nondecreasing in `k`.
     w_end: &'a [usize],
     /// Backward window starts `v(k)` (inclusive), nondecreasing in `k`.
     v_start: &'a [usize],
-    /// Per-chunk sorted label arrays (phase A output).
+    /// Per-chunk sorted label arrays (phase A output; empty when a
+    /// single shard runs the pure serial sweep).
     labels: &'a [Vec<f64>],
 }
 
 /// The parallel sharded oracle engine. Construct once per training set
-/// (like [`super::QueryGrouped`]); evaluate once per BMRM iteration.
+/// (like [`super::QueryGrouped`]); evaluate once per BMRM iteration. All
+/// parallel phases run on one persistent [`WorkerPool`], shared with the
+/// trainer's compute backend when built via [`Self::with_pool`].
 pub struct ShardedTreeOracle {
+    pool: Arc<WorkerPool>,
     n_shards: usize,
     plan: Plan,
     shards: Vec<ShardState>,
@@ -125,6 +139,7 @@ pub struct ShardedTreeOracle {
     sorted_labels: Vec<Vec<f64>>,
     // Per-eval scratch (global mode), reused across calls.
     pi: Vec<usize>,
+    sort_scratch: Vec<usize>,
     p_sorted: Vec<f64>,
     y_sorted: Vec<f64>,
     w_end: Vec<usize>,
@@ -134,10 +149,18 @@ pub struct ShardedTreeOracle {
 }
 
 impl ShardedTreeOracle {
-    /// Build for `n_threads` workers over a fixed training label vector;
-    /// `qid` enables query-group sharding (must align with `y`).
+    /// Build with a private pool of `n_threads` workers. Prefer
+    /// [`Self::with_pool`] inside the trainer so the oracle, the compute
+    /// backend, and the parallel argsort share one set of threads.
     pub fn new(n_threads: usize, qid: Option<&[u64]>, y: &[f64]) -> Self {
-        let n_shards = n_threads.max(1);
+        Self::with_pool(Arc::new(WorkerPool::new(n_threads)), qid, y)
+    }
+
+    /// Build on an existing persistent pool (one shard per pool worker)
+    /// over a fixed training label vector; `qid` enables query-group
+    /// sharding (must align with `y`).
+    pub fn with_pool(pool: Arc<WorkerPool>, qid: Option<&[u64]>, y: &[f64]) -> Self {
+        let n_shards = pool.n_threads().max(1);
         let plan = match qid {
             None => Plan::Global,
             Some(q) => {
@@ -148,11 +171,13 @@ impl ShardedTreeOracle {
             }
         };
         ShardedTreeOracle {
+            pool,
             n_shards,
             plan,
             shards: (0..n_shards).map(|_| ShardState::new()).collect(),
             sorted_labels: Vec::new(),
             pi: Vec::new(),
+            sort_scratch: Vec::new(),
             p_sorted: Vec::new(),
             y_sorted: Vec::new(),
             w_end: Vec::new(),
@@ -165,6 +190,11 @@ impl ShardedTreeOracle {
     /// Number of shard workers.
     pub fn n_shards(&self) -> usize {
         self.n_shards
+    }
+
+    /// The persistent pool this oracle evaluates on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// Query-group count (None for a single global ranking).
@@ -201,8 +231,10 @@ impl ShardedTreeOracle {
         }
         let n_shards = self.n_shards.min(m);
 
-        // Shared setup — exactly TreeOracle's sort + gather.
-        argsort_into(p, &mut self.pi);
+        // Shared setup — the same permutation TreeOracle's sort produces
+        // (the parallel merge sort is bit-identical to the serial
+        // argsort), gathered so the sweeps stream contiguous memory.
+        par_argsort_into(p, &mut self.pi, &mut self.sort_scratch, &self.pool);
         self.p_sorted.clear();
         self.p_sorted.extend(self.pi.iter().map(|&k| p[k]));
         self.y_sorted.clear();
@@ -245,55 +277,45 @@ impl ShardedTreeOracle {
             }
         }
 
-        // Contiguous chunks of the sorted order.
+        // Contiguous chunks of the sorted order (binary-search substrate)
+        // and equal contiguous *query* ranges per shard. Query-balanced
+        // ownership keeps the per-shard tree sweeps bounded even when
+        // every window spans the whole array (the degenerate
+        // all-scores-within-one-margin case): window ends that land on
+        // chunk boundaries contribute binary searches only, so that case
+        // redistributes across all shards instead of collapsing onto the
+        // owner of the last chunk.
         let bounds: Vec<usize> = (0..=n_shards).map(|s| s * m / n_shards).collect();
-
-        // Ownership: shard s owns the forward queries whose window ends
-        // inside its chunk, and the backward queries whose window starts
-        // inside it. Both extent arrays are monotone, so the owned query
-        // sets are contiguous `k` ranges found by binary search.
-        let fwd: Vec<(usize, usize)> = (0..n_shards)
-            .map(|s| {
-                (
-                    self.w_end.partition_point(|&w| w <= bounds[s]),
-                    self.w_end.partition_point(|&w| w <= bounds[s + 1]),
-                )
-            })
-            .collect();
-        let bwd: Vec<(usize, usize)> = (0..n_shards)
-            .map(|s| {
-                (
-                    self.v_start.partition_point(|&v| v < bounds[s]),
-                    self.v_start.partition_point(|&v| v < bounds[s + 1]),
-                )
-            })
-            .collect();
+        let owned: Vec<(usize, usize)> =
+            (0..n_shards).map(|s| (s * m / n_shards, (s + 1) * m / n_shards)).collect();
 
         // Phase A: per-chunk sorted label arrays (cross-chunk counting
-        // substrate). Skipped for a single shard — there is no other
-        // chunk to count against.
+        // substrate). Skipped for a single shard — the lone worker runs
+        // the pure serial sweep and never consults them.
         self.sorted_labels.resize_with(n_shards, Vec::new);
         if n_shards > 1 {
             let y_sorted = &self.y_sorted;
-            std::thread::scope(|scope| {
-                for (s, lab) in self.sorted_labels.iter_mut().enumerate() {
-                    let (lo, hi) = (bounds[s], bounds[s + 1]);
-                    scope.spawn(move || {
-                        lab.clear();
-                        lab.extend_from_slice(&y_sorted[lo..hi]);
-                        lab.sort_unstable_by(|a, b| {
-                            a.partial_cmp(b).expect("NaN utility score")
-                        });
-                    });
-                }
-            });
+            let mut tasks: Vec<Task> = Vec::with_capacity(n_shards);
+            for (s, lab) in self.sorted_labels.iter_mut().enumerate() {
+                let (lo, hi) = (bounds[s], bounds[s + 1]);
+                tasks.push(Box::new(move || {
+                    lab.clear();
+                    // NaN labels are incomparable (they contribute to no
+                    // count, exactly like in the tree sweeps, which skip
+                    // inserting them) — drop them here so the numeric
+                    // partition_point predicates below stay consistent
+                    // with the tree path for any shard count.
+                    lab.extend(y_sorted[lo..hi].iter().copied().filter(|x| !x.is_nan()));
+                    lab.sort_unstable_by(|a, b| a.total_cmp(b));
+                }));
+            }
+            self.pool.run(tasks);
         }
 
         // Phase B: each worker counts its owned queries.
         let view = GlobalView {
             bounds: &bounds,
-            fwd: &fwd,
-            bwd: &bwd,
+            owned: &owned,
             y_sorted: &self.y_sorted,
             w_end: &self.w_end,
             v_start: &self.v_start,
@@ -302,12 +324,12 @@ impl ShardedTreeOracle {
         if n_shards == 1 {
             global_worker(0, &view, &mut self.shards[0]);
         } else {
-            std::thread::scope(|scope| {
-                for (s, state) in self.shards.iter_mut().take(n_shards).enumerate() {
-                    let view = &view;
-                    scope.spawn(move || global_worker(s, view, state));
-                }
-            });
+            let view = &view;
+            let mut tasks: Vec<Task> = Vec::with_capacity(n_shards);
+            for (s, state) in self.shards.iter_mut().take(n_shards).enumerate() {
+                tasks.push(Box::new(move || global_worker(s, view, state)));
+            }
+            self.pool.run(tasks);
         }
 
         // Scatter the per-shard counts back to original example order and
@@ -319,12 +341,12 @@ impl ShardedTreeOracle {
         self.d.resize(m, 0);
         for s in 0..n_shards {
             let st = &self.shards[s];
-            let (q_lo, q_hi) = fwd[s];
+            let (q_lo, q_hi) = owned[s];
             for (t, k) in (q_lo..q_hi).enumerate() {
                 self.c[self.pi[k]] = st.c_out[t];
             }
-            let (b_lo, b_hi) = bwd[s];
-            for (t, k) in (b_lo..b_hi).rev().enumerate() {
+            // d_out was pushed for descending k.
+            for (t, k) in (q_lo..q_hi).rev().enumerate() {
                 self.d[self.pi[k]] = st.d_out[t];
             }
         }
@@ -343,12 +365,14 @@ impl ShardedTreeOracle {
         if shards.len() == 1 {
             grouped_worker(&mut shards[0], ranges[0], groups, group_pairs, p, y);
         } else {
-            std::thread::scope(|scope| {
-                for (s, state) in shards.iter_mut().enumerate() {
-                    let range = ranges[s];
-                    scope.spawn(move || grouped_worker(state, range, groups, group_pairs, p, y));
-                }
-            });
+            let mut tasks: Vec<Task> = Vec::with_capacity(shards.len());
+            for (s, state) in shards.iter_mut().enumerate() {
+                let range = ranges[s];
+                tasks.push(Box::new(move || {
+                    grouped_worker(state, range, groups, group_pairs, p, y)
+                }));
+            }
+            self.pool.run(tasks);
         }
 
         // Reduce in group order. Shards hold contiguous ascending group
@@ -356,7 +380,7 @@ impl ShardedTreeOracle {
         // serial QueryGrouped accumulation order bit-for-bit.
         let mut loss = 0.0;
         let mut coeffs = vec![0.0; m];
-        for state in shards.iter() {
+        for state in self.shards.iter() {
             for &(g, off, len, group_loss) in &state.meta {
                 loss += group_loss / r_eff;
                 let idx = &groups[g];
@@ -440,47 +464,88 @@ fn grouped_worker(
     }
 }
 
-/// Global-mode worker: exact `c`/`d` counts for the queries whose margin
-/// window ends (forward) or starts (backward) inside this shard's chunk.
+/// Global-mode worker: exact `c`/`d` counts for this shard's contiguous
+/// query range. The tree sweep covers `[base, w_end(k))` where `base` is
+/// the chunk boundary at or below the range's first window end; chunks
+/// fully below `base` are counted with one binary search each against
+/// their pre-sorted labels. Counts are exact integers either way, so the
+/// split point cannot change a result bit.
 fn global_worker(s: usize, v: &GlobalView, state: &mut ShardState) {
-    let n_shards = v.fwd.len();
+    let n_chunks = v.owned.len();
+    let (q_lo, q_hi) = v.owned[s];
 
-    // Forward sweep: c_k = |{j ∈ W(k) : y_j > y_k}|, decomposed as the
-    // incremental tree over the partial chunk plus one binary search per
-    // fully-covered earlier chunk.
+    // NaN labels are incomparable: they are never inserted (a NaN key
+    // would sit structure-dependently in the BST and make counts vary
+    // with the shard split) and a NaN query counts zero on both the tree
+    // and the binary-search path — so counts stay exact and
+    // shard-count-invariant even for unvalidated label vectors.
+
+    // Forward sweep: c_k = |{j ∈ W(k) : y_j > y_k}|.
     state.c_out.clear();
     state.tree.clear();
-    let (q_lo, q_hi) = v.fwd[s];
-    let mut j = v.bounds[s];
-    for k in q_lo..q_hi {
-        while j < v.w_end[k] {
-            state.tree.insert(v.y_sorted[j]);
-            j += 1;
+    if q_lo < q_hi {
+        // Largest chunk boundary ≤ w_end[q_lo] (w_end ≥ 1, so t0 ≥ 0).
+        // A single shard owns everything and sweeps from 0 — the pure
+        // serial path, no label arrays needed.
+        let t0 = if n_chunks == 1 {
+            0
+        } else {
+            v.bounds.partition_point(|&b| b <= v.w_end[q_lo]) - 1
+        };
+        let mut j = v.bounds[t0];
+        for k in q_lo..q_hi {
+            while j < v.w_end[k] {
+                let yj = v.y_sorted[j];
+                if !yj.is_nan() {
+                    state.tree.insert(yj);
+                }
+                j += 1;
+            }
+            let yk = v.y_sorted[k];
+            let cnt = if yk.is_nan() {
+                0
+            } else {
+                let mut cnt = state.tree.count_larger(yk);
+                for lab in &v.labels[..t0] {
+                    cnt += (lab.len() - lab.partition_point(|&x| x <= yk)) as u64;
+                }
+                cnt
+            };
+            state.c_out.push(cnt);
         }
-        let yk = v.y_sorted[k];
-        let mut cnt = state.tree.count_larger(yk);
-        for lab in &v.labels[..s] {
-            cnt += (lab.len() - lab.partition_point(|&x| x <= yk)) as u64;
-        }
-        state.c_out.push(cnt);
     }
 
     // Backward sweep (descending k): d_k = |{j ∈ V(k) : y_j < y_k}|.
     state.d_out.clear();
     state.tree.clear();
-    let (b_lo, b_hi) = v.bwd[s];
-    let mut j = v.bounds[s + 1];
-    for k in (b_lo..b_hi).rev() {
-        while j > v.v_start[k] {
-            j -= 1;
-            state.tree.insert(v.y_sorted[j]);
+    if q_lo < q_hi {
+        // Smallest chunk boundary ≥ v_start[q_hi − 1].
+        let t1 = if n_chunks == 1 {
+            n_chunks
+        } else {
+            v.bounds.partition_point(|&b| b < v.v_start[q_hi - 1])
+        };
+        let mut j = v.bounds[t1];
+        for k in (q_lo..q_hi).rev() {
+            while j > v.v_start[k] {
+                j -= 1;
+                let yj = v.y_sorted[j];
+                if !yj.is_nan() {
+                    state.tree.insert(yj);
+                }
+            }
+            let yk = v.y_sorted[k];
+            let cnt = if yk.is_nan() {
+                0
+            } else {
+                let mut cnt = state.tree.count_smaller(yk);
+                for lab in &v.labels[t1..n_chunks] {
+                    cnt += lab.partition_point(|&x| x < yk) as u64;
+                }
+                cnt
+            };
+            state.d_out.push(cnt);
         }
-        let yk = v.y_sorted[k];
-        let mut cnt = state.tree.count_smaller(yk);
-        for lab in &v.labels[s + 1..n_shards] {
-            cnt += lab.partition_point(|&x| x < yk) as u64;
-        }
-        state.d_out.push(cnt);
     }
 }
 
@@ -605,14 +670,65 @@ mod tests {
         let expect = reference.eval(&[0.0, 0.5], &y, 1.0);
         assert_eq!(out.coeffs, expect.coeffs);
 
-        // All-tied predictions: every window spans everything (the
-        // worst-case serialization path).
+        // All-tied predictions: every window spans everything — with
+        // query-balanced ownership this runs entirely on per-chunk
+        // binary searches, spread across every shard.
         let y = [1.0, 2.0, 3.0, 4.0];
         let p = [0.0, 0.0, 0.0, 0.0];
         let n = count_comparable_pairs(&y) as f64;
         let mut o = ShardedTreeOracle::new(3, None, &y);
         let out = o.eval(&p, &y, n);
         assert!((out.loss - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_window_case_spreads_counts_across_shards() {
+        // All scores within one margin: every w_end = m, every
+        // v_start = 0. Each shard must produce counts for exactly its
+        // own query range (no shard ends up owning everything), and the
+        // counts must match the serial oracle bit-for-bit.
+        let mut rng = Rng::new(9005);
+        let m = 257;
+        let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal() * 1e-4).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(&p, &y, n);
+        for threads in [2usize, 4, 8] {
+            let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+            let got = sharded.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} shards");
+            // Ownership is balanced by construction: every shard holds
+            // its m/S slice of the count outputs.
+            for (s, st) in sharded.shards.iter().enumerate() {
+                let expect_len = (s + 1) * m / threads - s * m / threads;
+                assert_eq!(st.c_out.len(), expect_len, "shard {s} fwd");
+                assert_eq!(st.d_out.len(), expect_len, "shard {s} bwd");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_labels_are_incomparable_and_shard_count_invariant() {
+        // A NaN label must neither panic nor break bit-identity: it is
+        // never inserted into a counting tree and counts zero as a
+        // query, on the serial and every sharded path alike.
+        let mut rng = Rng::new(9006);
+        let m = 120;
+        let mut y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+        y[7] = f64::NAN;
+        y[64] = f64::NAN;
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut reference = TreeOracle::new();
+        let expect = reference.eval(&p, &y, 100.0);
+        assert!(expect.loss.is_finite());
+        assert_eq!(expect.coeffs[7], 0.0);
+        for threads in [1usize, 2, 8] {
+            let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+            let got = sharded.eval(&p, &y, 100.0);
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} shards");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} shards");
+        }
     }
 
     #[test]
@@ -633,6 +749,29 @@ mod tests {
         let small = o.eval(&[0.1, 0.0, 2.0], &[1.0, 2.0, 3.0], 3.0);
         let expect_small = reference.eval(&[0.1, 0.0, 2.0], &[1.0, 2.0, 3.0], 3.0);
         assert_eq!(small.coeffs, expect_small.coeffs);
+    }
+
+    #[test]
+    fn shared_pool_drives_multiple_oracles() {
+        // One persistent pool reused by two oracles (the trainer's
+        // arrangement: oracle + backend share threads).
+        let pool = Arc::new(WorkerPool::new(4));
+        let y: Vec<f64> = (0..150).map(|i| (i % 5) as f64).collect();
+        let qid: Vec<u64> = (0..150).map(|i| (i / 10) as u64).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut global = ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &y);
+        let mut grouped = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y);
+        let mut reference = TreeOracle::new();
+        let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        for step in 0..5 {
+            let p: Vec<f64> = (0..150).map(|i| ((i * 31 + step * 7) % 23) as f64 * 0.1).collect();
+            let expect = reference.eval(&p, &y, n);
+            let got = global.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "step {step}");
+            let expect_g = serial.eval(&p, &y, serial.total_pairs());
+            let got_g = grouped.eval(&p, &y, 0.0);
+            assert_eq!(got_g.coeffs, expect_g.coeffs, "step {step}");
+        }
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //! of distinct levels `r`.
 
 use super::{assemble_from_counts, OracleOutput, RankingOracle};
-use crate::linalg::ops::argsort_into;
+use crate::linalg::ops::{argsort_into, par_argsort_into};
 use crate::rbtree::{OsTree, RankCounter};
+use crate::runtime::pool::WorkerPool;
 use crate::util::timer::PhaseTimes;
+use std::sync::Arc;
 
 /// Tree-based oracle, generic over the counting structure so the
 /// ablation bench can swap in [`crate::rbtree::FenwickCounter`] or the
@@ -28,6 +30,12 @@ pub struct GenericTreeOracle<T: RankCounter> {
     /// (≈25% oracle speedup at m = 500k — EXPERIMENTS.md §Perf).
     p_sorted: Vec<f64>,
     y_sorted: Vec<f64>,
+    /// Optional persistent pool: when present, line 4's argsort runs as
+    /// the deterministic parallel merge sort (identical permutation, see
+    /// [`par_argsort_into`]); the tree sweeps themselves stay serial —
+    /// that is [`super::sharded::ShardedTreeOracle`]'s job.
+    pool: Option<Arc<WorkerPool>>,
+    sort_scratch: Vec<usize>,
     /// Per-phase timing (sort / sweep / assemble), for §Perf.
     pub phases: PhaseTimes,
 }
@@ -67,8 +75,18 @@ impl<T: RankCounter> GenericTreeOracle<T> {
             d: Vec::new(),
             p_sorted: Vec::new(),
             y_sorted: Vec::new(),
+            pool: None,
+            sort_scratch: Vec::new(),
             phases: PhaseTimes::new(),
         }
+    }
+
+    /// Run this oracle's argsort on a persistent pool (builder-style).
+    /// The permutation — and hence every count and float — is identical
+    /// to the serial sort; only the sort wall-clock changes.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     /// Compute the raw frequency vectors (`c`, `d`) of eqs. (5)–(6) into
@@ -84,7 +102,12 @@ impl<T: RankCounter> GenericTreeOracle<T> {
         // Line 4: π ← indices sorted ascending by p; gather p, y into
         // score order so the sweeps read sequentially (§Perf).
         let pi_buf = &mut self.pi;
-        self.phases.time("sort", || argsort_into(p, pi_buf));
+        let scratch = &mut self.sort_scratch;
+        let pool = self.pool.as_deref();
+        self.phases.time("sort", || match pool {
+            Some(pool) => par_argsort_into(p, pi_buf, scratch, pool),
+            None => argsort_into(p, pi_buf),
+        });
         self.p_sorted.clear();
         self.p_sorted.extend(self.pi.iter().map(|&k| p[k]));
         self.y_sorted.clear();
@@ -101,6 +124,11 @@ impl<T: RankCounter> GenericTreeOracle<T> {
         // the Pallas kernel) agrees bit-for-bit on boundary values —
         // the two paper forms can disagree under floating point when
         // score differences land exactly on the margin.
+        // NaN labels are incomparable: never inserted (a NaN key would
+        // sit structure-dependently in the counting tree) and counted
+        // zero as queries — matching [`super::sharded`] exactly, so a
+        // rogue NaN can neither panic nor make serial and sharded runs
+        // diverge.
         self.phases.time("sweep_c", || {
             self.counter.clear();
             let (ps, ys) = (&self.p_sorted, &self.y_sorted);
@@ -109,10 +137,13 @@ impl<T: RankCounter> GenericTreeOracle<T> {
                 let p_i = ps[i];
                 // i is the low-label candidate: violation ⇔ 1 + p_i − p_j > 0.
                 while j < m && 1.0 + p_i - ps[j] > 0.0 {
-                    self.counter.insert(ys[j]);
+                    if !ys[j].is_nan() {
+                        self.counter.insert(ys[j]);
+                    }
                     j += 1;
                 }
-                self.c[self.pi[i]] = self.counter.count_larger(ys[i]);
+                let yi = ys[i];
+                self.c[self.pi[i]] = if yi.is_nan() { 0 } else { self.counter.count_larger(yi) };
             }
         });
 
@@ -125,10 +156,13 @@ impl<T: RankCounter> GenericTreeOracle<T> {
                 let p_i = ps[i];
                 // i is the high-label candidate: violation ⇔ 1 + p_j − p_i > 0.
                 while j >= 0 && 1.0 + ps[j as usize] - p_i > 0.0 {
-                    self.counter.insert(ys[j as usize]);
+                    if !ys[j as usize].is_nan() {
+                        self.counter.insert(ys[j as usize]);
+                    }
                     j -= 1;
                 }
-                self.d[self.pi[i]] = self.counter.count_smaller(ys[i]);
+                let yi = ys[i];
+                self.d[self.pi[i]] = if yi.is_nan() { 0 } else { self.counter.count_smaller(yi) };
             }
         });
 
@@ -224,7 +258,8 @@ mod tests {
             let mut oracle = TreeOracle::new();
             let out = oracle.eval(&p, &y, n);
             let direct = naive_loss(&p, &y);
-            assert!((out.loss - direct).abs() < 1e-9 * (1.0 + direct), "{} vs {}", out.loss, direct);
+            let tol = 1e-9 * (1.0 + direct);
+            assert!((out.loss - direct).abs() < tol, "{} vs {}", out.loss, direct);
         }
     }
 
@@ -297,6 +332,23 @@ mod tests {
         let out = oracle.eval(&p, &y, n);
         assert_eq!(out.loss, 0.0);
         assert!(out.coeffs.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn pooled_argsort_variant_is_bit_identical() {
+        use std::sync::Arc;
+        let mut rng = Rng::new(99);
+        let m = 2000; // above the parallel-sort threshold
+        let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut serial = TreeOracle::new();
+        let pool = Arc::new(crate::runtime::pool::WorkerPool::new(4));
+        let mut pooled = TreeOracle::new().with_pool(pool);
+        let a = serial.eval(&p, &y, n);
+        let b = pooled.eval(&p, &y, n);
+        assert_eq!(a.coeffs, b.coeffs);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
     }
 
     #[test]

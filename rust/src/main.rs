@@ -29,6 +29,8 @@ USAGE:
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
   ranksvm info      (--data F | --synthetic K --m M)
   ranksvm mem-probe --dataset K --m M --method NAME [--lambda L] [--max-iter I]
+  ranksvm perf      [--sizes N,N,..] [--reps R] [--synthetic K]
+                    [--method tree|tree-fenwick|sharded|par-sort] [--threads T]
 
   synthetic kinds K: cadata | reuters | reuters-small | ordinal | queries"
     );
@@ -177,13 +179,18 @@ fn cmd_perf(args: &Args) -> Result<()> {
             for _ in 0..reps {
                 std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
             }
-            println!("{:>9} fenwick eval total: {:.2}ms", m, 1e3 * t.elapsed().as_secs_f64() / reps as f64);
+            let avg_ms = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+            println!("{m:>9} fenwick eval total: {avg_ms:.2}ms");
             continue;
         }
         if method == "sharded" {
-            // Sharded-oracle path: eval total at the requested thread count.
+            // Sharded-oracle path: eval total at the requested thread
+            // count, on one persistent pool reused across the reps (the
+            // trainer's arrangement — no per-call thread spawns).
             let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0));
-            let mut oracle = ranksvm::losses::ShardedTreeOracle::new(threads, None, &ds.y);
+            let pool = std::sync::Arc::new(ranksvm::runtime::WorkerPool::new(threads));
+            let mut oracle =
+                ranksvm::losses::ShardedTreeOracle::with_pool(pool, None, &ds.y);
             let mut p = vec![0.0; ds.len()];
             ds.x.matvec(&w, &mut p);
             std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
@@ -195,6 +202,36 @@ fn cmd_perf(args: &Args) -> Result<()> {
                 "{:>9} sharded({threads}) eval total: {:.2}ms",
                 m,
                 1e3 * t.elapsed().as_secs_f64() / reps as f64
+            );
+            continue;
+        }
+        if method == "par-sort" {
+            // Argsort probe: serial vs pooled parallel merge sort on the
+            // score vector (the Amdahl term the sharded oracle removes).
+            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0));
+            let pool = ranksvm::runtime::WorkerPool::new(threads);
+            let mut p = vec![0.0; ds.len()];
+            ds.x.matvec(&w, &mut p);
+            let mut idx = Vec::new();
+            let mut scratch = Vec::new();
+            ranksvm::linalg::ops::argsort_into(&p, &mut idx);
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                ranksvm::linalg::ops::argsort_into(&p, &mut idx);
+                std::hint::black_box(&idx);
+            }
+            let serial = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+            ranksvm::linalg::ops::par_argsort_into(&p, &mut idx, &mut scratch, &pool);
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                ranksvm::linalg::ops::par_argsort_into(&p, &mut idx, &mut scratch, &pool);
+                std::hint::black_box(&idx);
+            }
+            let par = 1e3 * t.elapsed().as_secs_f64() / reps as f64;
+            println!(
+                "{:>9} argsort serial: {serial:.2}ms  parallel({threads}): {par:.2}ms  ({:.2}×)",
+                m,
+                serial / par.max(1e-9)
             );
             continue;
         }

@@ -26,7 +26,7 @@ pub fn pairwise_error(pred: &[f64], y: &[f64]) -> f64 {
     // equal. Count via two Fenwick queries per example over compressed
     // prediction values.
     let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| y[a].partial_cmp(&y[b]).expect("NaN label"));
+    order.sort_unstable_by(|&a, &b| y[a].total_cmp(&y[b]).then(a.cmp(&b)));
     let f_larger = |f: &FenwickCounter, v: f64| f.count_larger(v);
     let f_smaller = |f: &FenwickCounter, v: f64| f.count_smaller(v);
 
@@ -121,9 +121,9 @@ pub fn ndcg_at_k(pred: &[f64], y: &[f64], k: usize) -> f64 {
             .sum()
     };
     let mut by_pred: Vec<usize> = (0..m).collect();
-    by_pred.sort_by(|&a, &b| pred[b].partial_cmp(&pred[a]).unwrap().then(a.cmp(&b)));
+    by_pred.sort_unstable_by(|&a, &b| pred[b].total_cmp(&pred[a]).then(a.cmp(&b)));
     let mut ideal: Vec<usize> = (0..m).collect();
-    ideal.sort_by(|&a, &b| y[b].partial_cmp(&y[a]).unwrap().then(a.cmp(&b)));
+    ideal.sort_unstable_by(|&a, &b| y[b].total_cmp(&y[a]).then(a.cmp(&b)));
     let idcg = dcg(&ideal);
     if idcg <= 0.0 {
         0.0
@@ -142,7 +142,7 @@ pub fn precision_at_k(pred: &[f64], y: &[f64], k: usize, threshold: f64) -> f64 
     }
     let k = k.min(m);
     let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| pred[b].partial_cmp(&pred[a]).unwrap().then(a.cmp(&b)));
+    order.sort_unstable_by(|&a, &b| pred[b].total_cmp(&pred[a]).then(a.cmp(&b)));
     order.iter().take(k).filter(|&&i| y[i] > threshold).count() as f64 / k as f64
 }
 

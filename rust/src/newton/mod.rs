@@ -73,7 +73,11 @@ pub struct NewtonResult {
 }
 
 /// Minimize the PRSVM objective with truncated Newton from `w0`.
-pub fn optimize<O: HessianOracle>(oracle: &mut O, cfg: &NewtonConfig, w0: Vec<f64>) -> NewtonResult {
+pub fn optimize<O: HessianOracle>(
+    oracle: &mut O,
+    cfg: &NewtonConfig,
+    w0: Vec<f64>,
+) -> NewtonResult {
     let n = oracle.dim();
     assert_eq!(w0.len(), n);
     let lambda = cfg.lambda;

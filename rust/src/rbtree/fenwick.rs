@@ -11,6 +11,18 @@
 //! the constant-factor difference; the RB tree remains the faithful
 //! reproduction of the paper (it needs no a-priori key universe).
 
+/// Collapse `−0.0` onto `+0.0` so the `total_cmp` rank order matches
+/// the numeric comparisons ([`count_smaller`](FenwickCounter::count_smaller)
+/// treats them as the tie they are numerically).
+#[inline]
+fn canon(key: f64) -> f64 {
+    if key == 0.0 {
+        0.0
+    } else {
+        key
+    }
+}
+
 /// Rank-compressed Fenwick counter over a fixed key universe.
 #[derive(Clone, Debug)]
 pub struct FenwickCounter {
@@ -25,8 +37,11 @@ impl FenwickCounter {
     /// Build from the (not necessarily sorted or unique) key universe.
     /// Keys inserted later must come from this universe.
     pub fn new(universe: &[f64]) -> Self {
-        let mut keys: Vec<f64> = universe.to_vec();
-        keys.sort_by(|a, b| a.partial_cmp(b).expect("NaN key in universe"));
+        let mut keys: Vec<f64> = universe.iter().map(|&k| canon(k)).collect();
+        // total_cmp: a NaN in the universe sorts (deterministically) to
+        // the end instead of panicking; on canonicalized keys the total
+        // order agrees with the numeric order the counters implement.
+        keys.sort_unstable_by(|a, b| a.total_cmp(b));
         keys.dedup();
         let r = keys.len();
         FenwickCounter { keys, tree: vec![0; r + 1], len: 0 }
@@ -54,8 +69,9 @@ impl FenwickCounter {
     /// Rank of `key` in the universe (0-based). Panics if absent.
     #[inline]
     fn rank(&self, key: f64) -> usize {
+        let key = canon(key);
         self.keys
-            .binary_search_by(|probe| probe.partial_cmp(&key).unwrap())
+            .binary_search_by(|probe| probe.total_cmp(&key))
             .unwrap_or_else(|_| panic!("key {key} not in the compressed universe"))
     }
 

@@ -27,8 +27,9 @@ impl XlaRuntime {
     /// Open the artifact directory (must contain `manifest.txt`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.txt"))
-            .with_context(|| format!("loading manifest from {} — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::load(dir.join("manifest.txt")).with_context(|| {
+            format!("loading manifest from {} — run `make artifacts`", dir.display())
+        })?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
         Ok(XlaRuntime { client, dir, manifest, cache: HashMap::new() })
     }

@@ -1,4 +1,11 @@
-//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//! Execution runtime: the persistent worker pool behind every parallel
+//! region in the crate, plus the PJRT loader for the AOT-compiled XLA
+//! artifacts.
+//!
+//! [`pool::WorkerPool`] is created once per trainer (sized by
+//! `TrainConfig.n_threads`) and shared by the sharded oracle, the
+//! parallel compute backend, and the parallel argsort — replacing the
+//! per-call `std::thread::scope` spawns of PR 1.
 //!
 //! `python/compile/aot.py` lowers the JAX/Pallas compute graphs (L1/L2)
 //! once, at build time, to **HLO text** under `artifacts/` together with
@@ -16,8 +23,10 @@
 //! don't need a device runtime).
 
 mod manifest;
+pub mod pool;
 
 pub use manifest::{Manifest, ManifestEntry};
+pub use pool::{Task, WorkerPool};
 
 #[cfg(feature = "xla")]
 mod backend;

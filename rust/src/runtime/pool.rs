@@ -1,0 +1,360 @@
+//! Persistent scoped worker pool.
+//!
+//! PR 1 parallelized the subgradient oracle and the `O(ms)` matvecs with
+//! `std::thread::scope`, which respawns every worker on every call. The
+//! spawn cost is only microseconds, but a BMRM run makes `3 × iterations`
+//! parallel calls (scores, oracle, gradient), and the respawn tax scales
+//! with the iteration count rather than the data — exactly the overhead
+//! the ROADMAP shard-architecture item schedules for removal. This module
+//! replaces the per-call scopes with **one pool per trainer**: `N − 1`
+//! background threads created once (sized by `TrainConfig.n_threads`) and
+//! reused by every parallel region until the pool is dropped.
+//!
+//! The API is scope-shaped: [`WorkerPool::run`] takes a batch of
+//! closures that may borrow caller stack data (`'env`), executes them on
+//! the pool plus the calling thread, and returns only once every closure
+//! has finished — the same lifetime guarantee `std::thread::scope`
+//! provides, with the threads themselves outliving the call. Determinism
+//! is unaffected by scheduling: every call site hands the pool closures
+//! whose writes target disjoint buffers and performs its floating-point
+//! reductions serially afterwards (see `losses/sharded.rs` and
+//! `compute::ParallelBackend`), so *which* thread runs a task never
+//! influences a result bit.
+//!
+//! With one worker (`n_threads == 1`) the pool spawns no threads at all
+//! and `run` degenerates to an in-place loop, keeping the serial path
+//! free of synchronization.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of pool work. The `'env` lifetime lets tasks borrow from the
+/// submitting stack frame; [`WorkerPool::run`] erases it only for the
+/// bounded interval during which it blocks on task completion.
+pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<StaticTask>,
+    /// Tasks popped from the queue but not yet finished.
+    active: usize,
+    /// Tasks of the current batch that panicked (the payload is dropped;
+    /// the batch submitter re-raises a summary panic).
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for tasks.
+    work_cv: Condvar,
+    /// The batch submitter waits here for the last task to finish.
+    done_cv: Condvar,
+    /// Serializes whole batches: concurrent `run` calls from different
+    /// threads queue up here instead of interleaving their tasks (and
+    /// their panic accounting) in the shared queue.
+    batch: Mutex<()>,
+}
+
+impl PoolShared {
+    /// Execute one task, keeping the completion accounting correct even
+    /// when the task panics.
+    fn run_task(&self, task: StaticTask) {
+        let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+        let mut st = self.state.lock().unwrap();
+        st.active -= 1;
+        if !ok {
+            st.panicked += 1;
+        }
+        if st.active == 0 && st.queue.is_empty() {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// A persistent pool of `n_threads − 1` background workers plus the
+/// calling thread. Create once (per trainer / oracle / backend), submit
+/// many batches; threads are joined on drop.
+pub struct WorkerPool {
+    n_threads: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `n_threads` total workers (the calling thread
+    /// participates in every batch, so `n_threads − 1` threads are
+    /// spawned; `0` and `1` both mean fully inline execution).
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                active: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            batch: Mutex::new(()),
+        });
+        let handles = (1..n_threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ranksvm-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { n_threads, shared, handles }
+    }
+
+    /// Total workers, counting the calling thread.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Execute a batch of tasks, blocking until every task has finished
+    /// (or panicked). Tasks may borrow from the caller's stack: the
+    /// completion barrier below guarantees no task outlives `'env`.
+    ///
+    /// Tasks run concurrently on the pool threads and on the calling
+    /// thread; submit tasks whose writes are disjoint. If any task
+    /// panics, the remaining tasks still run to completion and `run`
+    /// then panics (mirroring `std::thread::scope` semantics).
+    ///
+    /// Reentrant submission (calling `run` from inside a task) is not
+    /// supported and may deadlock.
+    pub fn run<'env>(&self, tasks: Vec<Task<'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        // Inline path: single worker, or a single task — nothing to
+        // schedule. (Panics propagate directly, same net effect.)
+        if self.handles.is_empty() || tasks.len() == 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        // SAFETY: the only use of the erased tasks is inside this call:
+        // they are either executed below on this thread or drained by
+        // worker threads, and `run` does not return until the queue is
+        // empty and `active == 0` — i.e. until every task (including
+        // panicked ones, via `run_task`'s accounting) has completed.
+        // Borrows captured at `'env` therefore strictly outlive every
+        // task execution.
+        let tasks: Vec<StaticTask> = tasks
+            .into_iter()
+            .map(|t| unsafe { std::mem::transmute::<Task<'env>, StaticTask>(t) })
+            .collect();
+
+        // One batch at a time: a second thread calling `run` blocks here
+        // until the current batch fully drains, so batches can never
+        // interleave tasks or clobber each other's panic accounting.
+        // (A task calling `run` on its own pool would deadlock on this
+        // lock — reentrancy is documented as unsupported.) The guard
+        // protects no data, so a poisoned lock (possible only through a
+        // panicking caller) is safe to recover.
+        let batch = self.shared.batch.lock().unwrap_or_else(|e| e.into_inner());
+
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert!(
+            st.queue.is_empty() && st.active == 0,
+            "WorkerPool::run is not reentrant"
+        );
+        st.panicked = 0;
+        st.queue.extend(tasks);
+        drop(st);
+        self.shared.work_cv.notify_all();
+
+        // The calling thread participates until the batch drains, then
+        // waits for stragglers running on pool threads.
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(task) = st.queue.pop_front() {
+                st.active += 1;
+                drop(st);
+                self.shared.run_task(task);
+                st = self.shared.state.lock().unwrap();
+            } else if st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            } else {
+                break;
+            }
+        }
+        let panicked = st.panicked;
+        st.panicked = 0;
+        drop(st);
+        // Release the batch lock *before* re-raising so a panicked batch
+        // does not poison it (the pool stays usable afterwards).
+        drop(batch);
+        if panicked > 0 {
+            panic!("{panicked} worker-pool task(s) panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(task) = st.queue.pop_front() {
+                    st.active += 1;
+                    break task;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        shared.run_task(task);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn boxed<'env>(f: impl FnOnce() + Send + 'env) -> Task<'env> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn runs_all_tasks_with_borrowed_state() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 64];
+        {
+            let mut tasks: Vec<Task> = Vec::new();
+            let mut rest: &mut [usize] = &mut out;
+            let mut base = 0;
+            for _ in 0..8 {
+                let (head, tail) = { rest }.split_at_mut(8);
+                let lo = base;
+                tasks.push(boxed(move || {
+                    for (k, slot) in head.iter_mut().enumerate() {
+                        *slot = lo + k;
+                    }
+                }));
+                rest = tail;
+                base += 8;
+            }
+            pool.run(tasks);
+        }
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_batches() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..200 {
+            let tasks: Vec<Task> = (0..5)
+                .map(|_| {
+                    boxed(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn single_thread_pool_spawns_nothing_and_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.n_threads(), 1);
+        let tid = std::thread::current().id();
+        let mut seen = Vec::new();
+        {
+            let seen_ref = &mut seen;
+            pool.run(vec![boxed(move || seen_ref.push(std::thread::current().id()))]);
+        }
+        assert_eq!(seen, vec![tid]);
+    }
+
+    #[test]
+    fn zero_means_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.n_threads(), 1);
+        pool.run(vec![boxed(|| {})]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(4);
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn task_panic_propagates_after_batch_completes() {
+        let pool = WorkerPool::new(4);
+        let finished = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task> = (0..8)
+                .map(|i| {
+                    let finished = &finished;
+                    boxed(move || {
+                        if i == 3 {
+                            panic!("boom");
+                        }
+                        finished.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert!(result.is_err());
+        // Every non-panicking task still ran (the barrier held).
+        assert_eq!(finished.load(Ordering::Relaxed), 7);
+        // The pool stays usable after a panicked batch.
+        let counter = AtomicUsize::new(0);
+        pool.run(
+            (0..4)
+                .map(|_| {
+                    let counter = &counter;
+                    boxed(move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect(),
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(8);
+        let counter = AtomicUsize::new(0);
+        pool.run(
+            (0..32)
+                .map(|_| {
+                    let counter = &counter;
+                    boxed(move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    })
+                })
+                .collect(),
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+        drop(pool); // must not hang
+    }
+}

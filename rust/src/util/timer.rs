@@ -95,7 +95,7 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn from_times(mut times: Vec<f64>) -> Self {
         assert!(!times.is_empty());
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_unstable_by(|a, b| a.total_cmp(b));
         let min = times[0];
         let median = times[times.len() / 2];
         let mean = times.iter().sum::<f64>() / times.len() as f64;

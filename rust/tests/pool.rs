@@ -1,0 +1,221 @@
+//! Persistent-pool lockdown: the pooled oracle, the pooled backend, and
+//! the parallel argsort must be bitwise identical to the serial paths at
+//! 1/2/8 threads — not just for single calls but across repeated
+//! evaluations on one long-lived pool, the way a BMRM run uses them.
+//! Plus regression tests for the NaN-ordering and libsvm parser fixes.
+
+use ranksvm::compute::{ComputeBackend, NativeBackend, ParallelBackend};
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::{libsvm, synthetic};
+use ranksvm::linalg::ops::{argsort, argsort_into, par_argsort_into, PAR_SORT_MIN};
+use ranksvm::losses::{count_comparable_pairs, RankingOracle, ShardedTreeOracle, TreeOracle};
+use ranksvm::runtime::WorkerPool;
+use ranksvm::util::rng::Rng;
+use std::sync::Arc;
+
+/// A full BMRM training run on one shared pool must be bit-identical to
+/// the single-threaded run — the pool only moves work between threads,
+/// never across a floating-point reduction boundary.
+#[test]
+fn pooled_training_is_bitwise_invariant_to_thread_count() {
+    for (ds, tag) in [
+        (synthetic::cadata_like(400, 1101), "global"),
+        (synthetic::queries(15, 16, 6, 1102), "grouped"),
+    ] {
+        let mut reference: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 8] {
+            let cfg = TrainConfig {
+                method: Method::Tree,
+                lambda: 0.1,
+                epsilon: 1e-3,
+                n_threads: threads,
+                ..Default::default()
+            };
+            let out = train(&ds, &cfg).unwrap();
+            assert!(out.converged, "{tag}: {threads} threads");
+            match &reference {
+                None => reference = Some(out.model.w),
+                Some(w) => assert_eq!(&out.model.w, w, "{tag}: {threads} threads"),
+            }
+        }
+    }
+}
+
+/// The trainer's arrangement in miniature: one pool shared by the
+/// sharded oracle and the parallel backend, driven through many
+/// score/oracle/grad rounds with evolving weights. Every round must
+/// match the serial oracle bit-for-bit — this exercises pool *reuse*
+/// (buffer state surviving batches), not just a single dispatch.
+#[test]
+fn shared_pool_oracle_and_backend_match_serial_across_iterations() {
+    let ds = synthetic::cadata_like(600, 1203);
+    let n_pairs = count_comparable_pairs(&ds.y) as f64;
+    for threads in [1usize, 2, 8] {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let mut oracle = ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &ds.y);
+        let mut backend = ParallelBackend::with_pool(Arc::clone(&pool));
+        backend.prepare(&ds.x);
+        let mut serial_oracle = TreeOracle::new();
+        let mut serial_backend = NativeBackend::new();
+        serial_backend.prepare(&ds.x);
+
+        let mut w = vec![0.0; ds.dim()];
+        for round in 0..6 {
+            let p = backend.scores(&ds.x, &w);
+            let p_ref = serial_backend.scores(&ds.x, &w);
+            assert_eq!(p, p_ref, "{threads} threads, round {round}: scores");
+
+            let got = oracle.eval(&p, &ds.y, n_pairs);
+            let expect = serial_oracle.eval(&p, &ds.y, n_pairs);
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} threads, round {round}");
+            assert_eq!(
+                got.loss.to_bits(),
+                expect.loss.to_bits(),
+                "{threads} threads, round {round}"
+            );
+
+            // Subgradient step (any deterministic update works — the
+            // point is that p changes every round).
+            let g = backend.grad(&ds.x, &got.coeffs);
+            for (wi, gi) in w.iter_mut().zip(&g) {
+                *wi -= 0.5 * gi;
+            }
+        }
+    }
+}
+
+/// par_argsort_into on a long-lived pool, called back to back with
+/// changing data and sizes (the oracle's per-iteration pattern), stays
+/// bitwise equal to the serial argsort.
+#[test]
+fn par_argsort_matches_serial_across_repeated_pool_use() {
+    let mut rng = Rng::new(1301);
+    for threads in [1usize, 2, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut idx = Vec::new();
+        let mut scratch = Vec::new();
+        for round in 0..10 {
+            let m = PAR_SORT_MIN / 2 + rng.below(3 * PAR_SORT_MIN);
+            let v: Vec<f64> = match round % 3 {
+                0 => (0..m).map(|_| rng.normal()).collect(),
+                1 => (0..m).map(|_| rng.below(9) as f64).collect(),
+                _ => (0..m).map(|i| (i % 17) as f64 - 8.0).collect(),
+            };
+            let mut expect = Vec::new();
+            argsort_into(&v, &mut expect);
+            par_argsort_into(&v, &mut idx, &mut scratch, &pool);
+            assert_eq!(idx, expect, "{threads} threads, round {round}, m={m}");
+        }
+    }
+}
+
+/// The pooled tree oracle (parallel argsort, serial sweeps) is a drop-in
+/// replacement for the plain serial oracle.
+#[test]
+fn pooled_tree_oracle_bit_identical_to_serial() {
+    let mut rng = Rng::new(1401);
+    let m = 3000;
+    let y: Vec<f64> = (0..m).map(|_| rng.below(5) as f64).collect();
+    let n = count_comparable_pairs(&y) as f64;
+    let pool = Arc::new(WorkerPool::new(4));
+    let mut serial = TreeOracle::new();
+    let mut pooled = TreeOracle::new().with_pool(pool);
+    for round in 0..4 {
+        let p: Vec<f64> = (0..m).map(|_| rng.normal() * (round + 1) as f64).collect();
+        let a = serial.eval(&p, &y, n);
+        let b = pooled.eval(&p, &y, n);
+        assert_eq!(a.coeffs, b.coeffs, "round {round}");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {round}");
+    }
+}
+
+/// Degenerate all-scores-within-one-margin inputs (every window spans
+/// the whole sorted order) must still be exact for every thread count —
+/// and they now redistribute across shards instead of collapsing onto
+/// one worker, so a large degenerate eval is safe to run wide.
+#[test]
+fn degenerate_margin_case_exact_at_all_thread_counts() {
+    let mut rng = Rng::new(1501);
+    let m = 4096;
+    let y: Vec<f64> = (0..m).map(|_| rng.below(7) as f64).collect();
+    // All scores in [0, 1e-3]: every pair is within the unit margin.
+    let p: Vec<f64> = (0..m).map(|_| rng.below(1000) as f64 * 1e-6).collect();
+    let n = count_comparable_pairs(&y) as f64;
+    let mut reference = TreeOracle::new();
+    let expect = reference.eval(&p, &y, n);
+    for threads in [1usize, 2, 8] {
+        let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+        let got = sharded.eval(&p, &y, n);
+        assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} threads");
+    }
+}
+
+// ---------- NaN-ordering regressions (total_cmp satellite) ----------
+
+#[test]
+fn nan_scores_no_longer_panic_sorts() {
+    // argsort: NaN orders after +inf, deterministically.
+    let v = [1.0, f64::NAN, 0.5, f64::INFINITY];
+    assert_eq!(argsort(&v), vec![2, 0, 3, 1]);
+
+    // Metrics: a NaN prediction produces a (well-defined) number instead
+    // of a mid-training panic.
+    let y = [1.0, 2.0, 3.0];
+    let p = [0.0, f64::NAN, 1.0];
+    let e = ranksvm::metrics::pairwise_error(&p, &y);
+    assert!(e.is_finite());
+    let _ = ranksvm::metrics::ndcg_at_k(&p, &y, 3);
+    let _ = ranksvm::metrics::precision_at_k(&p, &y, 2, 0.5);
+
+    // BenchStats over a NaN timing sample.
+    let s = ranksvm::util::timer::BenchStats::from_times(vec![1.0, f64::NAN, 2.0]);
+    assert_eq!(s.min, 1.0);
+}
+
+#[test]
+fn nan_label_no_longer_panics_metrics_or_counts() {
+    let y = [1.0, f64::NAN, 2.0];
+    let p = [0.1, 0.2, 0.3];
+    let _ = ranksvm::metrics::pairwise_error(&p, &y);
+    // count_comparable_pairs sorts labels: must not panic either.
+    let _ = count_comparable_pairs(&y);
+}
+
+#[test]
+fn rank_model_with_nan_score_is_deterministic() {
+    use ranksvm::coordinator::RankModel;
+    let ds = synthetic::cadata_like(8, 9);
+    // A NaN weight poisons every score; rank() must still return a
+    // deterministic permutation of all examples.
+    let model = RankModel::new(vec![f64::NAN; ds.dim()]);
+    let order = model.rank(&ds);
+    let mut sorted = order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..ds.len()).collect::<Vec<_>>());
+}
+
+// ---------- libsvm parser regressions ----------
+
+#[test]
+fn parser_rejects_nan_inf_and_disordered_rows_with_line_numbers() {
+    let cases = [
+        ("1 1:1.0\nnan 1:1.0\n", "t:2"),
+        ("1 1:inf\n", "t:1"),
+        ("1 1:1.0 1:2.0\n", "t:1"),
+        ("1 1:1.0\n2 5:1.0 3:1.0\n", "t:2"),
+    ];
+    for (text, frag) in cases {
+        let err = libsvm::parse(std::io::Cursor::new(text), "t").unwrap_err();
+        assert!(err.to_string().contains(frag), "{text:?} → {err}");
+    }
+}
+
+#[test]
+fn parser_accepts_trailing_qid_and_crlf() {
+    let text = "2 1:0.5 2:1.5 qid:3\r\n1 qid:3 1:0.25\r\n";
+    let ds = libsvm::parse(std::io::Cursor::new(text), "t").unwrap();
+    assert_eq!(ds.len(), 2);
+    assert_eq!(ds.qid, Some(vec![3, 3]));
+    assert_eq!(ds.y, vec![2.0, 1.0]);
+}
