@@ -81,11 +81,11 @@ fn main() {
         ("csr-scatter", NativeBackend::new()),
         ("csr+csc-gather", NativeBackend::with_csc()),
     ] {
-        backend.prepare(&ds.x);
-        std::hint::black_box(backend.grad(&ds.x, &coeffs));
+        backend.prepare(ds.x.view());
+        std::hint::black_box(backend.grad(ds.x.view(), &coeffs));
         let t = std::time::Instant::now();
         for _ in 0..5 {
-            std::hint::black_box(backend.grad(&ds.x, &coeffs));
+            std::hint::black_box(backend.grad(ds.x.view(), &coeffs));
         }
         let secs = t.elapsed().as_secs_f64() / 5.0;
         println!("{label:<16} grad: {}", fmt_secs(secs));

@@ -31,6 +31,35 @@ pub fn header(title: &str) {
     println!("================================================================");
 }
 
+/// Real-data hook: when `RANKSVM_DATA` names a dataset file (libsvm
+/// text or, ideally, a `.pstore` pallas store — autodetected by magic
+/// bytes), the scalability benches add a panel over growing prefixes of
+/// it. A store is memory-mapped, so those prefixes are O(1) zero-copy
+/// slices — convert once with `ranksvm convert`, bench forever.
+pub fn data_from_env() -> Option<ranksvm::data::LoadedDataset> {
+    let path = std::env::var("RANKSVM_DATA").ok()?;
+    match ranksvm::data::load_auto(&path) {
+        Ok(loaded) => Some(loaded),
+        Err(e) => {
+            eprintln!("RANKSVM_DATA={path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Doubling prefix grid for a real dataset of `m` examples: 1000, 2000,
+/// … capped at (and always including) `m` itself.
+pub fn prefix_grid(m: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut s = 1000usize;
+    while s < m {
+        sizes.push(s);
+        s *= 2;
+    }
+    sizes.push(m);
+    sizes
+}
+
 /// Format seconds adaptively.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {

@@ -10,11 +10,11 @@
 
 mod common;
 
-use common::{fmt_secs, full_scale, header, record};
+use common::{data_from_env, fmt_secs, full_scale, header, prefix_grid, record};
 use ranksvm::bmrm::ScoreOracle;
 use ranksvm::coordinator::trainer::DatasetOracle;
 use ranksvm::compute::NativeBackend;
-use ranksvm::data::{synthetic, Dataset};
+use ranksvm::data::{synthetic, Dataset, DatasetView};
 use ranksvm::losses::{
     count_comparable_pairs, PairOracle, RankingOracle, ShardedTreeOracle, TreeOracle,
 };
@@ -27,13 +27,14 @@ fn host_threads() -> usize {
 }
 
 /// Average full oracle cost (matvec + loss/subgradient + grad assembly)
-/// over `reps` evaluations at a nontrivial w.
-fn oracle_cost(ds: &Dataset, oracle: Box<dyn RankingOracle>, reps: usize) -> f64 {
-    let n_pairs = count_comparable_pairs(&ds.y) as f64;
+/// over `reps` evaluations at a nontrivial w. Takes any [`DatasetView`]
+/// — an owned synthetic set or a zero-copy slice of a mapped store.
+fn oracle_cost(ds: &dyn DatasetView, oracle: Box<dyn RankingOracle>, reps: usize) -> f64 {
+    let n_pairs = count_comparable_pairs(ds.y()) as f64;
     let mut dso = DatasetOracle::new(ds, Box::new(NativeBackend::new()), oracle, n_pairs);
     // Nontrivial weight vector: one least-squares-flavoured step.
     let mut w = vec![0.0; ds.dim()];
-    ds.x.matvec_t(&ds.y, &mut w);
+    ds.x().matvec_t(ds.y(), &mut w);
     let norm = ranksvm::linalg::ops::norm(&w).max(1e-12);
     ranksvm::linalg::ops::scal(1.0 / norm, &mut w);
 
@@ -71,37 +72,49 @@ fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap:
     );
     for &m in sizes {
         let ds = make(m);
-        let reps = if m <= 4000 { 5 } else { 2 };
-        let tree = oracle_cost(&ds, Box::new(TreeOracle::new()), reps);
-        let sharded_oracle = ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &ds.y);
-        let sharded = oracle_cost(&ds, Box::new(sharded_oracle), reps);
-        let (pair, speedup) = if m <= pair_cap {
-            let p = oracle_cost(&ds, Box::new(PairOracle::new()), reps.min(3));
-            (Some(p), p / tree)
-        } else {
-            (None, f64::NAN)
-        };
-        println!(
-            "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
-            m,
-            fmt_secs(tree),
-            fmt_secs(sharded),
-            pair.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
-            format!("{:.2}×", tree / sharded.max(1e-12)),
-            if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}×") },
-        );
-        record(
-            "fig1_iteration_cost",
-            Json::obj(vec![
-                ("panel", name.into()),
-                ("m", m.into()),
-                ("tree_secs", tree.into()),
-                ("sharded_secs", sharded.into()),
-                ("threads", threads.into()),
-                ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
-            ]),
-        );
+        size_row(name, &ds, m, &pool, threads, pair_cap);
     }
+}
+
+/// One measured size within a panel.
+fn size_row(
+    name: &str,
+    ds: &dyn DatasetView,
+    m: usize,
+    pool: &Arc<WorkerPool>,
+    threads: usize,
+    pair_cap: usize,
+) {
+    let reps = if m <= 4000 { 5 } else { 2 };
+    let tree = oracle_cost(ds, Box::new(TreeOracle::new()), reps);
+    let sharded_oracle = ShardedTreeOracle::with_pool(Arc::clone(pool), None, ds.y());
+    let sharded = oracle_cost(ds, Box::new(sharded_oracle), reps);
+    let (pair, speedup) = if m <= pair_cap {
+        let p = oracle_cost(ds, Box::new(PairOracle::new()), reps.min(3));
+        (Some(p), p / tree)
+    } else {
+        (None, f64::NAN)
+    };
+    println!(
+        "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        m,
+        fmt_secs(tree),
+        fmt_secs(sharded),
+        pair.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
+        format!("{:.2}×", tree / sharded.max(1e-12)),
+        if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}×") },
+    );
+    record(
+        "fig1_iteration_cost",
+        Json::obj(vec![
+            ("panel", name.into()),
+            ("m", m.into()),
+            ("tree_secs", tree.into()),
+            ("sharded_secs", sharded.into()),
+            ("threads", threads.into()),
+            ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
+        ]),
+    );
 }
 
 fn main() {
@@ -119,6 +132,22 @@ fn main() {
 
     panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, pair_cap);
     panel("reuters", &|m| synthetic::reuters_like(m, 200), &reuters_sizes, pair_cap);
+
+    // Real-data panel: growing zero-copy prefixes of a mapped store
+    // (RANKSVM_DATA=foo.pstore — convert once, mmap forever).
+    if let Some(loaded) = data_from_env() {
+        let view = loaded.view();
+        let threads = host_threads();
+        let pool = Arc::new(WorkerPool::new(threads));
+        header(&format!(
+            "Fig 1 ({}): avg subgradient cost per iteration, growing prefixes",
+            view.name()
+        ));
+        for m in prefix_grid(view.len()) {
+            let prefix = view.prefix_view(m);
+            size_row(view.name(), &prefix, m, &pool, threads, pair_cap);
+        }
+    }
 
     println!("\nExpected shape (paper): tree ≈ m·log m (near-linear rows), pair ≈ m²");
     println!("(4× more data → pair column grows ~16×, tree column ~4–5×).");

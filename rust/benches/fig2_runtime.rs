@@ -9,12 +9,12 @@
 
 mod common;
 
-use common::{fmt_secs, full_scale, header, record};
+use common::{data_from_env, fmt_secs, full_scale, header, prefix_grid, record};
 use ranksvm::coordinator::{train, Method, TrainConfig};
-use ranksvm::data::{synthetic, Dataset};
+use ranksvm::data::{synthetic, Dataset, DatasetView};
 use ranksvm::util::json::Json;
 
-fn run(ds: &Dataset, method: Method, lambda: f64) -> (f64, usize, bool) {
+fn run(ds: &dyn DatasetView, method: Method, lambda: f64) -> (f64, usize, bool) {
     let cfg = TrainConfig { method, lambda, epsilon: 1e-3, ..Default::default() };
     let out = train(ds, &cfg).expect("training failed");
     (out.train_secs, out.iterations, out.converged)
@@ -85,6 +85,33 @@ fn main() {
 
     panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, 1e-1, &cadata_caps);
     panel("reuters", &|m| synthetic::reuters_like(m, 200), &reuters_sizes, 1e-5, &reuters_caps);
+
+    // Real-data panel: train-to-convergence on growing zero-copy
+    // prefixes of a mapped store (RANKSVM_DATA=foo.pstore).
+    if let Some(loaded) = data_from_env() {
+        let view = loaded.view();
+        header(&format!(
+            "Fig 2 ({}): training runtime to convergence, growing prefixes",
+            view.name()
+        ));
+        println!("{:>9} {:>14} {:>7} {:>10}", "m", "tree", "iters", "converged");
+        for m in prefix_grid(view.len()) {
+            let prefix = view.prefix_view(m);
+            let (secs, iters, converged) = run(&prefix, Method::Tree, 1e-4);
+            println!("{m:>9} {:>14} {iters:>7} {converged:>10}", fmt_secs(secs));
+            record(
+                "fig2_runtime",
+                Json::obj(vec![
+                    ("panel", view.name().into()),
+                    ("m", m.into()),
+                    ("method", Method::Tree.name().into()),
+                    ("secs", secs.into()),
+                    ("iterations", iters.into()),
+                    ("converged", converged.into()),
+                ]),
+            );
+        }
+    }
 
     println!("\nExpected shape (paper): TreeRSVM orders of magnitude below the");
     println!("quadratic methods at large m; r ≈ m makes rlevel ≈ pair here.");

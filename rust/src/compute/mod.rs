@@ -8,21 +8,25 @@
 //! (`runtime::XlaBackend`, behind the `xla` feature). Python is never on
 //! this path: the XLA backend loads pre-built `artifacts/*.hlo.txt`.
 
-use crate::linalg::{CscMatrix, CsrMatrix};
+use crate::linalg::{CscMatrix, CsrView};
 use crate::runtime::pool::{Task, WorkerPool};
 use std::sync::Arc;
 
 /// Backend interface. `prepare` is called once per dataset so backends
 /// can build auxiliary structures (CSC copy, padded dense tiles, device
 /// buffers) off the hot path.
+///
+/// The matrix arrives as a borrowed [`CsrView`], so one backend serves
+/// both owned in-memory datasets and memory-mapped pallas stores with
+/// zero copies.
 pub trait ComputeBackend {
     fn name(&self) -> &'static str;
     /// One-time per-dataset setup.
-    fn prepare(&mut self, _x: &CsrMatrix) {}
+    fn prepare(&mut self, _x: CsrView<'_>) {}
     /// `p = X·w` (length = rows).
-    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64>;
+    fn scores(&mut self, x: CsrView<'_>, w: &[f64]) -> Vec<f64>;
     /// `a = Xᵀ·coeffs` (length = cols).
-    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64>;
+    fn grad(&mut self, x: CsrView<'_>, coeffs: &[f64]) -> Vec<f64>;
 }
 
 /// Native Rust kernels. With `use_csc`, the gradient runs over a
@@ -59,19 +63,19 @@ impl ComputeBackend for NativeBackend {
         }
     }
 
-    fn prepare(&mut self, x: &CsrMatrix) {
+    fn prepare(&mut self, x: CsrView<'_>) {
         if self.use_csc {
             self.csc = Some(x.to_csc());
         }
     }
 
-    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
+    fn scores(&mut self, x: CsrView<'_>, w: &[f64]) -> Vec<f64> {
         let mut p = vec![0.0; x.rows()];
         x.matvec(w, &mut p);
         p
     }
 
-    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
+    fn grad(&mut self, x: CsrView<'_>, coeffs: &[f64]) -> Vec<f64> {
         let mut a = vec![0.0; x.cols()];
         match (&self.csc, self.use_csc) {
             (Some(csc), true) => csc.matvec_t(coeffs, &mut a),
@@ -85,7 +89,12 @@ impl ComputeBackend for NativeBackend {
 /// (independent of the thread count and the data) so the reduction
 /// topology — and therefore the floating-point result — is stable: the
 /// same dataset and coefficients produce bit-identical gradients whether
-/// one thread or sixteen execute the chunks.
+/// one thread or sixteen execute the chunks. Deliberately *not* the
+/// adaptive [`crate::linalg::ops::adaptive_chunks`] plan: the gradient's
+/// partial sums re-associate with the chunk plan, so an adaptive count
+/// would break bit-identity across thread counts. (The argsort and the
+/// sharded oracle are adaptive because their results are exact for any
+/// chunking.)
 const GRAD_CHUNKS: usize = 16;
 
 /// Multi-threaded native kernels on a persistent [`WorkerPool`].
@@ -135,7 +144,7 @@ impl ComputeBackend for ParallelBackend {
         "native-par"
     }
 
-    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
+    fn scores(&mut self, x: CsrView<'_>, w: &[f64]) -> Vec<f64> {
         assert_eq!(w.len(), x.cols());
         let m = x.rows();
         let mut out = vec![0.0; m];
@@ -167,7 +176,7 @@ impl ComputeBackend for ParallelBackend {
         out
     }
 
-    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
+    fn grad(&mut self, x: CsrView<'_>, coeffs: &[f64]) -> Vec<f64> {
         let m = x.rows();
         let n = x.cols();
         assert_eq!(coeffs.len(), m);
@@ -246,12 +255,12 @@ mod tests {
 
         let mut plain = NativeBackend::new();
         let mut twocopy = NativeBackend::with_csc();
-        plain.prepare(&x);
-        twocopy.prepare(&x);
+        plain.prepare(x.view());
+        twocopy.prepare(x.view());
 
-        assert_eq!(plain.scores(&x, &w), twocopy.scores(&x, &w));
-        let g1 = plain.grad(&x, &c);
-        let g2 = twocopy.grad(&x, &c);
+        assert_eq!(plain.scores(x.view(), &w), twocopy.scores(x.view(), &w));
+        let g1 = plain.grad(x.view(), &c);
+        let g2 = twocopy.grad(x.view(), &c);
         for (a, b) in g1.iter().zip(&g2) {
             assert!((a - b).abs() < 1e-10);
         }
@@ -273,17 +282,17 @@ mod tests {
         let c: Vec<f64> = (0..137).map(|_| rng.normal()).collect();
 
         let mut serial = NativeBackend::new();
-        serial.prepare(&x);
-        let p_ref = serial.scores(&x, &w);
-        let g_ref = serial.grad(&x, &c);
+        serial.prepare(x.view());
+        let p_ref = serial.scores(x.view(), &w);
+        let g_ref = serial.grad(x.view(), &c);
 
         let mut g_one: Option<Vec<f64>> = None;
         for threads in [1, 2, 5, 32] {
             let mut par = ParallelBackend::new(threads);
-            par.prepare(&x);
+            par.prepare(x.view());
             // Scores are per-row dot products: bit-identical to serial.
-            assert_eq!(par.scores(&x, &w), p_ref, "{threads} threads");
-            let g = par.grad(&x, &c);
+            assert_eq!(par.scores(x.view(), &w), p_ref, "{threads} threads");
+            let g = par.grad(x.view(), &c);
             for (a, b) in g.iter().zip(&g_ref) {
                 assert!((a - b).abs() < 1e-10, "{threads} threads: {a} vs {b}");
             }
@@ -300,12 +309,12 @@ mod tests {
     fn parallel_backend_degenerate_shapes() {
         let x = CsrMatrix::from_triplets(0, 3, vec![]);
         let mut par = ParallelBackend::new(4);
-        assert!(par.scores(&x, &[0.0; 3]).is_empty());
-        assert_eq!(par.grad(&x, &[]), vec![0.0; 3]);
+        assert!(par.scores(x.view(), &[0.0; 3]).is_empty());
+        assert_eq!(par.grad(x.view(), &[]), vec![0.0; 3]);
 
         let x = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]);
         let mut par = ParallelBackend::new(8);
-        assert_eq!(par.scores(&x, &[3.0, 4.0]), vec![3.0, 8.0]);
-        assert_eq!(par.grad(&x, &[1.0, 1.0]), vec![1.0, 2.0]);
+        assert_eq!(par.scores(x.view(), &[3.0, 4.0]), vec![3.0, 8.0]);
+        assert_eq!(par.grad(x.view(), &[1.0, 1.0]), vec![1.0, 2.0]);
     }
 }

@@ -7,7 +7,7 @@
 //! one JSON line the parent parses. std::process only — no extra deps.
 
 use crate::coordinator::{train, Method, TrainConfig};
-use crate::data::synthetic;
+use crate::data::{synthetic, DatasetView};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
@@ -35,6 +35,39 @@ pub fn run_probe(
         Json::obj(vec![
             ("dataset", dataset.into()),
             ("m", m.into()),
+            ("method", method.name().into()),
+            ("iterations", out.iterations.into()),
+            ("peak_rss_kib", (peak as usize).into()),
+        ])
+        .to_string()
+    );
+    Ok(())
+}
+
+/// Child-side entry for real files: train from a libsvm text file or a
+/// pallas store (autodetected; a store trains zero-copy off the mapping,
+/// which is exactly the difference this probe exists to measure).
+/// `no_verify` skips the store's open-time checksum/structure scan — a
+/// full-file read that would page everything in and contaminate the
+/// peak-RSS figure this probe reports.
+pub fn run_probe_path(
+    path: &str,
+    method: Method,
+    lambda: f64,
+    max_iter: usize,
+    no_verify: bool,
+) -> Result<()> {
+    let loaded = crate::data::load_auto_with(path, !no_verify)?;
+    let ds = loaded.view();
+    let cfg = TrainConfig { method, lambda, max_iter, ..Default::default() };
+    let out = train(ds, &cfg)?;
+    let peak = crate::util::peak_rss_kib().context("VmHWM unavailable")?;
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("dataset", ds.name().into()),
+            ("format", if loaded.is_store() { "pstore" } else { "libsvm" }.into()),
+            ("m", ds.len().into()),
             ("method", method.name().into()),
             ("iterations", out.iterations.into()),
             ("peak_rss_kib", (peak as usize).into()),

@@ -1,7 +1,7 @@
 //! Trained ranking model: the weight vector, prediction, and a plain-text
 //! on-disk format.
 
-use crate::data::Dataset;
+use crate::data::DatasetView;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
 use std::path::Path;
@@ -21,13 +21,14 @@ impl RankModel {
         self.w.len()
     }
 
-    /// Scores for every example of a dataset. Feature dimensions may
-    /// differ (train/test splits of sparse data): missing trailing
-    /// features contribute zero either way.
-    pub fn predict(&self, ds: &Dataset) -> Vec<f64> {
+    /// Scores for every example of a dataset (owned or memory-mapped).
+    /// Feature dimensions may differ (train/test splits of sparse
+    /// data): missing trailing features contribute zero either way.
+    pub fn predict(&self, ds: &dyn DatasetView) -> Vec<f64> {
+        let x = ds.x();
         let mut out = Vec::with_capacity(ds.len());
         for i in 0..ds.len() {
-            let (idx, val) = ds.x.row(i);
+            let (idx, val) = x.row(i);
             let mut s = 0.0;
             for (&j, &v) in idx.iter().zip(val) {
                 if (j as usize) < self.w.len() {
@@ -42,7 +43,7 @@ impl RankModel {
     /// Rank a set of examples: indices sorted by descending score (ties
     /// and non-finite scores ordered deterministically via `total_cmp`
     /// then original index — a NaN score cannot panic the ranking).
-    pub fn rank(&self, ds: &Dataset) -> Vec<usize> {
+    pub fn rank(&self, ds: &dyn DatasetView) -> Vec<usize> {
         let p = self.predict(ds);
         let mut idx: Vec<usize> = (0..p.len()).collect();
         idx.sort_unstable_by(|&a, &b| p[b].total_cmp(&p[a]).then(a.cmp(&b)));

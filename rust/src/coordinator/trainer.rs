@@ -6,10 +6,10 @@ use super::config::{BackendKind, Method, TrainConfig};
 use super::model::RankModel;
 use crate::bmrm::{self, BmrmConfig, ScoreOracle};
 use crate::compute::{ComputeBackend, NativeBackend, ParallelBackend};
-use crate::data::Dataset;
+use crate::data::DatasetView;
 use crate::losses::{
-    count_comparable_pairs, tree::fenwick_oracle, PairOracle, QueryGrouped, RLevelOracle,
-    RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
+    count_comparable_pairs, tree::fenwick_oracle, GroupIndex, PairOracle, QueryGrouped,
+    RLevelOracle, RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
 };
 use crate::newton::{self, HessianOracle, NewtonConfig};
 use crate::runtime::WorkerPool;
@@ -65,10 +65,11 @@ impl TrainOutcome {
     }
 }
 
-/// Adapter: dataset + backend + score-space loss oracle → [`ScoreOracle`]
-/// for the optimizers.
+/// Adapter: dataset view + backend + score-space loss oracle →
+/// [`ScoreOracle`] for the optimizers. Works identically over an owned
+/// [`crate::data::Dataset`] or a memory-mapped pallas store.
 pub struct DatasetOracle<'a> {
-    ds: &'a Dataset,
+    ds: &'a dyn DatasetView,
     backend: Box<dyn ComputeBackend>,
     inner: Box<dyn RankingOracle>,
     n_pairs: f64,
@@ -76,12 +77,12 @@ pub struct DatasetOracle<'a> {
 
 impl<'a> DatasetOracle<'a> {
     pub fn new(
-        ds: &'a Dataset,
+        ds: &'a dyn DatasetView,
         mut backend: Box<dyn ComputeBackend>,
         inner: Box<dyn RankingOracle>,
         n_pairs: f64,
     ) -> Self {
-        backend.prepare(&ds.x);
+        backend.prepare(ds.x());
         DatasetOracle { ds, backend, inner, n_pairs }
     }
 }
@@ -91,14 +92,14 @@ impl ScoreOracle for DatasetOracle<'_> {
         self.ds.dim()
     }
     fn scores(&mut self, w: &[f64]) -> Vec<f64> {
-        self.backend.scores(&self.ds.x, w)
+        self.backend.scores(self.ds.x(), w)
     }
     fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
-        let out = self.inner.eval(p, &self.ds.y, self.n_pairs);
+        let out = self.inner.eval(p, self.ds.y(), self.n_pairs);
         (out.loss, out.coeffs)
     }
     fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
-        self.backend.grad(&self.ds.x, coeffs)
+        self.backend.grad(self.ds.x(), coeffs)
     }
 }
 
@@ -114,7 +115,7 @@ enum SquaredImpl {
 /// oracle concretely so the truncated Newton solver can request
 /// generalized Hessian products.
 pub struct SquaredDatasetOracle<'a> {
-    ds: &'a Dataset,
+    ds: &'a dyn DatasetView,
     backend: Box<dyn ComputeBackend>,
     oracle: SquaredImpl,
     n_pairs: f64,
@@ -122,11 +123,11 @@ pub struct SquaredDatasetOracle<'a> {
 
 impl<'a> SquaredDatasetOracle<'a> {
     /// Faithful pair-materializing PRSVM oracle.
-    pub fn new(ds: &'a Dataset, mut backend: Box<dyn ComputeBackend>) -> Self {
-        backend.prepare(&ds.x);
-        let oracle = match &ds.qid {
-            Some(q) => SquaredPairOracle::new_grouped(&ds.y, q),
-            None => SquaredPairOracle::new(&ds.y),
+    pub fn new(ds: &'a dyn DatasetView, mut backend: Box<dyn ComputeBackend>) -> Self {
+        backend.prepare(ds.x());
+        let oracle = match ds.qid() {
+            Some(q) => SquaredPairOracle::new_grouped(ds.y(), q),
+            None => SquaredPairOracle::new(ds.y()),
         };
         let n_pairs = oracle.n_pairs() as f64;
         SquaredDatasetOracle { ds, backend, oracle: SquaredImpl::Pairs(oracle), n_pairs }
@@ -134,12 +135,12 @@ impl<'a> SquaredDatasetOracle<'a> {
 
     /// Linearithmic tree-based PRSVM oracle (extension). Query-grouped
     /// data falls back to pair materialization per group.
-    pub fn new_tree(ds: &'a Dataset, mut backend: Box<dyn ComputeBackend>) -> Self {
-        if ds.qid.is_some() {
+    pub fn new_tree(ds: &'a dyn DatasetView, mut backend: Box<dyn ComputeBackend>) -> Self {
+        if ds.qid().is_some() {
             return Self::new(ds, backend);
         }
-        backend.prepare(&ds.x);
-        let n_pairs = count_comparable_pairs(&ds.y) as f64;
+        backend.prepare(ds.x());
+        let n_pairs = count_comparable_pairs(ds.y()) as f64;
         SquaredDatasetOracle {
             ds,
             backend,
@@ -162,17 +163,17 @@ impl ScoreOracle for SquaredDatasetOracle<'_> {
         self.ds.dim()
     }
     fn scores(&mut self, w: &[f64]) -> Vec<f64> {
-        self.backend.scores(&self.ds.x, w)
+        self.backend.scores(self.ds.x(), w)
     }
     fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
         let out = match &mut self.oracle {
             SquaredImpl::Pairs(o) => o.eval_full(p, self.n_pairs),
-            SquaredImpl::Tree(o) => o.eval_full(p, &self.ds.y, self.n_pairs),
+            SquaredImpl::Tree(o) => o.eval_full(p, self.ds.y(), self.n_pairs),
         };
         (out.loss, out.coeffs)
     }
     fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
-        self.backend.grad(&self.ds.x, coeffs)
+        self.backend.grad(self.ds.x(), coeffs)
     }
 }
 
@@ -220,42 +221,45 @@ fn make_xla_backend(_cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
 /// structure.
 fn make_ranking_oracle(
     method: Method,
-    ds: &Dataset,
+    ds: &dyn DatasetView,
+    index: Option<Arc<GroupIndex>>,
     pool: &Arc<WorkerPool>,
 ) -> Box<dyn RankingOracle> {
     let base: Box<dyn RankingOracle> = match method {
         Method::Tree => {
-            return Box::new(ShardedTreeOracle::with_pool(
-                Arc::clone(pool),
-                ds.qid.as_deref(),
-                &ds.y,
-            ))
+            return Box::new(match index {
+                Some(gi) => ShardedTreeOracle::with_pool_index(Arc::clone(pool), gi),
+                None => ShardedTreeOracle::with_pool(Arc::clone(pool), None, ds.y()),
+            })
         }
         Method::TreeDedup => Box::new(TreeOracle::new_dedup()),
-        Method::TreeFenwick => Box::new(fenwick_oracle(&ds.y)),
+        Method::TreeFenwick => Box::new(fenwick_oracle(ds.y())),
         Method::Pair => Box::new(PairOracle::new()),
         Method::RLevel => Box::new(RLevelOracle::new()),
         Method::Prsvm | Method::PrsvmTree => {
             unreachable!("PRSVM goes through SquaredDatasetOracle")
         }
     };
-    match &ds.qid {
-        Some(q) => Box::new(QueryGrouped::new(base, q, &ds.y)),
+    match index {
+        Some(gi) => Box::new(QueryGrouped::with_index(base, gi)),
         None => base,
     }
 }
 
-/// Effective pair count for normalization/reporting.
-fn effective_pairs(ds: &Dataset) -> f64 {
-    match &ds.qid {
-        Some(q) => QueryGrouped::new(TreeOracle::new(), q, &ds.y).total_pairs(),
-        None => count_comparable_pairs(&ds.y) as f64,
-    }
+/// The query-group index for a training run: precomputed by the source
+/// (pallas store) when available, otherwise built with one scan — built
+/// *once* per run and shared by the pair count and the oracle. Exact
+/// integers either way, so the two origins are interchangeable
+/// bit-for-bit.
+fn group_index_for(ds: &dyn DatasetView) -> Option<Arc<GroupIndex>> {
+    ds.group_index()
+        .or_else(|| ds.qid().map(|q| Arc::new(GroupIndex::build(q, ds.y()))))
 }
 
 /// Train a linear ranking SVM on `ds` per the configuration. This is the
-/// library's main entry point.
-pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
+/// library's main entry point; `ds` may be an owned in-memory dataset or
+/// a memory-mapped pallas store — the run is bit-identical either way.
+pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let timer = std::time::Instant::now();
     // One persistent worker pool for the whole run: the sharded oracle,
     // the parallel backend, and the parallel argsort all submit to it,
@@ -292,8 +296,14 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
             n_pairs: oracle.n_pairs,
         }
     } else {
-        let n_pairs = effective_pairs(ds);
-        let inner = make_ranking_oracle(cfg.method, ds, &pool);
+        let index = group_index_for(ds);
+        let n_pairs = match &index {
+            Some(gi) => gi.total_pairs(),
+            None => ds
+                .n_pairs_hint()
+                .unwrap_or_else(|| count_comparable_pairs(ds.y()) as f64),
+        };
+        let inner = make_ranking_oracle(cfg.method, ds, index, &pool);
         let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
         let bcfg = BmrmConfig {
             lambda: cfg.lambda,
@@ -338,11 +348,11 @@ pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
 
 /// Evaluate a trained model: pairwise ranking error on a dataset
 /// (query-grouped if the dataset has qids).
-pub fn evaluate(model: &RankModel, ds: &Dataset) -> f64 {
+pub fn evaluate(model: &RankModel, ds: &dyn DatasetView) -> f64 {
     let p = model.predict(ds);
-    match &ds.qid {
-        Some(q) => crate::metrics::grouped_pairwise_error(&p, &ds.y, q),
-        None => crate::metrics::pairwise_error(&p, &ds.y),
+    match ds.qid() {
+        Some(q) => crate::metrics::grouped_pairwise_error(&p, ds.y(), q),
+        None => crate::metrics::pairwise_error(&p, ds.y()),
     }
 }
 

@@ -1,6 +1,7 @@
 //! The core dataset container used by every training method and bench.
 
-use crate::linalg::CsrMatrix;
+use super::DatasetView;
+use crate::linalg::{CsrMatrix, CsrView};
 use crate::util::rng::Rng;
 
 /// A ranking dataset: sparse feature matrix (rows = examples), real-valued
@@ -82,6 +83,27 @@ impl Dataset {
             qid: self.qid.as_ref().map(|q| rows.iter().map(|&i| q[i]).collect()),
             name: format!("{}/{}", self.name, tag),
         }
+    }
+}
+
+/// The owned dataset is the canonical [`DatasetView`]; the trainer and
+/// friends only ever see the trait, so a memory-mapped store substitutes
+/// transparently.
+impl DatasetView for Dataset {
+    fn x(&self) -> CsrView<'_> {
+        self.x.view()
+    }
+
+    fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    fn qid(&self) -> Option<&[u64]> {
+        self.qid.as_deref()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
     }
 }
 

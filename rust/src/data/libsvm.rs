@@ -19,10 +19,26 @@ pub fn read(path: impl AsRef<Path>) -> Result<Dataset> {
     parse(reader, &path.display().to_string())
 }
 
-/// Parse from any reader (testable).
+/// One parsed libsvm example, reusable across lines (the streaming
+/// converter's per-line allocation budget is this struct).
+#[derive(Debug, Default, Clone)]
+pub(crate) struct Example {
+    pub label: f64,
+    pub qid: Option<u64>,
+    /// `(1-based index, value)` pairs, strictly increasing by index.
+    /// Zero values are *kept* here: they still widen the feature space
+    /// (`max index` semantics) even though they emit no CSR entry.
+    pub feats: Vec<(usize, f64)>,
+}
+
+/// Parse one libsvm line into `out`. Returns `false` for blank /
+/// comment-only lines (nothing parsed). This is the single validation
+/// gate shared by the in-memory [`parse`] and the streaming pallas-store
+/// converter (`store::convert_libsvm`) — both paths reject exactly the
+/// same inputs with the same `name:line` messages, which is what makes
+/// the two load paths bit-identical on everything they accept.
 ///
-/// Hardened beyond the loose libsvm convention — every rejection carries
-/// `name:line`:
+/// Hardened beyond the loose libsvm convention:
 ///
 /// - labels and feature values must be finite (a NaN/Inf would otherwise
 ///   surface much later, mid-training);
@@ -34,92 +50,141 @@ pub fn read(path: impl AsRef<Path>) -> Result<Dataset> {
 ///   line are rejected;
 /// - CRLF line endings are accepted (`BufRead::lines` strips the full
 ///   CRLF pair; a regression test pins it).
-pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
-    let mut y = Vec::new();
-    let mut qids: Vec<u64> = Vec::new();
-    let mut any_qid = false;
-    let mut triplets = Vec::new();
-    let mut max_col = 0usize;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let lno = lineno + 1;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+pub(crate) fn parse_line(line: &str, name: &str, lno: usize, out: &mut Example) -> Result<bool> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(false);
+    }
+    out.feats.clear();
+    out.qid = None;
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts
+        .next()
+        .unwrap()
+        .parse()
+        .with_context(|| format!("{name}:{lno}: bad label"))?;
+    if !label.is_finite() {
+        bail!("{name}:{lno}: non-finite label {label}");
+    }
+    out.label = label;
+    let mut prev_idx = 0usize;
+    for tok in parts {
+        let (k, v) = tok
+            .split_once(':')
+            .with_context(|| format!("{name}:{lno}: expected idx:val, got {tok:?}"))?;
+        if k == "qid" {
+            let q = v.parse::<u64>().with_context(|| format!("{name}:{lno}: bad qid"))?;
+            if let Some(prev) = out.qid {
+                if prev != q {
+                    bail!("{name}:{lno}: conflicting qids {prev} and {q}");
+                }
+            }
+            out.qid = Some(q);
             continue;
         }
-        let row = y.len();
-        let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .with_context(|| format!("{name}:{lno}: bad label"))?;
-        if !label.is_finite() {
-            bail!("{name}:{lno}: non-finite label {label}");
+        let idx: usize = k.parse().with_context(|| format!("{name}:{lno}: bad index {k:?}"))?;
+        if idx == 0 {
+            bail!("{name}:{lno}: libsvm feature indices are 1-based");
         }
-        y.push(label);
-        let mut qid_here = None;
-        let mut prev_idx = 0usize;
-        for tok in parts {
-            let (k, v) = tok
-                .split_once(':')
-                .with_context(|| format!("{name}:{lno}: expected idx:val, got {tok:?}"))?;
-            if k == "qid" {
-                let q = v.parse::<u64>().with_context(|| format!("{name}:{lno}: bad qid"))?;
-                if let Some(prev) = qid_here {
-                    if prev != q {
-                        bail!("{name}:{lno}: conflicting qids {prev} and {q}");
-                    }
-                }
-                qid_here = Some(q);
-                continue;
-            }
-            let idx: usize =
-                k.parse().with_context(|| format!("{name}:{lno}: bad index {k:?}"))?;
-            if idx == 0 {
-                bail!("{name}:{lno}: libsvm feature indices are 1-based");
-            }
-            if idx == prev_idx {
-                bail!("{name}:{lno}: duplicate feature index {idx}");
-            }
-            if idx < prev_idx {
-                bail!(
-                    "{name}:{lno}: feature index {idx} after {prev_idx} \
-                     (indices must be strictly increasing)"
-                );
-            }
-            prev_idx = idx;
-            let val: f64 =
-                v.parse().with_context(|| format!("{name}:{lno}: bad value {v:?}"))?;
-            if !val.is_finite() {
-                bail!("{name}:{lno}: non-finite value {val} for feature {idx}");
-            }
-            max_col = max_col.max(idx);
-            if val != 0.0 {
-                triplets.push((row, idx - 1, val));
-            }
+        if idx == prev_idx {
+            bail!("{name}:{lno}: duplicate feature index {idx}");
         }
-        if let Some(q) = qid_here {
-            any_qid = true;
-            qids.push(q);
-        } else {
-            qids.push(0);
+        if idx < prev_idx {
+            bail!(
+                "{name}:{lno}: feature index {idx} after {prev_idx} \
+                 (indices must be strictly increasing)"
+            );
         }
+        prev_idx = idx;
+        let val: f64 = v.parse().with_context(|| format!("{name}:{lno}: bad value {v:?}"))?;
+        if !val.is_finite() {
+            bail!("{name}:{lno}: non-finite value {val} for feature {idx}");
+        }
+        out.feats.push((idx, val));
     }
-    let m = y.len();
-    let x = CsrMatrix::from_triplets(m, max_col, triplets);
-    Ok(Dataset::new(x, y, if any_qid { Some(qids) } else { None }, name))
+    Ok(true)
 }
 
-/// Write a dataset in libsvm format.
-pub fn write(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+/// Per-dataset accumulator state shared by every libsvm consumer: the
+/// feature-space width (`max index`, zero values included), the qid
+/// vector with its missing-qid-defaults-to-0 rule, and the label list.
+/// Keeping this policy in one place (next to [`parse_line`]) is what
+/// makes the in-memory path and the streaming pallas-store converter
+/// *structurally* bit-identical rather than coincidentally so.
+#[derive(Debug, Default)]
+pub(crate) struct RowAccumulator {
+    pub y: Vec<f64>,
+    pub qids: Vec<u64>,
+    pub any_qid: bool,
+    pub max_col: usize,
+}
+
+impl RowAccumulator {
+    /// Fold one parsed example in, yielding each *non-zero* feature (as
+    /// its 1-based index plus value) to `emit`.
+    pub fn push(
+        &mut self,
+        ex: &Example,
+        mut emit: impl FnMut(usize, f64) -> Result<()>,
+    ) -> Result<()> {
+        self.y.push(ex.label);
+        for &(idx, val) in &ex.feats {
+            self.max_col = self.max_col.max(idx);
+            if val != 0.0 {
+                emit(idx, val)?;
+            }
+        }
+        if let Some(q) = ex.qid {
+            self.any_qid = true;
+            self.qids.push(q);
+        } else {
+            self.qids.push(0);
+        }
+        Ok(())
+    }
+
+    /// The qid vector for [`Dataset`]-shaped consumers: `None` when no
+    /// line carried a qid.
+    pub fn into_qid(self) -> (Vec<f64>, Option<Vec<u64>>, usize) {
+        let qid = if self.any_qid { Some(self.qids) } else { None };
+        (self.y, qid, self.max_col)
+    }
+}
+
+/// Parse from any reader (testable). See [`parse_line`] for the exact
+/// validation contract.
+pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
+    let mut acc = RowAccumulator::default();
+    let mut triplets = Vec::new();
+    let mut ex = Example::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if !parse_line(&line, name, lineno + 1, &mut ex)? {
+            continue;
+        }
+        let row = acc.y.len();
+        acc.push(&ex, |idx, val| {
+            triplets.push((row, idx - 1, val));
+            Ok(())
+        })?;
+    }
+    let (y, qid, max_col) = acc.into_qid();
+    let x = CsrMatrix::from_triplets(y.len(), max_col, triplets);
+    Ok(Dataset::new(x, y, qid, name))
+}
+
+/// Write a dataset (owned or mapped) in libsvm format.
+pub fn write(ds: &dyn super::DatasetView, path: impl AsRef<Path>) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let x = ds.x();
+    let y = ds.y();
+    let qid = ds.qid();
     for i in 0..ds.len() {
-        write!(f, "{}", ds.y[i])?;
-        if let Some(q) = &ds.qid {
+        write!(f, "{}", y[i])?;
+        if let Some(q) = qid {
             write!(f, " qid:{}", q[i])?;
         }
-        let (idx, val) = ds.x.row(i);
+        let (idx, val) = x.row(i);
         for (&j, &v) in idx.iter().zip(val) {
             write!(f, " {}:{}", j + 1, v)?;
         }

@@ -1,8 +1,217 @@
-//! Data substrate: dataset container, libsvm I/O, and the synthetic
-//! generators standing in for Cadata and Reuters RCV1 (DESIGN.md §6).
+//! Data substrate: dataset container, libsvm I/O, the synthetic
+//! generators standing in for Cadata and Reuters RCV1 (DESIGN.md §6),
+//! and the memory-mapped pallas store for out-of-core training.
+//!
+//! Everything downstream of loading — the trainer, the oracles, the
+//! benches, the CLI — consumes data through the [`DatasetView`] trait,
+//! so an owned in-memory [`Dataset`] and a zero-copy memory-mapped
+//! [`store::PallasStore`] are interchangeable.
 
 pub mod dataset;
 pub mod libsvm;
+pub mod store;
 pub mod synthetic;
 
 pub use dataset::Dataset;
+pub use store::PallasStore;
+
+use crate::linalg::{CsrMatrix, CsrView};
+use crate::losses::GroupIndex;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Read-only view of a ranking dataset: the sparse feature matrix, the
+/// utility labels, and optional query ids — in borrowed, zero-copy form.
+///
+/// Implemented by the owned [`Dataset`], the memory-mapped
+/// [`PallasStore`], and the borrowed [`DatasetRef`] slices the prefix
+/// benches use. Object-safe: the trainer takes `&dyn DatasetView`.
+pub trait DatasetView {
+    /// The feature matrix (rows = examples), borrowed.
+    fn x(&self) -> CsrView<'_>;
+
+    /// Per-example utility labels.
+    fn y(&self) -> &[f64];
+
+    /// Per-example query id; `None` means one global ranking.
+    fn qid(&self) -> Option<&[u64]>;
+
+    /// Human-readable provenance for logs.
+    fn name(&self) -> &str;
+
+    /// Precomputed query-group index, if the source carries one (the
+    /// pallas store serializes it so training skips the per-run group
+    /// scan; `Arc`-shared so consumers reference rather than copy it).
+    /// `None` means "derive from [`Self::qid`] if needed".
+    fn group_index(&self) -> Option<Arc<GroupIndex>> {
+        None
+    }
+
+    /// Precomputed comparable-pair count of the training objective, if
+    /// the source carries one. Exact integers as f64, so using the hint
+    /// is bit-identical to recounting.
+    fn n_pairs_hint(&self) -> Option<f64> {
+        None
+    }
+
+    /// Number of examples `m`.
+    fn len(&self) -> usize {
+        self.y().len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension `n`.
+    fn dim(&self) -> usize {
+        self.x().cols()
+    }
+
+    /// Average non-zero features per example — the paper's `s`.
+    fn sparsity(&self) -> f64 {
+        self.x().avg_nnz_per_row()
+    }
+
+    /// Number of distinct utility levels — the paper's `r`.
+    fn n_levels(&self) -> usize {
+        let mut l = self.y().to_vec();
+        l.sort_unstable_by(|a, b| a.total_cmp(b));
+        l.dedup();
+        l.len()
+    }
+
+    /// Zero-copy view of the first `m` examples (the scalability
+    /// benches' growing prefixes, mirroring the paper's exponentially
+    /// growing train sizes). Any precomputed group index or pair count
+    /// is dropped — a prefix changes both.
+    fn prefix_view(&self, m: usize) -> DatasetRef<'_> {
+        assert!(m <= self.len());
+        DatasetRef {
+            x: self.x().row_range(0, m),
+            y: &self.y()[..m],
+            qid: self.qid().map(|q| &q[..m]),
+            name: format!("{}[:{m}]", self.name()),
+        }
+    }
+}
+
+/// A borrowed dataset: slices into someone else's storage (an owned
+/// [`Dataset`], a [`PallasStore`] mapping). What
+/// [`DatasetView::prefix_view`] returns.
+#[derive(Clone, Debug)]
+pub struct DatasetRef<'a> {
+    pub x: CsrView<'a>,
+    pub y: &'a [f64],
+    pub qid: Option<&'a [u64]>,
+    pub name: String,
+}
+
+impl DatasetView for DatasetRef<'_> {
+    fn x(&self) -> CsrView<'_> {
+        self.x
+    }
+
+    fn y(&self) -> &[f64] {
+        self.y
+    }
+
+    fn qid(&self) -> Option<&[u64]> {
+        self.qid
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Copy any view into an owned [`Dataset`] (needed for owned operations
+/// like shuffled train/test splits).
+pub fn materialize(ds: &dyn DatasetView) -> Dataset {
+    let x: CsrMatrix = ds.x().to_owned_matrix();
+    Dataset::new(x, ds.y().to_vec(), ds.qid().map(|q| q.to_vec()), ds.name().to_string())
+}
+
+/// A dataset loaded from disk: either parsed text (owned) or an opened
+/// store (mapped). [`Self::view`] erases the difference.
+pub enum LoadedDataset {
+    Owned(Dataset),
+    Store(PallasStore),
+}
+
+impl LoadedDataset {
+    pub fn view(&self) -> &dyn DatasetView {
+        match self {
+            LoadedDataset::Owned(ds) => ds,
+            LoadedDataset::Store(st) => st,
+        }
+    }
+
+    /// True when backed by a pallas store.
+    pub fn is_store(&self) -> bool {
+        matches!(self, LoadedDataset::Store(_))
+    }
+}
+
+/// Load a dataset file of either format, autodetected by magic bytes:
+/// a pallas store opens as a checked memory mapping, anything else
+/// parses as libsvm text.
+pub fn load_auto(path: impl AsRef<Path>) -> Result<LoadedDataset> {
+    load_auto_with(path, true)
+}
+
+/// [`load_auto`] with the store-verification knob: `verify = false`
+/// opens a store via [`PallasStore::open_unchecked`] (no full-file
+/// checksum/structure scan — the CLI's `--no-verify`). The single home
+/// of the format-dispatch rule, so the CLI, the memory probe, and
+/// library users cannot drift apart.
+pub fn load_auto_with(path: impl AsRef<Path>, verify: bool) -> Result<LoadedDataset> {
+    let path = path.as_ref();
+    if store::is_store_file(path) {
+        let st =
+            if verify { PallasStore::open(path)? } else { PallasStore::open_unchecked(path)? };
+        Ok(LoadedDataset::Store(st))
+    } else {
+        Ok(LoadedDataset::Owned(libsvm::read(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_view_matches_owned_prefix() {
+        let ds = synthetic::queries(6, 10, 4, 11);
+        for m in [0, 1, 17, 60] {
+            let pv = DatasetView::prefix_view(&ds, m);
+            let owned = ds.prefix(m);
+            assert_eq!(pv.y(), &owned.y[..]);
+            assert_eq!(pv.qid(), owned.qid.as_deref());
+            assert_eq!(DatasetView::len(&pv), m);
+            for i in 0..m {
+                assert_eq!(pv.x().row(i), owned.x.row(i));
+            }
+        }
+    }
+
+    #[test]
+    fn materialize_roundtrips() {
+        let ds = synthetic::cadata_like(40, 3);
+        let back = materialize(&ds);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.qid, ds.qid);
+        assert_eq!(back.x, ds.x);
+    }
+
+    #[test]
+    fn load_auto_detects_libsvm() {
+        let p = std::env::temp_dir().join(format!("ranksvm_auto_{}.libsvm", std::process::id()));
+        std::fs::write(&p, "1 1:2.0\n2 1:3.0\n").unwrap();
+        let loaded = load_auto(&p).unwrap();
+        assert!(!loaded.is_store());
+        assert_eq!(loaded.view().len(), 2);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,251 @@
+//! Read-only memory mapping with a buffered-read fallback.
+//!
+//! The offline registry carries neither `libc` nor `memmap2`, so on
+//! Linux x86_64/aarch64 the `mmap`/`munmap` syscalls are issued directly
+//! via inline assembly (`PROT_READ`, `MAP_PRIVATE` — the kernel pages
+//! the file in lazily, which is what makes opening a multi-gigabyte
+//! store O(1) and lets training stream datasets larger than RAM).
+//! Everywhere else — or if the syscall fails — the file is read into an
+//! 8-byte-aligned owned buffer, preserving the same `&[u8]` interface
+//! (correct, just not out-of-core).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// An immutable byte view of a file: either a kernel mapping or an
+/// owned aligned buffer. The base address is always at least 8-byte
+/// aligned (page-aligned for real mappings; a `u64` allocation for the
+/// fallback), which is what lets the store cast sections in place.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+enum Backing {
+    /// A live kernel mapping; unmapped on drop.
+    Mapped,
+    /// Owned fallback buffer (kept for the allocation; read via `ptr`).
+    #[allow(dead_code)]
+    Owned(Vec<u64>),
+}
+
+// SAFETY: the mapping is read-only and private; the fallback buffer is
+// owned. Either way the bytes are immutable for the struct's lifetime.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map (or read) a whole file.
+    pub fn open(path: impl AsRef<Path>) -> Result<Mmap> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let len = usize::try_from(len).context("file too large for this address space")?;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::NonNull::<u64>::dangling().as_ptr() as *const u8, len: 0, backing: Backing::Owned(Vec::new()) });
+        }
+        if let Some(ptr) = sys::mmap_readonly(&file, len) {
+            return Ok(Mmap { ptr, len, backing: Backing::Mapped });
+        }
+        Self::read_fallback(file, len)
+    }
+
+    fn read_fallback(mut file: std::fs::File, len: usize) -> Result<Mmap> {
+        use std::io::Read;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        // SAFETY: the u64 buffer spans ≥ len bytes; u8 has no alignment
+        // requirement. The buffer is freshly owned and unaliased.
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+        file.read_exact(dst).context("reading store file")?;
+        let ptr = buf.as_ptr() as *const u8;
+        Ok(Mmap { ptr, len, backing: Backing::Owned(buf) })
+    }
+
+    /// The mapped/read bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe either a live mapping (valid until
+        // munmap in Drop) or the owned buffer (valid until drop).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when backed by a real kernel mapping (false: owned buffer).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.backing, Backing::Mapped)
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if let Backing::Mapped = self.backing {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    /// `mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0)`; None on error
+    /// (the caller falls back to reading).
+    pub fn mmap_readonly(file: &std::fs::File, len: usize) -> Option<*const u8> {
+        let fd = file.as_raw_fd() as isize;
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: a well-formed mmap syscall; all arguments are plain
+        // integers and the kernel validates them.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 9isize => ret, // __NR_mmap
+                in("rdi") 0usize,
+                in("rsi") len,
+                in("rdx") PROT_READ,
+                in("r10") MAP_PRIVATE,
+                in("r8") fd,
+                in("r9") 0usize,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, aarch64 calling convention.
+        unsafe {
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 222usize, // __NR_mmap
+                inlateout("x0") 0usize => ret,
+                in("x1") len,
+                in("x2") PROT_READ,
+                in("x3") MAP_PRIVATE,
+                in("x4") fd,
+                in("x5") 0usize,
+                options(nostack)
+            );
+        }
+        // Errors come back as -errno in [-4095, -1].
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as *const u8)
+        }
+    }
+
+    pub fn munmap(ptr: *const u8, len: usize) {
+        let addr = ptr as usize;
+        let _ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: unmapping a region this module mapped.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 11isize => _ret, // __NR_munmap
+                in("rdi") addr,
+                in("rsi") len,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: unmapping a region this module mapped.
+        unsafe {
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 215usize, // __NR_munmap
+                inlateout("x0") addr => _ret,
+                in("x1") len,
+                options(nostack)
+            );
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    /// No raw-syscall mapping on this target; always fall back to read.
+    pub fn mmap_readonly(_file: &std::fs::File, _len: usize) -> Option<*const u8> {
+        None
+    }
+
+    pub fn munmap(_ptr: *const u8, _len: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("ranksvm_mmap_{}_{name}", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = tmp("contents", &data);
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.bytes().as_ptr() as usize % 8, 0, "base must be 8-aligned");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn fallback_read_matches_mapping() {
+        let data: Vec<u8> = (0..9999u32).flat_map(|x| x.to_le_bytes()).collect();
+        let p = tmp("fallback", &data);
+        let file = std::fs::File::open(&p).unwrap();
+        let fb = Mmap::read_fallback(file, data.len()).unwrap();
+        assert!(!fb.is_mapped());
+        assert_eq!(fb.bytes(), &data[..]);
+        assert_eq!(fb.bytes().as_ptr() as usize % 8, 0);
+        let mapped = Mmap::open(&p).unwrap();
+        assert_eq!(mapped.bytes(), fb.bytes());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn empty_file_and_missing_file() {
+        let p = tmp("empty", b"");
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), b"");
+        std::fs::remove_file(p).ok();
+        assert!(Mmap::open("/nonexistent/ranksvm.pstore").is_err());
+    }
+
+    #[test]
+    fn drop_unmaps_without_crashing() {
+        let data = vec![7u8; 4096 * 3 + 5];
+        let p = tmp("drop", &data);
+        for _ in 0..50 {
+            let m = Mmap::open(&p).unwrap();
+            assert_eq!(m.bytes()[4096], 7);
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,38 @@
+//! The pallas store: a versioned, checksummed, memory-mapped binary
+//! dataset format for out-of-core training.
+//!
+//! The paper's oracle is `O(m·s + m·log m)` per iteration — cheap. What
+//! actually limits training at scale is the data pipeline: re-parsing
+//! libsvm text on every run and holding the full CSR matrix resident
+//! caps `m` at RAM (WMRB, Liu 2017, makes the same observation for
+//! batch ranking at web scale). The store fixes both ends:
+//!
+//! - **Convert once** ([`convert_libsvm`]): a single-pass streaming
+//!   converter ingests libsvm text in bounded memory — the matrix
+//!   payload goes through fixed-budget spill buffers and is never
+//!   materialized — and writes the CSR arrays, labels, query ids, and a
+//!   precomputed query-group index as aligned little-endian sections
+//!   behind a checksummed header (`format`).
+//! - **Map forever** ([`PallasStore`]): opening memory-maps the file
+//!   read-only and hands out zero-copy [`crate::linalg::CsrView`] /
+//!   label / qid slices through the [`crate::data::DatasetView`] trait,
+//!   so the trainer, the oracles, the benches, and the CLI run straight
+//!   off the kernel page cache with no parse step. Growing-prefix
+//!   scalability experiments become O(1) slices of one mapping, and
+//!   datasets larger than RAM page in lazily.
+//!
+//! Training from a store is **bit-identical** to training from the
+//! equivalent libsvm text: both paths share one line parser, one group
+//! indexer, and one pair counter, and everything the store caches
+//! (counts, offsets) is integer-exact. `tests/store.rs` pins this
+//! differentially, along with the corruption-rejection suite.
+
+mod format;
+mod mmap;
+mod reader;
+mod writer;
+
+pub use format::{HEADER_LEN, MAGIC, VERSION};
+pub use mmap::Mmap;
+pub use reader::{is_store_file, PallasStore};
+pub use writer::{convert_libsvm, ConvertOptions, ConvertStats};

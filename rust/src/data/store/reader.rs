@@ -1,0 +1,298 @@
+//! Opening and validating a pallas store; the zero-copy [`DatasetView`].
+
+use super::format::{
+    cast_slice, Checksum, Header, HEADER_LEN, N_SECTIONS, SEC_GEX, SEC_GOFF, SEC_GPAIRS,
+    SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
+};
+use super::mmap::Mmap;
+use crate::data::DatasetView;
+use crate::linalg::CsrView;
+use crate::losses::GroupIndex;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// A memory-mapped pallas store: the on-disk training set, readable in
+/// place. The CSR arrays, labels, and qids are borrowed straight from
+/// the mapping ([`DatasetView`] hands out zero-copy slices); only the
+/// group index is decoded into `usize` form at open (O(m), the price of
+/// index-width portability — still no parse and no matrix copy).
+pub struct PallasStore {
+    map: Mmap,
+    name: String,
+    header: Header,
+    /// Resolved `(offset, byte length)` per section.
+    sec: [(usize, usize); N_SECTIONS],
+    gindex: Option<Arc<GroupIndex>>,
+}
+
+impl PallasStore {
+    /// Open with full integrity checking: geometry, payload checksum,
+    /// CSR structure (bounds, monotone row offsets, strictly ascending
+    /// in-row column indices), and group-index consistency. Streams the
+    /// whole file once for the checksum — use
+    /// [`Self::open_unchecked`] when that single pass is too much (a
+    /// dataset larger than RAM on a cold cache).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_impl(path.as_ref(), true)
+    }
+
+    /// Open without reading the matrix payload: validates the header
+    /// geometry (magic, version, section layout — O(1)) and decodes the
+    /// group index (O(m); the trainer needs it anyway), but skips the
+    /// whole-file checksum and the O(nnz) structural scans — the part
+    /// that forces a full read of a dataset larger than RAM. A payload
+    /// corruption then surfaces as a panic or garbage numbers
+    /// mid-training rather than an error here — reserve this for stores
+    /// you just wrote or verify out of band.
+    pub fn open_unchecked(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_impl(path.as_ref(), false)
+    }
+
+    fn open_impl(path: &Path, verify: bool) -> Result<Self> {
+        let name = path.display().to_string();
+        let map = Mmap::open(path)?;
+        let bytes = map.bytes();
+        let header = Header::decode(bytes, bytes.len() as u64)
+            .with_context(|| format!("{name}: invalid pallas store"))?;
+        let rows = usize::try_from(header.rows).context("row count overflows usize")?;
+        let cols = usize::try_from(header.cols).context("column count overflows usize")?;
+        let n_groups = usize::try_from(header.n_groups).context("group count overflows")?;
+        let mut sec = [(0usize, 0usize); N_SECTIONS];
+        for (s, slot) in sec.iter_mut().enumerate() {
+            *slot = (header.offsets[s] as usize, header.section_len(s) as usize);
+        }
+        if verify {
+            let mut sum = Checksum::new();
+            sum.update(&bytes[HEADER_LEN..]);
+            ensure!(
+                sum.finish() == header.checksum,
+                "{name}: checksum mismatch — the store is corrupt (expected {:#018x}, \
+                 found {:#018x})",
+                header.checksum,
+                sum.finish()
+            );
+        }
+        let store = PallasStore { map, name, header, sec, gindex: None };
+        if verify {
+            // Full CSR validation (in-bounds columns, monotone offsets)
+            // plus the parser's strictly-ascending in-row invariant, so
+            // a verified store is exactly as trustworthy as parsed text.
+            let view = CsrView::new(
+                rows,
+                cols,
+                store.indptr(),
+                store.indices(),
+                store.values(),
+            )
+            .with_context(|| format!("{}: invalid CSR sections", store.name))?;
+            for i in 0..rows {
+                let (idx, _) = view.row(i);
+                for w in idx.windows(2) {
+                    ensure!(
+                        w[0] < w[1],
+                        "{}: row {i} column indices are not strictly increasing",
+                        store.name
+                    );
+                }
+            }
+            if !store.header.has_qid() {
+                // Global stores: the cached pair count must equal what
+                // the text path would recount (grouped stores are
+                // cross-checked against gpairs below).
+                let recount = crate::losses::count_comparable_pairs(store.y_slice());
+                ensure!(
+                    store.header.n_pairs == recount,
+                    "{}: cached pair count {} disagrees with labels ({recount})",
+                    store.name,
+                    store.header.n_pairs
+                );
+            }
+        }
+        let gindex = if store.header.has_qid() {
+            let offsets: Vec<usize> =
+                store.goff().iter().map(|&v| v as usize).collect();
+            let examples: Vec<usize> =
+                store.gex().iter().map(|&v| v as usize).collect();
+            let pairs: Vec<u64> = store.gpairs().to_vec();
+            ensure!(
+                offsets.len() == n_groups + 1,
+                "{}: group offset section length mismatch",
+                store.name
+            );
+            let gi = GroupIndex::from_parts(offsets, examples, pairs)
+                .with_context(|| format!("{}: invalid group index", store.name))?;
+            ensure!(
+                gi.n_examples() == rows,
+                "{}: group index covers {} examples, store has {rows}",
+                store.name,
+                gi.n_examples()
+            );
+            if verify {
+                // The cached objective pair count must equal the
+                // per-group sum (exact integers; same order as the
+                // writer's accumulation).
+                let mut total = 0u64;
+                for g in 0..gi.n_groups() {
+                    total = total.saturating_add(gi.group_pairs(g));
+                }
+                ensure!(
+                    store.header.n_pairs == total,
+                    "{}: cached pair count {} disagrees with the group index ({total})",
+                    store.name,
+                    store.header.n_pairs
+                );
+            }
+            Some(Arc::new(gi))
+        } else {
+            None
+        };
+        let mut store = store;
+        store.gindex = gindex;
+        Ok(store)
+    }
+
+    #[inline]
+    fn section(&self, s: usize) -> &[u8] {
+        let (off, len) = self.sec[s];
+        &self.map.bytes()[off..off + len]
+    }
+
+    fn indptr(&self) -> &[u64] {
+        cast_slice(self.section(SEC_INDPTR)).expect("validated at open")
+    }
+
+    fn indices(&self) -> &[u32] {
+        cast_slice(self.section(SEC_INDICES)).expect("validated at open")
+    }
+
+    fn values(&self) -> &[f64] {
+        cast_slice(self.section(SEC_VALUES)).expect("validated at open")
+    }
+
+    fn y_slice(&self) -> &[f64] {
+        cast_slice(self.section(SEC_Y)).expect("validated at open")
+    }
+
+    fn qid_slice(&self) -> &[u64] {
+        cast_slice(self.section(SEC_QID)).expect("validated at open")
+    }
+
+    fn goff(&self) -> &[u64] {
+        cast_slice(self.section(SEC_GOFF)).expect("validated at open")
+    }
+
+    fn gex(&self) -> &[u64] {
+        cast_slice(self.section(SEC_GEX)).expect("validated at open")
+    }
+
+    fn gpairs(&self) -> &[u64] {
+        cast_slice(self.section(SEC_GPAIRS)).expect("validated at open")
+    }
+
+    /// Comparable pairs of the training objective, as precomputed by the
+    /// converter (exact integer).
+    pub fn n_pairs(&self) -> u64 {
+        self.header.n_pairs
+    }
+
+    /// Query-group count (0 for a global ranking).
+    pub fn n_groups(&self) -> usize {
+        self.header.n_groups as usize
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.header.nnz as usize
+    }
+
+    /// Store file size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when the file is kernel-mapped (false: the read fallback
+    /// loaded it into an owned buffer — correct, but not out-of-core).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+}
+
+impl DatasetView for PallasStore {
+    fn x(&self) -> CsrView<'_> {
+        // Invariants were established by open-time validation (or
+        // explicitly waived via open_unchecked, whose contract is
+        // "trusted file"); slice indexing keeps even a corrupt
+        // unchecked store memory-safe.
+        CsrView::new_unchecked(
+            self.header.rows as usize,
+            self.header.cols as usize,
+            self.indptr(),
+            self.indices(),
+            self.values(),
+        )
+    }
+
+    fn y(&self) -> &[f64] {
+        self.y_slice()
+    }
+
+    fn qid(&self) -> Option<&[u64]> {
+        if self.header.has_qid() {
+            Some(self.qid_slice())
+        } else {
+            None
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn group_index(&self) -> Option<Arc<GroupIndex>> {
+        self.gindex.clone()
+    }
+
+    fn n_pairs_hint(&self) -> Option<f64> {
+        Some(self.header.n_pairs as f64)
+    }
+}
+
+/// Sniff a file's magic bytes: true iff it starts like a pallas store.
+/// (How `--data` autodetects the format without trusting extensions.)
+pub fn is_store_file(path: impl AsRef<Path>) -> bool {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut magic = [0u8; 7];
+    f.read_exact(&mut magic).is_ok() && magic == super::format::MAGIC
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_rejects_non_store_files() {
+        let p = std::env::temp_dir().join(format!("ranksvm_notastore_{}", std::process::id()));
+        std::fs::write(&p, b"1 qid:1 1:0.5\n").unwrap();
+        let err = PallasStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("pallas store"), "{err}");
+        assert!(!is_store_file(&p));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn open_rejects_truncated_header() {
+        let p = std::env::temp_dir().join(format!("ranksvm_shortstore_{}", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&super::super::format::MAGIC);
+        bytes.push(super::super::format::VERSION);
+        bytes.extend_from_slice(&[0u8; 16]); // far short of HEADER_LEN
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(is_store_file(&p), "magic matches even though the file is truncated");
+        let err = PallasStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("short"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,357 @@
+//! Streaming libsvm → pallas-store converter.
+//!
+//! Single pass over the text in bounded memory: per-example state is
+//! `O(m)` (labels, qids, row offsets — the arrays the header needs
+//! before any section can be placed), but the matrix payload — `nnz`
+//! column indices and values, the part that actually dominates at scale
+//! — is never resident. Feature entries stream through two fixed-budget
+//! spill buffers into temporary files as they are parsed, then are
+//! copied chunk-by-chunk into their final sections once the counts are
+//! known. `ConvertStats::max_buffered_bytes` reports the exact high-water
+//! mark of the spill buffers, so tests can assert the bound instead of
+//! hoping RSS behaves.
+
+use super::format::{
+    Checksum, Header, FLAG_HAS_QID, HEADER_LEN, N_SECTIONS, SEC_GEX, SEC_GOFF, SEC_GPAIRS,
+    SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
+};
+use crate::data::libsvm::{parse_line, Example, RowAccumulator};
+use crate::losses::{count_comparable_pairs, GroupIndex};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Converter knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvertOptions {
+    /// Combined budget (bytes) for the two feature spill buffers — the
+    /// chunk size of the chunked ingest. The converter's transient
+    /// matrix memory never exceeds this (plus one buffer's worth of
+    /// copy scratch during assembly).
+    pub chunk_bytes: usize,
+}
+
+impl Default for ConvertOptions {
+    fn default() -> Self {
+        // 8 MiB moves ~350k sparse rows per flush; small enough that a
+        // laptop never notices, big enough that syscalls don't dominate.
+        ConvertOptions { chunk_bytes: 8 << 20 }
+    }
+}
+
+/// What the converter did — printed as JSON by `ranksvm convert`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvertStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub n_groups: usize,
+    /// Comparable pairs of the training objective (global count, or the
+    /// per-group sum for qid data).
+    pub n_pairs: u64,
+    /// Final store size in bytes.
+    pub out_bytes: u64,
+    /// High-water mark of the feature spill buffers (≤ `chunk_bytes`
+    /// plus one entry of slack) — the "bounded memory" guarantee, made
+    /// measurable.
+    pub max_buffered_bytes: usize,
+}
+
+/// A byte sink that spills to a temp file whenever the in-memory buffer
+/// reaches its budget.
+struct SpillBuf {
+    file: std::fs::File,
+    path: PathBuf,
+    buf: Vec<u8>,
+    cap: usize,
+    spilled: u64,
+}
+
+impl SpillBuf {
+    fn create(path: PathBuf, cap: usize) -> Result<Self> {
+        // Read + write: the same handle is rewound and read back during
+        // assembly (a write-only fd would EBADF on that read).
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        Ok(SpillBuf { file, path, buf: Vec::new(), cap: cap.max(64), spilled: 0 })
+    }
+
+    fn push(&mut self, bytes: &[u8]) -> Result<()> {
+        self.buf.extend_from_slice(bytes);
+        if self.buf.len() >= self.cap {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if !self.buf.is_empty() {
+            self.file.write_all(&self.buf).context("writing spill file")?;
+            self.spilled += self.buf.len() as u64;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Total bytes pushed so far (spilled + still buffered).
+    fn len(&self) -> u64 {
+        self.spilled + self.buf.len() as u64
+    }
+
+    /// Reopen for reading from the start (after a final flush).
+    fn into_reader(mut self) -> Result<(std::fs::File, PathBuf)> {
+        self.flush()?;
+        self.file.seek(SeekFrom::Start(0)).context("rewinding spill file")?;
+        Ok((self.file, self.path))
+    }
+}
+
+/// Checksummed, position-tracking section writer for the output file.
+struct SectionWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    pos: u64,
+    sum: Checksum,
+}
+
+impl SectionWriter {
+    fn write(&mut self, bytes: &[u8]) -> Result<()> {
+        self.out.write_all(bytes).context("writing store")?;
+        self.sum.update(bytes);
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Zero-pad to the next 8-byte boundary (padding is checksummed like
+    /// any other payload byte).
+    fn pad8(&mut self) -> Result<()> {
+        let rem = (self.pos % 8) as usize;
+        if rem != 0 {
+            self.write(&[0u8; 8][..8 - rem])?;
+        }
+        Ok(())
+    }
+
+    /// Buffered u64 stream write (little-endian).
+    fn write_u64s<I: IntoIterator<Item = u64>>(&mut self, items: I) -> Result<()> {
+        let mut chunk = [0u8; 8 * 512];
+        let mut fill = 0usize;
+        for v in items {
+            chunk[fill..fill + 8].copy_from_slice(&v.to_le_bytes());
+            fill += 8;
+            if fill == chunk.len() {
+                self.write(&chunk)?;
+                fill = 0;
+            }
+        }
+        if fill > 0 {
+            self.write(&chunk[..fill])?;
+        }
+        Ok(())
+    }
+}
+
+/// Convert a libsvm text file to a pallas store. One pass, chunked,
+/// bounded memory; the output is byte-for-byte deterministic in the
+/// input (and independent of `chunk_bytes`, which only controls flush
+/// cadence — a test pins that).
+pub fn convert_libsvm(
+    input: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    opts: &ConvertOptions,
+) -> Result<ConvertStats> {
+    let input = input.as_ref();
+    let output = output.as_ref();
+    if input == output
+        || (output.exists()
+            && input
+                .canonicalize()
+                .ok()
+                .zip(output.canonicalize().ok())
+                .is_some_and(|(a, b)| a == b))
+    {
+        bail!("refusing to overwrite the input: output {} is the input file", output.display());
+    }
+    let ind_tmp = output.with_extension("pstore.indices.tmp");
+    let val_tmp = output.with_extension("pstore.values.tmp");
+    let mut output_created = false;
+    let result = convert_impl(input, output, opts, &ind_tmp, &val_tmp, &mut output_created);
+    if result.is_err() {
+        // A failed conversion must leave neither a corrupt half-written
+        // store (a zeroed header would autodetect as libsvm text and
+        // fail confusingly downstream) nor spill litter behind — but
+        // never delete an output this run didn't create (a parse
+        // failure must not destroy a pre-existing good store).
+        if output_created {
+            std::fs::remove_file(output).ok();
+        }
+        std::fs::remove_file(&ind_tmp).ok();
+        std::fs::remove_file(&val_tmp).ok();
+    }
+    result
+}
+
+fn convert_impl(
+    input: &Path,
+    output: &Path,
+    opts: &ConvertOptions,
+    ind_tmp: &Path,
+    val_tmp: &Path,
+    output_created: &mut bool,
+) -> Result<ConvertStats> {
+    let name = input.display().to_string();
+    let reader = BufReader::new(
+        std::fs::File::open(input).with_context(|| format!("open {}", input.display()))?,
+    );
+
+    // --- Pass: parse lines, stream features to spill files. The
+    // per-row policy (zero skip, feature-space widening, qid defaults)
+    // lives in the shared RowAccumulator, so this path cannot drift
+    // from libsvm::parse. ---
+    let spill_cap = (opts.chunk_bytes / 2).max(64);
+    let mut ind_spill = SpillBuf::create(ind_tmp.to_path_buf(), spill_cap)?;
+    let mut val_spill = SpillBuf::create(val_tmp.to_path_buf(), spill_cap)?;
+    let mut acc = RowAccumulator::default();
+    let mut indptr: Vec<u64> = vec![0];
+    let mut nnz = 0u64;
+    let mut max_buffered = 0usize;
+    let mut ex = Example::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if !parse_line(&line, &name, lineno + 1, &mut ex)? {
+            continue;
+        }
+        acc.push(&ex, |idx, val| {
+            let col = u32::try_from(idx - 1)
+                .map_err(|_| anyhow::anyhow!("{name}: feature index {idx} exceeds u32"))?;
+            ind_spill.push(&col.to_le_bytes())?;
+            val_spill.push(&val.to_le_bytes())?;
+            nnz += 1;
+            Ok(())
+        })?;
+        max_buffered = max_buffered.max(ind_spill.buf.len() + val_spill.buf.len());
+        indptr.push(nnz);
+    }
+    let any_qid = acc.any_qid;
+    let max_col = acc.max_col;
+    let (y, qid, _) = acc.into_qid();
+    let rows = y.len();
+
+    // --- Group index + pair counts (O(m) state, same code as the text
+    // path so the loaded values are bit-identical). ---
+    let gindex = qid.as_ref().map(|q| GroupIndex::build(q, &y));
+    let n_pairs = match &gindex {
+        Some(gi) => {
+            let mut total = 0u64;
+            for g in 0..gi.n_groups() {
+                total += gi.group_pairs(g);
+            }
+            total
+        }
+        None => count_comparable_pairs(&y),
+    };
+    let n_groups = gindex.as_ref().map(|g| g.n_groups()).unwrap_or(0);
+
+    // --- Assemble the output file. ---
+    let mut header = Header {
+        rows: rows as u64,
+        cols: max_col as u64,
+        nnz,
+        flags: if any_qid { FLAG_HAS_QID } else { 0 },
+        n_groups: n_groups as u64,
+        n_pairs,
+        checksum: 0,
+        offsets: [0; N_SECTIONS],
+    };
+    let out_file = std::fs::File::create(output)
+        .with_context(|| format!("create {}", output.display()))?;
+    *output_created = true;
+    let mut w = SectionWriter {
+        out: std::io::BufWriter::new(out_file),
+        pos: HEADER_LEN as u64,
+        sum: Checksum::new(),
+    };
+    // Header placeholder; rewritten with the checksum at the end.
+    w.out.write_all(&[0u8; HEADER_LEN]).context("writing store header")?;
+
+    header.offsets[SEC_INDPTR] = w.pos;
+    w.write_u64s(indptr.iter().copied())?;
+    drop(indptr);
+
+    w.pad8()?;
+    header.offsets[SEC_INDICES] = w.pos;
+    copy_spill(&mut w, ind_spill, opts.chunk_bytes)?;
+    w.pad8()?;
+    header.offsets[SEC_VALUES] = w.pos;
+    copy_spill(&mut w, val_spill, opts.chunk_bytes)?;
+
+    w.pad8()?;
+    header.offsets[SEC_Y] = w.pos;
+    w.write_u64s(y.iter().map(|v| v.to_bits()))?;
+
+    header.offsets[SEC_QID] = w.pos;
+    if let Some(q) = &qid {
+        w.write_u64s(q.iter().copied())?;
+    }
+    header.offsets[SEC_GOFF] = w.pos;
+    if let Some(gi) = &gindex {
+        let (offsets, _, _) = gi.as_parts();
+        w.write_u64s(offsets.iter().map(|&v| v as u64))?;
+    }
+    header.offsets[SEC_GEX] = w.pos;
+    if let Some(gi) = &gindex {
+        let (_, examples, _) = gi.as_parts();
+        w.write_u64s(examples.iter().map(|&v| v as u64))?;
+    }
+    header.offsets[SEC_GPAIRS] = w.pos;
+    if let Some(gi) = &gindex {
+        let (_, _, pairs) = gi.as_parts();
+        w.write_u64s(pairs.iter().copied())?;
+    }
+
+    let out_bytes = w.pos;
+    header.checksum = w.sum.finish();
+    let mut out = w.out.into_inner().context("flushing store")?;
+    out.seek(SeekFrom::Start(0)).context("rewinding store")?;
+    out.write_all(&header.encode()).context("writing store header")?;
+    out.sync_all().ok();
+    drop(out);
+
+    Ok(ConvertStats {
+        rows,
+        cols: max_col,
+        nnz: nnz as usize,
+        n_groups,
+        n_pairs,
+        out_bytes,
+        max_buffered_bytes: max_buffered,
+    })
+}
+
+/// Copy a finalized spill file into the output in `chunk_bytes`-bounded
+/// reads, then delete it. Verifies the byte count written during the
+/// parse pass survived the round trip.
+fn copy_spill(w: &mut SectionWriter, spill: SpillBuf, chunk_bytes: usize) -> Result<()> {
+    let expect = spill.len();
+    let (mut file, path) = spill.into_reader()?;
+    let mut buf = vec![0u8; chunk_bytes.clamp(4096, 8 << 20)];
+    let mut copied = 0u64;
+    loop {
+        let n = file.read(&mut buf).context("reading spill file")?;
+        if n == 0 {
+            break;
+        }
+        w.write(&buf[..n])?;
+        copied += n as u64;
+    }
+    drop(file);
+    std::fs::remove_file(&path).ok();
+    if copied != expect {
+        bail!("spill file {} changed size during conversion ({copied} vs {expect})", path.display());
+    }
+    Ok(())
+}

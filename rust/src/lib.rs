@@ -22,8 +22,12 @@
 //!   line search;
 //! - [`newton`] — truncated-Newton optimizer for the PRSVM baseline;
 //! - [`data`], [`metrics`], [`linalg`] — dataset substrates
-//!   (libsvm I/O, Cadata-like and Reuters-like synthetic generators),
-//!   `O(m log m)` ranking metrics, and dense/CSR/CSC kernels;
+//!   (libsvm I/O, Cadata-like and Reuters-like synthetic generators, and
+//!   the memory-mapped [`data::store`] pallas store for out-of-core
+//!   training — convert once, mmap forever, bit-identical to the text
+//!   path), `O(m log m)` ranking metrics, and dense/CSR/CSC kernels
+//!   (owned [`linalg::CsrMatrix`] / borrowed zero-copy
+//!   [`linalg::CsrView`]);
 //! - [`compute`] + [`runtime`] — a pluggable compute backend: native Rust
 //!   kernels (serial, or row-sharded with a fixed reduction topology in
 //!   [`compute::ParallelBackend`]), or AOT-compiled XLA executables

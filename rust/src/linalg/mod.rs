@@ -10,4 +10,4 @@ pub mod ops;
 pub mod sparse;
 
 pub use dense::DenseMatrix;
-pub use sparse::{CscMatrix, CsrMatrix};
+pub use sparse::{CscMatrix, CsrMatrix, CsrView};

@@ -94,27 +94,37 @@ pub fn argsort_into(v: &[f64], idx: &mut Vec<usize>) {
     idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
 }
 
-/// Fixed chunk count for [`par_argsort_into`]'s merge plan. Constant
-/// (independent of the thread count and the data) so the chunk sort and
-/// every merge span are the same work units for any pool size; a power
-/// of two so the pairwise merge tree has no remainder chunks and an even
-/// number of levels (the ping-pong ends back in the caller's buffer).
-pub const SORT_CHUNKS: usize = 16;
+/// Adaptive chunk count for the parallel work plans (ROADMAP "adaptive
+/// chunk counts"): `clamp(4 × n_threads, 4, 64)`, derived once per
+/// trainer from the persistent pool's size. Four chunks per worker give
+/// the pool's queue room to balance uneven chunk costs without the
+/// scheduling overhead of hundreds of tiny tasks; the clamp keeps tiny
+/// and huge pools sane. Only plans whose results are *exact* for any
+/// chunk count use this — the argsort's permutation is the unique one
+/// under a strict total order and the sharded oracle's counts are exact
+/// integers. The parallel gradient reduction keeps its fixed plan
+/// (`compute::GRAD_CHUNKS`): its float partial sums re-associate with
+/// the chunk plan, and bit-identity across thread counts is a contract.
+pub fn adaptive_chunks(n_threads: usize) -> usize {
+    (4 * n_threads).clamp(4, 64)
+}
 
 /// Below this length the serial sort wins over chunk + merge scheduling.
 pub const PAR_SORT_MIN: usize = 1024;
 
-/// Parallel argsort on a [`WorkerPool`]: deterministic merge sort over a
-/// fixed [`SORT_CHUNKS`]-chunk plan with fixed-topology pairwise merges
-/// (stride 1, 2, 4, …). Each merge level is cut into `SORT_CHUNKS`
-/// output spans along the same chunk boundaries, located in the two
-/// input runs by merge-path co-rank binary searches, so every level
-/// keeps all workers busy — including the final whole-array merge that
-/// would otherwise re-serialize the sort. Because the comparator is the
-/// strict total order of [`argsort_into`] (value, then index), the
-/// permutation is **bit-identical to the serial argsort for any thread
-/// count**; `scratch` is a caller-owned ping-pong buffer reused across
-/// BMRM iterations.
+/// Parallel argsort on a [`WorkerPool`]: deterministic merge sort over an
+/// [`adaptive_chunks`]-chunk plan (derived from the pool size) with
+/// fixed-topology pairwise merges (stride 1, 2, 4, …). Each merge level
+/// is cut into one output span per chunk along the same chunk
+/// boundaries, located in the two input runs by merge-path co-rank
+/// binary searches, so every level keeps all workers busy — including
+/// the final whole-array merge that would otherwise re-serialize the
+/// sort. Because the comparator is the strict total order of
+/// [`argsort_into`] (value, then index), the permutation is
+/// **bit-identical to the serial argsort for any thread count** (the
+/// chunk count only changes how the unique answer is assembled);
+/// `scratch` is a caller-owned ping-pong buffer reused across BMRM
+/// iterations.
 pub fn par_argsort_into(
     v: &[f64],
     idx: &mut Vec<usize>,
@@ -122,19 +132,20 @@ pub fn par_argsort_into(
     pool: &WorkerPool,
 ) {
     let m = v.len();
+    let chunks = adaptive_chunks(pool.n_threads());
     idx.clear();
     idx.extend(0..m);
-    if m < PAR_SORT_MIN.max(SORT_CHUNKS) || pool.n_threads() <= 1 {
+    if m < PAR_SORT_MIN.max(chunks) || pool.n_threads() <= 1 {
         idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
         return;
     }
-    let bounds: Vec<usize> = (0..=SORT_CHUNKS).map(|c| c * m / SORT_CHUNKS).collect();
+    let bounds: Vec<usize> = (0..=chunks).map(|c| c * m / chunks).collect();
 
     // Phase 1: sort each chunk independently.
     {
-        let mut tasks: Vec<Task> = Vec::with_capacity(SORT_CHUNKS);
+        let mut tasks: Vec<Task> = Vec::with_capacity(chunks);
         let mut rest: &mut [usize] = idx;
-        for c in 0..SORT_CHUNKS {
+        for c in 0..chunks {
             // Move `rest` out before splitting so the tail can be
             // carried to the next iteration.
             let (head, tail) = { rest }.split_at_mut(bounds[c + 1] - bounds[c]);
@@ -145,29 +156,29 @@ pub fn par_argsort_into(
     }
 
     // Phase 2: pairwise merge levels, ping-ponging between `idx` and
-    // `scratch`. SORT_CHUNKS = 16 gives four levels, so the final merge
-    // lands back in `idx`.
+    // `scratch`. With ⌈log₂ chunks⌉ odd (e.g. 8 or 32 chunks) the final
+    // merge lands in `scratch` and one O(m) copy brings it home — noise
+    // next to the sort itself.
     scratch.clear();
     scratch.resize(m, 0);
     let mut src: &mut [usize] = idx;
     let mut dst: &mut [usize] = scratch;
     let mut stride = 1;
     let mut in_idx = true;
-    while stride < SORT_CHUNKS {
+    while stride < chunks {
         merge_level(v, src, dst, &bounds, stride, pool);
         std::mem::swap(&mut src, &mut dst);
         in_idx = !in_idx;
         stride *= 2;
     }
     if !in_idx {
-        // Defensive: only reachable if SORT_CHUNKS stops being 2^(2k).
         dst.copy_from_slice(src);
     }
 }
 
 /// One merge level: merge run pairs of `stride` chunks from `src` into
 /// `dst`, each pair's output cut into spans along the global chunk
-/// boundaries so the level parallelizes `SORT_CHUNKS` ways regardless of
+/// boundaries so the level parallelizes one-task-per-chunk regardless of
 /// how few pairs remain.
 fn merge_level(
     v: &[f64],
@@ -308,6 +319,16 @@ mod tests {
                 })
                 .collect(),
         ]
+    }
+
+    #[test]
+    fn adaptive_chunk_plan_follows_pool_size() {
+        assert_eq!(adaptive_chunks(1), 4);
+        assert_eq!(adaptive_chunks(2), 8);
+        assert_eq!(adaptive_chunks(3), 12);
+        assert_eq!(adaptive_chunks(8), 32);
+        assert_eq!(adaptive_chunks(16), 64);
+        assert_eq!(adaptive_chunks(128), 64); // clamped
     }
 
     #[test]

@@ -7,75 +7,82 @@
 //! row-optimized and a column-optimized copy of the data matrix, trading
 //! 2× memory for speed (Fig. 3 discussion); `ablation_tree`/§Perf revisit
 //! that trade-off here.
+//!
+//! The CSR type is split into an owned [`CsrMatrix`] and a borrowed
+//! [`CsrView`]: every kernel is implemented once, on the view, and the
+//! owned matrix delegates. A view can borrow from the matrix's own
+//! vectors *or* from the memory-mapped sections of a pallas store
+//! (`data::store`) — the `u64` row-offset width below is exactly the
+//! on-disk width, so a store opens with zero copies. Row offsets are
+//! interpreted relative to `indptr[0]`, which makes row-range subviews
+//! (the growing-prefix benches) O(1) slices rather than copies.
 
-/// CSR sparse matrix (`rows × cols`), f64 values, usize column indices.
-#[derive(Clone, Debug, PartialEq)]
-pub struct CsrMatrix {
+use anyhow::{ensure, Result};
+
+/// Borrowed CSR view (`rows × cols`): the zero-copy substrate shared by
+/// the owned [`CsrMatrix`] and the memory-mapped pallas store. `Copy`, so
+/// it moves freely into worker-pool tasks.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrView<'a> {
     rows: usize,
     cols: usize,
-    /// Row start offsets, length `rows + 1`.
-    indptr: Vec<usize>,
-    /// Column indices, length nnz, ascending within each row.
-    indices: Vec<u32>,
-    /// Values, length nnz.
-    values: Vec<f64>,
+    /// Row offsets, length `rows + 1`, non-decreasing; entries are
+    /// relative to `indptr[0]` (always 0 for a full matrix, non-zero for
+    /// a row-range subview into a larger array).
+    indptr: &'a [u64],
+    /// Column indices for the viewed rows, ascending within each row.
+    indices: &'a [u32],
+    /// Values, same length as `indices`.
+    values: &'a [f64],
 }
 
-impl CsrMatrix {
-    /// Build from triplets `(row, col, value)`. Duplicate entries are
-    /// summed; zero values are kept (callers may prune beforehand).
-    pub fn from_triplets(rows: usize, cols: usize, mut triplets: Vec<(usize, usize, f64)>) -> Self {
-        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
-        let mut indptr = vec![0usize; rows + 1];
-        let mut indices = Vec::with_capacity(triplets.len());
-        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
-        let mut last: Option<(usize, usize)> = None;
-        for (r, c, v) in triplets {
-            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
-            if last == Some((r, c)) {
-                *values.last_mut().unwrap() += v;
-            } else {
-                indptr[r + 1] += 1;
-                indices.push(c as u32);
-                values.push(v);
-                last = Some((r, c));
-            }
-        }
-        for i in 0..rows {
-            indptr[i + 1] += indptr[i];
-        }
-        CsrMatrix { rows, cols, indptr, indices, values }
-    }
-
-    /// Build directly from CSR arrays (validated).
-    pub fn from_raw(
+impl<'a> CsrView<'a> {
+    /// Build a validated view over raw CSR arrays. This is the bounds
+    /// gate the pallas store relies on at open time: after it passes,
+    /// every kernel below is in-bounds by construction.
+    pub fn new(
         rows: usize,
         cols: usize,
-        indptr: Vec<usize>,
-        indices: Vec<u32>,
-        values: Vec<f64>,
-    ) -> Self {
-        assert_eq!(indptr.len(), rows + 1);
-        assert_eq!(indices.len(), values.len());
-        assert_eq!(*indptr.last().unwrap_or(&0), indices.len());
+        indptr: &'a [u64],
+        indices: &'a [u32],
+        values: &'a [f64],
+    ) -> Result<Self> {
+        ensure!(indptr.len() == rows + 1, "indptr length {} != rows+1 {}", indptr.len(), rows + 1);
+        ensure!(
+            indices.len() == values.len(),
+            "indices/values length mismatch: {} vs {}",
+            indices.len(),
+            values.len()
+        );
         for w in indptr.windows(2) {
-            assert!(w[0] <= w[1], "indptr must be non-decreasing");
+            ensure!(w[0] <= w[1], "indptr must be non-decreasing");
         }
-        assert!(indices.iter().all(|&c| (c as usize) < cols), "column index out of bounds");
-        CsrMatrix { rows, cols, indptr, indices, values }
+        let base = indptr[0];
+        let nnz = indptr[rows] - base;
+        ensure!(
+            nnz as usize == indices.len(),
+            "indptr spans {} non-zeros but {} are present",
+            nnz,
+            indices.len()
+        );
+        for &c in indices {
+            ensure!((c as usize) < cols, "column index {c} out of bounds (cols = {cols})");
+        }
+        Ok(CsrView { rows, cols, indptr, indices, values })
     }
 
-    /// Dense → CSR (drops exact zeros).
-    pub fn from_dense(x: &super::dense::DenseMatrix) -> Self {
-        let mut triplets = Vec::new();
-        for i in 0..x.rows() {
-            for (j, &v) in x.row(i).iter().enumerate() {
-                if v != 0.0 {
-                    triplets.push((i, j, v));
-                }
-            }
-        }
-        CsrMatrix::from_triplets(x.rows(), x.cols(), triplets)
+    /// Build without validation — for views derived from an already
+    /// validated owned matrix whose invariants hold by construction.
+    pub(crate) fn new_unchecked(
+        rows: usize,
+        cols: usize,
+        indptr: &'a [u64],
+        indices: &'a [u32],
+        values: &'a [f64],
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), rows + 1);
+        debug_assert_eq!(indices.len(), values.len());
+        CsrView { rows, cols, indptr, indices, values }
     }
 
     #[inline]
@@ -104,8 +111,10 @@ impl CsrMatrix {
 
     /// Non-zeros of row `i` as `(indices, values)`.
     #[inline]
-    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
-        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+    pub fn row(&self, i: usize) -> (&'a [u32], &'a [f64]) {
+        let base = self.indptr[0];
+        let lo = (self.indptr[i] - base) as usize;
+        let hi = (self.indptr[i + 1] - base) as usize;
         (&self.indices[lo..hi], &self.values[lo..hi])
     }
 
@@ -113,13 +122,13 @@ impl CsrMatrix {
     pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        for i in 0..self.rows {
+        for (i, o) in out.iter_mut().enumerate() {
             let (idx, val) = self.row(i);
             let mut s = 0.0;
             for (&j, &v) in idx.iter().zip(val) {
                 s += v * w[j as usize];
             }
-            out[i] = s;
+            *o = s;
         }
     }
 
@@ -128,8 +137,7 @@ impl CsrMatrix {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
         out.iter_mut().for_each(|x| *x = 0.0);
-        for i in 0..self.rows {
-            let vi = v[i];
+        for (i, &vi) in v.iter().enumerate() {
             if vi != 0.0 {
                 let (idx, val) = self.row(i);
                 for (&j, &x) in idx.iter().zip(val) {
@@ -149,37 +157,38 @@ impl CsrMatrix {
         s
     }
 
-    /// Extract a row-range submatrix `[lo, hi)` (used by train/test splits
-    /// and the query-grouped loss).
-    pub fn row_range(&self, lo: usize, hi: usize) -> CsrMatrix {
+    /// Zero-copy row-range subview `[lo, hi)` — the growing-prefix
+    /// benches slice a memory-mapped store with this instead of copying.
+    pub fn row_range(&self, lo: usize, hi: usize) -> CsrView<'a> {
         assert!(lo <= hi && hi <= self.rows);
-        let (a, b) = (self.indptr[lo], self.indptr[hi]);
-        let indptr: Vec<usize> = self.indptr[lo..=hi].iter().map(|&p| p - a).collect();
-        CsrMatrix {
+        let base = self.indptr[0];
+        let a = (self.indptr[lo] - base) as usize;
+        let b = (self.indptr[hi] - base) as usize;
+        CsrView {
             rows: hi - lo,
             cols: self.cols,
-            indptr,
-            indices: self.indices[a..b].to_vec(),
-            values: self.values[a..b].to_vec(),
+            indptr: &self.indptr[lo..=hi],
+            indices: &self.indices[a..b],
+            values: &self.values[a..b],
         }
     }
 
-    /// Gather an arbitrary subset of rows into a new matrix.
-    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
-        let mut triplets = Vec::new();
-        for (new_i, &i) in rows.iter().enumerate() {
-            let (idx, val) = self.row(i);
-            for (&j, &v) in idx.iter().zip(val) {
-                triplets.push((new_i, j as usize, v));
-            }
+    /// Materialize an owned copy of this view.
+    pub fn to_owned_matrix(&self) -> CsrMatrix {
+        let base = self.indptr[0];
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.iter().map(|&p| p - base).collect(),
+            indices: self.indices.to_vec(),
+            values: self.values.to_vec(),
         }
-        CsrMatrix::from_triplets(rows.len(), self.cols, triplets)
     }
 
     /// Convert to CSC (column-optimized copy).
     pub fn to_csc(&self) -> CscMatrix {
         let mut colptr = vec![0usize; self.cols + 1];
-        for &c in &self.indices {
+        for &c in self.indices {
             colptr[c as usize + 1] += 1;
         }
         for j in 0..self.cols {
@@ -199,6 +208,146 @@ impl CsrMatrix {
         }
         CscMatrix { rows: self.rows, cols: self.cols, colptr, row_indices, values }
     }
+}
+
+/// Owned CSR sparse matrix (`rows × cols`), f64 values, u32 column
+/// indices, u64 row offsets (the pallas-store on-disk width).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row start offsets, length `rows + 1`.
+    indptr: Vec<u64>,
+    /// Column indices, length nnz, ascending within each row.
+    indices: Vec<u32>,
+    /// Values, length nnz.
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from triplets `(row, col, value)`. Duplicate entries are
+    /// summed; zero values are kept (callers may prune beforehand).
+    pub fn from_triplets(rows: usize, cols: usize, mut triplets: Vec<(usize, usize, f64)>) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0u64; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r + 1] += 1;
+                indices.push(c as u32);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Build directly from CSR arrays (validated; `indptr` in the u64
+    /// on-disk width).
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        CsrView::new(rows, cols, &indptr, &indices, &values).expect("invalid CSR arrays");
+        assert_eq!(indptr.first().copied().unwrap_or(0), 0, "owned indptr must start at 0");
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    /// Dense → CSR (drops exact zeros).
+    pub fn from_dense(x: &super::dense::DenseMatrix) -> Self {
+        let mut triplets = Vec::new();
+        for i in 0..x.rows() {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        CsrMatrix::from_triplets(x.rows(), x.cols(), triplets)
+    }
+
+    /// Borrowed zero-copy view — the form every kernel and compute
+    /// backend consumes.
+    #[inline]
+    pub fn view(&self) -> CsrView<'_> {
+        CsrView::new_unchecked(self.rows, self.cols, &self.indptr, &self.indices, &self.values)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Average non-zeros per row — the paper's sparsity parameter `s`.
+    pub fn avg_nnz_per_row(&self) -> f64 {
+        self.view().avg_nnz_per_row()
+    }
+
+    /// Non-zeros of row `i` as `(indices, values)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `p = X·w` (length `rows`), `O(nnz)`.
+    pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
+        self.view().matvec(w, out)
+    }
+
+    /// `a = Xᵀ·v` (length `cols`), `O(nnz)` scatter. `out` overwritten.
+    pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        self.view().matvec_t(v, out)
+    }
+
+    /// Dot product of row `i` with a dense vector (prediction path).
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        self.view().row_dot(i, w)
+    }
+
+    /// Extract a row-range submatrix `[lo, hi)` as an owned copy (used by
+    /// train/test splits; prefer [`CsrView::row_range`] for zero-copy).
+    pub fn row_range(&self, lo: usize, hi: usize) -> CsrMatrix {
+        self.view().row_range(lo, hi).to_owned_matrix()
+    }
+
+    /// Gather an arbitrary subset of rows into a new matrix.
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut triplets = Vec::new();
+        for (new_i, &i) in rows.iter().enumerate() {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                triplets.push((new_i, j as usize, v));
+            }
+        }
+        CsrMatrix::from_triplets(rows.len(), self.cols, triplets)
+    }
+
+    /// Convert to CSC (column-optimized copy).
+    pub fn to_csc(&self) -> CscMatrix {
+        self.view().to_csc()
+    }
 
     /// Materialize as dense (tests / XLA tile feeding on small data).
     pub fn to_dense(&self) -> super::dense::DenseMatrix {
@@ -214,7 +363,7 @@ impl CsrMatrix {
 
     /// Approximate heap footprint in bytes (Fig-3 memory accounting).
     pub fn mem_bytes(&self) -> usize {
-        self.indptr.len() * std::mem::size_of::<usize>()
+        self.indptr.len() * std::mem::size_of::<u64>()
             + self.indices.len() * std::mem::size_of::<u32>()
             + self.values.len() * std::mem::size_of::<f64>()
     }
@@ -356,6 +505,46 @@ mod tests {
         let s = m.select_rows(&[3, 0]);
         assert_eq!(s.row(0), (&[0u32][..], &[4.0][..]));
         assert_eq!(s.row(1), (&[0u32][..], &[1.0][..]));
+    }
+
+    #[test]
+    fn view_row_range_is_zero_copy_and_consistent() {
+        let mut rng = Rng::new(31);
+        let m = random_csr(&mut rng, 30, 12, 0.3);
+        let view = m.view();
+        for (lo, hi) in [(0, 30), (5, 20), (7, 7), (29, 30)] {
+            let sub = view.row_range(lo, hi);
+            let owned = m.row_range(lo, hi);
+            assert_eq!(sub.rows(), owned.rows());
+            assert_eq!(sub.nnz(), owned.nnz());
+            for i in 0..sub.rows() {
+                assert_eq!(sub.row(i), owned.row(i));
+            }
+            // Round trip through the owned materialization.
+            assert_eq!(sub.to_owned_matrix(), owned);
+        }
+        // Nested subview of a subview (relative indptr base).
+        let sub = view.row_range(4, 26).row_range(3, 10);
+        let owned = m.row_range(7, 14);
+        for i in 0..sub.rows() {
+            assert_eq!(sub.row(i), owned.row(i));
+        }
+    }
+
+    #[test]
+    fn view_new_validates() {
+        // Valid.
+        assert!(CsrView::new(2, 3, &[0, 1, 2], &[0, 2], &[1.0, 2.0]).is_ok());
+        // Wrong indptr length.
+        assert!(CsrView::new(2, 3, &[0, 1], &[0], &[1.0]).is_err());
+        // Decreasing indptr.
+        assert!(CsrView::new(2, 3, &[0, 2, 1], &[0, 1], &[1.0, 2.0]).is_err());
+        // Column out of bounds.
+        assert!(CsrView::new(1, 2, &[0, 1], &[5], &[1.0]).is_err());
+        // nnz mismatch.
+        assert!(CsrView::new(1, 2, &[0, 2], &[0], &[1.0]).is_err());
+        // indices/values length mismatch.
+        assert!(CsrView::new(1, 2, &[0, 1], &[0, 1], &[1.0]).is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod squared_tree;
 pub mod tree;
 
 pub use pairwise::PairOracle;
-pub use query::QueryGrouped;
+pub use query::{GroupIndex, QueryGrouped};
 pub use rlevel::RLevelOracle;
 pub use sharded::ShardedTreeOracle;
 pub use squared::SquaredPairOracle;

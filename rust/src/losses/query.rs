@@ -9,40 +9,146 @@
 //! (paper, end of §4.3).
 
 use super::{count_comparable_pairs, OracleOutput, RankingOracle};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
 
-/// Partition examples into query groups (first-seen qid order) and
-/// count each group's comparable pairs. The single source of truth for
-/// the grouping convention — shared by [`QueryGrouped`] and the sharded
-/// engine ([`super::ShardedTreeOracle`]), whose bit-identity contract
-/// depends on both sides agreeing on group order and pair counts.
-pub(crate) fn build_groups(qid: &[u64], y: &[f64]) -> (Vec<Vec<usize>>, Vec<f64>) {
-    assert_eq!(qid.len(), y.len(), "qid/label count mismatch");
-    let mut map = std::collections::HashMap::<u64, usize>::new();
-    let mut groups: Vec<Vec<usize>> = Vec::new();
-    for (i, &q) in qid.iter().enumerate() {
-        let g = *map.entry(q).or_insert_with(|| {
-            groups.push(Vec::new());
-            groups.len() - 1
-        });
-        groups[g].push(i);
-    }
-    let group_pairs = groups
-        .iter()
-        .map(|g| {
-            let yg: Vec<f64> = g.iter().map(|&i| y[i]).collect();
-            count_comparable_pairs(&yg) as f64
-        })
-        .collect();
-    (groups, group_pairs)
+/// The query-group partition of a training set, in flat CSR-like form:
+/// `examples[offsets[g]..offsets[g+1]]` are the example indices of group
+/// `g` (groups in first-seen qid order, examples in dataset order), and
+/// `pairs[g]` is the group's exact comparable-pair count.
+///
+/// This is the single source of truth for the grouping convention —
+/// shared by [`QueryGrouped`], the sharded engine
+/// ([`super::ShardedTreeOracle`]), whose bit-identity contract depends
+/// on both sides agreeing on group order and pair counts, and the pallas
+/// store (`data::store`), which serializes exactly these three arrays so
+/// an opened store skips the per-run group scan entirely.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupIndex {
+    /// Group start offsets into `examples`, length `n_groups + 1`.
+    offsets: Vec<usize>,
+    /// Example indices concatenated by group, length `m`.
+    examples: Vec<usize>,
+    /// Comparable pairs per group (fixed by the labels at build).
+    pairs: Vec<u64>,
 }
 
-/// Wraps any per-group oracle and averages over query groups.
+impl GroupIndex {
+    /// Build by scanning per-example query ids (first-seen qid order)
+    /// against the fixed label vector.
+    pub fn build(qid: &[u64], y: &[f64]) -> Self {
+        assert_eq!(qid.len(), y.len(), "qid/label count mismatch");
+        let mut map = std::collections::HashMap::<u64, usize>::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, &q) in qid.iter().enumerate() {
+            let g = *map.entry(q).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(i);
+        }
+        let mut offsets = Vec::with_capacity(groups.len() + 1);
+        let mut examples = Vec::with_capacity(qid.len());
+        let mut pairs = Vec::with_capacity(groups.len());
+        let mut yg = Vec::new();
+        offsets.push(0);
+        for g in &groups {
+            examples.extend_from_slice(g);
+            offsets.push(examples.len());
+            yg.clear();
+            yg.extend(g.iter().map(|&i| y[i]));
+            pairs.push(count_comparable_pairs(&yg));
+        }
+        GroupIndex { offsets, examples, pairs }
+    }
+
+    /// Rebuild from serialized parts (the pallas store's group-index
+    /// sections), validating structural invariants. Group *contents*
+    /// (that `examples` partitions `0..m` consistently with some qid
+    /// vector) are the writer's responsibility, guarded by the store
+    /// checksum.
+    pub fn from_parts(offsets: Vec<usize>, examples: Vec<usize>, pairs: Vec<u64>) -> Result<Self> {
+        ensure!(!offsets.is_empty(), "group offsets must contain at least the terminal 0");
+        ensure!(offsets[0] == 0, "group offsets must start at 0");
+        ensure!(
+            offsets.len() == pairs.len() + 1,
+            "group offsets/pairs length mismatch: {} vs {}",
+            offsets.len(),
+            pairs.len()
+        );
+        for w in offsets.windows(2) {
+            ensure!(w[0] <= w[1], "group offsets must be non-decreasing");
+        }
+        ensure!(
+            *offsets.last().unwrap() == examples.len(),
+            "group offsets end at {} but {} examples are indexed",
+            offsets.last().unwrap(),
+            examples.len()
+        );
+        let m = examples.len();
+        let mut seen = vec![false; m];
+        for &i in &examples {
+            ensure!(i < m, "group example index {i} out of bounds (m = {m})");
+            ensure!(!seen[i], "group example index {i} appears twice");
+            seen[i] = true;
+        }
+        Ok(GroupIndex { offsets, examples, pairs })
+    }
+
+    /// Number of query groups.
+    pub fn n_groups(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total examples indexed (the dataset's `m`).
+    pub fn n_examples(&self) -> usize {
+        self.examples.len()
+    }
+
+    /// Example indices of group `g`.
+    #[inline]
+    pub fn group(&self, g: usize) -> &[usize] {
+        &self.examples[self.offsets[g]..self.offsets[g + 1]]
+    }
+
+    /// Exact comparable-pair count of group `g`.
+    #[inline]
+    pub fn group_pairs(&self, g: usize) -> u64 {
+        self.pairs[g]
+    }
+
+    /// Number of groups with at least one comparable pair — the
+    /// effective `R` used for averaging (groups with all-tied labels
+    /// contribute no preference information; including them would only
+    /// rescale).
+    pub fn n_effective_groups(&self) -> usize {
+        self.pairs.iter().filter(|&&n| n > 0).count()
+    }
+
+    /// Total comparable pairs across groups, accumulated in group order
+    /// (the order matters for float bit-identity with older per-group
+    /// f64 accumulation).
+    pub fn total_pairs(&self) -> f64 {
+        let mut total = 0.0;
+        for &n in &self.pairs {
+            total += n as f64;
+        }
+        total
+    }
+
+    /// Serialized views for the store writer: `(offsets, examples,
+    /// pairs)` exactly as [`Self::from_parts`] expects them back.
+    pub fn as_parts(&self) -> (&[usize], &[usize], &[u64]) {
+        (&self.offsets, &self.examples, &self.pairs)
+    }
+}
+
+/// Wraps any per-group oracle and averages over query groups. The
+/// index is shared by `Arc` so a store-carried index is referenced, not
+/// copied, per training run.
 pub struct QueryGrouped<O: RankingOracle> {
     inner: O,
-    /// Example indices per group.
-    groups: Vec<Vec<usize>>,
-    /// Comparable-pair count per group (fixed by the labels at build).
-    group_pairs: Vec<f64>,
+    index: Arc<GroupIndex>,
     /// Scratch buffers.
     p_buf: Vec<f64>,
     y_buf: Vec<f64>,
@@ -52,25 +158,28 @@ impl<O: RankingOracle> QueryGrouped<O> {
     /// Build from per-example query ids (`qid[i]` arbitrary integers) and
     /// the fixed label vector.
     pub fn new(inner: O, qid: &[u64], y: &[f64]) -> Self {
-        let (groups, group_pairs) = build_groups(qid, y);
-        QueryGrouped { inner, groups, group_pairs, p_buf: Vec::new(), y_buf: Vec::new() }
+        Self::with_index(inner, Arc::new(GroupIndex::build(qid, y)))
+    }
+
+    /// Build from a precomputed group index (e.g. the one a pallas store
+    /// carries) — no scan, no copy.
+    pub fn with_index(inner: O, index: Arc<GroupIndex>) -> Self {
+        QueryGrouped { inner, index, p_buf: Vec::new(), y_buf: Vec::new() }
     }
 
     /// Number of query groups.
     pub fn n_groups(&self) -> usize {
-        self.groups.len()
+        self.index.n_groups()
     }
 
-    /// Number of groups with at least one comparable pair — the effective
-    /// `R` used for averaging (groups with all-tied labels contribute no
-    /// preference information; including them would only rescale).
+    /// Number of groups with at least one comparable pair.
     pub fn n_effective_groups(&self) -> usize {
-        self.group_pairs.iter().filter(|&&n| n > 0.0).count()
+        self.index.n_effective_groups()
     }
 
     /// Total comparable pairs across groups (for reporting).
     pub fn total_pairs(&self) -> f64 {
-        self.group_pairs.iter().sum()
+        self.index.total_pairs()
     }
 }
 
@@ -80,14 +189,15 @@ impl<O: RankingOracle> RankingOracle for QueryGrouped<O> {
     fn eval(&mut self, p: &[f64], y: &[f64], _n_pairs: f64) -> OracleOutput {
         let m = p.len();
         assert_eq!(m, y.len());
-        let r_eff = self.n_effective_groups().max(1) as f64;
+        let r_eff = self.index.n_effective_groups().max(1) as f64;
         let mut loss = 0.0;
         let mut coeffs = vec![0.0; m];
-        for (g, idx) in self.groups.iter().enumerate() {
-            let ng = self.group_pairs[g];
+        for g in 0..self.index.n_groups() {
+            let ng = self.index.group_pairs(g) as f64;
             if ng == 0.0 {
                 continue;
             }
+            let idx = self.index.group(g);
             self.p_buf.clear();
             self.y_buf.clear();
             self.p_buf.extend(idx.iter().map(|&i| p[i]));
@@ -195,5 +305,40 @@ mod tests {
         let out = grouped.eval(&[], &[], 0.0);
         assert_eq!(out.loss, 0.0);
         assert_eq!(grouped.n_groups(), 0);
+    }
+
+    #[test]
+    fn index_roundtrips_through_parts() {
+        let qid = [3u64, 1, 3, 3, 1, 9];
+        let y = [1.0, 0.0, 2.0, 2.0, 1.0, 5.0];
+        let built = GroupIndex::build(&qid, &y);
+        assert_eq!(built.n_groups(), 3);
+        assert_eq!(built.group(0), &[0, 2, 3]); // qid 3, first seen
+        assert_eq!(built.group(1), &[1, 4]); // qid 1
+        assert_eq!(built.group(2), &[5]); // qid 9
+        assert_eq!(built.group_pairs(2), 0);
+        let (o, e, p) = built.as_parts();
+        let back = GroupIndex::from_parts(o.to_vec(), e.to_vec(), p.to_vec()).unwrap();
+        assert_eq!(back, built);
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed() {
+        // Offsets not starting at 0.
+        assert!(GroupIndex::from_parts(vec![1, 2], vec![0, 1], vec![0]).is_err());
+        // Decreasing offsets.
+        assert!(GroupIndex::from_parts(vec![0, 2, 1], vec![0, 1], vec![0, 0]).is_err());
+        // Terminal offset not covering all examples.
+        assert!(GroupIndex::from_parts(vec![0, 1], vec![0, 1], vec![1]).is_err());
+        // Out-of-bounds example.
+        assert!(GroupIndex::from_parts(vec![0, 2], vec![0, 7], vec![1]).is_err());
+        // Duplicate example.
+        assert!(GroupIndex::from_parts(vec![0, 2], vec![1, 1], vec![1]).is_err());
+        // Offsets/pairs mismatch.
+        assert!(GroupIndex::from_parts(vec![0, 2], vec![0, 1], vec![1, 2]).is_err());
+        // Empty offsets.
+        assert!(GroupIndex::from_parts(vec![], vec![], vec![]).is_err());
+        // Valid empty index.
+        assert!(GroupIndex::from_parts(vec![0], vec![], vec![]).is_ok());
     }
 }

@@ -18,9 +18,11 @@
 //! **One global ranking**: the frequencies `c_i`/`d_i` of eqs. (5)–(6)
 //! are *integer* dominance counts over the margin window
 //! `W(i) = {j : 1 + p_i − p_j > 0}` (a prefix of the score-sorted order).
-//! The sorted order is split into one contiguous chunk per shard, and
-//! the *queries* (sorted positions `k`) are dealt to shards as equal
-//! contiguous ranges. The shard owning query `k` computes `c_k` as
+//! The sorted order is split into [`adaptive_chunks`] contiguous chunks
+//! (the per-trainer chunk plan, `clamp(4·threads, 4, 64)` — finer than
+//! the shard count), and the *queries* (sorted positions `k`) are dealt
+//! to shards as equal contiguous ranges. The shard owning query `k`
+//! computes `c_k` as
 //!
 //! - an incremental red-black-tree count over
 //!   `[base, w_end(k))`, where `base` is the chunk boundary at or below
@@ -48,8 +50,8 @@
 //! embarrassingly parallel. (The previous window-end ownership collapsed
 //! this case onto one shard; see ROADMAP history.)
 
-use super::{assemble_from_counts, OracleOutput, RankingOracle};
-use crate::linalg::ops::par_argsort_into;
+use super::{assemble_from_counts, GroupIndex, OracleOutput, RankingOracle};
+use crate::linalg::ops::{adaptive_chunks, par_argsort_into};
 use crate::losses::tree::TreeOracle;
 use crate::rbtree::OsTree;
 use crate::runtime::pool::{Task, WorkerPool};
@@ -63,10 +65,10 @@ enum Plan {
     /// [`super::QueryGrouped`]), dealt to shards as contiguous group
     /// runs balanced by example count.
     Grouped {
-        /// Example indices per group.
-        groups: Vec<Vec<usize>>,
-        /// Comparable pairs per group (fixed by the labels at build).
-        group_pairs: Vec<f64>,
+        /// The flat group partition (shared convention with
+        /// [`super::QueryGrouped`] and the pallas store; `Arc`-shared so
+        /// a store-carried index is referenced, not copied).
+        index: Arc<GroupIndex>,
         /// Effective group count for averaging (groups with pairs).
         r_eff: f64,
         /// Per shard: `[lo, hi)` range of group indices.
@@ -110,7 +112,8 @@ impl ShardState {
 
 /// Shared read-only view handed to the global-mode workers.
 struct GlobalView<'a> {
-    /// Chunk boundaries over sorted positions, length `n_shards + 1`.
+    /// Chunk boundaries over sorted positions, length `n_chunks + 1`
+    /// (the adaptive chunk plan — finer than the shard count).
     bounds: &'a [usize],
     /// Owned query range `[lo, hi)` per shard (sorted positions `k`),
     /// used by both the forward and the backward sweep.
@@ -132,6 +135,13 @@ struct GlobalView<'a> {
 pub struct ShardedTreeOracle {
     pool: Arc<WorkerPool>,
     n_shards: usize,
+    /// Global-mode chunk count for the binary-search substrate —
+    /// [`adaptive_chunks`] of the pool size, fixed at construction
+    /// (once per trainer). Finer than the shard count, so each shard's
+    /// incremental tree sweep starts at a chunk boundary close to its
+    /// first window extent; counts are exact integers, so the chunk
+    /// count cannot change a result bit.
+    n_chunks: usize,
     plan: Plan,
     shards: Vec<ShardState>,
     /// Per-chunk sorted labels, outside [`ShardState`] so phase-B workers
@@ -160,19 +170,32 @@ impl ShardedTreeOracle {
     /// over a fixed training label vector; `qid` enables query-group
     /// sharding (must align with `y`).
     pub fn with_pool(pool: Arc<WorkerPool>, qid: Option<&[u64]>, y: &[f64]) -> Self {
+        let index = qid.map(|q| Arc::new(GroupIndex::build(q, y)));
+        Self::from_plan(pool, index)
+    }
+
+    /// Build on a persistent pool from a precomputed [`GroupIndex`]
+    /// (e.g. the one a pallas store carries) — no per-run group scan,
+    /// no copy.
+    pub fn with_pool_index(pool: Arc<WorkerPool>, index: Arc<GroupIndex>) -> Self {
+        Self::from_plan(pool, Some(index))
+    }
+
+    fn from_plan(pool: Arc<WorkerPool>, index: Option<Arc<GroupIndex>>) -> Self {
         let n_shards = pool.n_threads().max(1);
-        let plan = match qid {
+        let n_chunks = adaptive_chunks(n_shards);
+        let plan = match index {
             None => Plan::Global,
-            Some(q) => {
-                let (groups, group_pairs) = crate::losses::query::build_groups(q, y);
-                let r_eff = group_pairs.iter().filter(|&&n| n > 0.0).count().max(1) as f64;
-                let ranges = split_groups(&groups, n_shards);
-                Plan::Grouped { groups, group_pairs, r_eff, ranges }
+            Some(index) => {
+                let r_eff = index.n_effective_groups().max(1) as f64;
+                let ranges = split_groups(&index, n_shards);
+                Plan::Grouped { index, r_eff, ranges }
             }
         };
         ShardedTreeOracle {
             pool,
             n_shards,
+            n_chunks,
             plan,
             shards: (0..n_shards).map(|_| ShardState::new()).collect(),
             sorted_labels: Vec::new(),
@@ -201,7 +224,7 @@ impl ShardedTreeOracle {
     pub fn n_groups(&self) -> Option<usize> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { groups, .. } => Some(groups.len()),
+            Plan::Grouped { index, .. } => Some(index.n_groups()),
         }
     }
 
@@ -219,7 +242,7 @@ impl ShardedTreeOracle {
     pub fn total_pairs(&self) -> Option<f64> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { group_pairs, .. } => Some(group_pairs.iter().sum()),
+            Plan::Grouped { index, .. } => Some(index.total_pairs()),
         }
     }
 
@@ -277,25 +300,29 @@ impl ShardedTreeOracle {
             }
         }
 
-        // Contiguous chunks of the sorted order (binary-search substrate)
-        // and equal contiguous *query* ranges per shard. Query-balanced
-        // ownership keeps the per-shard tree sweeps bounded even when
-        // every window spans the whole array (the degenerate
-        // all-scores-within-one-margin case): window ends that land on
-        // chunk boundaries contribute binary searches only, so that case
-        // redistributes across all shards instead of collapsing onto the
-        // owner of the last chunk.
-        let bounds: Vec<usize> = (0..=n_shards).map(|s| s * m / n_shards).collect();
+        // Contiguous chunks of the sorted order (binary-search
+        // substrate, [`adaptive_chunks`] of the pool size — finer than
+        // the shard count so sweep bases land close to the first window
+        // extents) and equal contiguous *query* ranges per shard.
+        // Query-balanced ownership keeps the per-shard tree sweeps
+        // bounded even when every window spans the whole array (the
+        // degenerate all-scores-within-one-margin case): window ends
+        // that land on chunk boundaries contribute binary searches only,
+        // so that case redistributes across all shards instead of
+        // collapsing onto the owner of the last chunk.
+        let n_chunks = if n_shards == 1 { 1 } else { self.n_chunks.clamp(1, m) };
+        let bounds: Vec<usize> = (0..=n_chunks).map(|c| c * m / n_chunks).collect();
         let owned: Vec<(usize, usize)> =
             (0..n_shards).map(|s| (s * m / n_shards, (s + 1) * m / n_shards)).collect();
 
         // Phase A: per-chunk sorted label arrays (cross-chunk counting
         // substrate). Skipped for a single shard — the lone worker runs
-        // the pure serial sweep and never consults them.
-        self.sorted_labels.resize_with(n_shards, Vec::new);
-        if n_shards > 1 {
+        // the pure serial sweep over one whole-array chunk and never
+        // consults them.
+        self.sorted_labels.resize_with(n_chunks, Vec::new);
+        if n_chunks > 1 {
             let y_sorted = &self.y_sorted;
-            let mut tasks: Vec<Task> = Vec::with_capacity(n_shards);
+            let mut tasks: Vec<Task> = Vec::with_capacity(n_chunks);
             for (s, lab) in self.sorted_labels.iter_mut().enumerate() {
                 let (lo, hi) = (bounds[s], bounds[s + 1]);
                 tasks.push(Box::new(move || {
@@ -356,21 +383,20 @@ impl ShardedTreeOracle {
     fn eval_grouped(&mut self, p: &[f64], y: &[f64]) -> OracleOutput {
         let m = p.len();
         assert_eq!(m, y.len());
-        let Plan::Grouped { groups, group_pairs, r_eff, ranges } = &self.plan else {
+        let Plan::Grouped { index, r_eff, ranges } = &self.plan else {
             unreachable!("eval_grouped requires a grouped plan")
         };
         let r_eff = *r_eff;
         let shards = &mut self.shards;
 
+        let gi: &GroupIndex = index;
         if shards.len() == 1 {
-            grouped_worker(&mut shards[0], ranges[0], groups, group_pairs, p, y);
+            grouped_worker(&mut shards[0], ranges[0], gi, p, y);
         } else {
             let mut tasks: Vec<Task> = Vec::with_capacity(shards.len());
             for (s, state) in shards.iter_mut().enumerate() {
                 let range = ranges[s];
-                tasks.push(Box::new(move || {
-                    grouped_worker(state, range, groups, group_pairs, p, y)
-                }));
+                tasks.push(Box::new(move || grouped_worker(state, range, gi, p, y)));
             }
             self.pool.run(tasks);
         }
@@ -383,7 +409,7 @@ impl ShardedTreeOracle {
         for state in self.shards.iter() {
             for &(g, off, len, group_loss) in &state.meta {
                 loss += group_loss / r_eff;
-                let idx = &groups[g];
+                let idx = index.group(g);
                 debug_assert_eq!(len, idx.len());
                 for (k, &i) in idx.iter().enumerate() {
                     coeffs[i] = state.coeff_buf[off + k] / r_eff;
@@ -413,19 +439,20 @@ impl RankingOracle for ShardedTreeOracle {
 
 /// Deal groups to `n_shards` contiguous runs balanced by example count.
 /// Deterministic in the inputs; the last shard absorbs the remainder.
-fn split_groups(groups: &[Vec<usize>], n_shards: usize) -> Vec<(usize, usize)> {
-    let total: usize = groups.iter().map(|g| g.len()).sum();
+fn split_groups(index: &GroupIndex, n_shards: usize) -> Vec<(usize, usize)> {
+    let n_groups = index.n_groups();
+    let total: usize = index.n_examples();
     let mut ranges = Vec::with_capacity(n_shards);
     let mut lo = 0usize;
     let mut cum = 0usize;
     for s in 0..n_shards {
         let mut hi = lo;
         if s + 1 == n_shards {
-            hi = groups.len();
+            hi = n_groups;
         } else {
             let target = total * (s + 1) / n_shards;
-            while hi < groups.len() && cum < target {
-                cum += groups[hi].len();
+            while hi < n_groups && cum < target {
+                cum += index.group(hi).len();
                 hi += 1;
             }
         }
@@ -440,19 +467,18 @@ fn split_groups(groups: &[Vec<usize>], n_shards: usize) -> Vec<(usize, usize)> {
 fn grouped_worker(
     state: &mut ShardState,
     range: (usize, usize),
-    groups: &[Vec<usize>],
-    group_pairs: &[f64],
+    index: &GroupIndex,
     p: &[f64],
     y: &[f64],
 ) {
     state.meta.clear();
     state.coeff_buf.clear();
     for g in range.0..range.1 {
-        let ng = group_pairs[g];
+        let ng = index.group_pairs(g) as f64;
         if ng == 0.0 {
             continue;
         }
-        let idx = &groups[g];
+        let idx = index.group(g);
         state.p_buf.clear();
         state.p_buf.extend(idx.iter().map(|&i| p[i]));
         state.y_buf.clear();
@@ -471,7 +497,7 @@ fn grouped_worker(
 /// their pre-sorted labels. Counts are exact integers either way, so the
 /// split point cannot change a result bit.
 fn global_worker(s: usize, v: &GlobalView, state: &mut ShardState) {
-    let n_chunks = v.owned.len();
+    let n_chunks = v.bounds.len() - 1;
     let (q_lo, q_hi) = v.owned[s];
 
     // NaN labels are incomparable: they are never inserted (a NaN key
@@ -776,22 +802,40 @@ mod tests {
 
     #[test]
     fn split_groups_balances_and_covers() {
-        let groups: Vec<Vec<usize>> = vec![
-            (0..50).collect(),
-            (50..60).collect(),
-            (60..100).collect(),
-            (100..105).collect(),
-            (105..200).collect(),
-        ];
+        // 5 groups of sizes 50/10/40/5/95 over 200 examples, via a qid
+        // vector with contiguous runs.
+        let mut qid = Vec::new();
+        for (g, len) in [(0u64, 50usize), (1, 10), (2, 40), (3, 5), (4, 95)] {
+            qid.extend(std::iter::repeat(g).take(len));
+        }
+        let y: Vec<f64> = (0..200).map(|i| (i % 3) as f64).collect();
+        let index = GroupIndex::build(&qid, &y);
         for s in 1..=7 {
-            let ranges = split_groups(&groups, s);
+            let ranges = split_groups(&index, s);
             assert_eq!(ranges.len(), s);
             let mut lo = 0;
             for &(a, b) in &ranges {
                 assert_eq!(a, lo);
                 lo = b;
             }
-            assert_eq!(lo, groups.len());
+            assert_eq!(lo, index.n_groups());
         }
+    }
+
+    #[test]
+    fn precomputed_index_matches_scan_construction() {
+        let mut rng = Rng::new(9007);
+        let m = 180;
+        let qid: Vec<u64> = (0..m).map(|_| rng.below(9) as u64 * 3).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut scanned = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y);
+        let index = Arc::new(GroupIndex::build(&qid, &y));
+        let mut indexed = ShardedTreeOracle::with_pool_index(Arc::clone(&pool), index);
+        let a = scanned.eval(&p, &y, 0.0);
+        let b = indexed.eval(&p, &y, 0.0);
+        assert_eq!(a.coeffs, b.coeffs);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
     }
 }

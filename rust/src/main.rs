@@ -2,17 +2,23 @@
 //!
 //! Subcommands:
 //!
-//! - `train`      — train a model on a libsvm file or a synthetic set
+//! - `train`      — train a model on a libsvm/pstore file or a synthetic set
 //! - `eval`       — pairwise ranking error of a saved model on a dataset
 //! - `gen-data`   — write a synthetic dataset in libsvm format
+//! - `convert`    — libsvm text → memory-mappable pallas store (`.pstore`)
 //! - `mem-probe`  — child process used by the Fig.-3 memory benchmark
 //! - `info`       — dataset statistics (m, n, s, r, N)
 //!
-//! Run with no args for usage.
+//! `--data` accepts either format everywhere: pallas stores are
+//! autodetected by magic bytes and memory-mapped (no parse), anything
+//! else is parsed as libsvm text. Run with no args for usage.
+//!
+//! Errors (including malformed flag values) print one `error:` line and
+//! exit with code 2 — no panics, no backtraces.
 
 use anyhow::{bail, Context, Result};
 use ranksvm::coordinator::{evaluate, memprobe, train, BackendKind, Method, RankModel, TrainConfig};
-use ranksvm::data::{libsvm, synthetic, Dataset};
+use ranksvm::data::{libsvm, materialize, store, synthetic, Dataset, DatasetView, LoadedDataset};
 use ranksvm::util::cli::Args;
 use ranksvm::util::json::Json;
 
@@ -27,67 +33,88 @@ USAGE:
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
   ranksvm eval      --model MODEL --data F
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
+  ranksvm convert   --data F.libsvm --out F.pstore [--chunk-kib N]
   ranksvm info      (--data F | --synthetic K --m M)
-  ranksvm mem-probe --dataset K --m M --method NAME [--lambda L] [--max-iter I]
+  ranksvm mem-probe (--dataset K | --data F) --m M --method NAME [--lambda L] [--max-iter I]
   ranksvm perf      [--sizes N,N,..] [--reps R] [--synthetic K]
                     [--method tree|tree-fenwick|sharded|par-sort] [--threads T]
+
+  --data F: libsvm text or a pallas store (.pstore, autodetected by magic
+  bytes and memory-mapped zero-copy). --no-verify skips the store
+  checksum/structure scan — no full-file read at open; for out-of-core
+  data you trust.
 
   synthetic kinds K: cadata | reuters | reuters-small | ordinal | queries"
     );
     std::process::exit(2);
 }
 
-fn load_dataset(args: &Args) -> Result<Dataset> {
-    let seed = args.u64_or("seed", 42);
+fn load_dataset(args: &Args) -> Result<LoadedDataset> {
+    let seed = args.u64_or("seed", 42)?;
     if let Some(path) = args.get("data") {
-        return libsvm::read(path);
+        return ranksvm::data::load_auto_with(path, !args.flag("no-verify"));
     }
-    let m = args.usize_or("m", 1000);
-    match args.get("synthetic") {
-        Some("cadata") => Ok(synthetic::cadata_like(m, seed)),
-        Some("reuters") => Ok(synthetic::reuters_like(m, seed)),
-        Some("reuters-small") => Ok(synthetic::reuters_like_with(m, 5000, 30, seed)),
-        Some("ordinal") => Ok(synthetic::ordinal(m, args.usize_or("levels", 5), seed)),
+    let m = args.usize_or("m", 1000)?;
+    let ds = match args.get("synthetic") {
+        Some("cadata") => synthetic::cadata_like(m, seed),
+        Some("reuters") => synthetic::reuters_like(m, seed),
+        Some("reuters-small") => synthetic::reuters_like_with(m, 5000, 30, seed),
+        Some("ordinal") => synthetic::ordinal(m, args.usize_or("levels", 5)?, seed),
         Some("queries") => {
-            let per = args.usize_or("per-query", 20);
-            Ok(synthetic::queries(m.div_ceil(per), per, args.usize_or("features", 10), seed))
+            let per = args.usize_or("per-query", 20)?;
+            synthetic::queries(m.div_ceil(per), per, args.usize_or("features", 10)?, seed)
         }
         Some(k) => bail!("unknown synthetic kind {k:?}"),
         None => bail!("need --data or --synthetic"),
-    }
+    };
+    Ok(LoadedDataset::Owned(ds))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
+    let loaded = load_dataset(args)?;
     let method = Method::parse(&args.str_or("method", "tree"))
         .context("bad --method (tree|tree-dedup|tree-fenwick|pair|rlevel|prsvm)")?;
     let backend = BackendKind::parse(&args.str_or("backend", "native")).context("bad --backend")?;
     let cfg = TrainConfig {
         method,
         backend,
-        lambda: args.f64_or("lambda", 1e-2),
-        epsilon: args.f64_or("epsilon", 1e-3),
-        max_iter: args.usize_or("max-iter", 2000),
+        lambda: args.f64_or("lambda", 1e-2)?,
+        epsilon: args.f64_or("epsilon", 1e-3)?,
+        max_iter: args.usize_or("max-iter", 2000)?,
         line_search: args.flag("line-search"),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
         verbose: args.flag("verbose"),
-        n_threads: args.usize_or("threads", 0),
+        n_threads: args.usize_or("threads", 0)?,
     };
-    let test_size = args.usize_or("test-size", 0);
-    let (train_ds, test_ds) = if test_size > 0 {
-        let (tr, te) = ds.split(test_size, args.u64_or("seed", 42));
-        (tr, Some(te))
+    let test_size = args.usize_or("test-size", 0)?;
+    // A shuffled split needs owned storage; materialize a store first.
+    // Without a split the store trains in place, zero-copy.
+    // "mmap" reports whether training actually runs off a kernel
+    // mapping (false for the read fallback or a materialized split).
+    let mapped = match &loaded {
+        LoadedDataset::Store(st) => st.is_mapped(),
+        LoadedDataset::Owned(_) => false,
+    };
+    let (train_holder, test_ds): (LoadedDataset, Option<Dataset>) = if test_size > 0 {
+        let owned = match loaded {
+            LoadedDataset::Owned(ds) => ds,
+            LoadedDataset::Store(st) => materialize(&st),
+        };
+        let (tr, te) = owned.split(test_size, args.u64_or("seed", 42)?);
+        (LoadedDataset::Owned(tr), Some(te))
     } else {
-        (ds, None)
+        (loaded, None)
     };
-    let out = train(&train_ds, &cfg)?;
+    let train_view = train_holder.view();
+    let out = train(train_view, &cfg)?;
     let mut record = vec![
-        ("dataset".to_string(), Json::Str(train_ds.name.clone())),
-        ("m".to_string(), train_ds.len().into()),
-        ("n".to_string(), train_ds.dim().into()),
-        ("s".to_string(), train_ds.sparsity().into()),
-        ("levels".to_string(), train_ds.n_levels().into()),
+        ("dataset".to_string(), Json::Str(train_view.name().to_string())),
+        ("m".to_string(), train_view.len().into()),
+        ("n".to_string(), train_view.dim().into()),
+        ("s".to_string(), train_view.sparsity().into()),
+        ("levels".to_string(), train_view.n_levels().into()),
         ("threads".to_string(), cfg.resolved_threads().into()),
+        ("mmap".to_string(), (mapped && test_size == 0).into()),
     ];
     if let Json::Obj(base) = out.to_json() {
         record.extend(base);
@@ -106,12 +133,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = RankModel::load(args.get("model").context("need --model")?)?;
-    let ds = load_dataset(args)?;
-    let err = evaluate(&model, &ds);
+    let loaded = load_dataset(args)?;
+    let ds = loaded.view();
+    let err = evaluate(&model, ds);
     println!(
         "{}",
         Json::obj(vec![
-            ("dataset", Json::Str(ds.name.clone())),
+            ("dataset", Json::Str(ds.name().to_string())),
             ("m", ds.len().into()),
             ("pairwise_error", err.into()),
         ])
@@ -121,29 +149,70 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
+    let loaded = load_dataset(args)?;
     let out = args.get("out").context("need --out")?;
-    libsvm::write(&ds, out)?;
+    let ds = loaded.view();
+    libsvm::write(ds, out)?;
     eprintln!("wrote {} examples ({} features) to {out}", ds.len(), ds.dim());
     Ok(())
 }
 
+fn cmd_convert(args: &Args) -> Result<()> {
+    let input = args.get("data").context("need --data INPUT (libsvm text)")?;
+    let output = args.get("out").context("need --out OUTPUT.pstore")?;
+    if store::is_store_file(input) {
+        bail!("{input} is already a pallas store");
+    }
+    let chunk_kib = args.usize_or("chunk-kib", 8192)?;
+    let opts = store::ConvertOptions { chunk_bytes: chunk_kib.max(1) * 1024 };
+    let stats = store::convert_libsvm(input, output, &opts)?;
+    let mut record = vec![
+        ("input".to_string(), Json::Str(input.to_string())),
+        ("output".to_string(), Json::Str(output.to_string())),
+        ("m".to_string(), stats.rows.into()),
+        ("n".to_string(), stats.cols.into()),
+        ("nnz".to_string(), stats.nnz.into()),
+        ("groups".to_string(), stats.n_groups.into()),
+        ("n_pairs".to_string(), (stats.n_pairs as usize).into()),
+        ("out_bytes".to_string(), (stats.out_bytes as usize).into()),
+        ("chunk_bytes".to_string(), opts.chunk_bytes.into()),
+        ("max_buffered_bytes".to_string(), stats.max_buffered_bytes.into()),
+    ];
+    if let Some(peak) = ranksvm::util::peak_rss_kib() {
+        record.push(("peak_rss_kib".to_string(), (peak as usize).into()));
+    }
+    println!("{}", Json::Obj(record).to_string());
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let ds = load_dataset(args)?;
-    println!(
-        "{}",
-        Json::obj(vec![
-            ("dataset", Json::Str(ds.name.clone())),
-            ("m", ds.len().into()),
-            ("n", ds.dim().into()),
-            ("nnz", ds.x.nnz().into()),
-            ("s", ds.sparsity().into()),
-            ("levels", ds.n_levels().into()),
-            ("n_pairs", (ranksvm::losses::count_comparable_pairs(&ds.y) as usize).into()),
-            ("grouped", ds.qid.is_some().into()),
-        ])
-        .to_string()
-    );
+    let loaded = load_dataset(args)?;
+    let ds = loaded.view();
+    // `n_pairs` here is the whole-vector comparable-pair count for both
+    // formats (the seed's info semantics). The store's precomputed
+    // n_pairs is the *training objective's* count, which for grouped
+    // data is the per-group sum — only reuse it when they coincide.
+    let n_pairs = match (ds.qid(), ds.n_pairs_hint()) {
+        (None, Some(n)) => n as usize,
+        _ => ranksvm::losses::count_comparable_pairs(ds.y()) as usize,
+    };
+    let mut record = vec![
+        ("dataset".to_string(), Json::Str(ds.name().to_string())),
+        ("format".to_string(), Json::Str(if loaded.is_store() { "pstore" } else { "libsvm" }.into())),
+        ("m".to_string(), ds.len().into()),
+        ("n".to_string(), ds.dim().into()),
+        ("nnz".to_string(), ds.x().nnz().into()),
+        ("s".to_string(), ds.sparsity().into()),
+        ("levels".to_string(), ds.n_levels().into()),
+        ("n_pairs".to_string(), n_pairs.into()),
+        ("grouped".to_string(), ds.qid().is_some().into()),
+    ];
+    if let LoadedDataset::Store(st) = &loaded {
+        record.push(("groups".to_string(), st.n_groups().into()));
+        record.push(("file_bytes".to_string(), st.file_bytes().into()));
+        record.push(("mmap".to_string(), st.is_mapped().into()));
+    }
+    println!("{}", Json::Obj(record).to_string());
     Ok(())
 }
 
@@ -151,8 +220,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 /// (score matvec / argsort / c-sweep / d-sweep / gradient) at growing m.
 fn cmd_perf(args: &Args) -> Result<()> {
     use ranksvm::losses::{count_comparable_pairs, RankingOracle, TreeOracle};
-    let sizes = args.usize_list_or("sizes", &[10_000, 50_000, 200_000]);
-    let reps = args.usize_or("reps", 5);
+    let sizes = args.usize_list_or("sizes", &[10_000, 50_000, 200_000])?;
+    let reps = args.usize_or("reps", 5)?;
     let kind = args.str_or("synthetic", "reuters");
     println!(
         "{:>9} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11}",
@@ -187,10 +256,9 @@ fn cmd_perf(args: &Args) -> Result<()> {
             // Sharded-oracle path: eval total at the requested thread
             // count, on one persistent pool reused across the reps (the
             // trainer's arrangement — no per-call thread spawns).
-            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0));
+            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0)?);
             let pool = std::sync::Arc::new(ranksvm::runtime::WorkerPool::new(threads));
-            let mut oracle =
-                ranksvm::losses::ShardedTreeOracle::with_pool(pool, None, &ds.y);
+            let mut oracle = ranksvm::losses::ShardedTreeOracle::with_pool(pool, None, &ds.y);
             let mut p = vec![0.0; ds.len()];
             ds.x.matvec(&w, &mut p);
             std::hint::black_box(oracle.eval(&p, &ds.y, n_pairs));
@@ -208,7 +276,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
         if method == "par-sort" {
             // Argsort probe: serial vs pooled parallel merge sort on the
             // score vector (the Amdahl term the sharded oracle removes).
-            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0));
+            let threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0)?);
             let pool = ranksvm::runtime::WorkerPool::new(threads);
             let mut p = vec![0.0; ds.len()];
             ds.x.matvec(&w, &mut p);
@@ -273,28 +341,37 @@ fn cmd_perf(args: &Args) -> Result<()> {
 }
 
 fn cmd_mem_probe(args: &Args) -> Result<()> {
-    let dataset = args.str_or("dataset", "reuters-small");
-    let m = args.usize_or("m", 1000);
     let method = Method::parse(&args.str_or("method", "tree")).context("bad --method")?;
-    memprobe::run_probe(
-        &dataset,
-        m,
-        method,
-        args.f64_or("lambda", 1e-4),
-        args.usize_or("max-iter", 10),
-        args.u64_or("seed", 42),
-    )
+    let lambda = args.f64_or("lambda", 1e-4)?;
+    let max_iter = args.usize_or("max-iter", 10)?;
+    if let Some(path) = args.get("data") {
+        // Probe a real file (text or store) — the out-of-core story's
+        // memory accounting.
+        return memprobe::run_probe_path(path, method, lambda, max_iter, args.flag("no-verify"));
+    }
+    let dataset = args.str_or("dataset", "reuters-small");
+    let m = args.usize_or("m", 1000)?;
+    memprobe::run_probe(&dataset, m, method, lambda, max_iter, args.u64_or("seed", 42)?)
 }
 
-fn main() -> Result<()> {
+fn run() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("gen-data") => cmd_gen_data(&args),
+        Some("convert") => cmd_convert(&args),
         Some("info") => cmd_info(&args),
         Some("mem-probe") => cmd_mem_probe(&args),
         Some("perf") => cmd_perf(&args),
         _ => usage(),
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        // One readable line (the full context chain), no backtrace.
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }

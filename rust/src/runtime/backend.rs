@@ -9,7 +9,7 @@
 
 use super::manifest::{Manifest, ManifestEntry};
 use crate::compute::ComputeBackend;
-use crate::linalg::CsrMatrix;
+use crate::linalg::CsrView;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -137,7 +137,7 @@ impl XlaBackend {
         &mut self.rt
     }
 
-    fn tile_data(&mut self, x: &CsrMatrix) -> Result<()> {
+    fn tile_data(&mut self, x: CsrView<'_>) -> Result<()> {
         let n = x.cols();
         // Smallest artifact feature width that fits this dataset; rows
         // pad to the artifact's tile height.
@@ -187,11 +187,11 @@ impl ComputeBackend for XlaBackend {
         "xla"
     }
 
-    fn prepare(&mut self, x: &CsrMatrix) {
+    fn prepare(&mut self, x: CsrView<'_>) {
         self.tile_data(x).expect("XLA backend prepare failed");
     }
 
-    fn scores(&mut self, x: &CsrMatrix, w: &[f64]) -> Vec<f64> {
+    fn scores(&mut self, x: CsrView<'_>, w: &[f64]) -> Vec<f64> {
         if self.data.is_none() {
             self.prepare(x);
         }
@@ -215,7 +215,7 @@ impl ComputeBackend for XlaBackend {
         out
     }
 
-    fn grad(&mut self, x: &CsrMatrix, coeffs: &[f64]) -> Vec<f64> {
+    fn grad(&mut self, x: CsrView<'_>, coeffs: &[f64]) -> Vec<f64> {
         if self.data.is_none() {
             self.prepare(x);
         }

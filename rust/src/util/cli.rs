@@ -1,8 +1,12 @@
 //! Tiny command-line argument parser (the offline registry has no `clap`).
 //!
 //! Supports `--key value`, `--key=value`, bare flags (`--flag`), and
-//! positional arguments. Typed getters with defaults keep call sites short.
+//! positional arguments. Typed getters with defaults keep call sites
+//! short; a malformed value is a proper [`anyhow::Error`] naming the
+//! flag and the offending input (propagated to `main`, exit code 2) —
+//! never a panic/backtrace in the user's face.
 
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
 /// Parsed arguments: flags/options plus positionals, in order.
@@ -56,35 +60,44 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
     }
 
     /// Comma-separated usize list, e.g. `--sizes 1000,2000,4000`.
-    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
                 .filter(|s| !s.is_empty())
                 .map(|s| {
-                    s.trim()
-                        .parse()
-                        .unwrap_or_else(|_| panic!("--{name} expects comma-separated integers"))
+                    s.trim().parse().map_err(|_| {
+                        anyhow!("--{name} expects comma-separated integers, got {s:?}")
+                    })
                 })
                 .collect(),
         }
@@ -103,8 +116,8 @@ mod tests {
     fn parses_options_and_flags() {
         let a = args(&["train", "--m", "1000", "--lambda=0.1", "--verbose", "--out", "x.json"]);
         assert_eq!(a.positional, vec!["train"]);
-        assert_eq!(a.usize_or("m", 0), 1000);
-        assert!((a.f64_or("lambda", 0.0) - 0.1).abs() < 1e-12);
+        assert_eq!(a.usize_or("m", 0).unwrap(), 1000);
+        assert!((a.f64_or("lambda", 0.0).unwrap() - 0.1).abs() < 1e-12);
         assert!(a.flag("verbose"));
         assert_eq!(a.str_or("out", ""), "x.json");
     }
@@ -112,7 +125,7 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = args(&[]);
-        assert_eq!(a.usize_or("m", 7), 7);
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
         assert_eq!(a.str_or("method", "tree"), "tree");
         assert!(!a.flag("verbose"));
     }
@@ -126,14 +139,27 @@ mod tests {
     #[test]
     fn usize_list() {
         let a = args(&["--sizes", "1,2,30"]);
-        assert_eq!(a.usize_list_or("sizes", &[]), vec![1, 2, 30]);
-        assert_eq!(a.usize_list_or("other", &[5]), vec![5]);
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 2, 30]);
+        assert_eq!(a.usize_list_or("other", &[5]).unwrap(), vec![5]);
     }
 
     #[test]
     fn negative_number_as_value() {
         // "--lambda -0.5" — the "-0.5" does not start with "--", so it binds.
         let a = args(&["--lambda", "-0.5"]);
-        assert!((a.f64_or("lambda", 0.0) + 0.5).abs() < 1e-12);
+        assert!((a.f64_or("lambda", 0.0).unwrap() + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_values_are_errors_naming_flag_and_value() {
+        let a = args(&["--m", "abc", "--lambda", "xx,", "--sizes", "1,zap"]);
+        let err = a.usize_or("m", 0).unwrap_err().to_string();
+        assert!(err.contains("--m") && err.contains("abc"), "{err}");
+        let err = a.f64_or("lambda", 0.0).unwrap_err().to_string();
+        assert!(err.contains("--lambda") && err.contains("xx"), "{err}");
+        let err = a.u64_or("m", 0).unwrap_err().to_string();
+        assert!(err.contains("--m"), "{err}");
+        let err = a.usize_list_or("sizes", &[]).unwrap_err().to_string();
+        assert!(err.contains("--sizes") && err.contains("zap"), "{err}");
     }
 }

@@ -98,6 +98,28 @@ fn full_cli_workflow() {
 }
 
 #[test]
+fn cli_bad_flag_values_exit_2_naming_flag() {
+    if bin().is_none() {
+        return;
+    }
+    for args in [
+        &["train", "--synthetic", "cadata", "--m", "abc"][..],
+        &["train", "--synthetic", "cadata", "--m", "100", "--lambda", "zap"][..],
+        &["perf", "--sizes", "10,oops"][..],
+        &["mem-probe", "--m", "x.y"][..],
+    ] {
+        let out = Command::new(bin().unwrap()).args(args).output().expect("spawn ranksvm");
+        assert_eq!(out.status.code(), Some(2), "{args:?}");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        // One readable error line naming the flag; no panic/backtrace.
+        assert!(stderr.contains("error:"), "{args:?}: {stderr}");
+        assert!(stderr.contains("--"), "{args:?}: {stderr}");
+        assert!(!stderr.contains("panicked"), "{args:?}: {stderr}");
+        assert!(!stderr.contains("RUST_BACKTRACE"), "{args:?}: {stderr}");
+    }
+}
+
+#[test]
 fn cli_rejects_bad_inputs() {
     if bin().is_none() {
         return;

@@ -180,16 +180,16 @@ fn parallel_backend_grad_matches_native_and_thread_invariant() {
         let coeffs: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
 
         let mut serial = NativeBackend::new();
-        serial.prepare(&x);
-        let p_ref = serial.scores(&x, &w);
-        let g_ref = serial.grad(&x, &coeffs);
+        serial.prepare(x.view());
+        let p_ref = serial.scores(x.view(), &w);
+        let g_ref = serial.grad(x.view(), &coeffs);
 
         let mut first: Option<Vec<f64>> = None;
         for threads in [1usize, 2, 8] {
             let mut par = ParallelBackend::new(threads);
-            par.prepare(&x);
-            assert_eq!(par.scores(&x, &w), p_ref, "trial {trial}, {threads} threads");
-            let g = par.grad(&x, &coeffs);
+            par.prepare(x.view());
+            assert_eq!(par.scores(x.view(), &w), p_ref, "trial {trial}, {threads} threads");
+            let g = par.grad(x.view(), &coeffs);
             for (a, b) in g.iter().zip(&g_ref) {
                 assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()), "trial {trial}");
             }

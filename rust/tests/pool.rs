@@ -54,15 +54,15 @@ fn shared_pool_oracle_and_backend_match_serial_across_iterations() {
         let pool = Arc::new(WorkerPool::new(threads));
         let mut oracle = ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &ds.y);
         let mut backend = ParallelBackend::with_pool(Arc::clone(&pool));
-        backend.prepare(&ds.x);
+        backend.prepare(ds.x.view());
         let mut serial_oracle = TreeOracle::new();
         let mut serial_backend = NativeBackend::new();
-        serial_backend.prepare(&ds.x);
+        serial_backend.prepare(ds.x.view());
 
         let mut w = vec![0.0; ds.dim()];
         for round in 0..6 {
-            let p = backend.scores(&ds.x, &w);
-            let p_ref = serial_backend.scores(&ds.x, &w);
+            let p = backend.scores(ds.x.view(), &w);
+            let p_ref = serial_backend.scores(ds.x.view(), &w);
             assert_eq!(p, p_ref, "{threads} threads, round {round}: scores");
 
             let got = oracle.eval(&p, &ds.y, n_pairs);
@@ -76,7 +76,7 @@ fn shared_pool_oracle_and_backend_match_serial_across_iterations() {
 
             // Subgradient step (any deterministic update works — the
             // point is that p changes every round).
-            let g = backend.grad(&ds.x, &got.coeffs);
+            let g = backend.grad(ds.x.view(), &got.coeffs);
             for (wi, gi) in w.iter_mut().zip(&g) {
                 *wi -= 0.5 * gi;
             }

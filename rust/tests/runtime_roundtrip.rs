@@ -34,11 +34,11 @@ fn xla_backend_matches_native_on_dense_data() {
 
     let mut native = NativeBackend::new();
     let mut xla = XlaBackend::load(&dir).expect("load artifacts");
-    native.prepare(&ds.x);
-    xla.prepare(&ds.x);
+    native.prepare(ds.x.view());
+    xla.prepare(ds.x.view());
 
-    let p_native = native.scores(&ds.x, &w);
-    let p_xla = xla.scores(&ds.x, &w);
+    let p_native = native.scores(ds.x.view(), &w);
+    let p_xla = xla.scores(ds.x.view(), &w);
     assert_eq!(p_native.len(), p_xla.len());
     for (i, (a, b)) in p_native.iter().zip(&p_xla).enumerate() {
         assert!(
@@ -47,8 +47,8 @@ fn xla_backend_matches_native_on_dense_data() {
         );
     }
 
-    let g_native = native.grad(&ds.x, &coeffs);
-    let g_xla = xla.grad(&ds.x, &coeffs);
+    let g_native = native.grad(ds.x.view(), &coeffs);
+    let g_xla = xla.grad(ds.x.view(), &coeffs);
     assert_eq!(g_native.len(), g_xla.len());
     for (i, (a, b)) in g_native.iter().zip(&g_xla).enumerate() {
         // f32 accumulation over 700 rows: tolerance scaled accordingly.
@@ -68,16 +68,16 @@ fn xla_backend_pads_feature_dim() {
     let w: Vec<f64> = (0..ds.dim()).map(|_| rng.normal()).collect();
     let mut native = NativeBackend::new();
     let mut xla = XlaBackend::load(&dir).expect("load artifacts");
-    native.prepare(&ds.x);
-    xla.prepare(&ds.x);
-    let p1 = native.scores(&ds.x, &w);
-    let p2 = xla.scores(&ds.x, &w);
+    native.prepare(ds.x.view());
+    xla.prepare(ds.x.view());
+    let p1 = native.scores(ds.x.view(), &w);
+    let p2 = xla.scores(ds.x.view(), &w);
     for (a, b) in p1.iter().zip(&p2) {
         assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
     }
     let c: Vec<f64> = (0..ds.len()).map(|_| rng.normal()).collect();
-    let g1 = native.grad(&ds.x, &c);
-    let g2 = xla.grad(&ds.x, &c);
+    let g1 = native.grad(ds.x.view(), &c);
+    let g2 = xla.grad(ds.x.view(), &c);
     assert_eq!(g1.len(), 10);
     assert_eq!(g2.len(), 10);
     for (a, b) in g1.iter().zip(&g2) {

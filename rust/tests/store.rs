@@ -1,0 +1,379 @@
+//! Pallas-store differential suite.
+//!
+//! The store's contract: `convert → mmap → train` is **bit-identical**
+//! to `parse text → train`, for grouped and global datasets, at any
+//! thread count — and a damaged store is *rejected at open*, never
+//! silently mistrained. Both halves are pinned here, along with the
+//! converter's bounded-memory guarantee (exact spill-buffer accounting
+//! in-process; child-process peak-RSS in `convert_cli_bounded_memory`).
+
+use ranksvm::coordinator::{evaluate, memprobe, train, Method, TrainConfig};
+use ranksvm::data::store::{convert_libsvm, is_store_file, ConvertOptions, PallasStore};
+use ranksvm::data::{libsvm, materialize, synthetic, Dataset, DatasetView};
+use ranksvm::losses::GroupIndex;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ranksvm_store_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Write `ds` as libsvm text and return (text path, parsed-text dataset,
+/// opened store). Both loaded forms originate from the same bytes on
+/// disk, which is exactly the differential the CLI exercises.
+fn text_and_store(ds: &Dataset, tag: &str) -> (std::path::PathBuf, Dataset, PallasStore) {
+    let text = tmp(&format!("{tag}.libsvm"));
+    let pst = tmp(&format!("{tag}.pstore"));
+    libsvm::write(ds, &text).unwrap();
+    let reference = libsvm::read(&text).unwrap();
+    convert_libsvm(&text, &pst, &ConvertOptions::default()).unwrap();
+    assert!(is_store_file(&pst));
+    assert!(!is_store_file(&text));
+    let store = PallasStore::open(&pst).unwrap();
+    (text, reference, store)
+}
+
+fn assert_same_data(a: &dyn DatasetView, b: &dyn DatasetView) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.dim(), b.dim());
+    assert_eq!(a.y(), b.y());
+    assert_eq!(a.qid(), b.qid());
+    assert_eq!(a.x().nnz(), b.x().nnz());
+    for i in 0..a.len() {
+        assert_eq!(a.x().row(i), b.x().row(i), "row {i}");
+    }
+}
+
+fn cfg(threads: usize) -> TrainConfig {
+    TrainConfig {
+        method: Method::Tree,
+        lambda: 0.1,
+        epsilon: 1e-3,
+        n_threads: threads,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn global_roundtrip_is_bit_identical() {
+    let ds = synthetic::cadata_like(400, 9);
+    let (_, reference, store) = text_and_store(&ds, "global");
+    assert_same_data(&reference, &store);
+    assert_eq!(
+        store.n_pairs(),
+        ranksvm::losses::count_comparable_pairs(&reference.y),
+        "precomputed pair count must match the text-path recount"
+    );
+    for threads in [1usize, 8] {
+        let a = train(&reference, &cfg(threads)).unwrap();
+        let b = train(&store, &cfg(threads)).unwrap();
+        assert_eq!(a.model.w, b.model.w, "{threads} threads");
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{threads} threads");
+        assert_eq!(a.iterations, b.iterations, "{threads} threads");
+        // And the model evaluates identically against either source.
+        assert_eq!(evaluate(&a.model, &reference), evaluate(&a.model, &store));
+    }
+}
+
+#[test]
+fn grouped_roundtrip_is_bit_identical() {
+    let ds = synthetic::queries(15, 12, 6, 10);
+    assert!(ds.qid.is_some());
+    let (_, reference, store) = text_and_store(&ds, "grouped");
+    assert_same_data(&reference, &store);
+    // The serialized group index is exactly what a scan would build.
+    let built = GroupIndex::build(reference.qid.as_deref().unwrap(), &reference.y);
+    assert_eq!(store.group_index().as_deref(), Some(&built));
+    assert_eq!(store.n_groups(), built.n_groups());
+    for threads in [1usize, 8] {
+        let a = train(&reference, &cfg(threads)).unwrap();
+        let b = train(&store, &cfg(threads)).unwrap();
+        assert_eq!(a.model.w, b.model.w, "{threads} threads");
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{threads} threads");
+    }
+}
+
+#[test]
+fn degenerate_queries_roundtrip() {
+    // One singleton query, one all-tied query (zero comparable pairs),
+    // one normal query — the empty-query fixture of the issue.
+    let text = tmp("degenerate.libsvm");
+    std::fs::write(
+        &text,
+        "2 qid:7 1:1.0\n\
+         1 qid:3 1:0.5 2:1.0\n\
+         1 qid:3 2:2.0\n\
+         1 qid:3 1:0.25\n\
+         3 qid:9 1:2.0\n\
+         1 qid:9 2:0.5\n",
+    )
+    .unwrap();
+    let pst = tmp("degenerate.pstore");
+    let stats = convert_libsvm(&text, &pst, &ConvertOptions::default()).unwrap();
+    assert_eq!(stats.n_groups, 3);
+    let reference = libsvm::read(&text).unwrap();
+    let store = PallasStore::open(&pst).unwrap();
+    assert_same_data(&reference, &store);
+    for threads in [1usize, 8] {
+        let a = train(&reference, &cfg(threads)).unwrap();
+        let b = train(&store, &cfg(threads)).unwrap();
+        assert_eq!(a.model.w, b.model.w);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+}
+
+#[test]
+fn empty_dataset_roundtrips() {
+    let text = tmp("empty.libsvm");
+    std::fs::write(&text, "# nothing but comments\n").unwrap();
+    let pst = tmp("empty.pstore");
+    let stats = convert_libsvm(&text, &pst, &ConvertOptions::default()).unwrap();
+    assert_eq!((stats.rows, stats.nnz, stats.n_pairs), (0, 0, 0));
+    let store = PallasStore::open(&pst).unwrap();
+    assert!(store.is_empty());
+    assert_eq!(store.dim(), 0);
+}
+
+#[test]
+fn converter_output_is_chunk_size_invariant_and_bounded() {
+    // Own subdirectory: the spill-litter check below must not race with
+    // other tests' in-flight conversions.
+    let dir = std::env::temp_dir().join(format!("ranksvm_store_chunks_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = synthetic::reuters_like_with(3000, 800, 20, 4);
+    let text = dir.join("chunks.libsvm");
+    libsvm::write(&ds, &text).unwrap();
+    let out_small = dir.join("chunks_small.pstore");
+    let out_big = dir.join("chunks_big.pstore");
+    let small = ConvertOptions { chunk_bytes: 4096 };
+    let stats_small = convert_libsvm(&text, &out_small, &small).unwrap();
+    let stats_big = convert_libsvm(&text, &out_big, &ConvertOptions::default()).unwrap();
+    // The chunk size controls flush cadence only — identical bytes out.
+    let a = std::fs::read(&out_small).unwrap();
+    let b = std::fs::read(&out_big).unwrap();
+    assert_eq!(a, b, "store bytes must not depend on chunk size");
+    // Bounded ingest: the spill buffers never exceeded the budget (plus
+    // one 12-byte entry of slack per buffer).
+    assert!(
+        stats_small.max_buffered_bytes <= small.chunk_bytes + 32,
+        "max buffered {} vs chunk {}",
+        stats_small.max_buffered_bytes,
+        small.chunk_bytes
+    );
+    // The fixture really was larger than the chunk budget.
+    assert!(stats_small.nnz * 12 > 8 * small.chunk_bytes);
+    assert_eq!(stats_small.nnz, stats_big.nnz);
+    // Spill temp files were cleaned up.
+    for leftover in std::fs::read_dir(out_small.parent().unwrap()).unwrap() {
+        let name = leftover.unwrap().file_name().to_string_lossy().to_string();
+        assert!(!name.ends_with(".tmp"), "spill litter: {name}");
+    }
+}
+
+#[test]
+fn corrupted_stores_are_rejected() {
+    let ds = synthetic::queries(6, 10, 4, 77);
+    text_and_store(&ds, "victim");
+    let good = std::fs::read(tmp("victim.pstore")).unwrap();
+
+    // Flip one payload byte → checksum mismatch.
+    let mut bad = good.clone();
+    let k = 128 + bad.len() / 2;
+    bad[k] ^= 0x40;
+    let p = tmp("bad_checksum.pstore");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PallasStore::open(&p).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+
+    // Truncate → short file.
+    let p = tmp("bad_short.pstore");
+    std::fs::write(&p, &good[..good.len() - 16]).unwrap();
+    let err = PallasStore::open(&p).unwrap_err().to_string();
+    assert!(err.contains("short") || err.contains("section"), "{err}");
+
+    // Trailing garbage is also a geometry violation.
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 8]);
+    let p = tmp("bad_trailing.pstore");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(PallasStore::open(&p).is_err());
+
+    // Misalign a section offset (values section, header offset slot 2).
+    let mut bad = good.clone();
+    let slot = 64 + 2 * 8;
+    let mut off = u64::from_le_bytes(bad[slot..slot + 8].try_into().unwrap());
+    off += 4;
+    bad[slot..slot + 8].copy_from_slice(&off.to_le_bytes());
+    let p = tmp("bad_align.pstore");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PallasStore::open(&p).unwrap_err().to_string();
+    assert!(err.contains("aligned") || err.contains("section"), "{err}");
+
+    // Unsupported version byte.
+    let mut bad = good.clone();
+    bad[7] = 9;
+    let p = tmp("bad_version.pstore");
+    std::fs::write(&p, &bad).unwrap();
+    let err = PallasStore::open(&p).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // Wrong magic → not recognized as a store at all.
+    let mut bad = good;
+    bad[0] = b'X';
+    let p = tmp("bad_magic.pstore");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(!is_store_file(&p));
+    assert!(PallasStore::open(&p).is_err());
+}
+
+#[test]
+fn open_unchecked_skips_payload_scan_but_not_geometry() {
+    let ds = synthetic::cadata_like(120, 5);
+    let (_, reference, _) = text_and_store(&ds, "unchecked");
+    let p = tmp("unchecked.pstore");
+    let store = PallasStore::open_unchecked(&p).unwrap();
+    assert_same_data(&reference, &store);
+    // Geometry violations are still caught...
+    let good = std::fs::read(&p).unwrap();
+    let bad_path = tmp("unchecked_short.pstore");
+    std::fs::write(&bad_path, &good[..good.len() - 8]).unwrap();
+    assert!(PallasStore::open_unchecked(&bad_path).is_err());
+    // ...but a payload flip is (by contract) not:
+    let mut bad = good;
+    let k = bad.len() - 4;
+    bad[k] ^= 1;
+    let bad_path = tmp("unchecked_flip.pstore");
+    std::fs::write(&bad_path, &bad).unwrap();
+    assert!(PallasStore::open_unchecked(&bad_path).is_ok());
+    assert!(PallasStore::open(&bad_path).is_err());
+}
+
+#[test]
+fn prefix_views_slice_the_mapping() {
+    let ds = synthetic::queries(10, 20, 5, 13);
+    let (_, reference, store) = text_and_store(&ds, "prefix");
+    for m in [0usize, 1, 73, 200] {
+        let pv = store.prefix_view(m);
+        let owned = reference.prefix(m);
+        assert_same_data(&pv, &owned);
+        // A prefix drops the precomputed index (it may no longer apply).
+        assert!(pv.group_index().is_none());
+    }
+    // Training on a prefix view matches training on the owned prefix.
+    let pv = store.prefix_view(120);
+    let owned = reference.prefix(120);
+    let a = train(&owned, &cfg(2)).unwrap();
+    let b = train(&pv, &cfg(2)).unwrap();
+    assert_eq!(a.model.w, b.model.w);
+}
+
+#[test]
+fn materialize_store_supports_owned_ops() {
+    let ds = synthetic::cadata_like(150, 21);
+    let (_, reference, store) = text_and_store(&ds, "materialize");
+    let owned = materialize(&store);
+    assert_same_data(&owned, &reference);
+    let (tr_a, te_a) = owned.split(30, 5);
+    let (tr_b, te_b) = reference.split(30, 5);
+    assert_eq!(tr_a.y, tr_b.y);
+    assert_eq!(te_a.y, te_b.y);
+}
+
+/// End-to-end through the release binary: gen-data → convert (with a
+/// tiny chunk budget, asserting the converter's memory stays bounded on
+/// a fixture much larger than the chunk) → train from text and store →
+/// identical weights. Skipped when the binary isn't built.
+#[test]
+fn convert_cli_bounded_memory_and_weight_diff() {
+    let Ok(bin) = memprobe::find_cli_bin() else {
+        eprintln!("skipping: ranksvm binary not built (cargo build --release)");
+        return;
+    };
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(&bin).args(args).output().expect("spawn ranksvm");
+        assert!(
+            out.status.success(),
+            "ranksvm {args:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let json_field = |s: &str, key: &str| -> Option<u64> {
+        let pat = format!("\"{key}\":");
+        let pos = s.find(&pat)? + pat.len();
+        let rest = &s[pos..];
+        let end = rest.find(['}', ','])?;
+        rest[..end].trim().parse().ok()
+    };
+
+    // Fixture: ~1.5M non-zeros ⇒ ~18 MB of CSR payload, converted with
+    // a 64 KiB chunk budget. An implementation that materialized the
+    // matrix (or its triplets) would hold ≥ 18 MB; the streaming
+    // converter's transient state is O(m) ≈ 1.2 MB plus the spill
+    // buffers.
+    let ds = synthetic::reuters_like_with(50_000, 2000, 30, 31);
+    let text = tmp("cli_fixture.libsvm");
+    libsvm::write(&ds, &text).unwrap();
+    drop(ds);
+    let pst = tmp("cli_fixture.pstore");
+    let stdout = run(&[
+        "convert",
+        "--data",
+        text.to_str().unwrap(),
+        "--out",
+        pst.to_str().unwrap(),
+        "--chunk-kib",
+        "64",
+    ]);
+    let nnz = json_field(&stdout, "nnz").expect("nnz in convert output") as usize;
+    assert!(nnz * 12 > 15 << 20, "fixture too small for the RSS assertion: nnz={nnz}");
+    let buffered = json_field(&stdout, "max_buffered_bytes").expect("buffer stat") as usize;
+    assert!(buffered <= 64 * 1024 + 32, "spill buffers exceeded the chunk budget: {buffered}");
+    if let Some(peak_kib) = json_field(&stdout, "peak_rss_kib") {
+        // Generous bound: far above the streaming converter's real peak
+        // (~6 MB incl. the binary), far below any full materialization
+        // of the ≥ 18 MB payload (let alone 36 MB of triplets).
+        assert!(
+            peak_kib < 16 * 1024,
+            "converter peak RSS {peak_kib} KiB — ingest no longer bounded?"
+        );
+    }
+
+    // Differential: text-trained and store-trained weights match to the
+    // digit (the model format prints with full precision).
+    let model_text = tmp("cli_model_text.txt");
+    let model_store = tmp("cli_model_store.txt");
+    for (data, model) in [(&text, &model_text), (&pst, &model_store)] {
+        run(&[
+            "train",
+            "--data",
+            data.to_str().unwrap(),
+            "--method",
+            "tree",
+            "--lambda",
+            "0.1",
+            "--max-iter",
+            "12",
+            "--out",
+            model.to_str().unwrap(),
+        ]);
+    }
+    let a = std::fs::read(&model_text).unwrap();
+    let b = std::fs::read(&model_store).unwrap();
+    assert_eq!(a, b, "text-path and store-path weights diverge");
+
+    // info autodetects and reports the format.
+    let stdout = run(&["info", "--data", pst.to_str().unwrap()]);
+    assert!(stdout.contains("\"format\":\"pstore\""), "{stdout}");
+    // mem-probe runs straight off the store.
+    let stdout = run(&[
+        "mem-probe",
+        "--data",
+        pst.to_str().unwrap(),
+        "--method",
+        "tree",
+        "--max-iter",
+        "2",
+    ]);
+    assert!(memprobe::parse_peak(&stdout).is_some(), "{stdout}");
+}
