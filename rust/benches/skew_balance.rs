@@ -1,0 +1,136 @@
+//! Skew balance — the work-stealing scheduler's reason to exist.
+//!
+//! Fixture: query-grouped data with Zipf(1.1) group sizes (one giant
+//! group, a long singleton tail — `synthetic::zipf_queries`). The
+//! coarse plan (one task per worker, the PR 1–3 decomposition,
+//! reproduced via `with_run_target(…, n_threads)`) serializes each
+//! oracle call behind the giant group's owner; the fine default plan
+//! (bounded `WorkPlan` group runs, stealable) lets idle workers drain
+//! the tail while one worker chews the giant. Both are bit-identical to
+//! the serial grouped oracle (asserted here on the first eval); the
+//! table shows what the plan costs in wall-clock.
+//!
+//! Build with `--features pool-stats` to additionally print the
+//! executed/stolen task counters proving the stealing engages.
+
+mod common;
+
+use common::{fmt_secs, full_scale, header, record};
+use ranksvm::data::synthetic;
+use ranksvm::losses::{QueryGrouped, RankingOracle, ShardedTreeOracle, TreeOracle};
+use ranksvm::runtime::WorkerPool;
+use ranksvm::util::json::Json;
+use ranksvm::util::rng::Rng;
+use std::sync::Arc;
+
+fn avg_eval(oracle: &mut dyn RankingOracle, p: &[f64], y: &[f64], reps: usize) -> f64 {
+    std::hint::black_box(oracle.eval(p, y, 0.0)); // warmup
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(oracle.eval(p, y, 0.0));
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let threads = ranksvm::util::resolve_threads(0);
+    let (m, reps) = if full_scale() { (400_000, 5) } else { (60_000, 5) };
+    let n_groups = m / 8;
+    let ds = synthetic::zipf_queries(m, n_groups, 10, 1.1, 42);
+    let qid = ds.qid.as_ref().unwrap();
+    let mut sizes = vec![0usize; n_groups];
+    for &g in qid.iter() {
+        sizes[g as usize] += 1;
+    }
+    let giant = *sizes.iter().max().unwrap();
+    let singletons = sizes.iter().filter(|&&s| s == 1).count();
+
+    header(&format!(
+        "Skew balance: Zipf(1.1) group sizes, m = {m}, {n_groups} groups \
+         (largest {giant}, {singletons} singletons), {threads} threads"
+    ));
+
+    let mut rng = Rng::new(7);
+    let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut serial = QueryGrouped::new(TreeOracle::new(), qid, &ds.y);
+    let mut coarse =
+        ShardedTreeOracle::with_run_target(Arc::clone(&pool), Some(qid), &ds.y, threads);
+    let mut fine = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(qid), &ds.y);
+    let coarse_runs = coarse.group_ranges().unwrap().len();
+    let fine_runs = fine.group_ranges().unwrap().len();
+
+    // Bit-identity sanity before timing anything.
+    let expect = serial.eval(&p, &ds.y, serial.total_pairs());
+    let got_coarse = coarse.eval(&p, &ds.y, 0.0);
+    let got_fine = fine.eval(&p, &ds.y, 0.0);
+    assert_eq!(got_coarse.coeffs, expect.coeffs, "coarse plan diverged");
+    assert_eq!(got_fine.coeffs, expect.coeffs, "fine plan diverged");
+
+    let t_serial = avg_eval(&mut serial, &p, &ds.y, reps);
+
+    #[cfg(feature = "pool-stats")]
+    pool.reset_stats();
+    let t_coarse = avg_eval(&mut coarse, &p, &ds.y, reps);
+    #[cfg(feature = "pool-stats")]
+    let coarse_stats = pool.stats();
+
+    #[cfg(feature = "pool-stats")]
+    pool.reset_stats();
+    let t_fine = avg_eval(&mut fine, &p, &ds.y, reps);
+    #[cfg(feature = "pool-stats")]
+    let fine_stats = pool.stats();
+
+    println!(
+        "{:>24} {:>12} {:>10} {:>10}",
+        "plan", "avg eval", "tasks/call", "vs coarse"
+    );
+    println!("{:>24} {:>12} {:>10} {:>10}", "serial", fmt_secs(t_serial), "-", "-");
+    println!(
+        "{:>24} {:>12} {:>10} {:>10}",
+        "coarse (1/worker)",
+        fmt_secs(t_coarse),
+        coarse_runs,
+        "1.00×"
+    );
+    println!(
+        "{:>24} {:>12} {:>10} {:>9.2}×",
+        "fine (WorkPlan runs)",
+        fmt_secs(t_fine),
+        fine_runs,
+        t_coarse / t_fine.max(1e-12)
+    );
+
+    #[cfg(feature = "pool-stats")]
+    {
+        println!(
+            "pool-stats: coarse executed {} stolen {}  |  fine executed {} stolen {}",
+            coarse_stats.executed, coarse_stats.stolen, fine_stats.executed, fine_stats.stolen
+        );
+        assert!(
+            fine_stats.stolen > 0,
+            "fine plan produced no steals on a Zipf fixture — scheduler asleep?"
+        );
+    }
+
+    #[cfg_attr(not(feature = "pool-stats"), allow(unused_mut))]
+    let mut rec = vec![
+        ("bench", Json::Str("skew_balance".into())),
+        ("m", m.into()),
+        ("groups", n_groups.into()),
+        ("largest_group", giant.into()),
+        ("threads", threads.into()),
+        ("serial_secs", t_serial.into()),
+        ("coarse_secs", t_coarse.into()),
+        ("fine_secs", t_fine.into()),
+        ("coarse_runs", coarse_runs.into()),
+        ("fine_runs", fine_runs.into()),
+    ];
+    #[cfg(feature = "pool-stats")]
+    {
+        rec.push(("fine_stolen", (fine_stats.stolen as usize).into()));
+        rec.push(("coarse_stolen", (coarse_stats.stolen as usize).into()));
+    }
+    record("skew_balance", Json::obj(rec));
+}

@@ -97,20 +97,24 @@ impl ComputeBackend for NativeBackend {
 /// chunking.)
 const GRAD_CHUNKS: usize = 16;
 
-/// Multi-threaded native kernels on a persistent [`WorkerPool`].
+/// Multi-threaded native kernels on a persistent work-stealing
+/// [`WorkerPool`].
 ///
-/// - `scores`: rows are dealt to `n_threads` contiguous ranges; each
-///   output score is a single row dot product, so the result is
-///   bit-identical to the serial [`NativeBackend`] regardless of the
-///   partition.
-/// - `grad`: rows are dealt to [`GRAD_CHUNKS`] fixed chunks, each
-///   accumulating a dense partial `Xᵀ·coeffs`; the partials are then
-///   combined by a fixed-topology pairwise tree reduction. Float sums
-///   re-associate relative to the serial scatter, so the gradient can
-///   differ from [`NativeBackend`] in the last bits — but never between
-///   runs or across thread counts: the chunk *contents* and the
-///   reduction order are fixed, and the pool only decides which thread
-///   runs which chunk.
+/// - `scores`: rows are dealt to [`crate::linalg::ops::adaptive_chunks`]
+///   contiguous ranges — individually stealable tasks, finer than the
+///   worker count, so rows of uneven density (sparse corpora are
+///   Zipf-skewed too) balance across threads. Each output score is a
+///   single row dot product, so the result is bit-identical to the
+///   serial [`NativeBackend`] regardless of the partition or the
+///   scheduling.
+/// - `grad`: rows are dealt to [`GRAD_CHUNKS`] fixed chunks — already
+///   one stealable task each — accumulating a dense partial
+///   `Xᵀ·coeffs`; the partials are then combined by a fixed-topology
+///   pairwise tree reduction. Float sums re-associate relative to the
+///   serial scatter, so the gradient can differ from [`NativeBackend`]
+///   in the last bits — but never between runs or across thread counts:
+///   the chunk *contents* and the reduction order are fixed, and the
+///   pool only decides which thread runs which chunk.
 pub struct ParallelBackend {
     pool: Arc<WorkerPool>,
     /// Per-chunk gradient partials, reused across iterations.
@@ -148,17 +152,21 @@ impl ComputeBackend for ParallelBackend {
         assert_eq!(w.len(), x.cols());
         let m = x.rows();
         let mut out = vec![0.0; m];
-        let workers = self.n_threads().min(m.max(1));
-        if workers <= 1 {
+        if self.n_threads() <= 1 || m <= 1 {
             x.matvec(w, &mut out);
             return out;
         }
-        let mut tasks: Vec<Task> = Vec::with_capacity(workers);
+        // One stealable task per adaptive chunk (not per worker): each
+        // score is an independent row dot, so the chunk plan cannot
+        // change a bit, and the surplus tasks let the stealing pool
+        // absorb row-density skew.
+        let chunks = crate::linalg::ops::adaptive_chunks(self.n_threads()).min(m);
+        let mut tasks: Vec<Task> = Vec::with_capacity(chunks);
         {
             let mut rest: &mut [f64] = &mut out;
             let mut lo = 0usize;
-            for t in 0..workers {
-                let hi = m * (t + 1) / workers;
+            for t in 0..chunks {
+                let hi = m * (t + 1) / chunks;
                 // Move the remainder out before splitting so the tail can
                 // be carried to the next iteration.
                 let (head, tail) = { rest }.split_at_mut(hi - lo);
@@ -204,9 +212,10 @@ impl ComputeBackend for ParallelBackend {
                 fill(part, c);
             }
         } else {
-            // One task per fixed chunk; the pool's queue balances them
-            // across however many workers are free. Chunk contents are
-            // fixed, so scheduling cannot influence the result.
+            // One stealable task per fixed chunk; the work-stealing
+            // pool balances them across however many workers are free.
+            // Chunk contents are fixed, so scheduling cannot influence
+            // the result.
             let fill = &fill;
             let mut tasks: Vec<Task> = Vec::with_capacity(chunks);
             for (c, part) in self.grad_parts.iter_mut().enumerate() {

@@ -189,9 +189,11 @@ impl HessianOracle for SquaredDatasetOracle<'_> {
 }
 
 /// Build the configured compute backend on the trainer's persistent
-/// worker pool. The plain native kind runs the `O(ms)` linear algebra on
-/// the sharded [`ParallelBackend`]; its chunk plan and reduction
-/// topology are fixed, so results do not depend on the thread count.
+/// work-stealing worker pool. The plain native kind runs the `O(ms)`
+/// linear algebra on the sharded [`ParallelBackend`]; every chunk is an
+/// individually stealable task, but chunk contents and reduction
+/// topology are fixed, so results do not depend on the thread count or
+/// the scheduling.
 pub fn make_backend(cfg: &TrainConfig, pool: &Arc<WorkerPool>) -> Result<Box<dyn ComputeBackend>> {
     Ok(match cfg.backend {
         BackendKind::Native => Box::new(ParallelBackend::with_pool(Arc::clone(pool))),
@@ -261,9 +263,11 @@ fn group_index_for(ds: &dyn DatasetView) -> Option<Arc<GroupIndex>> {
 /// a memory-mapped pallas store — the run is bit-identical either way.
 pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let timer = std::time::Instant::now();
-    // One persistent worker pool for the whole run: the sharded oracle,
-    // the parallel backend, and the parallel argsort all submit to it,
-    // so threads are spawned once here rather than per oracle call.
+    // One persistent work-stealing worker pool for the whole run: the
+    // sharded oracle, the parallel backend, and the parallel argsort
+    // all submit their (finer-than-thread-count) task batches to it, so
+    // threads are spawned once here rather than per oracle call and
+    // skewed batches rebalance by stealing.
     let pool = Arc::new(WorkerPool::new(cfg.resolved_threads()));
     let backend = make_backend(cfg, &pool)?;
     let backend_name = backend.name();
@@ -343,6 +347,22 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             n_pairs,
         }
     };
+    // `pool-stats` builds: surface the scheduler's balance evidence
+    // (how many tasks ran, how many were stolen off a busy worker).
+    #[cfg(feature = "pool-stats")]
+    if cfg.verbose {
+        let s = pool.stats();
+        eprintln!(
+            "{}",
+            Json::obj(vec![
+                ("pool_batches", (s.batches as usize).into()),
+                ("pool_tasks", (s.executed as usize).into()),
+                ("pool_stolen", (s.stolen as usize).into()),
+                ("pool_inline_tasks", (s.inline_tasks as usize).into()),
+            ])
+            .to_string()
+        );
+    }
     Ok(outcome)
 }
 

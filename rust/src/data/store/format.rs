@@ -10,14 +10,14 @@
 //! offset  size  field
 //! ------  ----  -----------------------------------------------
 //!      0     7  magic "PSTORE\0"
-//!      7     1  format version (1)
+//!      7     1  format version (2)
 //!      8     8  rows (m)                u64 LE
 //!     16     8  cols (n)                u64 LE
 //!     24     8  nnz                     u64 LE
 //!     32     8  flags (bit 0: has qid)  u64 LE
 //!     40     8  n_groups                u64 LE
 //!     48     8  n_pairs                 u64 LE
-//!     56     8  checksum (FNV-1a 64 of every byte ≥ 128)
+//!     56     8  checksum (FNV-1a 64; see below)
 //!     64  8×8  section offsets         u64 LE each
 //!    128     …  sections (8-aligned, zero-padded between):
 //!               indptr   (m+1)·u64   CSR row offsets
@@ -34,17 +34,35 @@
 //! the whole-vector count for a global ranking, the sum of per-group
 //! counts for grouped data — both exact integers, so the loaded value
 //! is bit-identical to what the text path recomputes.
+//!
+//! **Checksum coverage (version 2).** The FNV-1a 64 stream covers every
+//! byte of the file except the checksum field itself, in this order:
+//! the payload (`bytes[128..]`, as it is streamed to disk), then the
+//! header bytes `0..56`, then `64..128`. Version 1 checksummed only the
+//! payload, which left single-byte header corruption (an unused flag
+//! bit, a high byte of `cols`) undetectable by [`Header::decode`]'s
+//! geometry checks; with full coverage *any* byte flip in a store is a
+//! structured `open()` error (fuzzed in `tests/store.rs`). The
+//! payload-first order lets the streaming writer fold the header in at
+//! the end, when the section offsets are finally known.
 
 use anyhow::{bail, ensure, Result};
 
 /// File magic: the first 7 bytes of every pallas store.
 pub const MAGIC: [u8; 7] = *b"PSTORE\0";
 
-/// Current format version (byte 7).
-pub const VERSION: u8 = 1;
+/// Current format version (byte 7). Version 2 extended the checksum to
+/// cover the header (minus the checksum field) and rejects unknown flag
+/// bits; version-1 files are refused with a version error rather than
+/// misread under the new coverage rules.
+pub const VERSION: u8 = 2;
 
 /// Total header size; the first section starts here (8-aligned).
 pub const HEADER_LEN: usize = 128;
+
+/// Byte range of the checksum field inside the header — the only bytes
+/// the checksum stream skips.
+pub const CHECKSUM_FIELD: std::ops::Range<usize> = 56..64;
 
 /// Section count/order. Indexes into [`Header::offsets`].
 pub const SEC_INDPTR: usize = 0;
@@ -180,6 +198,14 @@ impl Header {
         if !h.has_qid() {
             ensure!(h.n_groups == 0, "global store declares {} query groups", h.n_groups);
         }
+        // Unknown flag bits mean a feature this build cannot honor (and
+        // would otherwise be silently ignored) — reject them even on
+        // the unchecked path.
+        ensure!(
+            h.flags & !FLAG_HAS_QID == 0,
+            "unknown store flag bits {:#x}",
+            h.flags & !FLAG_HAS_QID
+        );
         Ok(h)
     }
 }
@@ -202,6 +228,17 @@ impl Checksum {
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
         self.0 = h;
+    }
+
+    /// Fold the header into the stream (after the payload): every
+    /// header byte except the checksum field itself. Writer and reader
+    /// must call this with identical bytes, so the caller passes the
+    /// encoded header with the checksum slot in any state — the slot is
+    /// skipped.
+    pub fn update_header(&mut self, header: &[u8]) {
+        debug_assert!(header.len() >= HEADER_LEN);
+        self.update(&header[..CHECKSUM_FIELD.start]);
+        self.update(&header[CHECKSUM_FIELD.end..HEADER_LEN]);
     }
 
     pub fn finish(&self) -> u64 {
@@ -330,6 +367,34 @@ mod tests {
         let mut bad = h;
         bad.nnz = u64::MAX / 2;
         assert!(Header::decode(&bad.encode(), len).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_unknown_flag_bits() {
+        let mut h = header(4, 6, true);
+        h.flags |= 1 << 17;
+        let err = Header::decode(&h.encode(), file_len(&h)).unwrap_err();
+        assert!(err.to_string().contains("flag"), "{err}");
+    }
+
+    #[test]
+    fn header_checksum_skips_only_the_checksum_field() {
+        let h = header(4, 6, false);
+        let mut with_zero = h;
+        with_zero.checksum = 0;
+        let mut with_junk = h;
+        with_junk.checksum = 0xDEAD_BEEF_DEAD_BEEF;
+        let mut a = Checksum::new();
+        a.update_header(&with_zero.encode());
+        let mut b = Checksum::new();
+        b.update_header(&with_junk.encode());
+        assert_eq!(a.finish(), b.finish(), "checksum field must not feed the stream");
+        // ...but any other header byte must.
+        let mut tweaked = h;
+        tweaked.cols += 1;
+        let mut c = Checksum::new();
+        c.update_header(&tweaked.encode());
+        assert_ne!(a.finish(), c.finish());
     }
 
     #[test]

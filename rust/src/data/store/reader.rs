@@ -63,8 +63,13 @@ impl PallasStore {
             *slot = (header.offsets[s] as usize, header.section_len(s) as usize);
         }
         if verify {
+            // Full-file coverage: payload first (the write order), then
+            // the header minus the checksum field — so header
+            // corruption the geometry checks cannot see (unused flag
+            // bits, a grown `cols`) still fails here.
             let mut sum = Checksum::new();
             sum.update(&bytes[HEADER_LEN..]);
+            sum.update_header(&bytes[..HEADER_LEN]);
             ensure!(
                 sum.finish() == header.checksum,
                 "{name}: checksum mismatch — the store is corrupt (expected {:#018x}, \

@@ -314,7 +314,11 @@ fn convert_impl(
     }
 
     let out_bytes = w.pos;
-    header.checksum = w.sum.finish();
+    // Fold the final header (checksum slot excluded) into the payload
+    // stream — full-file coverage, so any later byte flip is caught.
+    let mut sum = w.sum;
+    sum.update_header(&header.encode());
+    header.checksum = sum.finish();
     let mut out = w.out.into_inner().context("flushing store")?;
     out.seek(SeekFrom::Start(0)).context("rewinding store")?;
     out.write_all(&header.encode()).context("writing store header")?;

@@ -144,6 +144,68 @@ pub fn queries(n_queries: usize, per_query: usize, n_features: usize, seed: u64)
     )
 }
 
+/// Zipf-skewed query-grouped retrieval data: `n_groups` groups whose
+/// sizes follow a power law (size of group `k` ∝ `(k+1)^−a`, so group 0
+/// is giant and the tail is mostly singletons), apportioned to exactly
+/// `m` total examples with every group keeping at least one. This is
+/// the adversarial regime for shard balancing — the group-size
+/// distribution real click/retrieval corpora exhibit — used by the
+/// work-stealing skew benchmark (`benches/skew_balance.rs`), the
+/// scheduler test battery, and the CI thread-matrix fixture. Features
+/// and labels follow the [`queries`] construction (shared learnable
+/// direction + per-query nuisance offset).
+pub fn zipf_queries(m: usize, n_groups: usize, n_features: usize, a: f64, seed: u64) -> Dataset {
+    if m == 0 {
+        let x = CsrMatrix::from_triplets(0, n_features, Vec::new());
+        return Dataset::new(x, Vec::new(), Some(Vec::new()), "zipf-queries(m=0)".into());
+    }
+    let n_groups = n_groups.clamp(1, m);
+    assert!(a > 0.0, "Zipf exponent must be positive");
+    // Deterministic apportionment: one example per group up front, the
+    // rest by floored power-law shares, the remainder dealt from the
+    // head (the head is where rounding took the most).
+    let weights: Vec<f64> = (1..=n_groups).map(|k| (k as f64).powf(-a)).collect();
+    let total: f64 = weights.iter().sum();
+    let spare = m - n_groups;
+    let mut sizes: Vec<usize> =
+        weights.iter().map(|w| 1 + (spare as f64 * w / total) as usize).collect();
+    let mut leftover = m - sizes.iter().sum::<usize>();
+    let mut g = 0;
+    while leftover > 0 {
+        sizes[g % n_groups] += 1;
+        leftover -= 1;
+        g += 1;
+    }
+    debug_assert_eq!(sizes.iter().sum::<usize>(), m);
+
+    let mut rng = Rng::new(seed);
+    let w_shared: Vec<f64> = (0..n_features).map(|_| rng.normal()).collect();
+    let mut triplets = Vec::new();
+    let mut y = Vec::with_capacity(m);
+    let mut qid = Vec::with_capacity(m);
+    let mut i = 0usize;
+    for (q, &sz) in sizes.iter().enumerate() {
+        let offset: Vec<f64> = (0..n_features).map(|_| rng.normal() * 2.0).collect();
+        for _ in 0..sz {
+            let mut score = 0.0;
+            for j in 0..n_features {
+                let v = rng.normal() + offset[j];
+                triplets.push((i, j, v));
+                score += w_shared[j] * (v - offset[j]);
+            }
+            y.push(score + 0.1 * rng.normal());
+            qid.push(q as u64);
+            i += 1;
+        }
+    }
+    Dataset::new(
+        CsrMatrix::from_triplets(m, n_features, triplets),
+        y,
+        Some(qid),
+        format!("zipf-queries(m={m},g={n_groups},a={a})"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +260,27 @@ mod tests {
         assert_eq!(d.len(), 200);
         let q = d.qid.as_ref().unwrap();
         assert_eq!(q.iter().filter(|&&x| x == 3).count(), 20);
+    }
+
+    #[test]
+    fn zipf_queries_sizes_are_skewed_and_exact() {
+        let d = zipf_queries(3000, 600, 6, 1.1, 5);
+        assert_eq!(d.len(), 3000);
+        let q = d.qid.as_ref().unwrap();
+        let mut sizes = vec![0usize; 600];
+        for &g in q {
+            sizes[g as usize] += 1;
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 3000);
+        assert!(sizes.iter().all(|&s| s >= 1), "every group keeps one example");
+        // Head dominance: group 0 is much larger than the median group.
+        assert!(sizes[0] > 20 * sizes[300], "head {} vs median {}", sizes[0], sizes[300]);
+        // Sizes are nonincreasing apart from the round-robin remainder.
+        assert!(sizes[0] >= sizes[10] && sizes[10] >= sizes[100]);
+        // Deterministic in the seed.
+        let e = zipf_queries(3000, 600, 6, 1.1, 5);
+        assert_eq!(d.y, e.y);
+        assert_ne!(d.y, zipf_queries(3000, 600, 6, 1.1, 6).y);
     }
 
     #[test]

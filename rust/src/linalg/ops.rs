@@ -97,9 +97,10 @@ pub fn argsort_into(v: &[f64], idx: &mut Vec<usize>) {
 /// Adaptive chunk count for the parallel work plans (ROADMAP "adaptive
 /// chunk counts"): `clamp(4 × n_threads, 4, 64)`, derived once per
 /// trainer from the persistent pool's size. Four chunks per worker give
-/// the pool's queue room to balance uneven chunk costs without the
-/// scheduling overhead of hundreds of tiny tasks; the clamp keeps tiny
-/// and huge pools sane. Only plans whose results are *exact* for any
+/// the work-stealing scheduler room to balance uneven chunk costs —
+/// every chunk is submitted as an individually stealable task — without
+/// the overhead of hundreds of tiny tasks; the clamp keeps tiny and
+/// huge pools sane. Only plans whose results are *exact* for any
 /// chunk count use this — the argsort's permutation is the unique one
 /// under a strict total order and the sharded oracle's counts are exact
 /// integers. The parallel gradient reduction keeps its fixed plan
@@ -117,8 +118,9 @@ pub const PAR_SORT_MIN: usize = 1024;
 /// fixed-topology pairwise merges (stride 1, 2, 4, …). Each merge level
 /// is cut into one output span per chunk along the same chunk
 /// boundaries, located in the two input runs by merge-path co-rank
-/// binary searches, so every level keeps all workers busy — including
-/// the final whole-array merge that would otherwise re-serialize the
+/// binary searches, and every chunk/span is one individually stealable
+/// pool task, so every level keeps all workers busy — including the
+/// final whole-array merge that would otherwise re-serialize the
 /// sort. Because the comparator is the strict total order of
 /// [`argsort_into`] (value, then index), the permutation is
 /// **bit-identical to the serial argsort for any thread count** (the

@@ -1,69 +1,79 @@
 //! Query-sharded parallel subgradient oracle.
 //!
 //! The loss of §2 decomposes over disjoint example subsets two ways, and
-//! this engine exploits both on a persistent [`WorkerPool`] (shared with
-//! the parallel compute backend and the parallel argsort — one pool per
-//! trainer, no per-call thread spawns) while keeping per-shard reusable
-//! tree buffers alive across BMRM iterations:
+//! this engine exploits both on a persistent work-stealing
+//! [`WorkerPool`] (shared with the parallel compute backend and the
+//! parallel argsort — one pool per trainer, no per-call thread spawns)
+//! while keeping per-task reusable tree buffers alive across BMRM
+//! iterations. In both modes the engine submits **more tasks than
+//! workers** — the fine decomposition the stealing scheduler needs to
+//! balance skewed inputs — and every task writes a disjoint output slot,
+//! with all floating-point reductions running serially afterwards in
+//! task order, so *which* worker executes a task never touches a result
+//! bit.
 //!
 //! **Query-grouped data** (the document-retrieval setting): the risk is
-//! an average of per-query losses, so whole query groups are dealt to
-//! shards (contiguous runs of groups, balanced by example count) and
-//! each worker runs its own [`TreeOracle`] over its groups — the same
-//! batch-parallel decomposition pursued by WMRB (Liu, 2017). Per-group
-//! results are reduced serially *in group order*, so the output is
-//! bit-identical to the serial [`super::QueryGrouped`] wrapper for every
-//! shard count.
+//! an average of per-query losses, so query groups are packed by a
+//! [`WorkPlan`] into bounded-weight contiguous **group runs** — tiny
+//! groups coalesce, a giant group (the norm under Zipf-like group-size
+//! skew, the regime WMRB (Liu, 2017) targets with batch decomposition)
+//! becomes a run of its own, and no group is ever split. Each run is one
+//! stealable task evaluating its groups with its own [`TreeOracle`] —
+//! the PR 1–3 plan of one coarse task per worker serialized a batch
+//! behind the giant group's owner; with run-granularity tasks the other
+//! workers steal the remaining runs while one worker chews the giant.
+//! Per-group results are reduced serially *in group order*, so the
+//! output is bit-identical to the serial [`super::QueryGrouped`] wrapper
+//! for every run-plan and thread count.
 //!
 //! **One global ranking**: the frequencies `c_i`/`d_i` of eqs. (5)–(6)
 //! are *integer* dominance counts over the margin window
 //! `W(i) = {j : 1 + p_i − p_j > 0}` (a prefix of the score-sorted order).
 //! The sorted order is split into [`adaptive_chunks`] contiguous chunks
-//! (the per-trainer chunk plan, `clamp(4·threads, 4, 64)` — finer than
-//! the shard count), and the *queries* (sorted positions `k`) are dealt
-//! to shards as equal contiguous ranges. The shard owning query `k`
-//! computes `c_k` as
+//! (the per-trainer chunk plan, `clamp(4·threads, 4, 64)`), and each
+//! chunk is one stealable task counting exactly its own queries: the
+//! task owning sorted positions `[lo, hi)` computes `c_k` as
 //!
-//! - an incremental red-black-tree count over
-//!   `[base, w_end(k))`, where `base` is the chunk boundary at or below
-//!   the shard's *first* window end (exactly Algorithm 3's sweep,
-//!   restricted to the tail the shard actually owns), plus
+//! - an incremental red-black-tree count over `[base, w_end(k))`, where
+//!   `base` is the chunk boundary at or below the chunk's *first* window
+//!   end (exactly Algorithm 3's sweep, restricted to the tail the chunk
+//!   actually owns), plus
 //! - one binary search per chunk fully below `base` against that chunk's
-//!   pre-sorted label array (phase A, also parallel).
+//!   pre-sorted label array (phase A, also one task per chunk).
 //!
 //! `d_i` is the mirror image over suffix windows. Because every per-`i`
 //! count is an exact integer decomposed by chunk, the assembled
 //! `(loss, coeffs)` is **bit-identical to the single-threaded
-//! [`TreeOracle`] for any shard count** — no floating-point reduction
-//! enters until [`super::assemble_from_counts`], which runs serially on
-//! the full count vectors. Each shard owns `m/S` queries and its tree
-//! sweep spans at most the growth of the window extents across them plus
-//! one chunk (the extents are monotone, so the sweeps telescope to
-//! `O(m)` insertions in total), which is what makes the sharded oracle
-//! faster in practice on multi-core hosts (see
-//! `benches/fig1_iteration_cost.rs`).
+//! [`TreeOracle`] for any chunk plan and any thread count** — no
+//! floating-point reduction enters until [`super::assemble_from_counts`],
+//! which runs serially on the full count vectors. The window extents are
+//! monotone, so the per-chunk tree sweeps telescope to `O(m)` insertions
+//! plus at most one chunk length each — `O(m)` in total — which is what
+//! makes the sharded oracle faster in practice on multi-core hosts (see
+//! `benches/fig1_iteration_cost.rs` and `benches/skew_balance.rs`).
 //!
 //! Degenerate score distributions (e.g. all predictions within one
 //! margin of each other, as at `w = 0`) make every window span the whole
-//! array; query-balanced ownership then sends *zero* work through the
+//! array; chunk-granularity ownership then sends *zero* work through the
 //! trees — every count is a round of per-chunk binary searches, which is
-//! embarrassingly parallel. (The previous window-end ownership collapsed
+//! embarrassingly parallel. (The pre-PR-2 window-end ownership collapsed
 //! this case onto one shard; see ROADMAP history.)
 
 use super::{assemble_from_counts, GroupIndex, OracleOutput, RankingOracle};
 use crate::linalg::ops::{adaptive_chunks, par_argsort_into};
 use crate::losses::tree::TreeOracle;
 use crate::rbtree::OsTree;
+use crate::runtime::plan::WorkPlan;
 use crate::runtime::pool::{Task, WorkerPool};
 use std::sync::Arc;
 
-/// How examples are dealt to shards.
+/// How examples are dealt to tasks.
 enum Plan {
     /// One global ranking: contiguous chunks of the score-sorted order.
     Global,
     /// Disjoint query groups (first-seen order, as in
-    /// [`super::QueryGrouped`]), dealt to shards as contiguous group
-    /// runs balanced by example count.
+    /// [`super::QueryGrouped`]), packed into bounded-weight contiguous
+    /// group runs — one stealable task each, no group split.
     Grouped {
         /// The flat group partition (shared convention with
         /// [`super::QueryGrouped`] and the pallas store; `Arc`-shared so
@@ -71,21 +81,22 @@ enum Plan {
         index: Arc<GroupIndex>,
         /// Effective group count for averaging (groups with pairs).
         r_eff: f64,
-        /// Per shard: `[lo, hi)` range of group indices.
-        ranges: Vec<(usize, usize)>,
+        /// Per task: `[lo, hi)` range of group indices (a [`WorkPlan`]
+        /// over group sizes, fixed at construction).
+        runs: Vec<(usize, usize)>,
     },
 }
 
-/// Per-shard worker state, reused across oracle calls (and hence across
+/// Per-task worker state, reused across oracle calls (and hence across
 /// BMRM cutting-plane iterations — the trees and buffers are allocated
 /// once and only grow).
-struct ShardState {
+struct TaskState {
     /// Incremental counter for the partial-chunk sweep (global mode).
     tree: OsTree,
-    /// Counts for this shard's owned queries, in sweep order.
+    /// Counts for this task's owned queries, in sweep order.
     c_out: Vec<u64>,
     d_out: Vec<u64>,
-    /// Grouped mode: a full per-shard tree oracle plus gather buffers.
+    /// Grouped mode: a full per-run tree oracle plus gather buffers.
     oracle: TreeOracle,
     p_buf: Vec<f64>,
     y_buf: Vec<f64>,
@@ -95,9 +106,9 @@ struct ShardState {
     meta: Vec<(usize, usize, usize, f64)>,
 }
 
-impl ShardState {
+impl TaskState {
     fn new() -> Self {
-        ShardState {
+        TaskState {
             tree: OsTree::new(),
             c_out: Vec::new(),
             d_out: Vec::new(),
@@ -110,42 +121,43 @@ impl ShardState {
     }
 }
 
-/// Shared read-only view handed to the global-mode workers.
+/// Shared read-only view handed to the global-mode workers. Task `t`
+/// owns the sorted positions `[bounds[t], bounds[t+1])` — the chunk
+/// plan doubles as the ownership plan, so tasks are fine enough to
+/// steal and every boundary is shared with the binary-search substrate.
 struct GlobalView<'a> {
-    /// Chunk boundaries over sorted positions, length `n_chunks + 1`
-    /// (the adaptive chunk plan — finer than the shard count).
+    /// Chunk boundaries over sorted positions, length `n_tasks + 1`.
     bounds: &'a [usize],
-    /// Owned query range `[lo, hi)` per shard (sorted positions `k`),
-    /// used by both the forward and the backward sweep.
-    owned: &'a [(usize, usize)],
     y_sorted: &'a [f64],
     /// Forward window ends `w(k)` (exclusive), nondecreasing in `k`.
     w_end: &'a [usize],
     /// Backward window starts `v(k)` (inclusive), nondecreasing in `k`.
     v_start: &'a [usize],
     /// Per-chunk sorted label arrays (phase A output; empty when a
-    /// single shard runs the pure serial sweep).
+    /// single task runs the pure serial sweep).
     labels: &'a [Vec<f64>],
 }
 
 /// The parallel sharded oracle engine. Construct once per training set
 /// (like [`super::QueryGrouped`]); evaluate once per BMRM iteration. All
-/// parallel phases run on one persistent [`WorkerPool`], shared with the
-/// trainer's compute backend when built via [`Self::with_pool`].
+/// parallel phases run on one persistent work-stealing [`WorkerPool`],
+/// shared with the trainer's compute backend when built via
+/// [`Self::with_pool`].
 pub struct ShardedTreeOracle {
     pool: Arc<WorkerPool>,
-    n_shards: usize,
-    /// Global-mode chunk count for the binary-search substrate —
-    /// [`adaptive_chunks`] of the pool size, fixed at construction
-    /// (once per trainer). Finer than the shard count, so each shard's
-    /// incremental tree sweep starts at a chunk boundary close to its
-    /// first window extent; counts are exact integers, so the chunk
-    /// count cannot change a result bit.
+    /// Task granularity: the target task count per parallel phase —
+    /// [`adaptive_chunks`] of the pool size by default, fixed at
+    /// construction (once per trainer), overridable via
+    /// [`Self::with_run_target`]. Global mode uses it as the chunk
+    /// count; grouped mode as the [`WorkPlan`] run target. Counts are
+    /// exact integers and reductions are task-order serial, so the
+    /// granularity cannot change a result bit (pinned by
+    /// `tests/scheduler.rs`).
     n_chunks: usize,
     plan: Plan,
-    shards: Vec<ShardState>,
-    /// Per-chunk sorted labels, outside [`ShardState`] so phase-B workers
-    /// can read every *other* shard's array.
+    states: Vec<TaskState>,
+    /// Per-chunk sorted labels, outside [`TaskState`] so phase-B workers
+    /// can read every *other* chunk's array.
     sorted_labels: Vec<Vec<f64>>,
     // Per-eval scratch (global mode), reused across calls.
     pi: Vec<usize>,
@@ -166,38 +178,62 @@ impl ShardedTreeOracle {
         Self::with_pool(Arc::new(WorkerPool::new(n_threads)), qid, y)
     }
 
-    /// Build on an existing persistent pool (one shard per pool worker)
-    /// over a fixed training label vector; `qid` enables query-group
-    /// sharding (must align with `y`).
+    /// Build on an existing persistent pool over a fixed training label
+    /// vector; `qid` enables query-group task planning (must align with
+    /// `y`).
     pub fn with_pool(pool: Arc<WorkerPool>, qid: Option<&[u64]>, y: &[f64]) -> Self {
         let index = qid.map(|q| Arc::new(GroupIndex::build(q, y)));
-        Self::from_plan(pool, index)
+        Self::from_plan(pool, index, None)
     }
 
     /// Build on a persistent pool from a precomputed [`GroupIndex`]
     /// (e.g. the one a pallas store carries) — no per-run group scan,
     /// no copy.
     pub fn with_pool_index(pool: Arc<WorkerPool>, index: Arc<GroupIndex>) -> Self {
-        Self::from_plan(pool, Some(index))
+        Self::from_plan(pool, Some(index), None)
     }
 
-    fn from_plan(pool: Arc<WorkerPool>, index: Option<Arc<GroupIndex>>) -> Self {
-        let n_shards = pool.n_threads().max(1);
-        let n_chunks = adaptive_chunks(n_shards);
-        let plan = match index {
-            None => Plan::Global,
+    /// Build with an explicit task-granularity target: the global-mode
+    /// chunk count and the grouped-mode [`WorkPlan`] run target.
+    /// `target_tasks = n_threads` reproduces the coarse one-task-per-
+    /// worker plan of PRs 1–3 (the skew benchmark's baseline); the
+    /// default is [`adaptive_chunks`] of the pool size. Any target
+    /// produces bit-identical results — the knob trades scheduling
+    /// overhead against balance, nothing else.
+    pub fn with_run_target(
+        pool: Arc<WorkerPool>,
+        qid: Option<&[u64]>,
+        y: &[f64],
+        target_tasks: usize,
+    ) -> Self {
+        let index = qid.map(|q| Arc::new(GroupIndex::build(q, y)));
+        Self::from_plan(pool, index, Some(target_tasks))
+    }
+
+    fn from_plan(
+        pool: Arc<WorkerPool>,
+        index: Option<Arc<GroupIndex>>,
+        target_tasks: Option<usize>,
+    ) -> Self {
+        let n_workers = pool.n_threads().max(1);
+        let default_tasks = if n_workers == 1 { 1 } else { adaptive_chunks(n_workers) };
+        let n_chunks = target_tasks.unwrap_or(default_tasks).max(1);
+        let (plan, n_states) = match index {
+            None => (Plan::Global, 0),
             Some(index) => {
                 let r_eff = index.n_effective_groups().max(1) as f64;
-                let ranges = split_groups(&index, n_shards);
-                Plan::Grouped { index, r_eff, ranges }
+                let runs = WorkPlan::pack(index.n_groups(), n_chunks, |g| index.group(g).len())
+                    .runs()
+                    .to_vec();
+                let n_states = runs.len();
+                (Plan::Grouped { index, r_eff, runs }, n_states)
             }
         };
         ShardedTreeOracle {
             pool,
-            n_shards,
             n_chunks,
             plan,
-            shards: (0..n_shards).map(|_| ShardState::new()).collect(),
+            states: (0..n_states).map(|_| TaskState::new()).collect(),
             sorted_labels: Vec::new(),
             pi: Vec::new(),
             sort_scratch: Vec::new(),
@@ -208,11 +244,6 @@ impl ShardedTreeOracle {
             c: Vec::new(),
             d: Vec::new(),
         }
-    }
-
-    /// Number of shard workers.
-    pub fn n_shards(&self) -> usize {
-        self.n_shards
     }
 
     /// The persistent pool this oracle evaluates on.
@@ -228,13 +259,13 @@ impl ShardedTreeOracle {
         }
     }
 
-    /// Per-shard `[lo, hi)` group-index ranges (None in global mode).
+    /// Per-task `[lo, hi)` group-index ranges (None in global mode).
     /// Ranges are contiguous and non-overlapping: a query group is never
-    /// split across shards.
+    /// split across tasks.
     pub fn group_ranges(&self) -> Option<&[(usize, usize)]> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { ranges, .. } => Some(ranges),
+            Plan::Grouped { runs, .. } => Some(runs),
         }
     }
 
@@ -252,7 +283,6 @@ impl ShardedTreeOracle {
         if m == 0 {
             return OracleOutput { loss: 0.0, coeffs: Vec::new() };
         }
-        let n_shards = self.n_shards.min(m);
 
         // Shared setup — the same permutation TreeOracle's sort produces
         // (the parallel merge sort is bit-identical to the serial
@@ -300,29 +330,29 @@ impl ShardedTreeOracle {
             }
         }
 
-        // Contiguous chunks of the sorted order (binary-search
-        // substrate, [`adaptive_chunks`] of the pool size — finer than
-        // the shard count so sweep bases land close to the first window
-        // extents) and equal contiguous *query* ranges per shard.
-        // Query-balanced ownership keeps the per-shard tree sweeps
-        // bounded even when every window spans the whole array (the
-        // degenerate all-scores-within-one-margin case): window ends
-        // that land on chunk boundaries contribute binary searches only,
-        // so that case redistributes across all shards instead of
+        // The task plan: contiguous chunks of the sorted order, each one
+        // a stealable counting task owning exactly its own queries (and
+        // doubling as a binary-search substrate unit for every other
+        // task). Chunk-granularity ownership keeps the per-task tree
+        // sweeps bounded even when every window spans the whole array
+        // (the degenerate all-scores-within-one-margin case): window
+        // ends that land on chunk boundaries contribute binary searches
+        // only, so that case redistributes across all tasks instead of
         // collapsing onto the owner of the last chunk.
-        let n_chunks = if n_shards == 1 { 1 } else { self.n_chunks.clamp(1, m) };
-        let bounds: Vec<usize> = (0..=n_chunks).map(|c| c * m / n_chunks).collect();
-        let owned: Vec<(usize, usize)> =
-            (0..n_shards).map(|s| (s * m / n_shards, (s + 1) * m / n_shards)).collect();
+        let n_tasks = if self.pool.n_threads() == 1 { 1 } else { self.n_chunks.clamp(1, m) };
+        let bounds: Vec<usize> = (0..=n_tasks).map(|c| c * m / n_tasks).collect();
+        if self.states.len() < n_tasks {
+            self.states.resize_with(n_tasks, TaskState::new);
+        }
 
         // Phase A: per-chunk sorted label arrays (cross-chunk counting
-        // substrate). Skipped for a single shard — the lone worker runs
+        // substrate). Skipped for a single task — the lone worker runs
         // the pure serial sweep over one whole-array chunk and never
         // consults them.
-        self.sorted_labels.resize_with(n_chunks, Vec::new);
-        if n_chunks > 1 {
+        self.sorted_labels.resize_with(n_tasks, Vec::new);
+        if n_tasks > 1 {
             let y_sorted = &self.y_sorted;
-            let mut tasks: Vec<Task> = Vec::with_capacity(n_chunks);
+            let mut tasks: Vec<Task> = Vec::with_capacity(n_tasks);
             for (s, lab) in self.sorted_labels.iter_mut().enumerate() {
                 let (lo, hi) = (bounds[s], bounds[s + 1]);
                 tasks.push(Box::new(move || {
@@ -331,7 +361,7 @@ impl ShardedTreeOracle {
                     // count, exactly like in the tree sweeps, which skip
                     // inserting them) — drop them here so the numeric
                     // partition_point predicates below stay consistent
-                    // with the tree path for any shard count.
+                    // with the tree path for any task count.
                     lab.extend(y_sorted[lo..hi].iter().copied().filter(|x| !x.is_nan()));
                     lab.sort_unstable_by(|a, b| a.total_cmp(b));
                 }));
@@ -339,42 +369,42 @@ impl ShardedTreeOracle {
             self.pool.run(tasks);
         }
 
-        // Phase B: each worker counts its owned queries.
+        // Phase B: one stealable task per chunk counts that chunk's
+        // queries.
         let view = GlobalView {
             bounds: &bounds,
-            owned: &owned,
             y_sorted: &self.y_sorted,
             w_end: &self.w_end,
             v_start: &self.v_start,
             labels: &self.sorted_labels,
         };
-        if n_shards == 1 {
-            global_worker(0, &view, &mut self.shards[0]);
+        if n_tasks == 1 {
+            global_worker(0, &view, &mut self.states[0]);
         } else {
             let view = &view;
-            let mut tasks: Vec<Task> = Vec::with_capacity(n_shards);
-            for (s, state) in self.shards.iter_mut().take(n_shards).enumerate() {
+            let mut tasks: Vec<Task> = Vec::with_capacity(n_tasks);
+            for (s, state) in self.states.iter_mut().take(n_tasks).enumerate() {
                 tasks.push(Box::new(move || global_worker(s, view, state)));
             }
             self.pool.run(tasks);
         }
 
-        // Scatter the per-shard counts back to original example order and
+        // Scatter the per-task counts back to original example order and
         // assemble — serial and order-fixed, so the float result cannot
-        // depend on the shard count.
+        // depend on the task count or the scheduling.
         self.c.clear();
         self.c.resize(m, 0);
         self.d.clear();
         self.d.resize(m, 0);
-        for s in 0..n_shards {
-            let st = &self.shards[s];
-            let (q_lo, q_hi) = owned[s];
-            for (t, k) in (q_lo..q_hi).enumerate() {
-                self.c[self.pi[k]] = st.c_out[t];
+        for t in 0..n_tasks {
+            let st = &self.states[t];
+            let (q_lo, q_hi) = (bounds[t], bounds[t + 1]);
+            for (i, k) in (q_lo..q_hi).enumerate() {
+                self.c[self.pi[k]] = st.c_out[i];
             }
             // d_out was pushed for descending k.
-            for (t, k) in (q_lo..q_hi).rev().enumerate() {
-                self.d[self.pi[k]] = st.d_out[t];
+            for (i, k) in (q_lo..q_hi).rev().enumerate() {
+                self.d[self.pi[k]] = st.d_out[i];
             }
         }
         assemble_from_counts(p, &self.c, &self.d, n_pairs)
@@ -383,30 +413,36 @@ impl ShardedTreeOracle {
     fn eval_grouped(&mut self, p: &[f64], y: &[f64]) -> OracleOutput {
         let m = p.len();
         assert_eq!(m, y.len());
-        let Plan::Grouped { index, r_eff, ranges } = &self.plan else {
+        let Plan::Grouped { index, r_eff, runs } = &self.plan else {
             unreachable!("eval_grouped requires a grouped plan")
         };
         let r_eff = *r_eff;
-        let shards = &mut self.shards;
+        let states = &mut self.states;
+        debug_assert_eq!(states.len(), runs.len());
 
         let gi: &GroupIndex = index;
-        if shards.len() == 1 {
-            grouped_worker(&mut shards[0], ranges[0], gi, p, y);
+        if self.pool.n_threads() == 1 || runs.len() <= 1 {
+            for (state, &range) in states.iter_mut().zip(runs.iter()) {
+                grouped_worker(state, range, gi, p, y);
+            }
         } else {
-            let mut tasks: Vec<Task> = Vec::with_capacity(shards.len());
-            for (s, state) in shards.iter_mut().enumerate() {
-                let range = ranges[s];
+            // One stealable task per group run: a worker stuck on a
+            // giant group's run loses its remaining runs to the idle
+            // workers instead of serializing the batch.
+            let mut tasks: Vec<Task> = Vec::with_capacity(runs.len());
+            for (state, &range) in states.iter_mut().zip(runs.iter()) {
                 tasks.push(Box::new(move || grouped_worker(state, range, gi, p, y)));
             }
             self.pool.run(tasks);
         }
 
-        // Reduce in group order. Shards hold contiguous ascending group
-        // runs, so iterating shards then their records reproduces the
-        // serial QueryGrouped accumulation order bit-for-bit.
+        // Reduce in run order. Runs hold contiguous ascending group
+        // ranges, so iterating runs then their records reproduces the
+        // serial QueryGrouped accumulation order bit-for-bit — for any
+        // run plan and regardless of which worker ran which task.
         let mut loss = 0.0;
         let mut coeffs = vec![0.0; m];
-        for state in self.shards.iter() {
+        for state in self.states.iter() {
             for &(g, off, len, group_loss) in &state.meta {
                 loss += group_loss / r_eff;
                 let idx = index.group(g);
@@ -437,35 +473,10 @@ impl RankingOracle for ShardedTreeOracle {
     }
 }
 
-/// Deal groups to `n_shards` contiguous runs balanced by example count.
-/// Deterministic in the inputs; the last shard absorbs the remainder.
-fn split_groups(index: &GroupIndex, n_shards: usize) -> Vec<(usize, usize)> {
-    let n_groups = index.n_groups();
-    let total: usize = index.n_examples();
-    let mut ranges = Vec::with_capacity(n_shards);
-    let mut lo = 0usize;
-    let mut cum = 0usize;
-    for s in 0..n_shards {
-        let mut hi = lo;
-        if s + 1 == n_shards {
-            hi = n_groups;
-        } else {
-            let target = total * (s + 1) / n_shards;
-            while hi < n_groups && cum < target {
-                cum += index.group(hi).len();
-                hi += 1;
-            }
-        }
-        ranges.push((lo, hi));
-        lo = hi;
-    }
-    ranges
-}
-
-/// Grouped-mode worker: evaluate this shard's query groups with its own
-/// reusable tree oracle, recording per-group losses and coefficients.
+/// Grouped-mode worker: evaluate one group run with its own reusable
+/// tree oracle, recording per-group losses and coefficients.
 fn grouped_worker(
-    state: &mut ShardState,
+    state: &mut TaskState,
     range: (usize, usize),
     index: &GroupIndex,
     p: &[f64],
@@ -490,28 +501,28 @@ fn grouped_worker(
     }
 }
 
-/// Global-mode worker: exact `c`/`d` counts for this shard's contiguous
-/// query range. The tree sweep covers `[base, w_end(k))` where `base` is
-/// the chunk boundary at or below the range's first window end; chunks
-/// fully below `base` are counted with one binary search each against
-/// their pre-sorted labels. Counts are exact integers either way, so the
-/// split point cannot change a result bit.
-fn global_worker(s: usize, v: &GlobalView, state: &mut ShardState) {
+/// Global-mode worker: exact `c`/`d` counts for chunk `s`'s query range
+/// `[bounds[s], bounds[s+1])`. The tree sweep covers `[base, w_end(k))`
+/// where `base` is the chunk boundary at or below the range's first
+/// window end; chunks fully below `base` are counted with one binary
+/// search each against their pre-sorted labels. Counts are exact
+/// integers either way, so the split point cannot change a result bit.
+fn global_worker(s: usize, v: &GlobalView, state: &mut TaskState) {
     let n_chunks = v.bounds.len() - 1;
-    let (q_lo, q_hi) = v.owned[s];
+    let (q_lo, q_hi) = (v.bounds[s], v.bounds[s + 1]);
 
     // NaN labels are incomparable: they are never inserted (a NaN key
     // would sit structure-dependently in the BST and make counts vary
-    // with the shard split) and a NaN query counts zero on both the tree
+    // with the chunk split) and a NaN query counts zero on both the tree
     // and the binary-search path — so counts stay exact and
-    // shard-count-invariant even for unvalidated label vectors.
+    // plan-invariant even for unvalidated label vectors.
 
     // Forward sweep: c_k = |{j ∈ W(k) : y_j > y_k}|.
     state.c_out.clear();
     state.tree.clear();
     if q_lo < q_hi {
         // Largest chunk boundary ≤ w_end[q_lo] (w_end ≥ 1, so t0 ≥ 0).
-        // A single shard owns everything and sweeps from 0 — the pure
+        // A single task owns everything and sweeps from 0 — the pure
         // serial path, no label arrays needed.
         let t0 = if n_chunks == 1 {
             0
@@ -609,11 +620,11 @@ mod tests {
             for threads in [1, 2, 3, 8, 33] {
                 let mut sharded = ShardedTreeOracle::new(threads, None, &y);
                 let got = sharded.eval(&p, &y, n);
-                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} shards");
+                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} threads");
                 assert_eq!(
                     got.loss.to_bits(),
                     expect.loss.to_bits(),
-                    "trial {trial}, {threads} shards"
+                    "trial {trial}, {threads} threads"
                 );
             }
         }
@@ -648,7 +659,7 @@ mod tests {
             for threads in [1, 2, 8, 40] {
                 let mut sharded = ShardedTreeOracle::new(threads, Some(&qid), &y);
                 let got = sharded.eval(&p, &y, 0.0);
-                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} shards");
+                assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} threads");
                 assert_eq!(
                     got.loss.to_bits(),
                     expect.loss.to_bits(),
@@ -659,26 +670,47 @@ mod tests {
     }
 
     #[test]
-    fn shard_plan_respects_query_boundaries() {
+    fn run_plan_respects_query_boundaries() {
         let mut rng = Rng::new(9004);
         let m = 300;
         let qid: Vec<u64> = (0..m).map(|i| (i / 7) as u64).collect();
         let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
         for threads in [1, 3, 8] {
             let oracle = ShardedTreeOracle::new(threads, Some(&qid), &y);
-            let ranges = oracle.group_ranges().unwrap();
+            let runs = oracle.group_ranges().unwrap();
             let n_groups = oracle.n_groups().unwrap();
-            assert_eq!(ranges.len(), threads);
-            // Contiguous, non-overlapping cover of all groups: groups are
-            // assigned whole — no group index appears in two shards.
+            // Contiguous, non-overlapping cover of all groups: groups
+            // are assigned whole — no group index appears in two runs —
+            // and a multi-worker pool gets at least one run per worker
+            // to steal.
             let mut expect_lo = 0;
-            for &(lo, hi) in ranges {
+            for &(lo, hi) in runs {
                 assert_eq!(lo, expect_lo);
-                assert!(hi >= lo);
+                assert!(hi > lo);
                 expect_lo = hi;
             }
             assert_eq!(expect_lo, n_groups);
+            if threads == 1 {
+                assert_eq!(runs.len(), 1, "single worker wants one run");
+            } else {
+                assert!(runs.len() >= threads, "{} runs for {threads} workers", runs.len());
+            }
         }
+    }
+
+    #[test]
+    fn giant_group_is_a_run_of_its_own() {
+        // One group holding half the mass next to many singletons: the
+        // plan must isolate it (so the scheduler can steal everything
+        // else) without splitting it.
+        let mut qid: Vec<u64> = vec![0; 500];
+        qid.extend((1..=500).map(|g| g as u64));
+        let y: Vec<f64> = (0..qid.len()).map(|i| (i % 3) as f64).collect();
+        let oracle = ShardedTreeOracle::new(8, Some(&qid), &y);
+        let runs = oracle.group_ranges().unwrap();
+        assert_eq!(runs[0], (0, 1), "giant group must sit alone in the first run");
+        assert!(runs.len() > 8, "fine-grained plan expected, got {} runs", runs.len());
+        assert!(runs.len() <= 2 * adaptive_chunks(8) + 2, "run explosion: {}", runs.len());
     }
 
     #[test]
@@ -688,7 +720,7 @@ mod tests {
         assert_eq!(out.loss, 0.0);
         assert!(out.coeffs.is_empty());
 
-        // Fewer examples than shards.
+        // Fewer examples than tasks.
         let y = [1.0, 2.0];
         let mut o = ShardedTreeOracle::new(8, None, &y);
         let out = o.eval(&[0.0, 0.5], &y, 1.0);
@@ -697,8 +729,8 @@ mod tests {
         assert_eq!(out.coeffs, expect.coeffs);
 
         // All-tied predictions: every window spans everything — with
-        // query-balanced ownership this runs entirely on per-chunk
-        // binary searches, spread across every shard.
+        // chunk-granularity ownership this runs entirely on per-chunk
+        // binary searches, spread across every task.
         let y = [1.0, 2.0, 3.0, 4.0];
         let p = [0.0, 0.0, 0.0, 0.0];
         let n = count_comparable_pairs(&y) as f64;
@@ -708,11 +740,11 @@ mod tests {
     }
 
     #[test]
-    fn degenerate_window_case_spreads_counts_across_shards() {
+    fn degenerate_window_case_spreads_counts_across_tasks() {
         // All scores within one margin: every w_end = m, every
-        // v_start = 0. Each shard must produce counts for exactly its
-        // own query range (no shard ends up owning everything), and the
-        // counts must match the serial oracle bit-for-bit.
+        // v_start = 0. Each task must produce counts for exactly its
+        // own chunk (no task ends up owning everything), and the counts
+        // must match the serial oracle bit-for-bit.
         let mut rng = Rng::new(9005);
         let m = 257;
         let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
@@ -723,19 +755,20 @@ mod tests {
         for threads in [2usize, 4, 8] {
             let mut sharded = ShardedTreeOracle::new(threads, None, &y);
             let got = sharded.eval(&p, &y, n);
-            assert_eq!(got.coeffs, expect.coeffs, "{threads} shards");
-            // Ownership is balanced by construction: every shard holds
-            // its m/S slice of the count outputs.
-            for (s, st) in sharded.shards.iter().enumerate() {
-                let expect_len = (s + 1) * m / threads - s * m / threads;
-                assert_eq!(st.c_out.len(), expect_len, "shard {s} fwd");
-                assert_eq!(st.d_out.len(), expect_len, "shard {s} bwd");
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+            // Ownership is chunk-balanced by construction: every task
+            // holds exactly its chunk's slice of the count outputs.
+            let n_tasks = adaptive_chunks(threads).clamp(1, m);
+            for (t, st) in sharded.states.iter().take(n_tasks).enumerate() {
+                let expect_len = (t + 1) * m / n_tasks - t * m / n_tasks;
+                assert_eq!(st.c_out.len(), expect_len, "task {t} fwd");
+                assert_eq!(st.d_out.len(), expect_len, "task {t} bwd");
             }
         }
     }
 
     #[test]
-    fn nan_labels_are_incomparable_and_shard_count_invariant() {
+    fn nan_labels_are_incomparable_and_plan_invariant() {
         // A NaN label must neither panic nor break bit-identity: it is
         // never inserted into a counting tree and counts zero as a
         // query, on the serial and every sharded path alike.
@@ -752,8 +785,8 @@ mod tests {
         for threads in [1usize, 2, 8] {
             let mut sharded = ShardedTreeOracle::new(threads, None, &y);
             let got = sharded.eval(&p, &y, 100.0);
-            assert_eq!(got.coeffs, expect.coeffs, "{threads} shards");
-            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} shards");
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} threads");
         }
     }
 
@@ -801,24 +834,33 @@ mod tests {
     }
 
     #[test]
-    fn split_groups_balances_and_covers() {
-        // 5 groups of sizes 50/10/40/5/95 over 200 examples, via a qid
-        // vector with contiguous runs.
-        let mut qid = Vec::new();
-        for (g, len) in [(0u64, 50usize), (1, 10), (2, 40), (3, 5), (4, 95)] {
-            qid.extend(std::iter::repeat(g).take(len));
-        }
-        let y: Vec<f64> = (0..200).map(|i| (i % 3) as f64).collect();
-        let index = GroupIndex::build(&qid, &y);
-        for s in 1..=7 {
-            let ranges = split_groups(&index, s);
-            assert_eq!(ranges.len(), s);
-            let mut lo = 0;
-            for &(a, b) in &ranges {
-                assert_eq!(a, lo);
-                lo = b;
-            }
-            assert_eq!(lo, index.n_groups());
+    fn run_target_cannot_change_a_result_bit() {
+        // The task-granularity knob trades balance against scheduling
+        // overhead only: coarse (one task per worker, the PR 1–3 plan),
+        // default, and absurdly fine plans all match the serial oracle
+        // bit-for-bit, in both modes.
+        let mut rng = Rng::new(9008);
+        let m = 240;
+        let qid: Vec<u64> = (0..m).map(|_| rng.below(20) as u64).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(5) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let n = count_comparable_pairs(&y) as f64;
+        let mut reference = TreeOracle::new();
+        let expect_global = reference.eval(&p, &y, n);
+        let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        let expect_grouped = serial.eval(&p, &y, serial.total_pairs());
+        let pool = Arc::new(WorkerPool::new(4));
+        for target in [1usize, 4, 7, 64, 500] {
+            let mut global =
+                ShardedTreeOracle::with_run_target(Arc::clone(&pool), None, &y, target);
+            let got = global.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect_global.coeffs, "global, target {target}");
+            assert_eq!(got.loss.to_bits(), expect_global.loss.to_bits());
+            let mut grouped =
+                ShardedTreeOracle::with_run_target(Arc::clone(&pool), Some(&qid), &y, target);
+            let got = grouped.eval(&p, &y, 0.0);
+            assert_eq!(got.coeffs, expect_grouped.coeffs, "grouped, target {target}");
+            assert_eq!(got.loss.to_bits(), expect_grouped.loss.to_bits());
         }
     }
 

@@ -44,7 +44,9 @@ USAGE:
   checksum/structure scan — no full-file read at open; for out-of-core
   data you trust.
 
-  synthetic kinds K: cadata | reuters | reuters-small | ordinal | queries"
+  synthetic kinds K: cadata | reuters | reuters-small | ordinal | queries
+                     | zipf-queries (Zipf(--zipf-a, default 1.1) group sizes
+                       over --groups groups — the skewed-shard fixture)"
     );
     std::process::exit(2);
 }
@@ -63,6 +65,17 @@ fn load_dataset(args: &Args) -> Result<LoadedDataset> {
         Some("queries") => {
             let per = args.usize_or("per-query", 20)?;
             synthetic::queries(m.div_ceil(per), per, args.usize_or("features", 10)?, seed)
+        }
+        Some("zipf-queries") => {
+            // Zipf-skewed group sizes (the work-stealing scheduler's
+            // adversarial fixture): one giant group, a long singleton
+            // tail.
+            let groups = args.usize_or("groups", m.div_ceil(8).max(1))?;
+            let a = args.f64_or("zipf-a", 1.1)?;
+            if a.is_nan() || a <= 0.0 {
+                bail!("bad --zipf-a {a}: the Zipf exponent must be > 0");
+            }
+            synthetic::zipf_queries(m, groups, args.usize_or("features", 10)?, a, seed)
         }
         Some(k) => bail!("unknown synthetic kind {k:?}"),
         None => bail!("need --data or --synthetic"),

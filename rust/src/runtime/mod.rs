@@ -5,7 +5,11 @@
 //! [`pool::WorkerPool`] is created once per trainer (sized by
 //! `TrainConfig.n_threads`) and shared by the sharded oracle, the
 //! parallel compute backend, and the parallel argsort — replacing the
-//! per-call `std::thread::scope` spawns of PR 1.
+//! per-call `std::thread::scope` spawns of PR 1. Since PR 4 it is a
+//! work-stealing scheduler (deque per worker, LIFO local pop,
+//! seeded randomized-victim stealing), and [`plan::WorkPlan`] packs
+//! skewed per-item weights (query-group sizes) into the bounded-weight
+//! task runs the scheduler balances.
 //!
 //! `python/compile/aot.py` lowers the JAX/Pallas compute graphs (L1/L2)
 //! once, at build time, to **HLO text** under `artifacts/` together with
@@ -23,9 +27,11 @@
 //! don't need a device runtime).
 
 mod manifest;
+pub mod plan;
 pub mod pool;
 
 pub use manifest::{Manifest, ManifestEntry};
+pub use plan::WorkPlan;
 pub use pool::{Task, WorkerPool};
 
 #[cfg(feature = "xla")]

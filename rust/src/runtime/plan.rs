@@ -1,0 +1,156 @@
+//! Deterministic work plans for the stealing scheduler.
+//!
+//! The work-stealing [`super::pool::WorkerPool`] balances *tasks*, so
+//! the quality of balance is set by how finely a parallel region is cut
+//! into tasks. For the grouped oracle the natural unit is the query
+//! group — but real grouped data is Zipf-skewed: a handful of giant
+//! groups next to thousands of singletons. One task per group would
+//! drown the scheduler in thousands of near-empty tasks; one task per
+//! *shard* (the PR 1–3 plan) serializes the batch behind the giant
+//! group's owner. [`WorkPlan`] is the middle ground: pack consecutive
+//! items into **bounded-weight runs** — tiny items coalesce until a run
+//! reaches the weight budget, oversized items become singleton runs,
+//! and **nothing is ever split**, so a run boundary is always an item
+//! boundary (a query group never straddles two tasks, which the grouped
+//! reduction's bit-identity argument relies on).
+//!
+//! The plan is a pure function of the item weights and the target run
+//! count — never of thread scheduling — so the task decomposition is
+//! reproducible, and because each run's results are reduced serially in
+//! run (= item) order, the run count itself cannot influence a result
+//! bit either. `tests/scheduler.rs` pins both properties.
+
+/// A partition of `n_items` consecutive items into contiguous runs of
+/// bounded total weight. Built once per trainer (group sizes are fixed
+/// by the dataset); consumed as one pool task per run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkPlan {
+    /// Half-open `[lo, hi)` item ranges, ascending and exactly covering
+    /// `0..n_items`.
+    runs: Vec<(usize, usize)>,
+}
+
+impl WorkPlan {
+    /// Pack `n_items` items into at most ~`target_runs` runs (more only
+    /// when oversized items force extra singleton runs): the weight
+    /// budget per run is `ceil(total_weight / target_runs)`, a greedy
+    /// scan closes a run when adding the next item would exceed it, and
+    /// every run keeps at least one item. Zero-weight items coalesce
+    /// into their neighbours.
+    pub fn pack(n_items: usize, target_runs: usize, weight: impl Fn(usize) -> usize) -> WorkPlan {
+        if n_items == 0 {
+            return WorkPlan { runs: Vec::new() };
+        }
+        let target = target_runs.max(1);
+        let total: usize = (0..n_items).map(&weight).sum();
+        let budget = total.div_ceil(target).max(1);
+        let mut runs = Vec::with_capacity(target.min(n_items) + 1);
+        let mut lo = 0usize;
+        let mut acc = 0usize;
+        for i in 0..n_items {
+            let w = weight(i);
+            if i > lo && acc + w > budget {
+                runs.push((lo, i));
+                lo = i;
+                acc = 0;
+            }
+            acc += w;
+        }
+        runs.push((lo, n_items));
+        WorkPlan { runs }
+    }
+
+    /// The `[lo, hi)` item ranges, in item order.
+    pub fn runs(&self) -> &[(usize, usize)] {
+        &self.runs
+    }
+
+    /// Number of runs (= pool tasks this plan submits).
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_cover(plan: &WorkPlan, n_items: usize) {
+        let mut expect_lo = 0;
+        for &(lo, hi) in plan.runs() {
+            assert_eq!(lo, expect_lo, "runs must be contiguous");
+            assert!(hi > lo, "runs must be non-empty");
+            expect_lo = hi;
+        }
+        assert_eq!(expect_lo, n_items, "runs must cover all items");
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(WorkPlan::pack(0, 8, |_| 1).is_empty());
+        let p = WorkPlan::pack(1, 8, |_| 100);
+        assert_eq!(p.runs(), &[(0, 1)]);
+    }
+
+    #[test]
+    fn uniform_items_land_near_the_target() {
+        let p = WorkPlan::pack(1000, 8, |_| 1);
+        check_cover(&p, 1000);
+        assert_eq!(p.n_runs(), 8);
+        for &(lo, hi) in p.runs() {
+            assert!(hi - lo <= 125, "run [{lo},{hi}) exceeds the budget");
+        }
+    }
+
+    #[test]
+    fn giant_item_is_isolated_not_split() {
+        // 200 singletons, one weight-1000 giant, 200 more singletons,
+        // target 8: budget = ceil(1400/8) = 175 — the giant exceeds it
+        // alone, so it must sit in a run of exactly one item.
+        let weight = |i: usize| if i == 200 { 1000 } else { 1 };
+        let p = WorkPlan::pack(401, 8, weight);
+        check_cover(&p, 401);
+        let giant = p.runs().iter().find(|&&(lo, hi)| (lo..hi).contains(&200)).unwrap();
+        assert_eq!(*giant, (200, 201), "giant item must be a singleton run");
+        // The singletons around it still coalesce (no one-task-per-item
+        // explosion).
+        assert!(p.n_runs() <= 10, "{} runs for 401 items", p.n_runs());
+    }
+
+    #[test]
+    fn zero_weight_items_coalesce() {
+        let p = WorkPlan::pack(500, 4, |_| 0);
+        check_cover(&p, 500);
+        assert_eq!(p.n_runs(), 1, "all-zero weights must form one run");
+    }
+
+    #[test]
+    fn target_one_is_one_run() {
+        let p = WorkPlan::pack(57, 1, |i| i);
+        check_cover(&p, 57);
+        assert_eq!(p.n_runs(), 1);
+    }
+
+    #[test]
+    fn plan_is_deterministic_in_inputs_only() {
+        let w = |i: usize| (i * 7919) % 23;
+        let a = WorkPlan::pack(777, 16, w);
+        let b = WorkPlan::pack(777, 16, w);
+        assert_eq!(a, b);
+        check_cover(&a, 777);
+    }
+
+    #[test]
+    fn run_count_stays_bounded_under_adversarial_weights() {
+        // Alternating giant/tiny weights: every giant forces a cut, but
+        // the run count stays O(target + giants), never O(items).
+        let w = |i: usize| if i % 50 == 0 { 10_000 } else { 1 };
+        let p = WorkPlan::pack(1000, 8, w);
+        check_cover(&p, 1000);
+        assert!(p.n_runs() <= 42, "{} runs", p.n_runs());
+    }
+}

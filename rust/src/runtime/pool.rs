@@ -1,32 +1,56 @@
-//! Persistent scoped worker pool.
+//! Persistent work-stealing worker pool.
 //!
 //! PR 1 parallelized the subgradient oracle and the `O(ms)` matvecs with
-//! `std::thread::scope`, which respawns every worker on every call. The
-//! spawn cost is only microseconds, but a BMRM run makes `3 × iterations`
-//! parallel calls (scores, oracle, gradient), and the respawn tax scales
-//! with the iteration count rather than the data — exactly the overhead
-//! the ROADMAP shard-architecture item schedules for removal. This module
-//! replaces the per-call scopes with **one pool per trainer**: `N − 1`
-//! background threads created once (sized by `TrainConfig.n_threads`) and
-//! reused by every parallel region until the pool is dropped.
+//! `std::thread::scope`, which respawns every worker on every call; PR 2
+//! replaced the per-call scopes with one persistent pool per trainer —
+//! `N − 1` background threads created once (sized by
+//! `TrainConfig.n_threads`) and reused by every parallel region until
+//! the pool is dropped. That pool fed all workers from a single locked
+//! `VecDeque`, which balances *queued* tasks but not *running* ones: a
+//! batch of exactly `N` coarse tasks (one shard per worker, the PR 1–3
+//! plan) is pinned to its initial assignment, so one oversized task — a
+//! giant query group under Zipf-like group-size skew — serializes the
+//! whole batch while the other workers idle.
+//!
+//! This revision makes the pool a **work-stealing scheduler**: one deque
+//! per worker, tasks dealt as contiguous blocks at batch submit, each
+//! worker popping its own deque LIFO (newest first — the block tail it
+//! just received, still cache-warm) and, when empty, stealing FIFO from
+//! a victim chosen by a seeded per-worker generator (oldest task — the
+//! one its owner would reach last). Call sites now submit *more tasks
+//! than workers* (per query-group run, per sorted-order chunk — see
+//! [`super::plan::WorkPlan`] and `losses/sharded.rs`), so a worker that
+//! finishes early drains the stragglers' queues instead of idling.
+//!
+//! **Scheduling-order freedom.** Stealing makes the execution order and
+//! the task→thread assignment nondeterministic, but no result bit can
+//! depend on either, by construction at every call site: each task
+//! writes a disjoint slot (its own count/coefficient/output range) and
+//! every floating-point reduction runs serially afterwards, in an order
+//! fixed by the task *index*, not by completion time (see
+//! `losses/sharded.rs` and `compute::ParallelBackend`). *Which* worker
+//! runs a task — locally or stolen — therefore never touches a result
+//! bit; the skew/determinism battery in `tests/scheduler.rs` pins this.
 //!
 //! The API is scope-shaped: [`WorkerPool::run`] takes a batch of
 //! closures that may borrow caller stack data (`'env`), executes them on
 //! the pool plus the calling thread, and returns only once every closure
 //! has finished — the same lifetime guarantee `std::thread::scope`
-//! provides, with the threads themselves outliving the call. Determinism
-//! is unaffected by scheduling: every call site hands the pool closures
-//! whose writes target disjoint buffers and performs its floating-point
-//! reductions serially afterwards (see `losses/sharded.rs` and
-//! `compute::ParallelBackend`), so *which* thread runs a task never
-//! influences a result bit.
+//! provides, with the threads themselves outliving the call.
 //!
 //! With one worker (`n_threads == 1`) the pool spawns no threads at all
 //! and `run` degenerates to an in-place loop, keeping the serial path
-//! free of synchronization.
+//! free of synchronization; empty and singleton batches always take the
+//! inline path.
+//!
+//! Per-batch executed/stolen counters live behind the `pool-stats` cargo
+//! feature (see [`PoolStats`]): the skew benchmark uses them to show the
+//! stealing actually engages on imbalanced plans, while default builds
+//! pay nothing for them.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -37,47 +61,156 @@ pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
 
 type StaticTask = Box<dyn FnOnce() + Send + 'static>;
 
-struct PoolState {
-    queue: VecDeque<StaticTask>,
-    /// Tasks popped from the queue but not yet finished.
-    active: usize,
-    /// Tasks of the current batch that panicked (the payload is dropped;
-    /// the batch submitter re-raises a summary panic).
-    panicked: usize,
+/// Cumulative scheduler counters (`pool-stats` builds only). `executed`
+/// counts tasks that went through the scheduler (inline fast-path tasks
+/// are tallied separately), `stolen` the subset a worker took from
+/// another worker's deque — the balance evidence the skew bench prints.
+#[cfg(feature = "pool-stats")]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Batches dispatched through the deques (inline batches excluded).
+    pub batches: u64,
+    /// Tasks executed by the scheduler (local pops + steals).
+    pub executed: u64,
+    /// Tasks a worker stole from another worker's deque.
+    pub stolen: u64,
+    /// Tasks run on the submitting thread's inline fast path.
+    pub inline_tasks: u64,
+}
+
+#[cfg(feature = "pool-stats")]
+#[derive(Default)]
+struct StatCounters {
+    batches: std::sync::atomic::AtomicU64,
+    executed: std::sync::atomic::AtomicU64,
+    stolen: std::sync::atomic::AtomicU64,
+    inline_tasks: std::sync::atomic::AtomicU64,
+}
+
+/// Batch control state guarded by one mutex: workers sleep on it between
+/// batches, the submitter sleeps on it while stragglers finish.
+struct Ctrl {
+    /// Bumped once per dispatched batch; workers wake when it changes.
+    epoch: u64,
     shutdown: bool,
 }
 
 struct PoolShared {
-    state: Mutex<PoolState>,
-    /// Workers wait here for tasks.
+    /// One deque per worker; slot 0 belongs to the batch submitter.
+    /// Local pops take the back (LIFO), steals take the front (FIFO).
+    deques: Vec<Mutex<VecDeque<StaticTask>>>,
+    ctrl: Mutex<Ctrl>,
+    /// Workers wait here for the next batch epoch.
     work_cv: Condvar,
     /// The batch submitter waits here for the last task to finish.
     done_cv: Condvar,
+    /// Tasks of the current batch not yet finished (queued or running).
+    pending: AtomicUsize,
+    /// Tasks of the current batch that panicked (payload dropped; the
+    /// submitter re-raises a summary panic).
+    panicked: AtomicUsize,
     /// Serializes whole batches: concurrent `run` calls from different
     /// threads queue up here instead of interleaving their tasks (and
-    /// their panic accounting) in the shared queue.
+    /// their panic accounting) in the deques.
     batch: Mutex<()>,
+    #[cfg(feature = "pool-stats")]
+    stats: StatCounters,
 }
 
 impl PoolShared {
     /// Execute one task, keeping the completion accounting correct even
-    /// when the task panics.
-    fn run_task(&self, task: StaticTask) {
-        let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
-        let mut st = self.state.lock().unwrap();
-        st.active -= 1;
-        if !ok {
-            st.panicked += 1;
+    /// when the task panics. `stolen` feeds the `pool-stats` counters.
+    fn run_task(&self, task: StaticTask, stolen: bool) {
+        let _ = stolen;
+        #[cfg(feature = "pool-stats")]
+        {
+            self.stats.executed.fetch_add(1, Ordering::Relaxed);
+            if stolen {
+                self.stats.stolen.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        if st.active == 0 && st.queue.is_empty() {
+        let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+        if !ok {
+            self.panicked.fetch_add(1, Ordering::SeqCst);
+        }
+        // SeqCst RMW: the submitter's acquire load of 0 synchronizes
+        // with every decrement in the release sequence, so all task
+        // writes are visible once `run` observes the batch drained.
+        if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Take the lock before notifying so the submitter cannot
+            // check `pending` and sleep between our decrement and
+            // notification (the classic lost-wakeup interleaving).
+            drop(self.ctrl.lock().unwrap());
             self.done_cv.notify_all();
+        }
+    }
+
+    /// Run batch tasks until a full sweep finds no queued work: pop the
+    /// own deque LIFO, then try stealing FIFO from victims starting at a
+    /// seeded random offset. Tasks are only *removed* during a batch, so
+    /// an empty sweep proves no queued task remains (running tasks are
+    /// the submitter's `pending` wait, not ours).
+    fn drain(&self, me: usize, rng: &mut StealRng) {
+        let n = self.deques.len();
+        'work: loop {
+            // Bind the pop before the `if let`: an if-let scrutinee's
+            // temporaries (the MutexGuard) live to the end of the body
+            // in edition 2021, which would hold our own deque's lock
+            // across the task and block every thief on it.
+            let task = self.deques[me].lock().unwrap().pop_back();
+            if let Some(task) = task {
+                self.run_task(task, false);
+                continue;
+            }
+            let start = rng.below(n);
+            for k in 0..n {
+                let victim = (start + k) % n;
+                if victim == me {
+                    continue;
+                }
+                let task = self.deques[victim].lock().unwrap().pop_front();
+                if let Some(task) = task {
+                    self.run_task(task, true);
+                    continue 'work;
+                }
+            }
+            return;
         }
     }
 }
 
+/// Small seeded generator for victim selection (splitmix64 core — the
+/// same mixer `util::rng` uses to seed xoshiro). Each worker owns one,
+/// seeded from its index, so victim order is reproducible run-to-run
+/// even though it deliberately never influences a result bit.
+struct StealRng(u64);
+
+impl StealRng {
+    fn new(worker: usize) -> Self {
+        // Run the worker id through the mixer once: a linear seed
+        // (id × constant) would put every worker on one phase-shifted
+        // orbit — identical victim sequences, one step apart — making
+        // simultaneously-idle workers contend on the same victim locks.
+        let mut z = (worker as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        StealRng(z ^ (z >> 31))
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (((z as u128) * (n as u128)) >> 64) as usize
+    }
+}
+
 /// A persistent pool of `n_threads − 1` background workers plus the
-/// calling thread. Create once (per trainer / oracle / backend), submit
-/// many batches; threads are joined on drop.
+/// calling thread, scheduling each batch over per-worker deques with
+/// randomized-victim work stealing. Create once (per trainer / oracle /
+/// backend), submit many batches; threads are joined on drop.
 pub struct WorkerPool {
     n_threads: usize,
     shared: Arc<PoolShared>,
@@ -91,22 +224,22 @@ impl WorkerPool {
     pub fn new(n_threads: usize) -> Self {
         let n_threads = n_threads.max(1);
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState {
-                queue: VecDeque::new(),
-                active: 0,
-                panicked: 0,
-                shutdown: false,
-            }),
+            deques: (0..n_threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            ctrl: Mutex::new(Ctrl { epoch: 0, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            panicked: AtomicUsize::new(0),
             batch: Mutex::new(()),
+            #[cfg(feature = "pool-stats")]
+            stats: StatCounters::default(),
         });
         let handles = (1..n_threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("ranksvm-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -118,14 +251,39 @@ impl WorkerPool {
         self.n_threads
     }
 
+    /// Snapshot of the cumulative scheduler counters.
+    #[cfg(feature = "pool-stats")]
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.shared.stats;
+        PoolStats {
+            batches: s.batches.load(Ordering::Relaxed),
+            executed: s.executed.load(Ordering::Relaxed),
+            stolen: s.stolen.load(Ordering::Relaxed),
+            inline_tasks: s.inline_tasks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset the cumulative counters (e.g. between bench phases).
+    #[cfg(feature = "pool-stats")]
+    pub fn reset_stats(&self) {
+        let s = &self.shared.stats;
+        s.batches.store(0, Ordering::Relaxed);
+        s.executed.store(0, Ordering::Relaxed);
+        s.stolen.store(0, Ordering::Relaxed);
+        s.inline_tasks.store(0, Ordering::Relaxed);
+    }
+
     /// Execute a batch of tasks, blocking until every task has finished
     /// (or panicked). Tasks may borrow from the caller's stack: the
     /// completion barrier below guarantees no task outlives `'env`.
     ///
     /// Tasks run concurrently on the pool threads and on the calling
-    /// thread; submit tasks whose writes are disjoint. If any task
-    /// panics, the remaining tasks still run to completion and `run`
-    /// then panics (mirroring `std::thread::scope` semantics).
+    /// thread; submit tasks whose writes are disjoint. Submit *more*
+    /// tasks than workers when their costs may be uneven — the stealing
+    /// scheduler turns the surplus into balance. If any task panics, the
+    /// remaining tasks still run to completion and `run` then panics
+    /// (mirroring `std::thread::scope` semantics); the pool itself stays
+    /// reusable.
     ///
     /// Reentrant submission (calling `run` from inside a task) is not
     /// supported and may deadlock.
@@ -136,6 +294,11 @@ impl WorkerPool {
         // Inline path: single worker, or a single task — nothing to
         // schedule. (Panics propagate directly, same net effect.)
         if self.handles.is_empty() || tasks.len() == 1 {
+            #[cfg(feature = "pool-stats")]
+            self.shared
+                .stats
+                .inline_tasks
+                .fetch_add(tasks.len() as u64, Ordering::Relaxed);
             for task in tasks {
                 task();
             }
@@ -143,11 +306,11 @@ impl WorkerPool {
         }
         // SAFETY: the only use of the erased tasks is inside this call:
         // they are either executed below on this thread or drained by
-        // worker threads, and `run` does not return until the queue is
-        // empty and `active == 0` — i.e. until every task (including
-        // panicked ones, via `run_task`'s accounting) has completed.
-        // Borrows captured at `'env` therefore strictly outlive every
-        // task execution.
+        // worker threads, and `run` does not return until
+        // `pending == 0` — i.e. until every task (including panicked
+        // ones, via `run_task`'s accounting) has completed. Borrows
+        // captured at `'env` therefore strictly outlive every task
+        // execution.
         let tasks: Vec<StaticTask> = tasks
             .into_iter()
             .map(|t| unsafe { std::mem::transmute::<Task<'env>, StaticTask>(t) })
@@ -162,34 +325,55 @@ impl WorkerPool {
         // panicking caller) is safe to recover.
         let batch = self.shared.batch.lock().unwrap_or_else(|e| e.into_inner());
 
-        let mut st = self.shared.state.lock().unwrap();
+        let n_tasks = tasks.len();
+        let n_workers = self.n_threads;
         debug_assert!(
-            st.queue.is_empty() && st.active == 0,
+            self.shared.pending.load(Ordering::SeqCst) == 0,
             "WorkerPool::run is not reentrant"
         );
-        st.panicked = 0;
-        st.queue.extend(tasks);
-        drop(st);
+        self.shared.panicked.store(0, Ordering::SeqCst);
+        // Publish the task count BEFORE any task becomes reachable: a
+        // worker finishing a stale sweep may pop a freshly dealt task
+        // the instant it lands in a deque.
+        self.shared.pending.store(n_tasks, Ordering::SeqCst);
+        #[cfg(feature = "pool-stats")]
+        self.shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+
+        // Deal contiguous blocks: worker w owns tasks
+        // [w·T/N, (w+1)·T/N) — neighbouring tasks usually touch
+        // neighbouring data, so the initial assignment is cache-friendly
+        // and stealing only redistributes the imbalance.
+        {
+            let mut tasks = tasks.into_iter();
+            for (w, deque) in self.shared.deques.iter().enumerate() {
+                let lo = w * n_tasks / n_workers;
+                let hi = (w + 1) * n_tasks / n_workers;
+                if hi > lo {
+                    deque.lock().unwrap().extend(tasks.by_ref().take(hi - lo));
+                }
+            }
+            debug_assert!(tasks.next().is_none());
+        }
+
+        // Open the epoch and wake everyone.
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            ctrl.epoch = ctrl.epoch.wrapping_add(1);
+        }
         self.shared.work_cv.notify_all();
 
-        // The calling thread participates until the batch drains, then
-        // waits for stragglers running on pool threads.
-        let mut st = self.shared.state.lock().unwrap();
-        loop {
-            if let Some(task) = st.queue.pop_front() {
-                st.active += 1;
-                drop(st);
-                self.shared.run_task(task);
-                st = self.shared.state.lock().unwrap();
-            } else if st.active > 0 {
-                st = self.shared.done_cv.wait(st).unwrap();
-            } else {
-                break;
+        // The calling thread participates as worker 0 until no queued
+        // work remains, then waits for stragglers running on pool
+        // threads.
+        let mut rng = StealRng::new(0);
+        self.shared.drain(0, &mut rng);
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            while self.shared.pending.load(Ordering::SeqCst) != 0 {
+                ctrl = self.shared.done_cv.wait(ctrl).unwrap();
             }
         }
-        let panicked = st.panicked;
-        st.panicked = 0;
-        drop(st);
+        let panicked = self.shared.panicked.swap(0, Ordering::SeqCst);
         // Release the batch lock *before* re-raising so a panicked batch
         // does not poison it (the pool stays usable afterwards).
         drop(batch);
@@ -201,7 +385,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.ctrl.lock().unwrap().shutdown = true;
         self.shared.work_cv.notify_all();
         for handle in self.handles.drain(..) {
             let _ = handle.join();
@@ -209,22 +393,27 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &PoolShared, me: usize) {
+    let mut rng = StealRng::new(me);
+    let mut seen_epoch = 0u64;
     loop {
-        let task = {
-            let mut st = shared.state.lock().unwrap();
+        {
+            let mut ctrl = shared.ctrl.lock().unwrap();
             loop {
-                if let Some(task) = st.queue.pop_front() {
-                    st.active += 1;
-                    break task;
-                }
-                if st.shutdown {
+                if ctrl.shutdown {
                     return;
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                if ctrl.epoch != seen_epoch {
+                    seen_epoch = ctrl.epoch;
+                    break;
+                }
+                ctrl = shared.work_cv.wait(ctrl).unwrap();
             }
-        };
-        shared.run_task(task);
+        }
+        shared.drain(me, &mut rng);
+        // A drained sweep can race the next batch's deal: harmless — the
+        // tasks it grabs belong to the already-published `pending`, and
+        // the epoch check above re-runs the sweep after the wakeup.
     }
 }
 
@@ -278,6 +467,37 @@ mod tests {
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
     }
 
+    /// Force a steal structurally: the caller's first LIFO pop (the
+    /// *back* of its dealt block) blocks until the *front* of that same
+    /// block has executed — which can only happen on another worker,
+    /// via a steal. A broken scheduler times out instead of passing.
+    #[test]
+    fn blocked_owner_tasks_are_stolen_by_idle_workers() {
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(4);
+        let stealable_ran = AtomicBool::new(false);
+        let mut tasks: Vec<Task> = Vec::new();
+        // Dealt to worker 0 (the caller): block [0, 2). Caller pops the
+        // back first, so the spinner runs on the caller while the
+        // stealable task sits at the deque front.
+        tasks.push(boxed(|| {
+            stealable_ran.store(true, Ordering::SeqCst);
+        }));
+        tasks.push(boxed(|| {
+            let t0 = std::time::Instant::now();
+            while !stealable_ran.load(Ordering::SeqCst) {
+                assert!(t0.elapsed().as_secs() < 10, "steal never happened");
+                std::hint::spin_loop();
+            }
+        }));
+        // Trivial filler for workers 1–3's blocks.
+        for _ in 0..6 {
+            tasks.push(boxed(|| {}));
+        }
+        pool.run(tasks);
+        assert!(stealable_ran.load(Ordering::SeqCst));
+    }
+
     #[test]
     fn single_thread_pool_spawns_nothing_and_runs_inline() {
         let pool = WorkerPool::new(1);
@@ -302,6 +522,18 @@ mod tests {
     fn empty_batch_is_a_noop() {
         let pool = WorkerPool::new(4);
         pool.run(Vec::new());
+    }
+
+    #[test]
+    fn singleton_batch_runs_on_the_calling_thread() {
+        let pool = WorkerPool::new(4);
+        let tid = std::thread::current().id();
+        let mut seen = None;
+        {
+            let seen_ref = &mut seen;
+            pool.run(vec![boxed(move || *seen_ref = Some(std::thread::current().id()))]);
+        }
+        assert_eq!(seen, Some(tid));
     }
 
     #[test]
@@ -356,5 +588,40 @@ mod tests {
         );
         assert_eq!(counter.load(Ordering::Relaxed), 32);
         drop(pool); // must not hang
+    }
+
+    #[cfg(feature = "pool-stats")]
+    #[test]
+    fn stats_count_batches_and_engage_stealing_on_skew() {
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(4);
+        pool.reset_stats();
+        // Inline paths are tallied separately.
+        pool.run(vec![boxed(|| {})]);
+        assert_eq!(pool.stats().inline_tasks, 1);
+        assert_eq!(pool.stats().batches, 0);
+        // Same forced-steal construction as
+        // `blocked_owner_tasks_are_stolen_by_idle_workers`: the caller
+        // blocks on its block's back until the front has been stolen.
+        let stealable_ran = AtomicBool::new(false);
+        let mut tasks: Vec<Task> = Vec::new();
+        tasks.push(boxed(|| {
+            stealable_ran.store(true, Ordering::SeqCst);
+        }));
+        tasks.push(boxed(|| {
+            let t0 = std::time::Instant::now();
+            while !stealable_ran.load(Ordering::SeqCst) {
+                assert!(t0.elapsed().as_secs() < 10, "steal never happened");
+                std::hint::spin_loop();
+            }
+        }));
+        for _ in 0..6 {
+            tasks.push(boxed(|| {}));
+        }
+        pool.run(tasks);
+        let s = pool.stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.executed, 8);
+        assert!(s.stolen > 0, "no steals on a blocked-owner batch: {s:?}");
     }
 }

@@ -151,6 +151,141 @@ fn degenerate_margin_case_exact_at_all_thread_counts() {
     }
 }
 
+// ---------- work-stealing scheduler regressions (PR 4) ----------
+
+/// A panic inside a *stolen* task must poison exactly the batch it
+/// belongs to — `run` re-raises once — and leave the pool fully
+/// reusable. The steal is forced structurally: the submitting thread
+/// spins on its block's LIFO end until the block's FIFO end (the
+/// panicking task) has been taken by another worker.
+#[test]
+fn stolen_task_panic_poisons_exactly_one_batch() {
+    use ranksvm::runtime::Task;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    let pool = WorkerPool::new(4);
+    let survivors = AtomicUsize::new(0);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let taken = AtomicBool::new(false);
+        let mut tasks: Vec<Task> = Vec::new();
+        // Front of the caller's block: stolen by an idle worker, flags
+        // the spinner, then panics.
+        tasks.push(Box::new(|| {
+            taken.store(true, Ordering::SeqCst);
+            panic!("stolen task boom");
+        }));
+        // Back of the caller's block: runs first on the caller, pinning
+        // it until the panicking task has been stolen.
+        tasks.push(Box::new(|| {
+            let t0 = std::time::Instant::now();
+            while !taken.load(Ordering::SeqCst) {
+                assert!(t0.elapsed().as_secs() < 10, "steal never happened");
+                std::hint::spin_loop();
+            }
+        }));
+        for _ in 0..6 {
+            let survivors = &survivors;
+            tasks.push(Box::new(move || {
+                survivors.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.run(tasks);
+    }));
+    assert!(result.is_err(), "the stolen panic must re-raise from run()");
+    // Every other task of the poisoned batch still ran (scope
+    // semantics: the barrier holds even through a panic).
+    assert_eq!(survivors.load(Ordering::Relaxed), 6);
+    // ...and the pool is not poisoned: later batches behave normally.
+    for round in 0..3 {
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Task> = (0..12)
+            .map(|_| {
+                let counter = &counter;
+                Box::new(move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 12, "round {round}");
+    }
+}
+
+/// Empty and singleton batches take the inline fast path: nothing is
+/// scheduled, the singleton runs on the submitting thread even when
+/// idle workers exist.
+#[test]
+fn empty_and_singleton_batches_run_inline_on_the_caller() {
+    use ranksvm::runtime::Task;
+    let pool = WorkerPool::new(8);
+    pool.run(Vec::new()); // no-op, must not hang or panic
+    let caller = std::thread::current().id();
+    for _ in 0..50 {
+        let mut ran_on = None;
+        {
+            let slot = &mut ran_on;
+            let task: Task = Box::new(move || *slot = Some(std::thread::current().id()));
+            pool.run(vec![task]);
+        }
+        assert_eq!(ran_on, Some(caller), "singleton escaped the inline path");
+    }
+}
+
+/// `n_threads == 1` spawns no workers: every task of every batch runs
+/// on the calling thread, in submission order.
+#[test]
+fn single_thread_pool_runs_all_tasks_on_the_caller_in_order() {
+    use ranksvm::runtime::Task;
+    let pool = WorkerPool::new(1);
+    assert_eq!(pool.n_threads(), 1);
+    let caller = std::thread::current().id();
+    let mut log: Vec<(usize, std::thread::ThreadId)> = Vec::new();
+    {
+        let log_cell = std::sync::Mutex::new(&mut log);
+        let tasks: Vec<Task> = (0..32)
+            .map(|i| {
+                let log_cell = &log_cell;
+                Box::new(move || {
+                    log_cell.lock().unwrap().push((i, std::thread::current().id()));
+                }) as Task
+            })
+            .collect();
+        pool.run(tasks);
+    }
+    assert_eq!(log.len(), 32);
+    for (k, &(i, tid)) in log.iter().enumerate() {
+        assert_eq!(i, k, "inline execution must preserve submission order");
+        assert_eq!(tid, caller, "task {i} ran off-thread on a 1-thread pool");
+    }
+}
+
+/// The sharded oracle under the stealing scheduler: a giant query group
+/// next to thousands of singletons (the skew shape the scheduler
+/// exists for), repeatedly evaluated on one pool, stays bit-identical
+/// to the serial grouped oracle. Overlaps tests/scheduler.rs on
+/// purpose — this is the pool-suite-local canary.
+#[test]
+fn skewed_grouped_eval_on_shared_pool_matches_serial() {
+    use ranksvm::losses::QueryGrouped;
+    let mut rng = Rng::new(1601);
+    let giant = 800usize;
+    let singles = 1500usize;
+    let m = giant + singles;
+    let mut qid = vec![0u64; giant];
+    qid.extend((1..=singles).map(|g| g as u64));
+    let y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+    let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+    let pool = Arc::new(WorkerPool::new(8));
+    let mut sharded = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y);
+    for round in 0..4 {
+        let p: Vec<f64> = (0..m).map(|_| rng.normal() * (round + 1) as f64).collect();
+        let expect = serial.eval(&p, &y, serial.total_pairs());
+        let got = sharded.eval(&p, &y, 0.0);
+        assert_eq!(got.coeffs, expect.coeffs, "round {round}");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "round {round}");
+    }
+}
+
 // ---------- NaN-ordering regressions (total_cmp satellite) ----------
 
 #[test]

@@ -217,6 +217,111 @@ fn prop_sharded_equals_tree_bitwise() {
     });
 }
 
+/// Property: skewed query-group distributions — Zipf-sampled sizes,
+/// occasional giant-group head, interleaved qids — evaluate
+/// bit-identically across thread counts *and* task-granularity plans,
+/// in grouped and global modes alike. This is the scheduler-facing
+/// generalization of `prop_sharded_equals_tree_bitwise`: the work plan
+/// (how groups pack into runs, how the sorted order chunks) is part of
+/// the randomized input.
+#[test]
+fn prop_skewed_groups_thread_and_plan_invariant() {
+    use ranksvm::losses::{QueryGrouped, ShardedTreeOracle};
+    use ranksvm::runtime::WorkerPool;
+    use std::sync::Arc;
+    for_cases(25, |rng| {
+        // Skew in both group count and group sizes.
+        let n_groups = 1 + rng.below(50);
+        let mut qid: Vec<u64> = Vec::new();
+        for g in 0..n_groups {
+            let mut sz = 1 + rng.zipf(40, 1.2);
+            if g == 0 && rng.bool(0.5) {
+                sz += 40 + rng.below(120); // giant head
+            }
+            qid.extend(std::iter::repeat(g as u64).take(sz));
+        }
+        rng.shuffle(&mut qid);
+        let m = qid.len();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(5) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| (rng.below(40) as f64) / 7.0 - 3.0).collect();
+        let n = count_comparable_pairs(&y) as f64;
+
+        let mut serial_grouped = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        let expect_grouped = serial_grouped.eval(&p, &y, serial_grouped.total_pairs());
+        let mut serial_global = TreeOracle::new();
+        let expect_global = serial_global.eval(&p, &y, n);
+
+        let threads = 1 + rng.below(9);
+        let pool = Arc::new(WorkerPool::new(threads));
+        let target = 1 + rng.below(100);
+        for use_target in [false, true] {
+            let (mut grouped, mut global) = if use_target {
+                (
+                    ShardedTreeOracle::with_run_target(Arc::clone(&pool), Some(&qid), &y, target),
+                    ShardedTreeOracle::with_run_target(Arc::clone(&pool), None, &y, target),
+                )
+            } else {
+                (
+                    ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y),
+                    ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &y),
+                )
+            };
+            let got = grouped.eval(&p, &y, 0.0);
+            assert_eq!(
+                got.coeffs, expect_grouped.coeffs,
+                "grouped: {threads} threads, target {target} ({use_target})"
+            );
+            assert_eq!(got.loss.to_bits(), expect_grouped.loss.to_bits());
+            let got = global.eval(&p, &y, n);
+            assert_eq!(
+                got.coeffs, expect_global.coeffs,
+                "global: {threads} threads, target {target} ({use_target})"
+            );
+            assert_eq!(got.loss.to_bits(), expect_global.loss.to_bits());
+        }
+    });
+}
+
+/// Property: whole trained models — weights, objective, iteration count
+/// — are thread-count-invariant on randomized skewed fixtures (the
+/// task plan follows the thread count, so this also randomizes the
+/// plan). Few cases: each runs two full BMRM trainings.
+#[test]
+fn prop_training_thread_invariant_on_skewed_fixtures() {
+    use ranksvm::coordinator::{train, Method, TrainConfig};
+    use ranksvm::data::synthetic;
+    for_cases(5, |rng| {
+        let seed = rng.next_u64();
+        let grouped = rng.bool(0.5);
+        let ds = if grouped {
+            let n_groups = 20 + rng.below(60);
+            synthetic::zipf_queries(n_groups * 5 + rng.below(100), n_groups, 6, 1.1, seed)
+        } else {
+            synthetic::cadata_like(150 + rng.below(250), seed)
+        };
+        let threads_b = 2 + rng.below(7);
+        let mut reference: Option<(Vec<f64>, u64, usize)> = None;
+        for threads in [1usize, threads_b] {
+            let cfg = TrainConfig {
+                method: Method::Tree,
+                lambda: 0.1,
+                epsilon: 1e-3,
+                n_threads: threads,
+                ..Default::default()
+            };
+            let out = train(&ds, &cfg).unwrap();
+            match &reference {
+                None => reference = Some((out.model.w, out.objective.to_bits(), out.iterations)),
+                Some((w, obj, iters)) => {
+                    assert_eq!(&out.model.w, w, "{} threads vs 1", threads);
+                    assert_eq!(out.objective.to_bits(), *obj);
+                    assert_eq!(out.iterations, *iters);
+                }
+            }
+        }
+    });
+}
+
 /// Property: subgradient validity — for random w, w', the first-order
 /// lower bound R(w') ≥ R(w) + ⟨w' − w, ∇R(w)⟩ holds (convexity + correct
 /// subgradient), exercised through score space with X = I.

@@ -1,0 +1,204 @@
+//! Work-stealing scheduler lockdown: adversarial group-size skew.
+//!
+//! The stealing pool and the fine-grained task plans exist to fix the
+//! wall-clock of skewed batches — but the repo's core contract is that
+//! no scheduling decision may touch a result bit. This battery throws
+//! the worst skew shapes at the sharded oracle (one giant query group
+//! next to thousands of singletons, Zipf-sampled group sizes, tied-score
+//! clusters in global mode) and requires bitwise identity with the
+//! serial oracles: across thread counts, across task-granularity plans,
+//! and across repeated evaluations on one long-lived pool — i.e. under
+//! maximally different stealing histories.
+
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::synthetic;
+use ranksvm::losses::{
+    count_comparable_pairs, QueryGrouped, RankingOracle, ShardedTreeOracle, TreeOracle,
+};
+use ranksvm::runtime::WorkerPool;
+use ranksvm::util::rng::Rng;
+use std::sync::Arc;
+
+/// One giant group (~40% of the mass) plus thousands of singletons —
+/// the shape that serialized the coarse one-task-per-worker plan.
+fn giant_plus_singletons(rng: &mut Rng, giant: usize, singletons: usize) -> (Vec<u64>, Vec<f64>) {
+    let m = giant + singletons;
+    let mut qid = Vec::with_capacity(m);
+    qid.extend(std::iter::repeat(0u64).take(giant));
+    qid.extend((1..=singletons).map(|g| g as u64));
+    let y: Vec<f64> = (0..m).map(|_| rng.below(5) as f64).collect();
+    (qid, y)
+}
+
+#[test]
+fn giant_group_plus_singletons_bitwise_across_threads_and_rounds() {
+    let mut rng = Rng::new(0x5CED_0001);
+    let (qid, y) = giant_plus_singletons(&mut rng, 1200, 2000);
+    let m = y.len();
+    let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+    for threads in [1usize, 2, 3, 8] {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let mut sharded = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y);
+        // Repeated evaluations on one pool with evolving scores: every
+        // round reuses worker state under a fresh stealing history.
+        let mut round_rng = Rng::new(0x5CED_0002);
+        for round in 0..3 {
+            let p: Vec<f64> = (0..m).map(|_| round_rng.normal() * (round + 1) as f64).collect();
+            let expect = serial.eval(&p, &y, serial.total_pairs());
+            let got = sharded.eval(&p, &y, 0.0);
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} threads, round {round}");
+            assert_eq!(
+                got.loss.to_bits(),
+                expect.loss.to_bits(),
+                "{threads} threads, round {round}"
+            );
+        }
+    }
+}
+
+#[test]
+fn zipf_sampled_group_sizes_bitwise_on_one_shared_pool() {
+    // Zipf-sampled sizes, interleaved (non-contiguous) qids, grouped and
+    // global oracles sharing one pool — the trainer's arrangement under
+    // the data shape the issue targets.
+    let mut rng = Rng::new(0x5CED_0003);
+    let n_groups = 400;
+    let mut qid: Vec<u64> = Vec::new();
+    for g in 0..n_groups {
+        let sz = 1 + rng.zipf(60, 1.1);
+        qid.extend(std::iter::repeat(g as u64).take(sz));
+    }
+    rng.shuffle(&mut qid);
+    let m = qid.len();
+    let y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+    let n = count_comparable_pairs(&y) as f64;
+    let mut serial_grouped = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+    let mut serial_global = TreeOracle::new();
+    for threads in [1usize, 2, 3, 8] {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let mut grouped = ShardedTreeOracle::with_pool(Arc::clone(&pool), Some(&qid), &y);
+        let mut global = ShardedTreeOracle::with_pool(Arc::clone(&pool), None, &y);
+        let mut round_rng = Rng::new(0x5CED_0004);
+        for round in 0..3 {
+            let p: Vec<f64> = (0..m).map(|_| round_rng.normal()).collect();
+            let expect_g = serial_grouped.eval(&p, &y, serial_grouped.total_pairs());
+            let got_g = grouped.eval(&p, &y, 0.0);
+            assert_eq!(got_g.coeffs, expect_g.coeffs, "grouped, {threads} threads, {round}");
+            assert_eq!(got_g.loss.to_bits(), expect_g.loss.to_bits());
+            let expect = serial_global.eval(&p, &y, n);
+            let got = global.eval(&p, &y, n);
+            assert_eq!(got.coeffs, expect.coeffs, "global, {threads} threads, {round}");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits());
+        }
+    }
+}
+
+#[test]
+fn global_mode_score_clusters_bitwise_across_threads() {
+    // Skew in *window* sizes: half the scores collapse onto one value
+    // (their margin windows span the whole cluster), the rest spread
+    // out. Chunk tasks over the sorted order see wildly uneven tree
+    // sweeps; counts must stay exact at every thread count.
+    let mut rng = Rng::new(0x5CED_0005);
+    let m = 4000;
+    let y: Vec<f64> = (0..m).map(|_| rng.below(6) as f64).collect();
+    let p: Vec<f64> = (0..m)
+        .map(|i| if i % 2 == 0 { 0.25 } else { rng.normal() * 3.0 })
+        .collect();
+    let n = count_comparable_pairs(&y) as f64;
+    let mut reference = TreeOracle::new();
+    let expect = reference.eval(&p, &y, n);
+    for threads in [1usize, 2, 3, 8] {
+        let mut sharded = ShardedTreeOracle::new(threads, None, &y);
+        let got = sharded.eval(&p, &y, n);
+        assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} threads");
+    }
+}
+
+#[test]
+fn task_granularity_is_invisible_in_results_on_skewed_input() {
+    // The same skewed fixture through coarse (one task per worker — the
+    // PR 1–3 plan), default, and absurdly fine plans: the granularity
+    // knob may only move wall-clock, never a bit.
+    let mut rng = Rng::new(0x5CED_0006);
+    let (qid, y) = giant_plus_singletons(&mut rng, 600, 1000);
+    let m = y.len();
+    let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let n = count_comparable_pairs(&y) as f64;
+    let mut serial_grouped = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+    let expect_grouped = serial_grouped.eval(&p, &y, serial_grouped.total_pairs());
+    let mut serial_global = TreeOracle::new();
+    let expect_global = serial_global.eval(&p, &y, n);
+    let pool = Arc::new(WorkerPool::new(8));
+    for target in [8usize, 32, 97] {
+        let mut grouped =
+            ShardedTreeOracle::with_run_target(Arc::clone(&pool), Some(&qid), &y, target);
+        let got = grouped.eval(&p, &y, 0.0);
+        assert_eq!(got.coeffs, expect_grouped.coeffs, "grouped, target {target}");
+        assert_eq!(got.loss.to_bits(), expect_grouped.loss.to_bits());
+        let mut global = ShardedTreeOracle::with_run_target(Arc::clone(&pool), None, &y, target);
+        let got = global.eval(&p, &y, n);
+        assert_eq!(got.coeffs, expect_global.coeffs, "global, target {target}");
+        assert_eq!(got.loss.to_bits(), expect_global.loss.to_bits());
+    }
+}
+
+#[test]
+fn training_on_zipf_fixture_is_bitwise_thread_invariant() {
+    // End-to-end: full BMRM runs on a Zipf(1.1) grouped fixture and a
+    // global fixture must produce byte-identical models at 1/2/8
+    // threads — the CI thread-matrix assertion, in-process.
+    for (ds, tag) in [
+        (synthetic::zipf_queries(1200, 240, 6, 1.1, 901), "zipf-grouped"),
+        (synthetic::cadata_like(500, 902), "global"),
+    ] {
+        let mut reference: Option<(Vec<f64>, u64, usize)> = None;
+        for threads in [1usize, 2, 8] {
+            let cfg = TrainConfig {
+                method: Method::Tree,
+                lambda: 0.1,
+                epsilon: 1e-3,
+                n_threads: threads,
+                ..Default::default()
+            };
+            let out = train(&ds, &cfg).unwrap();
+            assert!(out.converged, "{tag}: {threads} threads failed to converge");
+            match &reference {
+                None => reference = Some((out.model.w, out.objective.to_bits(), out.iterations)),
+                Some((w, obj, iters)) => {
+                    assert_eq!(&out.model.w, w, "{tag}: weights differ at {threads} threads");
+                    assert_eq!(out.objective.to_bits(), *obj, "{tag}: {threads} threads");
+                    assert_eq!(out.iterations, *iters, "{tag}: {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_groups_and_tiny_inputs_survive_every_plan() {
+    // All-tied groups (zero comparable pairs) interleaved with real
+    // ones, fewer examples than workers, single-group data: the packer
+    // and the scheduler must agree on every edge.
+    let qid = [7u64, 7, 3, 3, 3, 9];
+    let y = [1.0, 1.0, 2.0, 1.0, 3.0, 5.0]; // group 7 is all-tied
+    let p = [0.4, -0.1, 0.9, 0.2, -0.3, 0.0];
+    let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+    let expect = serial.eval(&p, &y, serial.total_pairs());
+    for threads in [1usize, 2, 8] {
+        let mut sharded = ShardedTreeOracle::new(threads, Some(&qid), &y);
+        let got = sharded.eval(&p, &y, 0.0);
+        assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} threads");
+    }
+    // Single group, many workers.
+    let qid1 = vec![4u64; 5];
+    let y1 = [1.0, 2.0, 3.0, 1.0, 2.0];
+    let p1 = [0.1, 0.5, 0.2, 0.9, 0.0];
+    let mut serial1 = QueryGrouped::new(TreeOracle::new(), &qid1, &y1);
+    let expect1 = serial1.eval(&p1, &y1, serial1.total_pairs());
+    let mut sharded1 = ShardedTreeOracle::new(8, Some(&qid1), &y1);
+    let got1 = sharded1.eval(&p1, &y1, 0.0);
+    assert_eq!(got1.coeffs, expect1.coeffs);
+}

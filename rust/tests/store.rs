@@ -226,6 +226,57 @@ fn corrupted_stores_are_rejected() {
     assert!(PallasStore::open(&p).is_err());
 }
 
+/// Seeded fuzz: any single-byte flip over a valid store must surface as
+/// a *structured error* from `open()` — never a panic, never a silent
+/// success. This is exactly the contract the version-2 format buys by
+/// extending the checksum over the header: geometry checks catch
+/// structural damage, the full-file checksum catches everything else
+/// (an unused flag bit, a high byte of `cols`, a payload value).
+#[test]
+fn fuzzed_single_byte_flips_never_panic_and_always_error() {
+    use ranksvm::util::rng::Rng;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    for (ds, tag) in [
+        (synthetic::queries(8, 10, 5, 404), "fuzz_grouped"),
+        (synthetic::cadata_like(60, 405), "fuzz_global"),
+    ] {
+        let (_, _, store) = text_and_store(&ds, tag);
+        drop(store);
+        let good = std::fs::read(tmp(&format!("{tag}.pstore"))).unwrap();
+        let victim = tmp(&format!("{tag}_flip.pstore"));
+        let mut rng = Rng::new(0xF11B);
+        for trial in 0..250usize {
+            let pos = rng.below(good.len());
+            let bit = 1u8 << rng.below(8);
+            let mut bad = good.clone();
+            bad[pos] ^= bit;
+            std::fs::write(&victim, &bad).unwrap();
+            let outcome =
+                catch_unwind(AssertUnwindSafe(|| PallasStore::open(&victim).map(|_| ())));
+            let Ok(result) = outcome else {
+                panic!("{tag} trial {trial}: open() panicked on byte {pos} bit {bit:#04x}")
+            };
+            let err = match result {
+                Err(e) => e,
+                Ok(()) => panic!(
+                    "{tag} trial {trial}: store with byte {pos} bit {bit:#04x} flipped \
+                     opened successfully — corruption went undetected"
+                ),
+            };
+            assert!(!err.to_string().is_empty(), "{tag}: empty error message");
+            // The unchecked path may accept a payload flip by contract,
+            // but it must never panic either.
+            let unchecked = catch_unwind(AssertUnwindSafe(|| {
+                PallasStore::open_unchecked(&victim).map(|_| ()).is_ok()
+            }));
+            assert!(
+                unchecked.is_ok(),
+                "{tag} trial {trial}: open_unchecked() panicked on byte {pos} bit {bit:#04x}"
+            );
+        }
+    }
+}
+
 #[test]
 fn open_unchecked_skips_payload_scan_but_not_geometry() {
     let ds = synthetic::cadata_like(120, 5);
