@@ -1,0 +1,66 @@
+//! Store-conversion throughput — the pstore v3 parallel parse phase.
+//!
+//! Writes a Reuters-like libsvm fixture, converts it at 1 / half /
+//! all-cores worker threads, and prints MB/s per configuration. The
+//! artifacts are byte-compared along the way: the speedup must cost
+//! exactly zero output bits (the converter's determinism contract,
+//! `docs/DETERMINISM.md`).
+//!
+//! `FULL=1` runs the paper-scale fixture; `M=<rows>` overrides.
+
+mod common;
+
+use common::full_scale;
+use ranksvm::data::store::{convert_libsvm, ConvertOptions};
+use ranksvm::data::{libsvm, synthetic};
+
+fn main() {
+    let default_m = if full_scale() { 400_000 } else { 60_000 };
+    let m: usize = std::env::var("M")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_m);
+    let dir = std::env::temp_dir().join(format!("ranksvm_convert_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let text = dir.join("bench.libsvm");
+    let ds = synthetic::reuters_like(m, 5);
+    libsvm::write(&ds, &text).unwrap();
+    drop(ds);
+    let text_bytes = std::fs::metadata(&text).unwrap().len();
+    println!(
+        "convert throughput: {m} rows, {:.1} MB of libsvm text",
+        text_bytes as f64 / 1e6
+    );
+    println!("{:>8} {:>7} {:>9} {:>9} {:>10}", "threads", "shards", "secs", "MB/s", "identical");
+
+    let all = ranksvm::util::resolve_threads(0);
+    let mut configs = vec![1usize, (all / 2).max(2), all];
+    configs.dedup();
+    let mut reference: Option<Vec<u8>> = None;
+    for threads in configs {
+        let out = dir.join(format!("bench.t{threads}.pstore"));
+        let opts = ConvertOptions { chunk_bytes: 8 << 20, n_threads: threads };
+        let t0 = std::time::Instant::now();
+        let stats = convert_libsvm(&text, &out, &opts).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let got = std::fs::read(&out).unwrap();
+        let identical = match &reference {
+            None => {
+                reference = Some(got);
+                "(ref)"
+            }
+            Some(r) => {
+                assert_eq!(r, &got, "parallel conversion diverged at {threads} threads");
+                "yes"
+            }
+        };
+        println!(
+            "{threads:>8} {:>7} {secs:>9.2} {:>9.1} {identical:>10}",
+            stats.shards,
+            text_bytes as f64 / 1e6 / secs,
+        );
+        std::fs::remove_file(&out).ok();
+    }
+    std::fs::remove_file(&text).ok();
+    std::fs::remove_dir(&dir).ok();
+}

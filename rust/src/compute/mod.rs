@@ -107,7 +107,7 @@ const GRAD_CHUNKS: usize = 16;
 ///   single row dot product, so the result is bit-identical to the
 ///   serial [`NativeBackend`] regardless of the partition or the
 ///   scheduling.
-/// - `grad`: rows are dealt to [`GRAD_CHUNKS`] fixed chunks — already
+/// - `grad`: rows are dealt to `GRAD_CHUNKS` fixed chunks — already
 ///   one stealable task each — accumulating a dense partial
 ///   `Xᵀ·coeffs`; the partials are then combined by a fixed-topology
 ///   pairwise tree reduction. Float sums re-associate relative to the

@@ -87,6 +87,39 @@ impl BackendKind {
     }
 }
 
+/// Feature normalization applied before optimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalize {
+    /// Train on the features exactly as loaded (the default).
+    None,
+    /// Divide every feature column by its ℓ2 norm over the training
+    /// set. The norms come from the pallas store's cached column stats
+    /// when the source carries them (skipping the `O(m·s)` scan) and
+    /// from an identical row-major recomputation otherwise — training
+    /// is bit-identical either way, and matches training on explicitly
+    /// pre-normalized input (pinned in `tests/store.rs`). The trained
+    /// weights live in the *normalized* feature space: score raw data
+    /// with the same normalization applied.
+    L2Col,
+}
+
+impl Normalize {
+    pub fn parse(s: &str) -> Option<Normalize> {
+        Some(match s {
+            "none" => Normalize::None,
+            "l2-col" | "l2col" => Normalize::L2Col,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Normalize::None => "none",
+            Normalize::L2Col => "l2-col",
+        }
+    }
+}
+
 /// Full training configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -110,8 +143,12 @@ pub struct TrainConfig {
     /// parallelism. Any value produces bit-identical training results —
     /// the shard/chunk reductions are order-fixed (see
     /// [`crate::losses::ShardedTreeOracle`] and
-    /// [`crate::compute::ParallelBackend`]).
+    /// [`crate::compute::ParallelBackend`]; the contract is written
+    /// down in `docs/DETERMINISM.md`).
     pub n_threads: usize,
+    /// Feature normalization applied before optimization (CLI
+    /// `--normalize`).
+    pub normalize: Normalize,
 }
 
 impl Default for TrainConfig {
@@ -126,6 +163,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".to_string(),
             verbose: false,
             n_threads: 0,
+            normalize: Normalize::None,
         }
     }
 }
@@ -155,6 +193,16 @@ mod tests {
         }
         assert_eq!(Method::parse("svmrank"), Some(Method::RLevel));
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn normalize_parse_round_trip() {
+        for n in [Normalize::None, Normalize::L2Col] {
+            assert_eq!(Normalize::parse(n.name()), Some(n));
+        }
+        assert_eq!(Normalize::parse("l2col"), Some(Normalize::L2Col));
+        assert_eq!(Normalize::parse("zscore"), None);
+        assert_eq!(TrainConfig::default().normalize, Normalize::None);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod model;
 pub mod modelsel;
 pub mod trainer;
 
-pub use config::{BackendKind, Method, TrainConfig};
+pub use config::{BackendKind, Method, Normalize, TrainConfig};
 pub use model::RankModel;
 pub use modelsel::{cross_validate, select_lambda, CvPoint};
 pub use trainer::{evaluate, train, TrainOutcome};

@@ -2,11 +2,11 @@
 //! oracle, and an optimizer into one call — the coordinator face of the
 //! library.
 
-use super::config::{BackendKind, Method, TrainConfig};
+use super::config::{BackendKind, Method, Normalize, TrainConfig};
 use super::model::RankModel;
 use crate::bmrm::{self, BmrmConfig, ScoreOracle};
 use crate::compute::{ComputeBackend, NativeBackend, ParallelBackend};
-use crate::data::DatasetView;
+use crate::data::{materialize, Dataset, DatasetView};
 use crate::losses::{
     count_comparable_pairs, tree::fenwick_oracle, GroupIndex, PairOracle, QueryGrouped,
     RLevelOracle, RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
@@ -248,6 +248,33 @@ fn make_ranking_oracle(
     }
 }
 
+/// Per-column ℓ2 norms of a training set: `sqrt(Σ_i x_ij²)` per column.
+/// Consumes the source's cached column statistics when present (a v3
+/// pallas store — no data scan at all), otherwise recomputes them with
+/// the *same* serial row-major fold ([`crate::data::store::compute_col_stats`]),
+/// so both origins yield bit-identical norms.
+fn l2_col_norms(ds: &dyn DatasetView) -> Vec<f64> {
+    match ds.col_stats() {
+        Some(stats) => stats.iter().map(|s| s.sumsq.sqrt()).collect(),
+        None => crate::data::store::compute_col_stats(ds.x())
+            .iter()
+            .map(|s| s.sumsq.sqrt())
+            .collect(),
+    }
+}
+
+/// Owned copy of `ds` with every feature column divided by its ℓ2 norm
+/// (zero-norm columns untouched). The scale is applied once, value by
+/// value (`v / norm`), which makes training on the result bit-identical
+/// to training on explicitly pre-normalized input text — `tests/store.rs`
+/// pins that differential.
+fn normalize_l2_col(ds: &dyn DatasetView) -> Dataset {
+    let norms = l2_col_norms(ds);
+    let mut owned = materialize(ds);
+    owned.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
+    owned
+}
+
 /// The query-group index for a training run: precomputed by the source
 /// (pallas store) when available, otherwise built with one scan — built
 /// *once* per run and shared by the pair count and the oracle. Exact
@@ -263,6 +290,21 @@ fn group_index_for(ds: &dyn DatasetView) -> Option<Arc<GroupIndex>> {
 /// a memory-mapped pallas store — the run is bit-identical either way.
 pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let timer = std::time::Instant::now();
+    // Mapped stores: start paging the file in now (madvise WILLNEED),
+    // so the first sweep reads warm pages instead of faulting serially.
+    ds.prefetch();
+    // Opt-in feature normalization. The scaled copy is owned (an O(nnz)
+    // materialization), trading the store's zero-copy path for exact
+    // equivalence with pre-normalized input; the norms themselves come
+    // from the store's cached column stats when available.
+    let normalized = match cfg.normalize {
+        Normalize::None => None,
+        Normalize::L2Col => Some(normalize_l2_col(ds)),
+    };
+    let ds: &dyn DatasetView = match &normalized {
+        Some(owned) => owned,
+        None => ds,
+    };
     // One persistent work-stealing worker pool for the whole run: the
     // sharded oracle, the parallel backend, and the parallel argsort
     // all submit their (finer-than-thread-count) task batches to it, so
@@ -477,6 +519,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn l2_col_normalization_matches_explicit_scaling() {
+        let ds = synthetic::cadata_like(200, 12);
+        let mut with_norm = cfg(Method::Tree);
+        with_norm.normalize = Normalize::L2Col;
+        let a = train(&ds, &with_norm).unwrap();
+        // Explicitly pre-scale an owned copy with the same fold, then
+        // train with normalization off: the runs must agree to the bit.
+        let mut sumsq = vec![0.0f64; ds.dim()];
+        for i in 0..ds.len() {
+            let (idx, val) = ds.x.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                sumsq[j as usize] += v * v;
+            }
+        }
+        let mut scaled = materialize(&ds);
+        scaled.x.map_values(|c, v| if sumsq[c] > 0.0 { v / sumsq[c].sqrt() } else { v });
+        let b = train(&scaled, &cfg(Method::Tree)).unwrap();
+        assert!(a.converged && b.converged);
+        assert_eq!(a.model.w, b.model.w);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
     }
 
     #[test]

@@ -151,7 +151,7 @@ impl RowAccumulator {
     }
 }
 
-/// Parse from any reader (testable). See [`parse_line`] for the exact
+/// Parse from any reader (testable). See `parse_line` for the exact
 /// validation contract.
 pub fn parse<R: BufRead>(reader: R, name: &str) -> Result<Dataset> {
     let mut acc = RowAccumulator::default();

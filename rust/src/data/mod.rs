@@ -13,7 +13,7 @@ pub mod store;
 pub mod synthetic;
 
 pub use dataset::Dataset;
-pub use store::PallasStore;
+pub use store::{ColStat, PallasStore};
 
 use crate::linalg::{CsrMatrix, CsrView};
 use crate::losses::GroupIndex;
@@ -54,6 +54,23 @@ pub trait DatasetView {
     fn n_pairs_hint(&self) -> Option<f64> {
         None
     }
+
+    /// Cached per-column statistics (nnz/sum/sumsq/min/max per feature
+    /// column), if the source carries them — the pallas store serializes
+    /// a [`ColStat`] record per column so normalization and
+    /// model-selection passes skip their `O(m·s)` scan. The cached
+    /// values are bit-identical to a from-scratch recomputation
+    /// ([`store::compute_col_stats`]), so consumers may use either
+    /// interchangeably. `None` means "recompute if needed".
+    fn col_stats(&self) -> Option<&[ColStat]> {
+        None
+    }
+
+    /// Hint that a full sweep over the dataset is imminent. The mapped
+    /// pallas store forwards this as `madvise(WILLNEED)` so page-ins
+    /// overlap setup; owned datasets are already resident and do
+    /// nothing. Never required for correctness.
+    fn prefetch(&self) {}
 
     /// Number of examples `m`.
     fn len(&self) -> usize {

@@ -2,24 +2,29 @@
 //!
 //! A store is one flat file: a fixed-size header followed by 8-byte
 //! aligned little-endian sections holding the CSR arrays, labels, query
-//! ids, and the precomputed query-group index. Section *offsets* live in
-//! the header; section *lengths* are derived from the header counts, so
-//! a header that passes validation pins the entire file geometry.
+//! ids, the precomputed query-group index, and cached per-column
+//! statistics. Section *offsets* live in the header; section *lengths*
+//! are derived from the header counts, so a header that passes
+//! validation pins the entire file geometry. The normative byte-level
+//! spec (with a flag-bit registry and the refusal policy) lives in
+//! `docs/STORE_FORMAT.md`; a test pins this module to it.
 //!
 //! ```text
 //! offset  size  field
 //! ------  ----  -----------------------------------------------
 //!      0     7  magic "PSTORE\0"
-//!      7     1  format version (2)
+//!      7     1  format version (3)
 //!      8     8  rows (m)                u64 LE
 //!     16     8  cols (n)                u64 LE
 //!     24     8  nnz                     u64 LE
-//!     32     8  flags (bit 0: has qid)  u64 LE
+//!     32     8  flags (bit 0: has qid;  u64 LE
+//!                      bit 1: has colstats)
 //!     40     8  n_groups                u64 LE
 //!     48     8  n_pairs                 u64 LE
 //!     56     8  checksum (FNV-1a 64; see below)
-//!     64  8×8  section offsets         u64 LE each
-//!    128     …  sections (8-aligned, zero-padded between):
+//!     64  9×8  section offsets         u64 LE each
+//!    136    56  reserved (must be zero)
+//!    192     …  sections (8-aligned, zero-padded between):
 //!               indptr   (m+1)·u64   CSR row offsets
 //!               indices  nnz·u32     CSR column indices
 //!               values   nnz·f64     CSR values
@@ -28,6 +33,7 @@
 //!               goff     (g+1)·u64   group offsets    (grouped only)
 //!               gex      m·u64       group example idx (grouped only)
 //!               gpairs   g·u64       per-group pairs  (grouped only)
+//!               colstats n·40 bytes  per-column stats (flag bit 1)
 //! ```
 //!
 //! `n_pairs` is the comparable-pair count of the training objective:
@@ -35,34 +41,48 @@
 //! counts for grouped data — both exact integers, so the loaded value
 //! is bit-identical to what the text path recomputes.
 //!
-//! **Checksum coverage (version 2).** The FNV-1a 64 stream covers every
-//! byte of the file except the checksum field itself, in this order:
-//! the payload (`bytes[128..]`, as it is streamed to disk), then the
-//! header bytes `0..56`, then `64..128`. Version 1 checksummed only the
-//! payload, which left single-byte header corruption (an unused flag
-//! bit, a high byte of `cols`) undetectable by [`Header::decode`]'s
-//! geometry checks; with full coverage *any* byte flip in a store is a
-//! structured `open()` error (fuzzed in `tests/store.rs`). The
+//! **Column statistics (version 3).** The `colstats` section caches one
+//! [`ColStat`] record per feature column — stored-entry count, value
+//! sum, sum of squares, min, and max — so normalization and
+//! model-selection passes skip their `O(m·s)` scan. The floating-point
+//! fields are defined as the *serial row-major fold* over the stored
+//! CSR entries (see `docs/DETERMINISM.md`), which is what makes them
+//! identical no matter how many threads converted the file.
+//!
+//! **Checksum coverage (since version 2).** The FNV-1a 64 stream covers
+//! every byte of the file except the checksum field itself, in this
+//! order: the payload (`bytes[HEADER_LEN..]`, as it is streamed to
+//! disk), then the header bytes before the checksum field, then the
+//! rest of the header. With full coverage *any* byte flip in a store is
+//! a structured `open()` error (fuzzed in `tests/store.rs`). The
 //! payload-first order lets the streaming writer fold the header in at
 //! the end, when the section offsets are finally known.
+//!
+//! **Version policy.** Exactly one version is readable per build;
+//! version-1 files (payload-only checksum) and version-2 files (128-byte
+//! header, no colstats) are refused with a structured version error —
+//! re-run `ranksvm convert` to regenerate them.
 
 use anyhow::{bail, ensure, Result};
 
 /// File magic: the first 7 bytes of every pallas store.
 pub const MAGIC: [u8; 7] = *b"PSTORE\0";
 
-/// Current format version (byte 7). Version 2 extended the checksum to
-/// cover the header (minus the checksum field) and rejects unknown flag
-/// bits; version-1 files are refused with a version error rather than
-/// misread under the new coverage rules.
-pub const VERSION: u8 = 2;
+/// Current format version (byte 7). Version 3 grew the header to 192
+/// bytes (nine section-offset slots plus a reserved tail) and added the
+/// checksummed `colstats` section; earlier versions are refused with a
+/// version error rather than misread under the new geometry.
+pub const VERSION: u8 = 3;
 
 /// Total header size; the first section starts here (8-aligned).
-pub const HEADER_LEN: usize = 128;
+pub const HEADER_LEN: usize = 192;
 
 /// Byte range of the checksum field inside the header — the only bytes
 /// the checksum stream skips.
 pub const CHECKSUM_FIELD: std::ops::Range<usize> = 56..64;
+
+/// First byte of the section-offset array inside the header.
+pub const OFFSETS_START: usize = 64;
 
 /// Section count/order. Indexes into [`Header::offsets`].
 pub const SEC_INDPTR: usize = 0;
@@ -73,10 +93,54 @@ pub const SEC_QID: usize = 4;
 pub const SEC_GOFF: usize = 5;
 pub const SEC_GEX: usize = 6;
 pub const SEC_GPAIRS: usize = 7;
-pub const N_SECTIONS: usize = 8;
+pub const SEC_COLSTATS: usize = 8;
+pub const N_SECTIONS: usize = 9;
 
 /// Header flag bit: the store carries query ids + a group index.
 pub const FLAG_HAS_QID: u64 = 1;
+
+/// Header flag bit: the store carries the per-column statistics
+/// section (always set by the version-3 writer).
+pub const FLAG_HAS_COLSTATS: u64 = 1 << 1;
+
+/// Every flag bit this build understands; any other bit is refused.
+pub const KNOWN_FLAGS: u64 = FLAG_HAS_QID | FLAG_HAS_COLSTATS;
+
+/// Cached statistics of one feature column, over the column's *stored*
+/// CSR entries (explicit zeros are never stored, so these describe the
+/// non-zero structure). One record per column in the `colstats`
+/// section, in column order.
+///
+/// - `nnz` is an exact integer;
+/// - `min`/`max` are order-independent folds (both 0.0 for an empty
+///   column);
+/// - `sum`/`sumsq` are defined as the serial left-to-right fold over
+///   the entries in row-major order — the converter computes them in
+///   exactly that order regardless of its thread count, so the cached
+///   values equal a from-scratch recomputation bit for bit (pinned at
+///   `open()` and in `tests/store.rs`).
+///
+/// The column's ℓ2 norm is `sumsq.sqrt()` — what `--normalize l2-col`
+/// consumes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(C)]
+pub struct ColStat {
+    /// Stored (non-zero) entries in this column.
+    pub nnz: u64,
+    /// Sum of the stored values (serial row-major fold).
+    pub sum: f64,
+    /// Sum of squared stored values (serial row-major fold).
+    pub sumsq: f64,
+    /// Smallest stored value (0.0 for an empty column).
+    pub min: f64,
+    /// Largest stored value (0.0 for an empty column).
+    pub max: f64,
+}
+
+/// On-disk size of one [`ColStat`] record.
+pub const COLSTAT_BYTES: usize = 40;
+const _: () = assert!(std::mem::size_of::<ColStat>() == COLSTAT_BYTES);
+const _: () = assert!(std::mem::align_of::<ColStat>() == 8);
 
 /// Decoded header. Field meanings per the module layout table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,6 +160,10 @@ impl Header {
         self.flags & FLAG_HAS_QID != 0
     }
 
+    pub fn has_colstats(&self) -> bool {
+        self.flags & FLAG_HAS_COLSTATS != 0
+    }
+
     /// Byte length of each section, derived from the counts — `None`
     /// when a count is large enough to overflow (only reachable from a
     /// crafted/corrupt header; [`Self::decode`] rejects such files).
@@ -110,6 +178,13 @@ impl Header {
             SEC_GOFF => grouped(self.n_groups.checked_add(1).and_then(|g| g.checked_mul(8))),
             SEC_GEX => grouped(self.rows.checked_mul(8)),
             SEC_GPAIRS => grouped(self.n_groups.checked_mul(8)),
+            SEC_COLSTATS => {
+                if self.has_colstats() {
+                    self.cols.checked_mul(COLSTAT_BYTES as u64)
+                } else {
+                    Some(0)
+                }
+            }
             _ => unreachable!("unknown section {sec}"),
         }
     }
@@ -137,20 +212,27 @@ impl Header {
             out[8 + k * 8..16 + k * 8].copy_from_slice(&v.to_le_bytes());
         }
         for (k, v) in self.offsets.iter().enumerate() {
-            out[64 + k * 8..72 + k * 8].copy_from_slice(&v.to_le_bytes());
+            let at = OFFSETS_START + k * 8;
+            out[at..at + 8].copy_from_slice(&v.to_le_bytes());
         }
+        // Bytes OFFSETS_START + 8·N_SECTIONS .. HEADER_LEN stay zero
+        // (the reserved tail).
         out
     }
 
     /// Decode and *structurally* validate a header against the file
-    /// length: magic, version, section alignment/order/bounds. Content
-    /// integrity (the checksum) is verified separately by the reader.
+    /// length: magic, version, reserved bytes, section
+    /// alignment/order/bounds. Content integrity (the checksum) is
+    /// verified separately by the reader.
     pub fn decode(bytes: &[u8], file_len: u64) -> Result<Header> {
         ensure!(bytes.len() >= HEADER_LEN, "file too short for a pallas store header");
         ensure!(bytes[..7] == MAGIC, "not a pallas store (bad magic)");
         let version = bytes[7];
         if version != VERSION {
-            bail!("unsupported pallas store version {version} (this build reads {VERSION})");
+            bail!(
+                "unsupported pallas store version {version} (this build reads {VERSION}; \
+                 re-run `ranksvm convert` to regenerate older stores)"
+            );
         }
         let u64_at = |off: usize| {
             let mut b = [0u8; 8];
@@ -159,7 +241,7 @@ impl Header {
         };
         let mut offsets = [0u64; N_SECTIONS];
         for (k, o) in offsets.iter_mut().enumerate() {
-            *o = u64_at(64 + k * 8);
+            *o = u64_at(OFFSETS_START + k * 8);
         }
         let h = Header {
             rows: u64_at(8),
@@ -171,6 +253,10 @@ impl Header {
             checksum: u64_at(56),
             offsets,
         };
+        ensure!(
+            bytes[OFFSETS_START + 8 * N_SECTIONS..HEADER_LEN].iter().all(|&b| b == 0),
+            "reserved header bytes are not zero"
+        );
         // Geometry: sections are in declaration order, 8-aligned, inside
         // the file, and the last one ends exactly at EOF.
         let mut cursor = HEADER_LEN as u64;
@@ -202,9 +288,9 @@ impl Header {
         // would otherwise be silently ignored) — reject them even on
         // the unchecked path.
         ensure!(
-            h.flags & !FLAG_HAS_QID == 0,
+            h.flags & !KNOWN_FLAGS == 0,
             "unknown store flag bits {:#x}",
-            h.flags & !FLAG_HAS_QID
+            h.flags & !KNOWN_FLAGS
         );
         Ok(h)
     }
@@ -260,6 +346,9 @@ pub unsafe trait Pod: Copy {}
 unsafe impl Pod for u32 {}
 unsafe impl Pod for u64 {}
 unsafe impl Pod for f64 {}
+// SAFETY: repr(C), five 8-byte fields, no padding (the const asserts
+// above pin size and alignment); u64/f64 accept every bit pattern.
+unsafe impl Pod for ColStat {}
 
 /// Reinterpret a byte section as a typed slice — the zero-copy boundary.
 /// Rejects misaligned or odd-length sections instead of copying; the
@@ -300,7 +389,7 @@ mod tests {
             rows,
             cols: 3,
             nnz,
-            flags: if grouped { FLAG_HAS_QID } else { 0 },
+            flags: if grouped { FLAG_HAS_QID | FLAG_HAS_COLSTATS } else { FLAG_HAS_COLSTATS },
             n_groups: if grouped { 2 } else { 0 },
             n_pairs: 5,
             checksum: 0xdead_beef,
@@ -329,14 +418,38 @@ mod tests {
     }
 
     #[test]
+    fn colstats_section_length_follows_flag() {
+        let mut h = header(4, 6, false);
+        assert!(h.has_colstats());
+        assert_eq!(h.section_len(SEC_COLSTATS), h.cols * COLSTAT_BYTES as u64);
+        h.flags &= !FLAG_HAS_COLSTATS;
+        assert_eq!(h.section_len(SEC_COLSTATS), 0);
+    }
+
+    #[test]
     fn decode_rejects_bad_magic_and_version() {
         let h = header(4, 6, false);
         let mut bytes = h.encode();
         bytes[0] = b'X';
         assert!(Header::decode(&bytes, file_len(&h)).unwrap_err().to_string().contains("magic"));
+        // Older versions are refused with a structured version error
+        // (the v1/v2 refusal policy), as are future versions.
+        for bad_version in [1u8, 2, 99] {
+            let mut bytes = h.encode();
+            bytes[7] = bad_version;
+            let err = Header::decode(&bytes, file_len(&h)).unwrap_err().to_string();
+            assert!(err.contains("version"), "{bad_version}: {err}");
+            assert!(err.contains("convert"), "{bad_version}: {err}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_nonzero_reserved_bytes() {
+        let h = header(4, 6, false);
         let mut bytes = h.encode();
-        bytes[7] = 99;
-        assert!(Header::decode(&bytes, file_len(&h)).unwrap_err().to_string().contains("version"));
+        bytes[HEADER_LEN - 1] = 1;
+        let err = Header::decode(&bytes, file_len(&h)).unwrap_err();
+        assert!(err.to_string().contains("reserved"), "{err}");
     }
 
     #[test]
@@ -366,6 +479,9 @@ mod tests {
         assert!(err.to_string().contains("overflow"), "{err}");
         let mut bad = h;
         bad.nnz = u64::MAX / 2;
+        assert!(Header::decode(&bad.encode(), len).is_err());
+        let mut bad = h;
+        bad.cols = u64::MAX / 2;
         assert!(Header::decode(&bad.encode(), len).is_err());
     }
 
@@ -426,5 +542,28 @@ mod tests {
         assert_eq!(cast_slice::<u32>(raw).unwrap(), &[1, 0, 2, 0]);
         assert!(cast_slice::<u64>(&raw[..12]).is_err()); // odd length
         assert_eq!(bytes.len(), 16);
+    }
+
+    #[test]
+    fn colstat_cast_roundtrip() {
+        let stats = [
+            ColStat { nnz: 3, sum: 1.5, sumsq: 2.25, min: -1.0, max: 2.0 },
+            ColStat { nnz: 0, sum: 0.0, sumsq: 0.0, min: 0.0, max: 0.0 },
+        ];
+        let mut bytes = Vec::new();
+        for s in &stats {
+            for v in [s.nnz, s.sum.to_bits(), s.sumsq.to_bits(), s.min.to_bits(), s.max.to_bits()]
+            {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        // Copy into an 8-aligned buffer before casting.
+        let mut aligned = vec![0u64; bytes.len() / 8];
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(aligned.as_mut_ptr() as *mut u8, bytes.len())
+        };
+        dst.copy_from_slice(&bytes);
+        let back: &[ColStat] = cast_slice(dst).unwrap();
+        assert_eq!(back, &stats);
     }
 }

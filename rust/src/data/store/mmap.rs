@@ -8,9 +8,26 @@
 //! Everywhere else — or if the syscall fails — the file is read into an
 //! 8-byte-aligned owned buffer, preserving the same `&[u8]` interface
 //! (correct, just not out-of-core).
+//!
+//! The same no-libc discipline covers the paging hints: [`Mmap::advise`]
+//! issues a raw `madvise` (`SEQUENTIAL` before the reader's streaming
+//! checksum pass, `WILLNEED` ahead of the trainer's first sweep) and
+//! [`fadvise_sequential`] a raw `posix_fadvise` for the converter's
+//! buffered read pass. Both are pure hints: they degrade to no-ops off
+//! Linux, for the owned-buffer fallback, and on any syscall failure.
 
 use anyhow::{Context, Result};
 use std::path::Path;
+
+/// Paging-pattern hints for [`Mmap::advise`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Expect sequential access: more aggressive readahead
+    /// (`MADV_SEQUENTIAL`).
+    Sequential,
+    /// Expect access soon: start paging in now (`MADV_WILLNEED`).
+    WillNeed,
+}
 
 /// An immutable byte view of a file: either a kernel mapping or an
 /// owned aligned buffer. The base address is always at least 8-byte
@@ -88,6 +105,30 @@ impl Mmap {
     pub fn is_mapped(&self) -> bool {
         matches!(self.backing, Backing::Mapped)
     }
+
+    /// Hint the kernel about the upcoming access pattern (`madvise`).
+    /// No-op for the owned-buffer fallback, off Linux, or on failure —
+    /// advice never affects correctness, only paging behavior.
+    pub fn advise(&self, advice: Advice) {
+        if self.len == 0 {
+            return;
+        }
+        if let Backing::Mapped = self.backing {
+            let adv = match advice {
+                Advice::Sequential => 2, // MADV_SEQUENTIAL
+                Advice::WillNeed => 3,   // MADV_WILLNEED
+            };
+            sys::madvise(self.ptr, self.len, adv);
+        }
+    }
+}
+
+/// `posix_fadvise(fd, 0, 0, POSIX_FADV_SEQUENTIAL)` — tell the kernel a
+/// plain (non-mapped) file is about to be streamed start to end, so
+/// readahead ramps up immediately. Used by the converter's parse pass;
+/// a hint only, no-op off Linux or on failure.
+pub fn fadvise_sequential(file: &std::fs::File) {
+    sys::fadvise_sequential(file);
 }
 
 impl Drop for Mmap {
@@ -179,6 +220,77 @@ mod sys {
             );
         }
     }
+
+    /// `madvise(addr, len, advice)` — paging hint on a mapped region.
+    /// The return value is deliberately ignored: advice is best-effort.
+    pub fn madvise(ptr: *const u8, len: usize, advice: usize) {
+        let addr = ptr as usize;
+        let _ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: a well-formed madvise syscall on a region this module
+        // mapped; the kernel validates the arguments.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 28isize => _ret, // __NR_madvise
+                in("rdi") addr,
+                in("rsi") len,
+                in("rdx") advice,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, aarch64 calling convention.
+        unsafe {
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 233usize, // __NR_madvise
+                inlateout("x0") addr => _ret,
+                in("x1") len,
+                in("x2") advice,
+                options(nostack)
+            );
+        }
+    }
+
+    /// `posix_fadvise(fd, 0, 0, POSIX_FADV_SEQUENTIAL)` — whole-file
+    /// sequential-readahead hint; result ignored (best-effort).
+    pub fn fadvise_sequential(file: &std::fs::File) {
+        let fd = file.as_raw_fd() as isize;
+        const POSIX_FADV_SEQUENTIAL: usize = 2;
+        let _ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: a well-formed fadvise64 syscall; plain integer
+        // arguments, validated by the kernel.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 221isize => _ret, // __NR_fadvise64
+                in("rdi") fd,
+                in("rsi") 0usize, // offset
+                in("rdx") 0usize, // len (0 = to end of file)
+                in("r10") POSIX_FADV_SEQUENTIAL,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack)
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, aarch64 calling convention.
+        unsafe {
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 223usize, // __NR_fadvise64_64
+                inlateout("x0") fd => _ret,
+                in("x1") 0usize,
+                in("x2") 0usize,
+                in("x3") POSIX_FADV_SEQUENTIAL,
+                options(nostack)
+            );
+        }
+    }
 }
 
 #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
@@ -189,6 +301,11 @@ mod sys {
     }
 
     pub fn munmap(_ptr: *const u8, _len: usize) {}
+
+    /// Paging hints are Linux-only; elsewhere they are no-ops.
+    pub fn madvise(_ptr: *const u8, _len: usize, _advice: usize) {}
+
+    pub fn fadvise_sequential(_file: &std::fs::File) {}
 }
 
 #[cfg(test)]
@@ -236,6 +353,26 @@ mod tests {
         assert_eq!(m.bytes(), b"");
         std::fs::remove_file(p).ok();
         assert!(Mmap::open("/nonexistent/ranksvm.pstore").is_err());
+    }
+
+    #[test]
+    fn advice_is_harmless_on_all_backings() {
+        let data = vec![3u8; 4096 * 2 + 17];
+        let p = tmp("advice", &data);
+        let mapped = Mmap::open(&p).unwrap();
+        mapped.advise(Advice::Sequential);
+        mapped.advise(Advice::WillNeed);
+        assert_eq!(mapped.bytes(), &data[..]);
+        let file = std::fs::File::open(&p).unwrap();
+        fadvise_sequential(&file);
+        let fb = Mmap::read_fallback(file, data.len()).unwrap();
+        fb.advise(Advice::Sequential); // owned backing: no-op
+        assert_eq!(fb.bytes(), &data[..]);
+        let empty = tmp("advice_empty", b"");
+        let m = Mmap::open(&empty).unwrap();
+        m.advise(Advice::WillNeed); // zero-length: no-op
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(empty).ok();
     }
 
     #[test]

@@ -7,12 +7,17 @@
 //! caps `m` at RAM (WMRB, Liu 2017, makes the same observation for
 //! batch ranking at web scale). The store fixes both ends:
 //!
-//! - **Convert once** ([`convert_libsvm`]): a single-pass streaming
-//!   converter ingests libsvm text in bounded memory — the matrix
-//!   payload goes through fixed-budget spill buffers and is never
-//!   materialized — and writes the CSR arrays, labels, query ids, and a
-//!   precomputed query-group index as aligned little-endian sections
-//!   behind a checksummed header (`format`).
+//! - **Convert once** ([`convert_libsvm`]): a streaming two-phase
+//!   converter ingests libsvm text in bounded memory — a parallel parse
+//!   phase shards the text into disjoint byte ranges on the same
+//!   work-stealing pool that runs training, the matrix payload goes
+//!   through fixed-budget spill buffers and is never materialized, and
+//!   a serial stitch phase writes the CSR arrays, labels, query ids, a
+//!   precomputed query-group index, and cached per-column statistics
+//!   ([`ColStat`]: nnz/sum/sumsq/min/max per feature) as aligned
+//!   little-endian sections behind a checksummed header (`format`; the
+//!   normative spec is `docs/STORE_FORMAT.md`). The output is
+//!   byte-identical for any `--threads` value (`docs/DETERMINISM.md`).
 //! - **Map forever** ([`PallasStore`]): opening memory-maps the file
 //!   read-only and hands out zero-copy [`crate::linalg::CsrView`] /
 //!   label / qid slices through the [`crate::data::DatasetView`] trait,
@@ -32,7 +37,10 @@ mod mmap;
 mod reader;
 mod writer;
 
-pub use format::{HEADER_LEN, MAGIC, VERSION};
-pub use mmap::Mmap;
-pub use reader::{is_store_file, PallasStore};
+pub use format::{
+    ColStat, Header, CHECKSUM_FIELD, COLSTAT_BYTES, FLAG_HAS_COLSTATS, FLAG_HAS_QID,
+    HEADER_LEN, KNOWN_FLAGS, MAGIC, N_SECTIONS, OFFSETS_START, VERSION,
+};
+pub use mmap::{fadvise_sequential, Advice, Mmap};
+pub use reader::{compute_col_stats, is_store_file, PallasStore};
 pub use writer::{convert_libsvm, ConvertOptions, ConvertStats};

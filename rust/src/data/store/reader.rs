@@ -1,10 +1,10 @@
 //! Opening and validating a pallas store; the zero-copy [`DatasetView`].
 
 use super::format::{
-    cast_slice, Checksum, Header, HEADER_LEN, N_SECTIONS, SEC_GEX, SEC_GOFF, SEC_GPAIRS,
-    SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
+    cast_slice, Checksum, ColStat, Header, HEADER_LEN, N_SECTIONS, SEC_COLSTATS, SEC_GEX,
+    SEC_GOFF, SEC_GPAIRS, SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
 };
-use super::mmap::Mmap;
+use super::mmap::{Advice, Mmap};
 use crate::data::DatasetView;
 use crate::linalg::CsrView;
 use crate::losses::GroupIndex;
@@ -52,6 +52,11 @@ impl PallasStore {
     fn open_impl(path: &Path, verify: bool) -> Result<Self> {
         let name = path.display().to_string();
         let map = Mmap::open(path)?;
+        if verify {
+            // The verification pass below streams the whole file once;
+            // tell the kernel so readahead ramps up immediately.
+            map.advise(Advice::Sequential);
+        }
         let bytes = map.bytes();
         let header = Header::decode(bytes, bytes.len() as u64)
             .with_context(|| format!("{name}: invalid pallas store"))?;
@@ -111,6 +116,40 @@ impl PallasStore {
                     "{}: cached pair count {} disagrees with labels ({recount})",
                     store.name,
                     store.header.n_pairs
+                );
+            }
+            if let Some(stats) = store.col_stats() {
+                // Structural sanity only, O(n): the full-file checksum
+                // above already authenticates every stats byte, and the
+                // bitwise cached-vs-recomputed equality (the definition
+                // of the cached values — see docs/STORE_FORMAT.md) is
+                // pinned by `tests/store.rs`, so re-deriving them here
+                // would add a redundant O(nnz) sweep to every open.
+                ensure!(
+                    stats.len() == cols,
+                    "{}: column-stats section covers {} columns, store has {cols}",
+                    store.name,
+                    stats.len()
+                );
+                let mut total = 0u64;
+                for (c, s) in stats.iter().enumerate() {
+                    total = total.saturating_add(s.nnz);
+                    let shape_ok = if s.nnz == 0 {
+                        (s.sum, s.sumsq, s.min, s.max) == (0.0, 0.0, 0.0, 0.0)
+                    } else {
+                        s.min <= s.max && s.sumsq >= 0.0
+                    };
+                    ensure!(
+                        shape_ok,
+                        "{}: malformed cached stats for column {c} ({s:?})",
+                        store.name
+                    );
+                }
+                ensure!(
+                    total == store.header.nnz,
+                    "{}: cached column nnz sums to {total}, store has {}",
+                    store.name,
+                    store.header.nnz
                 );
             }
         }
@@ -195,6 +234,26 @@ impl PallasStore {
         cast_slice(self.section(SEC_GPAIRS)).expect("validated at open")
     }
 
+    /// Cached per-column statistics (one [`ColStat`] per feature
+    /// column), zero-copy from the mapping. `None` only for a store
+    /// whose header lacks the colstats flag — every store this build's
+    /// converter writes carries them.
+    pub fn col_stats(&self) -> Option<&[ColStat]> {
+        if self.header.has_colstats() {
+            Some(cast_slice(self.section(SEC_COLSTATS)).expect("validated at open"))
+        } else {
+            None
+        }
+    }
+
+    /// Hint the kernel that a full sweep over the mapping is imminent
+    /// (`madvise(WILLNEED)`): called by the trainer before its first
+    /// pass so page-ins overlap setup instead of serializing into the
+    /// first matvec. Advice only — a no-op for the read fallback.
+    pub fn prefetch(&self) {
+        self.map.advise(Advice::WillNeed);
+    }
+
     /// Comparable pairs of the training objective, as precomputed by the
     /// converter (exact integer).
     pub fn n_pairs(&self) -> u64 {
@@ -260,6 +319,50 @@ impl DatasetView for PallasStore {
     fn n_pairs_hint(&self) -> Option<f64> {
         Some(self.header.n_pairs as f64)
     }
+
+    fn col_stats(&self) -> Option<&[ColStat]> {
+        PallasStore::col_stats(self)
+    }
+
+    fn prefetch(&self) {
+        PallasStore::prefetch(self)
+    }
+}
+
+/// From-scratch per-column statistics of a CSR view, with the exact
+/// fold conventions of the store's cached COLSTATS section: `nnz` and
+/// `min`/`max` over the stored entries (0.0/0.0 for an empty column),
+/// `sum`/`sumsq` as the serial left-to-right fold in row-major entry
+/// order. The single definition shared by the reader's open-time
+/// verification and the trainer's text-path normalization, so cached
+/// and recomputed stats can only agree — or fail loudly.
+pub fn compute_col_stats(x: crate::linalg::CsrView<'_>) -> Vec<ColStat> {
+    let mut stats = vec![
+        ColStat { nnz: 0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY };
+        x.cols()
+    ];
+    for i in 0..x.rows() {
+        let (idx, val) = x.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            let s = &mut stats[j as usize];
+            s.nnz += 1;
+            s.sum += v;
+            s.sumsq += v * v;
+            if v < s.min {
+                s.min = v;
+            }
+            if v > s.max {
+                s.max = v;
+            }
+        }
+    }
+    for s in &mut stats {
+        if s.nnz == 0 {
+            s.min = 0.0;
+            s.max = 0.0;
+        }
+    }
+    stats
 }
 
 /// Sniff a file's magic bytes: true iff it starts like a pallas store.

@@ -1,22 +1,46 @@
-//! Streaming libsvm → pallas-store converter.
+//! Streaming libsvm → pallas-store converter, with a sharded parallel
+//! parse phase.
 //!
-//! Single pass over the text in bounded memory: per-example state is
-//! `O(m)` (labels, qids, row offsets — the arrays the header needs
-//! before any section can be placed), but the matrix payload — `nnz`
-//! column indices and values, the part that actually dominates at scale
-//! — is never resident. Feature entries stream through two fixed-budget
-//! spill buffers into temporary files as they are parsed, then are
-//! copied chunk-by-chunk into their final sections once the counts are
-//! known. `ConvertStats::max_buffered_bytes` reports the exact high-water
-//! mark of the spill buffers, so tests can assert the bound instead of
-//! hoping RSS behaves.
+//! Conversion is a two-phase pipeline:
+//!
+//! 1. **Parallel parse** — the input is split into disjoint byte ranges
+//!    (shards), one stealable task per shard on a
+//!    [`crate::runtime::WorkerPool`] (the same work-stealing scheduler
+//!    that runs the training oracles). Each worker scans forward to the
+//!    first line boundary of its range, then parses every line that
+//!    *starts* inside the range, accumulating local CSR spill segments
+//!    (fixed-budget buffers spilling to per-shard temp files), labels,
+//!    qids, per-row counts, and per-column count/min/max partials.
+//! 2. **Serial deterministic stitch** — shard results are concatenated
+//!    in byte order (which *is* row order), the group index and pair
+//!    counts are computed on the stitched vectors, integer and min/max
+//!    column partials merge in fixed shard order, and the
+//!    floating-point column `sum`/`sumsq` stats are computed in one
+//!    serial pass over the spill segments in row-major entry order.
+//!
+//! Integer counts decompose exactly across shards and min/max folds are
+//! order-independent over finite values, while every floating-point
+//! reduction runs serially in an order fixed by the data — the three
+//! invariants of `docs/DETERMINISM.md`. The emitted `.pstore` is
+//! therefore **byte-identical for any thread count** (including the
+//! single-shard serial path), which `tests/store.rs` and CI pin by
+//! whole-file comparison.
+//!
+//! Memory stays bounded as in the serial converter: per-example state is
+//! `O(m)`, and the matrix payload streams through spill buffers whose
+//! combined budget is `chunk_bytes` (split across shards).
+//! `ConvertStats::max_buffered_bytes` reports the summed high-water mark
+//! of all spill buffers, so tests can assert the bound instead of hoping
+//! RSS behaves.
 
 use super::format::{
-    Checksum, Header, FLAG_HAS_QID, HEADER_LEN, N_SECTIONS, SEC_GEX, SEC_GOFF, SEC_GPAIRS,
-    SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
+    Checksum, Header, FLAG_HAS_COLSTATS, FLAG_HAS_QID, HEADER_LEN, N_SECTIONS, SEC_COLSTATS,
+    SEC_GEX, SEC_GOFF, SEC_GPAIRS, SEC_INDICES, SEC_INDPTR, SEC_QID, SEC_VALUES, SEC_Y,
 };
+use super::mmap::fadvise_sequential;
 use crate::data::libsvm::{parse_line, Example, RowAccumulator};
 use crate::losses::{count_comparable_pairs, GroupIndex};
+use crate::runtime::pool::{Task, WorkerPool};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -24,18 +48,23 @@ use std::path::{Path, PathBuf};
 /// Converter knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ConvertOptions {
-    /// Combined budget (bytes) for the two feature spill buffers — the
-    /// chunk size of the chunked ingest. The converter's transient
-    /// matrix memory never exceeds this (plus one buffer's worth of
-    /// copy scratch during assembly).
+    /// Combined budget (bytes) for the feature spill buffers — the
+    /// chunk size of the chunked ingest, split across shards. The
+    /// converter's transient matrix memory never exceeds this (plus a
+    /// few bytes of per-buffer slack and one buffer's worth of copy
+    /// scratch during assembly).
     pub chunk_bytes: usize,
+    /// Worker threads for the parse phase: `0` = all cores, `1` (the
+    /// default) = serial. The output bytes are identical for every
+    /// value — parallelism only changes wall-clock.
+    pub n_threads: usize,
 }
 
 impl Default for ConvertOptions {
     fn default() -> Self {
         // 8 MiB moves ~350k sparse rows per flush; small enough that a
         // laptop never notices, big enough that syscalls don't dominate.
-        ConvertOptions { chunk_bytes: 8 << 20 }
+        ConvertOptions { chunk_bytes: 8 << 20, n_threads: 1 }
     }
 }
 
@@ -51,10 +80,14 @@ pub struct ConvertStats {
     pub n_pairs: u64,
     /// Final store size in bytes.
     pub out_bytes: u64,
-    /// High-water mark of the feature spill buffers (≤ `chunk_bytes`
-    /// plus one entry of slack) — the "bounded memory" guarantee, made
-    /// measurable.
+    /// Summed high-water mark of the feature spill buffers (≤
+    /// `chunk_bytes` plus one entry of slack per buffer) — the "bounded
+    /// memory" guarantee, made measurable.
     pub max_buffered_bytes: usize,
+    /// Resolved worker-thread count of the parse phase.
+    pub threads: usize,
+    /// Byte-range shards the input was parsed as (1 = serial path).
+    pub shards: usize,
 }
 
 /// A byte sink that spills to a temp file whenever the in-memory buffer
@@ -155,10 +188,158 @@ impl SectionWriter {
     }
 }
 
-/// Convert a libsvm text file to a pallas store. One pass, chunked,
-/// bounded memory; the output is byte-for-byte deterministic in the
-/// input (and independent of `chunk_bytes`, which only controls flush
-/// cadence — a test pins that).
+/// Everything one parse shard produced. The stitch phase consumes these
+/// strictly in shard (= byte) order, which is what keeps the output
+/// independent of how many shards there were.
+struct ShardData {
+    y: Vec<f64>,
+    qids: Vec<u64>,
+    any_qid: bool,
+    max_col: usize,
+    /// Per-row stored-entry counts, in row order.
+    row_nnz: Vec<u64>,
+    nnz: u64,
+    /// Text lines this shard consumed (blank/comment lines included) —
+    /// what lets the stitch phase reconstruct global line numbers.
+    lines: usize,
+    /// Per-column stored-entry counts (exact integers).
+    col_nnz: Vec<u64>,
+    /// Per-column min over stored values (+inf where the shard saw none).
+    col_min: Vec<f64>,
+    /// Per-column max over stored values (−inf where the shard saw none).
+    col_max: Vec<f64>,
+    ind: SpillBuf,
+    val: SpillBuf,
+    max_buffered: usize,
+}
+
+/// Why a parse shard stopped early.
+enum ShardFail {
+    /// `parse_line` rejected a line. Only the *local* line index is
+    /// known inside a shard; the stitch phase adds the preceding shards'
+    /// line counts and re-parses the saved text to produce the exact
+    /// `name:line` error the serial path would have printed.
+    Line { local: usize, text: String },
+    /// Any other failure (I/O, index overflow) — already fully formed.
+    Other(anyhow::Error),
+}
+
+type ShardSlot = Option<Result<ShardData, ShardFail>>;
+
+/// Parse the lines of `input` whose first byte lies in `[lo, hi)`.
+fn parse_shard(
+    input: &Path,
+    name: &str,
+    lo: u64,
+    hi: u64,
+    spill_cap: usize,
+    ind_path: PathBuf,
+    val_path: PathBuf,
+) -> Result<ShardData, ShardFail> {
+    fn other<T>(r: Result<T>) -> Result<T, ShardFail> {
+        r.map_err(ShardFail::Other)
+    }
+    let file = other(
+        std::fs::File::open(input).with_context(|| format!("open {}", input.display())),
+    )?;
+    fadvise_sequential(&file);
+    let mut reader = BufReader::new(file);
+    let mut pos = lo;
+    if lo > 0 {
+        // A line belongs to the shard holding its first byte. Starting
+        // one byte early and skipping to the first newline finds the
+        // first line start ≥ lo (and classifies a line starting exactly
+        // at lo correctly, since byte lo−1 is then the previous '\n').
+        other(reader.seek(SeekFrom::Start(lo - 1)).context("seeking input shard"))?;
+        let mut skip = Vec::new();
+        let n =
+            other(reader.read_until(b'\n', &mut skip).context("scanning shard boundary"))?;
+        if skip.last() == Some(&b'\n') {
+            pos = lo - 1 + n as u64;
+        } else {
+            // EOF inside the partial line: no line starts in this range.
+            pos = hi;
+        }
+    }
+    let mut ind = other(SpillBuf::create(ind_path, spill_cap))?;
+    let mut val = other(SpillBuf::create(val_path, spill_cap))?;
+    let mut acc = RowAccumulator::default();
+    let mut row_nnz: Vec<u64> = Vec::new();
+    let mut col_nnz: Vec<u64> = Vec::new();
+    let mut col_min: Vec<f64> = Vec::new();
+    let mut col_max: Vec<f64> = Vec::new();
+    let mut nnz = 0u64;
+    let mut lines = 0usize;
+    let mut max_buffered = 0usize;
+    let mut ex = Example::default();
+    let mut line = String::new();
+    while pos < hi {
+        line.clear();
+        let n = other(reader.read_line(&mut line).with_context(|| format!("reading {name}")))?;
+        if n == 0 {
+            break;
+        }
+        pos += n as u64;
+        lines += 1;
+        // The line number passed here is shard-local; if the line is
+        // bad, the stitch phase recomputes the global number and
+        // re-parses for the user-facing message.
+        match parse_line(&line, name, lines, &mut ex) {
+            Err(_) => return Err(ShardFail::Line { local: lines, text: line.clone() }),
+            Ok(false) => continue,
+            Ok(true) => {}
+        }
+        let row_start = nnz;
+        other(acc.push(&ex, |idx, v| {
+            let col = u32::try_from(idx - 1)
+                .map_err(|_| anyhow::anyhow!("{name}: feature index {idx} exceeds u32"))?;
+            ind.push(&col.to_le_bytes())?;
+            val.push(&v.to_le_bytes())?;
+            nnz += 1;
+            let c = col as usize;
+            if c >= col_nnz.len() {
+                col_nnz.resize(c + 1, 0);
+                col_min.resize(c + 1, f64::INFINITY);
+                col_max.resize(c + 1, f64::NEG_INFINITY);
+            }
+            col_nnz[c] += 1;
+            if v < col_min[c] {
+                col_min[c] = v;
+            }
+            if v > col_max[c] {
+                col_max[c] = v;
+            }
+            Ok(())
+        }))?;
+        row_nnz.push(nnz - row_start);
+        max_buffered = max_buffered.max(ind.buf.len() + val.buf.len());
+    }
+    // Complete the spill files so the stitch phase can reopen them by
+    // path for the stats pass.
+    other(ind.flush())?;
+    other(val.flush())?;
+    Ok(ShardData {
+        y: acc.y,
+        qids: acc.qids,
+        any_qid: acc.any_qid,
+        max_col: acc.max_col,
+        row_nnz,
+        nnz,
+        lines,
+        col_nnz,
+        col_min,
+        col_max,
+        ind,
+        val,
+        max_buffered,
+    })
+}
+
+/// Convert a libsvm text file to a pallas store. Two-phase pipeline
+/// (parallel parse, serial stitch), bounded memory; the output is
+/// byte-for-byte deterministic in the input — independent of
+/// `chunk_bytes` (flush cadence only) *and* of `n_threads` (shard
+/// decomposition only). Tests pin both invariances.
 pub fn convert_libsvm(
     input: impl AsRef<Path>,
     output: impl AsRef<Path>,
@@ -176,10 +357,43 @@ pub fn convert_libsvm(
     {
         bail!("refusing to overwrite the input: output {} is the input file", output.display());
     }
-    let ind_tmp = output.with_extension("pstore.indices.tmp");
-    let val_tmp = output.with_extension("pstore.values.tmp");
+    let meta = std::fs::metadata(input).with_context(|| format!("stat {}", input.display()))?;
+    // Byte-range sharding needs a seekable regular file with a
+    // trustworthy length. Anything else (FIFO, /dev/stdin, process
+    // substitution — where metadata reports length 0 regardless of
+    // content) streams serially to EOF instead: one shard spanning
+    // [0, u64::MAX), which never seeks and reads until the pipe closes.
+    let regular = meta.is_file();
+    let file_len = if regular { meta.len() } else { u64::MAX };
+    let threads = crate::util::resolve_threads(opts.n_threads);
+    // Shard count: a few tasks per worker (the work-stealing scheduler
+    // balances the rest), but never shards smaller than ~4 KiB — tiny
+    // inputs take the single-shard serial path. The choice only affects
+    // wall-clock, never a single output byte.
+    let n_shards = if !regular || threads <= 1 || file_len < 8192 {
+        1
+    } else {
+        ((4 * threads) as u64).min(file_len / 4096).clamp(1, 256) as usize
+    };
+    let tmp_paths: Vec<(PathBuf, PathBuf)> = (0..n_shards)
+        .map(|k| {
+            (
+                output.with_extension(format!("pstore.s{k}.ind.tmp")),
+                output.with_extension(format!("pstore.s{k}.val.tmp")),
+            )
+        })
+        .collect();
     let mut output_created = false;
-    let result = convert_impl(input, output, opts, &ind_tmp, &val_tmp, &mut output_created);
+    let result = convert_impl(
+        input,
+        output,
+        opts,
+        file_len,
+        threads,
+        n_shards,
+        &tmp_paths,
+        &mut output_created,
+    );
     if result.is_err() {
         // A failed conversion must leave neither a corrupt half-written
         // store (a zeroed header would autodetect as libsvm text and
@@ -189,60 +403,102 @@ pub fn convert_libsvm(
         if output_created {
             std::fs::remove_file(output).ok();
         }
-        std::fs::remove_file(&ind_tmp).ok();
-        std::fs::remove_file(&val_tmp).ok();
+        for (ind, val) in &tmp_paths {
+            std::fs::remove_file(ind).ok();
+            std::fs::remove_file(val).ok();
+        }
     }
     result
 }
 
+#[allow(clippy::too_many_arguments)]
 fn convert_impl(
     input: &Path,
     output: &Path,
     opts: &ConvertOptions,
-    ind_tmp: &Path,
-    val_tmp: &Path,
+    file_len: u64,
+    threads: usize,
+    n_shards: usize,
+    tmp_paths: &[(PathBuf, PathBuf)],
     output_created: &mut bool,
 ) -> Result<ConvertStats> {
     let name = input.display().to_string();
-    let reader = BufReader::new(
-        std::fs::File::open(input).with_context(|| format!("open {}", input.display()))?,
-    );
 
-    // --- Pass: parse lines, stream features to spill files. The
-    // per-row policy (zero skip, feature-space widening, qid defaults)
-    // lives in the shared RowAccumulator, so this path cannot drift
-    // from libsvm::parse. ---
-    let spill_cap = (opts.chunk_bytes / 2).max(64);
-    let mut ind_spill = SpillBuf::create(ind_tmp.to_path_buf(), spill_cap)?;
-    let mut val_spill = SpillBuf::create(val_tmp.to_path_buf(), spill_cap)?;
-    let mut acc = RowAccumulator::default();
-    let mut indptr: Vec<u64> = vec![0];
-    let mut nnz = 0u64;
-    let mut max_buffered = 0usize;
-    let mut ex = Example::default();
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        if !parse_line(&line, &name, lineno + 1, &mut ex)? {
-            continue;
+    // --- Phase 1: parse disjoint byte ranges. The per-row policy (zero
+    // skip, feature-space widening, qid defaults) lives in the shared
+    // RowAccumulator, so this path cannot drift from libsvm::parse. ---
+    let spill_cap = (opts.chunk_bytes / (2 * n_shards)).max(64);
+    let mut results: Vec<ShardSlot> = (0..n_shards).map(|_| None).collect();
+    if n_shards == 1 {
+        let (ind_path, val_path) = tmp_paths[0].clone();
+        results[0] = Some(parse_shard(input, &name, 0, file_len, spill_cap, ind_path, val_path));
+    } else {
+        let pool = WorkerPool::new(threads.min(n_shards));
+        let name_ref: &str = &name;
+        let mut tasks: Vec<Task> = Vec::with_capacity(n_shards);
+        for (k, slot) in results.iter_mut().enumerate() {
+            let lo = k as u64 * file_len / n_shards as u64;
+            let hi = (k as u64 + 1) * file_len / n_shards as u64;
+            let (ind_path, val_path) = tmp_paths[k].clone();
+            tasks.push(Box::new(move || {
+                *slot = Some(parse_shard(
+                    input, name_ref, lo, hi, spill_cap, ind_path, val_path,
+                ));
+            }));
         }
-        acc.push(&ex, |idx, val| {
-            let col = u32::try_from(idx - 1)
-                .map_err(|_| anyhow::anyhow!("{name}: feature index {idx} exceeds u32"))?;
-            ind_spill.push(&col.to_le_bytes())?;
-            val_spill.push(&val.to_le_bytes())?;
-            nnz += 1;
-            Ok(())
-        })?;
-        max_buffered = max_buffered.max(ind_spill.buf.len() + val_spill.buf.len());
-        indptr.push(nnz);
+        pool.run(tasks);
     }
-    let any_qid = acc.any_qid;
-    let max_col = acc.max_col;
-    let (y, qid, _) = acc.into_qid();
-    let rows = y.len();
 
-    // --- Group index + pair counts (O(m) state, same code as the text
-    // path so the loaded values are bit-identical). ---
+    // --- Earliest failure wins; every shard before it succeeded, so
+    // the global line number of the offending line is exact. ---
+    let mut shards: Vec<ShardData> = Vec::with_capacity(n_shards);
+    let mut lines_before = 0usize;
+    for slot in results {
+        match slot.expect("every shard task ran") {
+            Ok(s) => {
+                lines_before += s.lines;
+                shards.push(s);
+            }
+            Err(ShardFail::Other(e)) => return Err(e),
+            Err(ShardFail::Line { local, text }) => {
+                let global = lines_before + local;
+                let mut ex = Example::default();
+                return Err(match parse_line(&text, &name, global, &mut ex) {
+                    Err(e) => e,
+                    Ok(_) => anyhow::anyhow!("{name}:{global}: unparseable line"),
+                });
+            }
+        }
+    }
+
+    // --- Phase 2: serial deterministic stitch, in shard (byte) order. ---
+    let rows: usize = shards.iter().map(|s| s.y.len()).sum();
+    let nnz: u64 = shards.iter().map(|s| s.nnz).sum();
+    let any_qid = shards.iter().any(|s| s.any_qid);
+    let max_col = shards.iter().map(|s| s.max_col).max().unwrap_or(0);
+    let max_buffered: usize = shards.iter().map(|s| s.max_buffered).sum();
+
+    let mut indptr: Vec<u64> = Vec::with_capacity(rows + 1);
+    indptr.push(0);
+    let mut running = 0u64;
+    for s in &shards {
+        for &c in &s.row_nnz {
+            running += c;
+            indptr.push(running);
+        }
+    }
+    debug_assert_eq!(running, nnz);
+
+    let mut y: Vec<f64> = Vec::with_capacity(rows);
+    let mut qids: Vec<u64> = Vec::with_capacity(rows);
+    for s in &mut shards {
+        y.append(&mut s.y);
+        qids.append(&mut s.qids);
+    }
+    let qid = if any_qid { Some(qids) } else { None };
+
+    // Group index + pair counts (O(m) state, same code as the text
+    // path so the loaded values are bit-identical).
     let gindex = qid.as_ref().map(|q| GroupIndex::build(q, &y));
     let n_pairs = match &gindex {
         Some(gi) => {
@@ -256,12 +512,47 @@ fn convert_impl(
     };
     let n_groups = gindex.as_ref().map(|g| g.n_groups()).unwrap_or(0);
 
+    // Column stats. Counts are exact integers and min/max folds are
+    // order-independent over finite values, so the per-shard partials
+    // merge in shard order without touching a bit; the float sums are
+    // NOT order-independent, so they are computed below in one serial
+    // pass in row-major entry order — the same fold a from-scratch
+    // recomputation performs (docs/DETERMINISM.md, invariant 3).
+    let mut col_nnz = vec![0u64; max_col];
+    let mut col_min = vec![f64::INFINITY; max_col];
+    let mut col_max = vec![f64::NEG_INFINITY; max_col];
+    for s in &shards {
+        for (c, &n) in s.col_nnz.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            col_nnz[c] += n;
+            if s.col_min[c] < col_min[c] {
+                col_min[c] = s.col_min[c];
+            }
+            if s.col_max[c] > col_max[c] {
+                col_max[c] = s.col_max[c];
+            }
+        }
+    }
+    let (ind_spills, val_spills): (Vec<SpillBuf>, Vec<SpillBuf>) =
+        shards.into_iter().map(|s| (s.ind, s.val)).unzip();
+    let mut col_sum = vec![0.0f64; max_col];
+    let mut col_sumsq = vec![0.0f64; max_col];
+    for (ind, val) in ind_spills.iter().zip(&val_spills) {
+        sum_spill_pair(ind, val, &mut col_sum, &mut col_sumsq)?;
+    }
+
     // --- Assemble the output file. ---
+    let mut flags = FLAG_HAS_COLSTATS;
+    if qid.is_some() {
+        flags |= FLAG_HAS_QID;
+    }
     let mut header = Header {
         rows: rows as u64,
         cols: max_col as u64,
         nnz,
-        flags: if any_qid { FLAG_HAS_QID } else { 0 },
+        flags,
         n_groups: n_groups as u64,
         n_pairs,
         checksum: 0,
@@ -284,10 +575,14 @@ fn convert_impl(
 
     w.pad8()?;
     header.offsets[SEC_INDICES] = w.pos;
-    copy_spill(&mut w, ind_spill, opts.chunk_bytes)?;
+    for spill in ind_spills {
+        copy_spill(&mut w, spill, opts.chunk_bytes)?;
+    }
     w.pad8()?;
     header.offsets[SEC_VALUES] = w.pos;
-    copy_spill(&mut w, val_spill, opts.chunk_bytes)?;
+    for spill in val_spills {
+        copy_spill(&mut w, spill, opts.chunk_bytes)?;
+    }
 
     w.pad8()?;
     header.offsets[SEC_Y] = w.pos;
@@ -313,6 +608,12 @@ fn convert_impl(
         w.write_u64s(pairs.iter().copied())?;
     }
 
+    header.offsets[SEC_COLSTATS] = w.pos;
+    w.write_u64s((0..max_col).flat_map(|c| {
+        let (mn, mx) = if col_nnz[c] == 0 { (0.0, 0.0) } else { (col_min[c], col_max[c]) };
+        [col_nnz[c], col_sum[c].to_bits(), col_sumsq[c].to_bits(), mn.to_bits(), mx.to_bits()]
+    }))?;
+
     let out_bytes = w.pos;
     // Fold the final header (checksum slot excluded) into the payload
     // stream — full-file coverage, so any later byte flip is caught.
@@ -333,7 +634,43 @@ fn convert_impl(
         n_pairs,
         out_bytes,
         max_buffered_bytes: max_buffered,
+        threads,
+        shards: n_shards,
     })
+}
+
+/// Accumulate per-column `sum`/`sumsq` from one shard's (index, value)
+/// spill pair, in entry order. Called across shards in shard order,
+/// this is exactly the serial row-major fold over the final CSR — the
+/// converter's one deliberately serial float reduction.
+fn sum_spill_pair(
+    ind: &SpillBuf,
+    val: &SpillBuf,
+    sum: &mut [f64],
+    sumsq: &mut [f64],
+) -> Result<()> {
+    let n = ind.len() / 4;
+    debug_assert_eq!(ind.len() % 4, 0);
+    debug_assert_eq!(val.len(), n * 8);
+    let mut fi = BufReader::with_capacity(
+        1 << 16,
+        std::fs::File::open(&ind.path).context("reopening index spill")?,
+    );
+    let mut fv = BufReader::with_capacity(
+        1 << 17,
+        std::fs::File::open(&val.path).context("reopening value spill")?,
+    );
+    let mut cb = [0u8; 4];
+    let mut vb = [0u8; 8];
+    for _ in 0..n {
+        fi.read_exact(&mut cb).context("reading index spill")?;
+        fv.read_exact(&mut vb).context("reading value spill")?;
+        let c = u32::from_le_bytes(cb) as usize;
+        let v = f64::from_le_bytes(vb);
+        sum[c] += v;
+        sumsq[c] += v * v;
+    }
+    Ok(())
 }
 
 /// Copy a finalized spill file into the output in `chunk_bytes`-bounded

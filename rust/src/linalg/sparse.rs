@@ -332,6 +332,18 @@ impl CsrMatrix {
         self.view().row_range(lo, hi).to_owned_matrix()
     }
 
+    /// Replace every stored value with `f(col, value)` in place — the
+    /// mutation hook behind column-wise transforms such as the
+    /// trainer's `--normalize l2-col`. The sparsity structure (stored
+    /// positions, row offsets) is untouched even when `f` returns 0.0,
+    /// so the result stays bit-comparable entry-for-entry with the
+    /// input.
+    pub fn map_values(&mut self, mut f: impl FnMut(usize, f64) -> f64) {
+        for (k, v) in self.values.iter_mut().enumerate() {
+            *v = f(self.indices[k] as usize, *v);
+        }
+    }
+
     /// Gather an arbitrary subset of rows into a new matrix.
     pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
         let mut triplets = Vec::new();
@@ -430,6 +442,24 @@ mod tests {
     use super::*;
     use crate::linalg::dense::DenseMatrix;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn map_values_scales_by_column_without_touching_structure() {
+        let mut m = CsrMatrix::from_triplets(
+            2,
+            3,
+            vec![(0, 0, 2.0), (0, 2, 4.0), (1, 1, 6.0), (1, 2, 0.5)],
+        );
+        let before_structure: Vec<_> = (0..2).map(|i| m.row(i).0.to_vec()).collect();
+        m.map_values(|c, v| v / (c + 1) as f64);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[2.0, 4.0 / 3.0][..]));
+        assert_eq!(m.row(1), (&[1u32, 2][..], &[3.0, 0.5 / 3.0][..]));
+        // Zero results stay stored: structure is invariant.
+        m.map_values(|_, _| 0.0);
+        for (i, idx) in before_structure.iter().enumerate() {
+            assert_eq!(m.row(i).0, &idx[..]);
+        }
+    }
 
     fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> CsrMatrix {
         let mut t = Vec::new();

@@ -10,7 +10,8 @@
 //! balance skewed inputs — and every task writes a disjoint output slot,
 //! with all floating-point reductions running serially afterwards in
 //! task order, so *which* worker executes a task never touches a result
-//! bit.
+//! bit (the three bit-identity invariants this relies on are written
+//! down in `docs/DETERMINISM.md`).
 //!
 //! **Query-grouped data** (the document-retrieval setting): the risk is
 //! an average of per-query losses, so query groups are packed by a

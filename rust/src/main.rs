@@ -5,7 +5,9 @@
 //! - `train`      — train a model on a libsvm/pstore file or a synthetic set
 //! - `eval`       — pairwise ranking error of a saved model on a dataset
 //! - `gen-data`   — write a synthetic dataset in libsvm format
-//! - `convert`    — libsvm text → memory-mappable pallas store (`.pstore`)
+//! - `convert`    — libsvm text → memory-mappable pallas store (`.pstore`),
+//!   optionally with a parallel parse phase (`--threads`)
+//! - `stats`      — pretty-print a store's cached per-column statistics
 //! - `mem-probe`  — child process used by the Fig.-3 memory benchmark
 //! - `info`       — dataset statistics (m, n, s, r, N)
 //!
@@ -17,7 +19,9 @@
 //! exit with code 2 — no panics, no backtraces.
 
 use anyhow::{bail, Context, Result};
-use ranksvm::coordinator::{evaluate, memprobe, train, BackendKind, Method, RankModel, TrainConfig};
+use ranksvm::coordinator::{
+    evaluate, memprobe, train, BackendKind, Method, Normalize, RankModel, TrainConfig,
+};
 use ranksvm::data::{libsvm, materialize, store, synthetic, Dataset, DatasetView, LoadedDataset};
 use ranksvm::util::cli::Args;
 use ranksvm::util::json::Json;
@@ -30,10 +34,15 @@ USAGE:
   ranksvm train     (--data F | --synthetic K --m M) [--method tree|pair|rlevel|prsvm|tree-dedup|tree-fenwick]
                     [--lambda L] [--epsilon E] [--max-iter I] [--backend native|native-csc|xla]
                     [--threads T]  (0 = all cores; results are identical for any T)
+                    [--normalize none|l2-col]  (l2-col divides each column by its
+                      l2 norm, consuming store-cached stats when available)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
   ranksvm eval      --model MODEL --data F
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
-  ranksvm convert   --data F.libsvm --out F.pstore [--chunk-kib N]
+  ranksvm convert   --data F.libsvm --out F.pstore [--chunk-kib N] [--threads T]
+                    (parallel parse; output bytes identical for every T)
+  ranksvm stats     F.pstore [--limit K] [--no-verify]
+                    (cached per-column stats; --limit 0 prints all columns)
   ranksvm info      (--data F | --synthetic K --m M)
   ranksvm mem-probe (--dataset K | --data F) --m M --method NAME [--lambda L] [--max-iter I]
   ranksvm perf      [--sizes N,N,..] [--reps R] [--synthetic K]
@@ -98,6 +107,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         artifacts_dir: args.str_or("artifacts", "artifacts"),
         verbose: args.flag("verbose"),
         n_threads: args.usize_or("threads", 0)?,
+        normalize: Normalize::parse(&args.str_or("normalize", "none"))
+            .context("bad --normalize (none|l2-col)")?,
     };
     let test_size = args.usize_or("test-size", 0)?;
     // A shuffled split needs owned storage; materialize a store first.
@@ -108,7 +119,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         LoadedDataset::Store(st) => st.is_mapped(),
         LoadedDataset::Owned(_) => false,
     };
-    let (train_holder, test_ds): (LoadedDataset, Option<Dataset>) = if test_size > 0 {
+    let (train_holder, mut test_ds): (LoadedDataset, Option<Dataset>) = if test_size > 0 {
         let owned = match loaded {
             LoadedDataset::Owned(ds) => ds,
             LoadedDataset::Store(st) => materialize(&st),
@@ -120,6 +131,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let train_view = train_holder.view();
     let out = train(train_view, &cfg)?;
+    // --normalize trains in the scaled feature space, so a held-out
+    // split must be scored in that same space: scale it with the
+    // *training-set* norms — the exact norms train() derived (same
+    // row-major fold over the same training view), so test_error is
+    // measured against the model's actual inputs, not raw features.
+    if cfg.normalize == Normalize::L2Col {
+        if let Some(te) = &mut test_ds {
+            let norms: Vec<f64> = ranksvm::data::store::compute_col_stats(train_view.x())
+                .iter()
+                .map(|s| s.sumsq.sqrt())
+                .collect();
+            te.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
+        }
+    }
     let mut record = vec![
         ("dataset".to_string(), Json::Str(train_view.name().to_string())),
         ("m".to_string(), train_view.len().into()),
@@ -127,6 +152,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("s".to_string(), train_view.sparsity().into()),
         ("levels".to_string(), train_view.n_levels().into()),
         ("threads".to_string(), cfg.resolved_threads().into()),
+        ("normalize".to_string(), Json::Str(cfg.normalize.name().to_string())),
         ("mmap".to_string(), (mapped && test_size == 0).into()),
     ];
     if let Json::Obj(base) = out.to_json() {
@@ -177,7 +203,12 @@ fn cmd_convert(args: &Args) -> Result<()> {
         bail!("{input} is already a pallas store");
     }
     let chunk_kib = args.usize_or("chunk-kib", 8192)?;
-    let opts = store::ConvertOptions { chunk_bytes: chunk_kib.max(1) * 1024 };
+    let opts = store::ConvertOptions {
+        chunk_bytes: chunk_kib.max(1) * 1024,
+        // Parallel parse is opt-in (`0` = all cores): output bytes are
+        // identical for every value, so this is purely a speed knob.
+        n_threads: args.usize_or("threads", 1)?,
+    };
     let stats = store::convert_libsvm(input, output, &opts)?;
     let mut record = vec![
         ("input".to_string(), Json::Str(input.to_string())),
@@ -190,11 +221,73 @@ fn cmd_convert(args: &Args) -> Result<()> {
         ("out_bytes".to_string(), (stats.out_bytes as usize).into()),
         ("chunk_bytes".to_string(), opts.chunk_bytes.into()),
         ("max_buffered_bytes".to_string(), stats.max_buffered_bytes.into()),
+        ("threads".to_string(), stats.threads.into()),
+        ("shards".to_string(), stats.shards.into()),
     ];
     if let Some(peak) = ranksvm::util::peak_rss_kib() {
         record.push(("peak_rss_kib".to_string(), (peak as usize).into()));
     }
     println!("{}", Json::Obj(record).to_string());
+    Ok(())
+}
+
+/// `ranksvm stats F.pstore` — one summary JSON line plus a per-column
+/// table of the cached statistics (libsvm 1-based column numbering).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let path = args
+        .get("data")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(1).cloned())
+        .context("need a store: ranksvm stats FILE.pstore")?;
+    if !store::is_store_file(&path) {
+        bail!("{path} is not a pallas store (convert libsvm text with `ranksvm convert` first)");
+    }
+    let st = if args.flag("no-verify") {
+        store::PallasStore::open_unchecked(&path)?
+    } else {
+        store::PallasStore::open(&path)?
+    };
+    let stats = st.col_stats();
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("store", Json::Str(path.clone())),
+            ("m", st.len().into()),
+            ("n", st.dim().into()),
+            ("nnz", st.nnz().into()),
+            ("groups", st.n_groups().into()),
+            ("n_pairs", (st.n_pairs() as usize).into()),
+            ("file_bytes", st.file_bytes().into()),
+            ("colstats", stats.is_some().into()),
+        ])
+        .to_string()
+    );
+    let Some(stats) = stats else {
+        eprintln!("{path}: no cached column statistics in this store");
+        return Ok(());
+    };
+    let limit = args.usize_or("limit", 20)?;
+    let shown = if limit == 0 { stats.len() } else { stats.len().min(limit) };
+    println!(
+        "{:>8} {:>10} {:>13} {:>13} {:>13} {:>13} {:>13}",
+        "col", "nnz", "l2_norm", "mean", "min", "max", "sum"
+    );
+    for (c, s) in stats.iter().take(shown).enumerate() {
+        let mean = if s.nnz > 0 { s.sum / s.nnz as f64 } else { 0.0 };
+        println!(
+            "{:>8} {:>10} {:>13.6e} {:>13.6e} {:>13.6e} {:>13.6e} {:>13.6e}",
+            c + 1, // libsvm feature indices are 1-based
+            s.nnz,
+            s.sumsq.sqrt(),
+            mean,
+            s.min,
+            s.max,
+            s.sum,
+        );
+    }
+    if shown < stats.len() {
+        eprintln!("... {} more columns (--limit 0 prints all)", stats.len() - shown);
+    }
     Ok(())
 }
 
@@ -374,6 +467,7 @@ fn run() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("gen-data") => cmd_gen_data(&args),
         Some("convert") => cmd_convert(&args),
+        Some("stats") => cmd_stats(&args),
         Some("info") => cmd_info(&args),
         Some("mem-probe") => cmd_mem_probe(&args),
         Some("perf") => cmd_perf(&args),

@@ -9,11 +9,14 @@
 //! work-stealing scheduler (deque per worker, LIFO local pop,
 //! seeded randomized-victim stealing), and [`plan::WorkPlan`] packs
 //! skewed per-item weights (query-group sizes) into the bounded-weight
-//! task runs the scheduler balances.
+//! task runs the scheduler balances. Scheduling freedom never touches a
+//! result bit: every submitting region obeys the three bit-identity
+//! invariants of `docs/DETERMINISM.md` (exact-integer decomposition,
+//! disjoint task writes, serial fixed-order float reductions).
 //!
 //! `python/compile/aot.py` lowers the JAX/Pallas compute graphs (L1/L2)
 //! once, at build time, to **HLO text** under `artifacts/` together with
-//! a line-based `manifest.txt`. The [`backend`] module loads those
+//! a line-based `manifest.txt`. The `backend` module loads those
 //! artifacts with `HloModuleProto::from_text_file`, compiles them on the
 //! PJRT CPU client and executes them from the training hot path — Python
 //! is never invoked at runtime. (Text, not serialized protos: jax ≥ 0.5

@@ -30,7 +30,9 @@
 //! fixed by the task *index*, not by completion time (see
 //! `losses/sharded.rs` and `compute::ParallelBackend`). *Which* worker
 //! runs a task — locally or stolen — therefore never touches a result
-//! bit; the skew/determinism battery in `tests/scheduler.rs` pins this.
+//! bit; the skew/determinism battery in `tests/scheduler.rs` pins this,
+//! and `docs/DETERMINISM.md` writes the contract down as three
+//! invariants every region submitting to this pool must satisfy.
 //!
 //! The API is scope-shaped: [`WorkerPool::run`] takes a batch of
 //! closures that may borrow caller stack data (`'env`), executes them on
@@ -44,7 +46,7 @@
 //! inline path.
 //!
 //! Per-batch executed/stolen counters live behind the `pool-stats` cargo
-//! feature (see [`PoolStats`]): the skew benchmark uses them to show the
+//! feature (see `PoolStats`): the skew benchmark uses them to show the
 //! stealing actually engages on imbalanced plans, while default builds
 //! pay nothing for them.
 

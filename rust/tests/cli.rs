@@ -68,6 +68,35 @@ fn full_cli_workflow() {
     assert!(stdout.contains("\"test_error\":"));
     assert!(model.is_file());
 
+    // --normalize trains in the scaled space and must score the
+    // held-out split there too (training-set norms): the run succeeds,
+    // reports the mode, and the test error stays a sane probability.
+    let (ok, stdout, err) = run(&[
+        "train",
+        "--data",
+        data.to_str().unwrap(),
+        "--method",
+        "tree",
+        "--lambda",
+        "0.1",
+        "--normalize",
+        "l2-col",
+        "--test-size",
+        "100",
+    ]);
+    assert!(ok, "normalized train failed: {err}");
+    assert!(stdout.contains("\"normalize\":\"l2-col\""), "train output: {stdout}");
+    let te: f64 = stdout
+        .split("\"test_error\":")
+        .nth(1)
+        .and_then(|s| s.split([',', '}']).next())
+        .and_then(|s| s.trim().parse().ok())
+        .expect("test_error in normalized train output");
+    assert!(
+        (0.0..=0.45).contains(&te),
+        "normalized test_error {te} — held-out split scored in the wrong feature space?"
+    );
+
     // eval the saved model
     let (ok, stdout, _) = run(&[
         "eval",

@@ -1,0 +1,205 @@
+//! docs/STORE_FORMAT.md ↔ `format.rs` consistency.
+//!
+//! The store-format document is normative, so it must not drift from
+//! the code. This suite parses the spec's markdown tables (header
+//! fields, COLSTATS layout, flag registry) and verifies every claimed
+//! offset, size, and constant against the real encoder — by probing an
+//! encoded header with sentinel values, not by trusting a second copy
+//! of the numbers.
+
+use ranksvm::data::store::{
+    ColStat, Header, CHECKSUM_FIELD, COLSTAT_BYTES, FLAG_HAS_COLSTATS, FLAG_HAS_QID,
+    HEADER_LEN, KNOWN_FLAGS, MAGIC, N_SECTIONS, OFFSETS_START, VERSION,
+};
+
+/// One parsed `| offset | size | `name` … |` table row.
+#[derive(Debug)]
+struct Row {
+    offset: usize,
+    size: usize,
+    name: String,
+}
+
+fn spec_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/STORE_FORMAT.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {path}: {e} — the normative spec must exist"))
+}
+
+/// Extract the backticked token of a markdown cell ("`rows` — …" → "rows").
+fn backticked(cell: &str) -> Option<String> {
+    let start = cell.find('`')? + 1;
+    let end = start + cell[start..].find('`')?;
+    Some(cell[start..end].to_string())
+}
+
+/// Collect numeric table rows under the section whose heading contains
+/// `heading` (until the next heading).
+fn table_rows(doc: &str, heading: &str) -> Vec<Row> {
+    let mut in_section = false;
+    let mut rows = Vec::new();
+    for line in doc.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains(heading);
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // A well-formed row splits into ["", offset, size, field, ""].
+        if cells.len() < 5 {
+            continue;
+        }
+        let (Ok(offset), Ok(size)) = (cells[1].parse::<usize>(), cells[2].parse::<usize>())
+        else {
+            continue; // separator / header rows
+        };
+        let Some(name) = backticked(cells[3]) else { continue };
+        rows.push(Row { offset, size, name });
+    }
+    rows
+}
+
+fn find<'a>(rows: &'a [Row], name: &str) -> &'a Row {
+    rows.iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("spec table is missing a `{name}` row: {rows:?}"))
+}
+
+/// Header with a distinct sentinel in every field, so a probe at a
+/// documented offset can only match the field the doc claims is there.
+fn sentinel_header() -> Header {
+    Header {
+        rows: 0x1111_1111_1111_1111,
+        cols: 0x2222_2222_2222_2222,
+        nnz: 0x3333_3333_3333_3333,
+        flags: 0x4444_4444_4444_4444,
+        n_groups: 0x5555_5555_5555_5555,
+        n_pairs: 0x6666_6666_6666_6666,
+        checksum: 0x7777_7777_7777_7777,
+        offsets: [
+            0x0101_0101_0101_0101,
+            0x0202_0202_0202_0202,
+            0x0303_0303_0303_0303,
+            0x0404_0404_0404_0404,
+            0x0505_0505_0505_0505,
+            0x0606_0606_0606_0606,
+            0x0707_0707_0707_0707,
+            0x0808_0808_0808_0808,
+            0x0909_0909_0909_0909,
+        ],
+    }
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+#[test]
+fn header_table_offsets_match_the_encoder() {
+    let doc = spec_text();
+    let rows = table_rows(&doc, "Header");
+    let h = sentinel_header();
+    let bytes = h.encode();
+
+    let magic = find(&rows, "magic");
+    assert_eq!((magic.offset, magic.size), (0, MAGIC.len()));
+    assert_eq!(&bytes[magic.offset..magic.offset + magic.size], &MAGIC);
+
+    let version = find(&rows, "version");
+    assert_eq!((version.offset, version.size), (7, 1));
+    assert_eq!(bytes[version.offset], VERSION);
+
+    // Every u64 count field: the sentinel must sit at the documented
+    // offset, proving the doc describes the real encoding.
+    for (name, sentinel) in [
+        ("rows", h.rows),
+        ("cols", h.cols),
+        ("nnz", h.nnz),
+        ("flags", h.flags),
+        ("n_groups", h.n_groups),
+        ("n_pairs", h.n_pairs),
+        ("checksum", h.checksum),
+    ] {
+        let row = find(&rows, name);
+        assert_eq!(row.size, 8, "{name}");
+        assert_eq!(u64_at(&bytes, row.offset), sentinel, "{name} is not at offset {}", row.offset);
+    }
+    let checksum = find(&rows, "checksum");
+    assert_eq!(checksum.offset, CHECKSUM_FIELD.start);
+    assert_eq!(checksum.offset + checksum.size, CHECKSUM_FIELD.end);
+
+    let offsets = find(&rows, "section_offsets");
+    assert_eq!((offsets.offset, offsets.size), (OFFSETS_START, 8 * N_SECTIONS));
+    for (k, &sentinel) in h.offsets.iter().enumerate() {
+        assert_eq!(u64_at(&bytes, offsets.offset + 8 * k), sentinel, "section offset {k}");
+    }
+
+    let reserved = find(&rows, "reserved");
+    assert_eq!(reserved.offset, OFFSETS_START + 8 * N_SECTIONS);
+    assert_eq!(reserved.offset + reserved.size, HEADER_LEN);
+    assert!(bytes[reserved.offset..HEADER_LEN].iter().all(|&b| b == 0));
+
+    // The documented table covers the whole header, gap-free.
+    let mut covered: Vec<(usize, usize)> = rows.iter().map(|r| (r.offset, r.size)).collect();
+    covered.sort_unstable();
+    let mut cursor = 0usize;
+    for (off, size) in covered {
+        assert_eq!(off, cursor, "header table has a gap or overlap at byte {cursor}");
+        cursor = off + size;
+    }
+    assert_eq!(cursor, HEADER_LEN, "header table does not cover all {HEADER_LEN} bytes");
+
+    // Prose constants.
+    assert!(doc.contains(&format!("{HEADER_LEN}-byte header")), "header size prose");
+    assert!(doc.contains(&format!("version {VERSION}")), "version prose");
+}
+
+#[test]
+fn colstats_table_matches_the_struct_layout() {
+    let doc = spec_text();
+    let rows = table_rows(&doc, "COLSTATS layout");
+    assert_eq!(rows.len(), 5, "COLSTATS records have exactly five fields: {rows:?}");
+    for (name, offset) in [
+        ("nnz", std::mem::offset_of!(ColStat, nnz)),
+        ("sum", std::mem::offset_of!(ColStat, sum)),
+        ("sumsq", std::mem::offset_of!(ColStat, sumsq)),
+        ("min", std::mem::offset_of!(ColStat, min)),
+        ("max", std::mem::offset_of!(ColStat, max)),
+    ] {
+        let row = find(&rows, name);
+        assert_eq!(row.offset, offset, "{name} offset");
+        assert_eq!(row.size, 8, "{name} size");
+    }
+    assert_eq!(COLSTAT_BYTES, std::mem::size_of::<ColStat>());
+    assert!(doc.contains("n × 40"), "colstats section length prose");
+}
+
+#[test]
+fn flag_registry_matches_the_constants() {
+    let doc = spec_text();
+    // Parse `| bit | mask | `NAME` | …` rows of the registry table.
+    let mut masks = std::collections::HashMap::new();
+    for line in doc.lines() {
+        if !line.starts_with('|') || !line.contains("0x") {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 5 {
+            continue;
+        }
+        let Some(hex) = cells[2].strip_prefix("0x") else { continue };
+        let Ok(mask) = u64::from_str_radix(hex, 16) else { continue };
+        if let Some(name) = backticked(cells[3]) {
+            masks.insert(name, mask);
+        }
+    }
+    assert_eq!(masks.get("HAS_QID"), Some(&FLAG_HAS_QID), "{masks:?}");
+    assert_eq!(masks.get("HAS_COLSTATS"), Some(&FLAG_HAS_COLSTATS), "{masks:?}");
+    assert_eq!(
+        masks.values().fold(0u64, |a, &m| a | m),
+        KNOWN_FLAGS,
+        "the registry must list exactly the known flag bits"
+    );
+}

@@ -7,8 +7,10 @@
 //! converter's bounded-memory guarantee (exact spill-buffer accounting
 //! in-process; child-process peak-RSS in `convert_cli_bounded_memory`).
 
-use ranksvm::coordinator::{evaluate, memprobe, train, Method, TrainConfig};
-use ranksvm::data::store::{convert_libsvm, is_store_file, ConvertOptions, PallasStore};
+use ranksvm::coordinator::{evaluate, memprobe, train, Method, Normalize, TrainConfig};
+use ranksvm::data::store::{
+    compute_col_stats, convert_libsvm, is_store_file, ConvertOptions, PallasStore, VERSION,
+};
 use ranksvm::data::{libsvm, materialize, synthetic, Dataset, DatasetView};
 use ranksvm::losses::GroupIndex;
 
@@ -145,7 +147,7 @@ fn converter_output_is_chunk_size_invariant_and_bounded() {
     libsvm::write(&ds, &text).unwrap();
     let out_small = dir.join("chunks_small.pstore");
     let out_big = dir.join("chunks_big.pstore");
-    let small = ConvertOptions { chunk_bytes: 4096 };
+    let small = ConvertOptions { chunk_bytes: 4096, ..Default::default() };
     let stats_small = convert_libsvm(&text, &out_small, &small).unwrap();
     let stats_big = convert_libsvm(&text, &out_big, &ConvertOptions::default()).unwrap();
     // The chunk size controls flush cadence only — identical bytes out.
@@ -176,9 +178,10 @@ fn corrupted_stores_are_rejected() {
     text_and_store(&ds, "victim");
     let good = std::fs::read(tmp("victim.pstore")).unwrap();
 
-    // Flip one payload byte → checksum mismatch.
+    // Flip one payload byte → checksum mismatch. (192 = v3 HEADER_LEN;
+    // halfway into the payload is well clear of the header.)
     let mut bad = good.clone();
-    let k = 128 + bad.len() / 2;
+    let k = 192 + bad.len() / 2;
     bad[k] ^= 0x40;
     let p = tmp("bad_checksum.pstore");
     std::fs::write(&p, &bad).unwrap();
@@ -330,6 +333,174 @@ fn materialize_store_supports_owned_ops() {
     assert_eq!(te_a.y, te_b.y);
 }
 
+/// The tentpole contract of the v3 parallel converter: the emitted
+/// `.pstore` is byte-identical for any `--threads` value — including the
+/// single-shard serial path — because shard concatenation happens in
+/// byte order and every float reduction is serial (phase 2). Whole-file
+/// compare at 1/2/8 threads, on a grouped and a global fixture.
+#[test]
+fn parallel_convert_is_byte_identical_for_any_thread_count() {
+    for (ds, tag) in [
+        (synthetic::queries(40, 25, 6, 70), "par_grouped"),
+        (synthetic::cadata_like(1500, 71), "par_global"),
+    ] {
+        let text = tmp(&format!("{tag}.libsvm"));
+        libsvm::write(&ds, &text).unwrap();
+        let mut outputs: Vec<Vec<u8>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let out = tmp(&format!("{tag}.t{threads}.pstore"));
+            let opts = ConvertOptions { chunk_bytes: 64 * 1024, n_threads: threads };
+            let stats = convert_libsvm(&text, &out, &opts).unwrap();
+            if threads == 1 {
+                assert_eq!(stats.shards, 1, "{tag}: thread 1 must take the serial path");
+            } else {
+                assert!(
+                    stats.shards > 1,
+                    "{tag}: fixture too small to engage sharding ({} shards)",
+                    stats.shards
+                );
+                // Bounded ingest still holds, with per-shard slack.
+                assert!(
+                    stats.max_buffered_bytes <= opts.chunk_bytes + 64 * stats.shards,
+                    "{tag}: buffered {} vs budget {}",
+                    stats.max_buffered_bytes,
+                    opts.chunk_bytes
+                );
+            }
+            outputs.push(std::fs::read(&out).unwrap());
+        }
+        assert_eq!(outputs[0], outputs[1], "{tag}: 1 vs 2 threads diverge");
+        assert_eq!(outputs[0], outputs[2], "{tag}: 1 vs 8 threads diverge");
+        // The parallel artifact opens, verifies, and matches the text.
+        let store = PallasStore::open(tmp(&format!("{tag}.t8.pstore"))).unwrap();
+        let reference = libsvm::read(&text).unwrap();
+        assert_same_data(&reference, &store);
+    }
+}
+
+/// Parse errors surface with exact global `name:line` context no matter
+/// which shard hits them — the stitch phase reconstructs the line
+/// number from the preceding shards' line counts.
+#[test]
+fn parallel_convert_reports_global_line_numbers() {
+    // Own subdirectory: the spill-litter check below must not race with
+    // other tests' in-flight conversions.
+    let dir = std::env::temp_dir().join(format!("ranksvm_store_badline_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Big enough to shard at 4 threads; poison one line near the end.
+    let ds = synthetic::cadata_like(1200, 73);
+    let text = dir.join("par_badline.libsvm");
+    libsvm::write(&ds, &text).unwrap();
+    let mut contents = std::fs::read_to_string(&text).unwrap();
+    let bad_lineno = 1100usize;
+    let byte_off: usize = contents
+        .split_inclusive('\n')
+        .take(bad_lineno - 1)
+        .map(str::len)
+        .sum();
+    contents.insert_str(byte_off, "1 7:notanumber\n");
+    std::fs::write(&text, &contents).unwrap();
+    for threads in [1usize, 4] {
+        let out = dir.join(format!("par_badline.t{threads}.pstore"));
+        let opts = ConvertOptions { chunk_bytes: 64 * 1024, n_threads: threads };
+        let err = convert_libsvm(&text, &out, &opts).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!(":{bad_lineno}")),
+            "{threads} threads: error lost the line number: {err}"
+        );
+        assert!(!out.exists(), "{threads} threads: failed convert left an output behind");
+    }
+    // No spill litter either.
+    for leftover in std::fs::read_dir(text.parent().unwrap()).unwrap() {
+        let name = leftover.unwrap().file_name().to_string_lossy().to_string();
+        assert!(!name.ends_with(".tmp"), "spill litter: {name}");
+    }
+}
+
+/// COLSTATS acceptance: the cached per-column stats equal a from-scratch
+/// recomputation *exactly* (bitwise on the float fields), and expose the
+/// quantities the normalization path needs.
+#[test]
+fn colstats_match_recomputation_exactly() {
+    for (ds, tag) in [
+        (synthetic::queries(12, 15, 6, 80), "stats_grouped"),
+        (synthetic::reuters_like_with(400, 300, 12, 81), "stats_sparse"),
+    ] {
+        let (_, reference, store) = text_and_store(&ds, tag);
+        let stats = store.col_stats().expect("v3 stores cache column stats");
+        assert_eq!(stats.len(), reference.dim(), "{tag}");
+        let fresh = compute_col_stats(DatasetView::x(&reference));
+        assert_eq!(stats.len(), fresh.len(), "{tag}");
+        let mut total_nnz = 0u64;
+        for (c, (cached, recomputed)) in stats.iter().zip(&fresh).enumerate() {
+            assert_eq!(cached.nnz, recomputed.nnz, "{tag} col {c}");
+            assert_eq!(cached.sum.to_bits(), recomputed.sum.to_bits(), "{tag} col {c}");
+            assert_eq!(cached.sumsq.to_bits(), recomputed.sumsq.to_bits(), "{tag} col {c}");
+            assert_eq!(cached.min.to_bits(), recomputed.min.to_bits(), "{tag} col {c}");
+            assert_eq!(cached.max.to_bits(), recomputed.max.to_bits(), "{tag} col {c}");
+            if cached.nnz > 0 {
+                assert!(cached.min <= cached.max, "{tag} col {c}");
+                assert!(cached.sumsq >= 0.0, "{tag} col {c}");
+            } else {
+                assert_eq!((cached.min, cached.max), (0.0, 0.0), "{tag} col {c}");
+            }
+            total_nnz += cached.nnz;
+        }
+        assert_eq!(total_nnz as usize, store.nnz(), "{tag}: per-column nnz must sum to nnz");
+    }
+}
+
+/// Version policy: v1 and v2 files are refused with a structured version
+/// error telling the user to re-convert — on both open paths.
+#[test]
+fn v1_and_v2_stores_are_refused_with_version_error() {
+    let ds = synthetic::cadata_like(50, 90);
+    text_and_store(&ds, "oldver");
+    let good = std::fs::read(tmp("oldver.pstore")).unwrap();
+    assert_eq!(good[7], VERSION);
+    for old in [1u8, 2] {
+        let mut bad = good.clone();
+        bad[7] = old;
+        let p = tmp(&format!("oldver_v{old}.pstore"));
+        std::fs::write(&p, &bad).unwrap();
+        let checked = PallasStore::open(&p).unwrap_err().to_string();
+        let unchecked = PallasStore::open_unchecked(&p).unwrap_err().to_string();
+        for err in [checked, unchecked] {
+            assert!(err.contains("version"), "v{old}: {err}");
+            assert!(err.contains("convert"), "v{old}: {err}");
+        }
+    }
+}
+
+/// `--normalize l2-col` differential: training a store with cached
+/// stats, training text with recomputed stats, and training explicitly
+/// pre-normalized text must all produce bit-identical weights.
+#[test]
+fn normalize_l2_col_matches_pre_normalized_text() {
+    let ds = synthetic::queries(12, 15, 6, 91);
+    let (_, reference, store) = text_and_store(&ds, "norm");
+    // Explicit pre-normalization, using the same fold as the converter.
+    let stats = store.col_stats().unwrap();
+    let norms: Vec<f64> = stats.iter().map(|s| s.sumsq.sqrt()).collect();
+    let mut scaled = materialize(&reference);
+    scaled.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
+    let pre_text = tmp("norm_pre.libsvm");
+    libsvm::write(&scaled, &pre_text).unwrap();
+    let pre = libsvm::read(&pre_text).unwrap();
+
+    let mut norm_cfg = cfg(2);
+    norm_cfg.normalize = Normalize::L2Col;
+    let explicit = train(&pre, &cfg(2)).unwrap();
+    let from_store = train(&store, &norm_cfg).unwrap();
+    let from_text = train(&reference, &norm_cfg).unwrap();
+    assert_eq!(explicit.model.w, from_store.model.w, "store-cached stats diverge");
+    assert_eq!(from_store.model.w, from_text.model.w, "recomputed stats diverge");
+    assert_eq!(explicit.objective.to_bits(), from_store.objective.to_bits());
+    // And normalization actually changed the problem (sanity).
+    let plain = train(&store, &cfg(2)).unwrap();
+    assert_ne!(plain.model.w, from_store.model.w);
+}
+
 /// End-to-end through the release binary: gen-data → convert (with a
 /// tiny chunk budget, asserting the converter's memory stays bounded on
 /// a fixture much larger than the chunk) → train from text and store →
@@ -412,6 +583,31 @@ fn convert_cli_bounded_memory_and_weight_diff() {
     let a = std::fs::read(&model_text).unwrap();
     let b = std::fs::read(&model_store).unwrap();
     assert_eq!(a, b, "text-path and store-path weights diverge");
+
+    // Parallel conversion through the CLI is byte-identical to serial.
+    let pst2 = tmp("cli_fixture.t2.pstore");
+    let stdout = run(&[
+        "convert",
+        "--data",
+        text.to_str().unwrap(),
+        "--out",
+        pst2.to_str().unwrap(),
+        "--chunk-kib",
+        "64",
+        "--threads",
+        "2",
+    ]);
+    assert!(json_field(&stdout, "shards").is_some_and(|s| s > 1), "{stdout}");
+    assert_eq!(
+        std::fs::read(&pst).unwrap(),
+        std::fs::read(&pst2).unwrap(),
+        "CLI parallel convert diverged from serial"
+    );
+
+    // stats pretty-prints the cached column statistics.
+    let stdout = run(&["stats", pst.to_str().unwrap(), "--limit", "4"]);
+    assert!(stdout.contains("\"colstats\":true"), "{stdout}");
+    assert!(stdout.contains("l2_norm"), "{stdout}");
 
     // info autodetects and reports the format.
     let stdout = run(&["info", "--data", pst.to_str().unwrap()]);
