@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Inspect and validate a `.rsm` scoring model (docs/MODEL_FORMAT.md).
+
+A dependency-free second implementation of the format reader: magic,
+version, flag registry, section geometry, and the FNV-1a-64 full-file
+checksum in the documented stream order (payload, header[0:24],
+header[32:96]). Useful for poking at model files from ops tooling
+without the Rust toolchain, and as a cross-language check that the
+normative spec is implementable from its text alone.
+
+Usage:
+    python3 rsm_inspect.py MODEL.rsm [--dump-weights]
+
+Exit status: 0 valid, 1 structurally invalid / checksum mismatch,
+2 usage error.  `--selftest` builds a model in memory per the spec,
+round-trips it, and exercises every refusal path.
+"""
+
+import struct
+import sys
+
+MAGIC = b"RSMODL\0"
+VERSION = 1
+HEADER_LEN = 96
+N_SECTIONS = 2
+FLAG_HAS_NORMS = 0x1
+KNOWN_FLAGS = FLAG_HAS_NORMS
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+U64_MASK = (1 << 64) - 1
+
+
+def fnv1a64(chunks):
+    h = FNV_OFFSET
+    for chunk in chunks:
+        for b in chunk:
+            h = ((h ^ b) * FNV_PRIME) & U64_MASK
+    return h
+
+
+def fail(msg):
+    raise ValueError(msg)
+
+
+def parse(data):
+    """Validate `data` as a .rsm file; return a dict of its contents."""
+    if len(data) < HEADER_LEN:
+        fail(f"file is {len(data)} bytes, smaller than the {HEADER_LEN}-byte header")
+    if data[:7] != MAGIC:
+        fail("bad magic (not a scoring model)")
+    version = data[7]
+    if version != VERSION:
+        fail(f"unsupported scoring-model version {version} (this reader knows {VERSION})")
+    dim, flags, checksum = struct.unpack_from("<QQQ", data, 8)
+    offsets = struct.unpack_from(f"<{N_SECTIONS}Q", data, 32)
+    if any(b != 0 for b in data[48:HEADER_LEN]):
+        fail("reserved header bytes are not zero")
+    if flags & ~KNOWN_FLAGS:
+        fail(f"unknown scoring-model flag bits {flags & ~KNOWN_FLAGS:#x}")
+
+    lengths = [dim * 8, dim * 8 if flags & FLAG_HAS_NORMS else 0]
+    cursor = HEADER_LEN
+    for sec, (off, length) in enumerate(zip(offsets, lengths)):
+        if off % 8 != 0:
+            fail(f"section {sec} offset {off} is not 8-byte aligned")
+        if off < cursor:
+            fail(f"section {sec} offset {off} overlaps its predecessor")
+        cursor = off + length
+    if cursor != len(data):
+        fail(f"sections end at {cursor} but the file is {len(data)} bytes")
+
+    expected = fnv1a64([data[HEADER_LEN:], data[:24], data[32:HEADER_LEN]])
+    if expected != checksum:
+        fail(
+            "checksum mismatch — the model file is corrupt "
+            f"(expected {expected:#018x}, found {checksum:#018x})"
+        )
+
+    w = struct.unpack_from(f"<{dim}d", data, offsets[0])
+    norms = (
+        struct.unpack_from(f"<{dim}d", data, offsets[1])
+        if flags & FLAG_HAS_NORMS
+        else None
+    )
+    return {"dim": dim, "flags": flags, "w": w, "norms": norms}
+
+
+def build(w, norms=None):
+    """Writer mirror (the spec's byte-deterministic layout), for tests."""
+    dim = len(w)
+    flags = FLAG_HAS_NORMS if norms is not None else 0
+    if norms is not None and len(norms) != dim:
+        fail("norms length must equal dim")
+    payload = struct.pack(f"<{dim}d", *w)
+    if norms is not None:
+        payload += struct.pack(f"<{dim}d", *norms)
+    offsets = (HEADER_LEN, HEADER_LEN + dim * 8)
+    head = MAGIC + bytes([VERSION]) + struct.pack("<QQ", dim, flags)
+    tail = struct.pack(f"<{N_SECTIONS}Q", *offsets) + bytes(HEADER_LEN - 48)
+    checksum = fnv1a64([payload, head, tail])
+    return head + struct.pack("<Q", checksum) + tail + payload
+
+
+def selftest():
+    w = [0.5, -1.25e-7, 3.0, 0.0]
+    norms = [1.0, 2.5, 0.0, 7.125]
+    for ns in (None, norms):
+        good = build(w, ns)
+        got = parse(good)
+        assert got["dim"] == 4 and list(got["w"]) == w
+        assert (got["norms"] is None) == (ns is None)
+        if ns is not None:
+            assert list(got["norms"]) == norms
+        # Determinism: same parameters, same bytes.
+        assert build(w, ns) == good
+        # Every single-byte flip must be caught (full-file coverage).
+        for pos in range(0, len(good), 7):
+            bad = bytearray(good)
+            bad[pos] ^= 0x10
+            try:
+                parse(bytes(bad))
+            except ValueError:
+                continue
+            raise AssertionError(f"flip at byte {pos} went undetected")
+    # Refusals: version, flags, truncation, trailing bytes.
+    for doctor, needle in [
+        (lambda b: b[:7] + bytes([9]) + b[8:], "version"),
+        (lambda b: b[:16] + struct.pack("<Q", 0x80) + b[24:], "flag"),
+        (lambda b: b[:-8], "file is" if len(w) == 0 else "sections end"),
+        (lambda b: b + bytes(8), "sections end"),
+    ]:
+        try:
+            parse(doctor(build(w)))
+        except ValueError as e:
+            assert needle in str(e), (needle, e)
+        else:
+            raise AssertionError(f"doctored file ({needle}) was accepted")
+    print("rsm_inspect selftest: ok")
+
+
+def main(argv):
+    if "--selftest" in argv:
+        selftest()
+        return 0
+    args = [a for a in argv if not a.startswith("--")]
+    if len(args) != 1:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    try:
+        with open(args[0], "rb") as f:
+            model = parse(f.read())
+    except (OSError, ValueError) as e:
+        print(f"{args[0]}: {e}", file=sys.stderr)
+        return 1
+    normalize = "l2-col" if model["norms"] is not None else "none"
+    print(f"{args[0]}: valid scoring model, version {VERSION}")
+    print(f"  dim       {model['dim']}")
+    print(f"  normalize {normalize}")
+    w = model["w"]
+    if w:
+        print(f"  |w|_inf   {max(abs(x) for x in w):.6g}")
+    if "--dump-weights" in argv:
+        for j, x in enumerate(w):
+            print(f"  w[{j}] = {x!r}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

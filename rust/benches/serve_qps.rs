@@ -1,0 +1,184 @@
+//! Serving latency/throughput under Zipf traffic — the `ranksvm serve`
+//! companion to the training figures.
+//!
+//! Fixture: a `synthetic::zipf_queries` store (one giant query group, a
+//! long tail — the shape that motivated the fine-grained scheduler) and
+//! a request trace with Zipf-skewed row popularity: mostly single-row
+//! `rows` lookups plus a slice of `topk 10 group` rankings, the two
+//! request kinds a live ranker actually serves. Two modes per thread
+//! count:
+//!
+//! - **latency** — one request per batch (the interactive path); we
+//!   report p50/p99 per-request wall-clock in microseconds.
+//! - **throughput** — batches of `BATCH` requests fanned onto the
+//!   worker pool; we report sustained requests/second.
+//!
+//! Before timing anything, the bench asserts every thread count scores
+//! the whole store bit-identically (the serving parity contract).
+//!
+//! Output: the usual table on stdout + JSONL via `common::record`, and
+//! the tracked snapshot `BENCH_serve_qps.json` at the repo root is
+//! rewritten in place. Snapshot schema (one JSON object):
+//!
+//! ```json
+//! {
+//!   "bench": "serve_qps",          // constant
+//!   "m": 20000,                    // store rows
+//!   "groups": 512,                 // query groups (Zipf(1.1) sizes)
+//!   "dim": 16,                     // feature dimension
+//!   "requests": 4000,              // trace length per mode
+//!   "batch": 64,                   // throughput-mode batch size
+//!   "topk_share": 0.1,             // fraction of topk-group requests
+//!   "placeholder": false,          // true ⇒ metrics are null (not run)
+//!   "modes": [                     // one entry per thread count
+//!     {"threads": 1, "p50_us": 1.2, "p99_us": 3.4, "qps": 56789.0}
+//!   ]
+//! }
+//! ```
+//!
+//! Regenerate with `cargo bench --bench serve_qps` (FULL=1 for the
+//! paper-scale store).
+
+mod common;
+
+use common::{full_scale, header, record};
+use ranksvm::data::{materialize, synthetic, DatasetView, LoadedDataset};
+use ranksvm::serve::{Engine, Payload, Request, ScoringModel, Selector};
+use ranksvm::util::json::Json;
+use ranksvm::util::rng::Rng;
+
+const BATCH: usize = 64;
+const TOPK_SHARE: f64 = 0.1;
+
+/// Zipf-skewed request trace: hot rows get hammered, plus a share of
+/// per-group top-10 rankings. Deterministic in the seed.
+fn trace(n: usize, rows: usize, groups: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    // Rank-skewed row popularity without a float power law: row
+    // `u²·rows` for uniform u concentrates mass near row 0.
+    let mut skewed = |limit: usize| {
+        let u = (rng.below(1 << 20) as f64) / (1 << 20) as f64;
+        ((u * u * limit as f64) as usize).min(limit - 1)
+    };
+    (0..n)
+        .map(|_| {
+            if (rng.below(1000) as f64) < TOPK_SHARE * 1000.0 {
+                Request::TopK { k: 10, sel: Selector::Group(skewed(groups)) }
+            } else {
+                Request::Rows(vec![skewed(rows)])
+            }
+        })
+        .collect()
+}
+
+fn percentile_us(sorted: &[f64], p: f64) -> f64 {
+    let i = ((sorted.len() as f64 * p) as usize).min(sorted.len() - 1);
+    sorted[i] * 1e6
+}
+
+fn main() {
+    let max_threads = ranksvm::util::resolve_threads(0);
+    let (m, n_groups, dim, n_requests) = if full_scale() {
+        (200_000, 4096, 16, 20_000)
+    } else {
+        (20_000, 512, 16, 4_000)
+    };
+    let ds = synthetic::zipf_queries(m, n_groups, dim, 1.1, 42);
+    let w: Vec<f64> = (0..ds.dim()).map(|j| ((j as f64) + 0.5).sin() * 1.75).collect();
+    let model = ScoringModel::new(w, None).unwrap();
+    let model_path = std::env::temp_dir()
+        .join(format!("ranksvm_serve_qps_{}.rsm", std::process::id()));
+    model.save(&model_path).unwrap();
+    let reference = model.scores(&ds);
+    let requests = trace(n_requests, m, n_groups, 7);
+
+    let mut thread_grid = vec![1usize, max_threads.div_ceil(2), max_threads];
+    thread_grid.dedup();
+
+    header(&format!(
+        "Serve QPS: zipf store m = {m}, {n_groups} groups, dim {dim}; \
+         {n_requests} requests/mode ({:.0}% topk), batch {BATCH}",
+        TOPK_SHARE * 100.0
+    ));
+    println!(
+        "{:>8} {:>12} {:>12} {:>14}",
+        "threads", "p50 latency", "p99 latency", "throughput"
+    );
+
+    let mut modes = Vec::new();
+    for &threads in &thread_grid {
+        let eng = Engine::new(
+            &model_path,
+            Some(LoadedDataset::Owned(materialize(&ds))),
+            threads,
+            true,
+        )
+        .unwrap();
+
+        // Parity gate: this thread count serves the exact reference bits.
+        let all: Vec<usize> = (0..m).collect();
+        let resp = eng.run_batch(&[Request::Rows(all)]);
+        let Ok(Payload::Scores(got)) = &resp[0].body else { panic!("parity batch failed") };
+        assert_eq!(got.len(), reference.len());
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert!(g.to_bits() == r.to_bits(), "parity broke at row {i} with {threads} threads");
+        }
+
+        // Latency mode: one request per batch, individually timed.
+        let mut lat: Vec<f64> = Vec::with_capacity(requests.len());
+        for req in &requests {
+            let t = std::time::Instant::now();
+            std::hint::black_box(eng.run_batch(std::slice::from_ref(req)));
+            lat.push(t.elapsed().as_secs_f64());
+        }
+        lat.sort_unstable_by(f64::total_cmp);
+        let (p50, p99) = (percentile_us(&lat, 0.50), percentile_us(&lat, 0.99));
+
+        // Throughput mode: the same trace in batches of BATCH.
+        let t = std::time::Instant::now();
+        for chunk in requests.chunks(BATCH) {
+            std::hint::black_box(eng.run_batch(chunk));
+        }
+        let qps = requests.len() as f64 / t.elapsed().as_secs_f64();
+
+        println!("{threads:>8} {p50:>10.1}µs {p99:>10.1}µs {qps:>12.0}/s");
+        record(
+            "serve_qps",
+            Json::obj(vec![
+                ("bench", "serve_qps".into()),
+                ("m", m.into()),
+                ("groups", n_groups.into()),
+                ("dim", dim.into()),
+                ("requests", requests.len().into()),
+                ("batch", BATCH.into()),
+                ("threads", threads.into()),
+                ("p50_us", p50.into()),
+                ("p99_us", p99.into()),
+                ("qps", qps.into()),
+            ]),
+        );
+        modes.push(Json::obj(vec![
+            ("threads", threads.into()),
+            ("p50_us", p50.into()),
+            ("p99_us", p99.into()),
+            ("qps", qps.into()),
+        ]));
+    }
+    std::fs::remove_file(&model_path).ok();
+
+    // Rewrite the tracked snapshot at the repo root (schema above).
+    let snapshot = Json::obj(vec![
+        ("bench", "serve_qps".into()),
+        ("m", m.into()),
+        ("groups", n_groups.into()),
+        ("dim", dim.into()),
+        ("requests", requests.len().into()),
+        ("batch", BATCH.into()),
+        ("topk_share", TOPK_SHARE.into()),
+        ("placeholder", false.into()),
+        ("modes", Json::Arr(modes)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_qps.json");
+    std::fs::write(path, format!("{}\n", snapshot.to_string())).unwrap();
+    println!("snapshot written to {path}");
+}

@@ -4,7 +4,10 @@
 //! The paper's contribution (the tree-based oracle) lives in
 //! [`crate::losses::tree`]; this module is the framework face that a
 //! downstream user touches: [`TrainConfig`] → [`train`] → [`TrainOutcome`]
-//! (+ [`evaluate`], [`RankModel::save`]).
+//! (+ [`evaluate`], [`TrainOutcome::scoring_model`] →
+//! [`crate::serve::ScoringModel::save`] for the binary model the
+//! serving path loads; the legacy text [`RankModel::save`] remains for
+//! interchange).
 
 pub mod config;
 pub mod memprobe;
@@ -15,4 +18,7 @@ pub mod trainer;
 pub use config::{BackendKind, Method, Normalize, TrainConfig};
 pub use model::RankModel;
 pub use modelsel::{cross_validate, select_lambda, CvPoint};
-pub use trainer::{evaluate, train, TrainOutcome};
+pub use trainer::{evaluate, evaluate_scoring, train, TrainOutcome};
+
+/// Re-exported so coordinator users see one model-persistence surface.
+pub use crate::serve::ScoringModel;

@@ -24,20 +24,11 @@ impl RankModel {
     /// Scores for every example of a dataset (owned or memory-mapped).
     /// Feature dimensions may differ (train/test splits of sparse
     /// data): missing trailing features contribute zero either way.
+    /// Delegates to the one shared scoring kernel
+    /// ([`crate::serve::score_csr`]) so CLI prediction, evaluation,
+    /// and the serving daemon are bit-identical by construction.
     pub fn predict(&self, ds: &dyn DatasetView) -> Vec<f64> {
-        let x = ds.x();
-        let mut out = Vec::with_capacity(ds.len());
-        for i in 0..ds.len() {
-            let (idx, val) = x.row(i);
-            let mut s = 0.0;
-            for (&j, &v) in idx.iter().zip(val) {
-                if (j as usize) < self.w.len() {
-                    s += v * self.w[j as usize];
-                }
-            }
-            out.push(s);
-        }
-        out
+        crate::serve::score_csr(&self.w, None, &ds.x())
     }
 
     /// Rank a set of examples: indices sorted by descending score (ties

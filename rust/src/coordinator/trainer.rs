@@ -37,9 +37,22 @@ pub struct TrainOutcome {
     pub trace: Vec<(usize, f64, f64)>,
     /// Comparable pairs N in the training set.
     pub n_pairs: f64,
+    /// Training-set column ℓ2 norms when `--normalize l2-col` was on:
+    /// the trained weights live in the normalized feature space, and
+    /// these norms are what a [`crate::serve::ScoringModel`] records so
+    /// raw inputs score correctly at predict/serve time.
+    pub norms: Option<Vec<f64>>,
 }
 
 impl TrainOutcome {
+    /// Package the trained weights and the recorded normalization as a
+    /// self-contained [`crate::serve::ScoringModel`] — the thing
+    /// `ranksvm train --out` saves and `predict`/`serve` load.
+    pub fn scoring_model(&self) -> crate::serve::ScoringModel {
+        crate::serve::ScoringModel::new(self.model.w.clone(), self.norms.clone())
+            .expect("norms are per-column of the training set, same length as w")
+    }
+
     /// Average per-iteration oracle cost — the Fig. 1 quantity.
     pub fn avg_oracle_secs(&self) -> f64 {
         if self.iterations == 0 {
@@ -264,15 +277,16 @@ fn l2_col_norms(ds: &dyn DatasetView) -> Vec<f64> {
 }
 
 /// Owned copy of `ds` with every feature column divided by its ℓ2 norm
-/// (zero-norm columns untouched). The scale is applied once, value by
-/// value (`v / norm`), which makes training on the result bit-identical
-/// to training on explicitly pre-normalized input text — `tests/store.rs`
-/// pins that differential.
-fn normalize_l2_col(ds: &dyn DatasetView) -> Dataset {
+/// (zero-norm columns untouched), plus the norms themselves — the
+/// outcome keeps them so the saved model can score raw inputs. The
+/// scale is applied once, value by value (`v / norm`), which makes
+/// training on the result bit-identical to training on explicitly
+/// pre-normalized input text — `tests/store.rs` pins that differential.
+fn normalize_l2_col(ds: &dyn DatasetView) -> (Dataset, Vec<f64>) {
     let norms = l2_col_norms(ds);
     let mut owned = materialize(ds);
     owned.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
-    owned
+    (owned, norms)
 }
 
 /// The query-group index for a training run: precomputed by the source
@@ -297,9 +311,12 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     // materialization), trading the store's zero-copy path for exact
     // equivalence with pre-normalized input; the norms themselves come
     // from the store's cached column stats when available.
-    let normalized = match cfg.normalize {
-        Normalize::None => None,
-        Normalize::L2Col => Some(normalize_l2_col(ds)),
+    let (normalized, norms) = match cfg.normalize {
+        Normalize::None => (None, None),
+        Normalize::L2Col => {
+            let (owned, norms) = normalize_l2_col(ds);
+            (Some(owned), Some(norms))
+        }
     };
     let ds: &dyn DatasetView = match &normalized {
         Some(owned) => owned,
@@ -340,6 +357,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             oracle_secs: res.oracle_secs_total,
             trace: res.trace,
             n_pairs: oracle.n_pairs,
+            norms,
         }
     } else {
         let index = group_index_for(ds);
@@ -387,6 +405,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             oracle_secs: res.oracle_secs_total,
             trace: res.trace.iter().map(|s| (s.iter, s.best_objective, s.gap)).collect(),
             n_pairs,
+            norms,
         }
     };
     // `pool-stats` builds: surface the scheduler's balance evidence
@@ -412,9 +431,22 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
 /// (query-grouped if the dataset has qids).
 pub fn evaluate(model: &RankModel, ds: &dyn DatasetView) -> f64 {
     let p = model.predict(ds);
+    pairwise_error_for(&p, ds)
+}
+
+/// [`evaluate`] for a [`crate::serve::ScoringModel`]: `ds` holds *raw*
+/// features — the model applies its recorded normalization itself, so
+/// an `l2-col` model evaluates correctly without the caller pre-scaling
+/// anything.
+pub fn evaluate_scoring(model: &crate::serve::ScoringModel, ds: &dyn DatasetView) -> f64 {
+    let p = model.scores(ds);
+    pairwise_error_for(&p, ds)
+}
+
+fn pairwise_error_for(p: &[f64], ds: &dyn DatasetView) -> f64 {
     match ds.qid() {
-        Some(q) => crate::metrics::grouped_pairwise_error(&p, ds.y(), q),
-        None => crate::metrics::pairwise_error(&p, ds.y()),
+        Some(q) => crate::metrics::grouped_pairwise_error(p, ds.y(), q),
+        None => crate::metrics::pairwise_error(p, ds.y()),
     }
 }
 
@@ -542,6 +574,33 @@ mod tests {
         assert!(a.converged && b.converged);
         assert_eq!(a.model.w, b.model.w);
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn l2_col_outcome_records_norms_and_scores_raw_inputs() {
+        let ds = synthetic::cadata_like(150, 19);
+        let mut c = cfg(Method::Tree);
+        c.normalize = Normalize::L2Col;
+        let out = train(&ds, &c).unwrap();
+        let norms = out.norms.as_ref().expect("l2-col training records the column norms");
+        assert_eq!(norms.len(), ds.dim());
+        // The packaged scoring model, fed RAW features, must reproduce
+        // the in-space prediction (weights applied to normalized data)
+        // bit for bit — the PR 5 follow-up this field exists for.
+        let (normalized, _) = normalize_l2_col(&ds);
+        let in_space = out.model.predict(&normalized);
+        let raw = out.scoring_model().scores(&ds);
+        assert_eq!(in_space.len(), raw.len());
+        for (a, b) in in_space.iter().zip(&raw) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // And the two evaluate paths agree exactly.
+        let a = evaluate(&out.model, &normalized);
+        let b = evaluate_scoring(&out.scoring_model(), &ds);
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Plain training records no norms.
+        let plain = train(&ds, &cfg(Method::Tree)).unwrap();
+        assert!(plain.norms.is_none());
     }
 
     #[test]

@@ -38,8 +38,9 @@ mod reader;
 mod writer;
 
 pub use format::{
-    ColStat, Header, CHECKSUM_FIELD, COLSTAT_BYTES, FLAG_HAS_COLSTATS, FLAG_HAS_QID,
-    HEADER_LEN, KNOWN_FLAGS, MAGIC, N_SECTIONS, OFFSETS_START, VERSION,
+    cast_slice, Checksum, ColStat, Header, Pod, CHECKSUM_FIELD, COLSTAT_BYTES,
+    FLAG_HAS_COLSTATS, FLAG_HAS_QID, HEADER_LEN, KNOWN_FLAGS, MAGIC, N_SECTIONS, OFFSETS_START,
+    VERSION,
 };
 pub use mmap::{fadvise_sequential, Advice, Mmap};
 pub use reader::{compute_col_stats, is_store_file, PallasStore};

@@ -34,7 +34,13 @@
 //!   (lowered from JAX/Pallas by `python/compile/aot.py`) executed via
 //!   PJRT behind the `xla` cargo feature;
 //! - [`coordinator`] — training orchestration, config, CLI, and the
-//!   memory-probe subprocess used by the Fig.-3 benchmark.
+//!   memory-probe subprocess used by the Fig.-3 benchmark;
+//! - [`serve`] — the online scoring path: a versioned, checksummed
+//!   [`serve::ScoringModel`] format that records the `--normalize`
+//!   mode and training-set column norms (so raw inputs score
+//!   correctly), and the `ranksvm serve` daemon — batched scoring on
+//!   the shared worker pool, bounded-heap top-k, and atomic
+//!   zero-downtime model hot swap.
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //!
@@ -59,4 +65,5 @@ pub mod metrics;
 pub mod newton;
 pub mod rbtree;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -4,6 +4,10 @@
 //!
 //! - `train`      — train a model on a libsvm/pstore file or a synthetic set
 //! - `eval`       — pairwise ranking error of a saved model on a dataset
+//! - `predict`    — one score per line for a dataset (raw features; a
+//!   model's recorded `--normalize` norms are applied automatically)
+//! - `serve`      — long-running scoring daemon (stdio or `--listen` TCP)
+//!   with batched scoring, top-k, and atomic model hot swap
 //! - `gen-data`   — write a synthetic dataset in libsvm format
 //! - `convert`    — libsvm text → memory-mappable pallas store (`.pstore`),
 //!   optionally with a parallel parse phase (`--threads`)
@@ -20,9 +24,10 @@
 
 use anyhow::{bail, Context, Result};
 use ranksvm::coordinator::{
-    evaluate, memprobe, train, BackendKind, Method, Normalize, RankModel, TrainConfig,
+    evaluate_scoring, memprobe, train, BackendKind, Method, Normalize, ScoringModel, TrainConfig,
 };
 use ranksvm::data::{libsvm, materialize, store, synthetic, Dataset, DatasetView, LoadedDataset};
+use ranksvm::serve;
 use ranksvm::util::cli::Args;
 use ranksvm::util::json::Json;
 
@@ -38,6 +43,14 @@ USAGE:
                       l2 norm, consuming store-cached stats when available)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
   ranksvm eval      --model MODEL --data F
+  ranksvm predict   --model MODEL (--data F | --synthetic K --m M)
+                    (one score per line, raw features in — an l2-col
+                      model applies its recorded norms itself)
+  ranksvm serve     --model MODEL [--data F] [--threads T] [--listen ADDR]
+                    [--no-verify]
+                    (newline protocol on stdio, or TCP with --listen;
+                      requests: score/rows/topk/batch/info/ping/reload/
+                      swap/quit — see docs/MODEL_FORMAT.md and README)
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
   ranksvm convert   --data F.libsvm --out F.pstore [--chunk-kib N] [--threads T]
                     (parallel parse; output bytes identical for every T)
@@ -119,7 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         LoadedDataset::Store(st) => st.is_mapped(),
         LoadedDataset::Owned(_) => false,
     };
-    let (train_holder, mut test_ds): (LoadedDataset, Option<Dataset>) = if test_size > 0 {
+    let (train_holder, test_ds): (LoadedDataset, Option<Dataset>) = if test_size > 0 {
         let owned = match loaded {
             LoadedDataset::Owned(ds) => ds,
             LoadedDataset::Store(st) => materialize(&st),
@@ -131,20 +144,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let train_view = train_holder.view();
     let out = train(train_view, &cfg)?;
-    // --normalize trains in the scaled feature space, so a held-out
-    // split must be scored in that same space: scale it with the
-    // *training-set* norms — the exact norms train() derived (same
-    // row-major fold over the same training view), so test_error is
-    // measured against the model's actual inputs, not raw features.
-    if cfg.normalize == Normalize::L2Col {
-        if let Some(te) = &mut test_ds {
-            let norms: Vec<f64> = ranksvm::data::store::compute_col_stats(train_view.x())
-                .iter()
-                .map(|s| s.sumsq.sqrt())
-                .collect();
-            te.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
-        }
-    }
+    // The outcome's scoring model carries the training-set norms when
+    // --normalize is on, so the held-out split (and any later predict /
+    // serve traffic) is scored on raw features and normalized inside
+    // the shared kernel — same fold, same bits as scaling by hand.
+    let scoring = out.scoring_model();
     let mut record = vec![
         ("dataset".to_string(), Json::Str(train_view.name().to_string())),
         ("m".to_string(), train_view.len().into()),
@@ -159,32 +163,74 @@ fn cmd_train(args: &Args) -> Result<()> {
         record.extend(base);
     }
     if let Some(te) = &test_ds {
-        record.push(("test_error".to_string(), evaluate(&out.model, te).into()));
+        record.push(("test_error".to_string(), evaluate_scoring(&scoring, te).into()));
         record.push(("test_m".to_string(), te.len().into()));
     }
     println!("{}", Json::Obj(record).to_string());
     if let Some(path) = args.get("out") {
-        out.model.save(path)?;
+        // Versioned binary format (docs/MODEL_FORMAT.md): weights plus
+        // the recorded normalization, checksummed, published atomically.
+        scoring.save(path)?;
         eprintln!("model saved to {path}");
     }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let model = RankModel::load(args.get("model").context("need --model")?)?;
+    // Either model format, autodetected: binary .rsm or legacy text.
+    let model = ScoringModel::load_auto(args.get("model").context("need --model")?)?;
     let loaded = load_dataset(args)?;
     let ds = loaded.view();
-    let err = evaluate(&model, ds);
+    let err = evaluate_scoring(&model, ds);
     println!(
         "{}",
         Json::obj(vec![
             ("dataset", Json::Str(ds.name().to_string())),
             ("m", ds.len().into()),
+            ("normalize", Json::Str(model.normalize_name().to_string())),
             ("pairwise_error", err.into()),
         ])
         .to_string()
     );
     Ok(())
+}
+
+/// `ranksvm predict` — one score per line, in dataset row order, with
+/// `{}` float formatting. `ranksvm serve` responses are byte-identical
+/// to this output for the same model and rows (CI pins it).
+fn cmd_predict(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let model = ScoringModel::load_auto(args.get("model").context("need --model")?)?;
+    let loaded = load_dataset(args)?;
+    let scores = model.scores(loaded.view());
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    for s in &scores {
+        writeln!(out, "{s}")?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// `ranksvm serve` — the long-running scoring daemon. Stdio by default
+/// (one response line per request line), thread-per-connection TCP with
+/// `--listen ADDR`. `--data` attaches a feature store for `rows`/`topk`
+/// requests; the model hot-swaps atomically on `swap`/`reload` or when
+/// the model file is republished.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("need --model")?;
+    let verify = !args.flag("no-verify");
+    let data = if args.get("data").is_some() || args.get("synthetic").is_some() {
+        Some(load_dataset(args)?)
+    } else {
+        None
+    };
+    let n_threads = ranksvm::util::resolve_threads(args.usize_or("threads", 0)?);
+    let engine = serve::Engine::new(model_path, data, n_threads, verify)?;
+    match args.get("listen") {
+        Some(addr) => serve::serve_tcp(std::sync::Arc::new(engine), addr),
+        None => serve::serve_stdio(&engine),
+    }
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -465,6 +511,8 @@ fn run() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some("gen-data") => cmd_gen_data(&args),
         Some("convert") => cmd_convert(&args),
         Some("stats") => cmd_stats(&args),

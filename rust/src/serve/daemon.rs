@@ -1,0 +1,241 @@
+//! Connection front-ends for the serving engine: a line loop that is
+//! generic over its transport, plus stdio and TCP drivers.
+//!
+//! One connection is one [`handle_connection`] call: read a line,
+//! classify it ([`protocol::parse`]), answer exactly one line per
+//! input line, flush, repeat until `quit` or EOF. `batch <n>` frames
+//! the next `n` lines into a single engine batch (one model-version
+//! snapshot, responses in input order); every other request line is a
+//! batch of one. Control verbs are not allowed inside a batch frame —
+//! they become structured errors in their slot, so responses never
+//! fall out of alignment with inputs.
+//!
+//! The TCP driver is thread-per-connection over one shared
+//! [`Engine`]: the engine's pool serializes batches internally, so
+//! concurrent connections simply interleave at batch granularity —
+//! exactly the consistency unit the hot-swap tests pin.
+
+use super::engine::Engine;
+use super::protocol::{self, Line, Request};
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+/// Demote a classified line to a batch-slot request: scoring requests
+/// pass through, control verbs become structured errors (a `quit` in
+/// the middle of a frame must not silently shift every later slot).
+fn as_batch_slot(line: Line) -> Request {
+    match line {
+        Line::Req(req) => req,
+        _ => Request::Invalid("control commands are not allowed inside a batch frame".into()),
+    }
+}
+
+/// The engine's `info` response: one `ok` line of `key=value` pairs.
+fn info_line(engine: &Engine) -> String {
+    let epoch = engine.current();
+    let (batches, requests, swaps) = engine.counters();
+    let dim_or = |v: Option<usize>| v.map_or_else(|| "-".into(), |n| n.to_string());
+    format!(
+        "ok v={} dim={} normalize={} rows={} groups={} threads={} batches={} requests={} swaps={}",
+        epoch.version,
+        epoch.model.dim(),
+        epoch.model.normalize_name(),
+        dim_or(engine.n_rows()),
+        dim_or(engine.n_groups()),
+        engine.n_threads(),
+        batches,
+        requests,
+        swaps
+    )
+}
+
+fn flatten(e: anyhow::Error) -> String {
+    format!("{e:#}").replace(['\n', '\r'], " ")
+}
+
+/// Serve one connection until `quit` or EOF. Errors returned here are
+/// transport failures (a vanished socket); protocol-level problems are
+/// answered in-band as `err` lines and never tear the connection down.
+pub fn handle_connection<R: BufRead, W: Write>(
+    engine: &Engine,
+    input: R,
+    mut out: W,
+) -> Result<()> {
+    let mut lines = input.lines();
+    while let Some(line) = lines.next() {
+        let line = line.context("read request line")?;
+        match protocol::parse(&line) {
+            Line::Quit => break,
+            Line::Ping => {
+                writeln!(out, "ok v={} pong", engine.current().version)?;
+            }
+            Line::Info => {
+                writeln!(out, "{}", info_line(engine))?;
+            }
+            Line::Reload => match engine.force_reload() {
+                Ok(()) => {
+                    writeln!(out, "ok v={} reloaded=true", engine.current().version)?;
+                }
+                Err(e) => writeln!(out, "err {}", flatten(e))?,
+            },
+            Line::Swap(path) => match engine.swap_from(&path) {
+                Ok(()) => {
+                    writeln!(out, "ok v={} swapped=true", engine.current().version)?;
+                }
+                Err(e) => writeln!(out, "err {}", flatten(e))?,
+            },
+            Line::Batch(n) => {
+                let mut reqs = Vec::with_capacity(n);
+                while reqs.len() < n {
+                    match lines.next() {
+                        Some(Ok(l)) => reqs.push(as_batch_slot(protocol::parse(&l))),
+                        Some(Err(e)) => return Err(e).context("read batch line"),
+                        // EOF inside a frame: answer the missing slots
+                        // as errors so the client still gets n lines.
+                        None => reqs.push(Request::Invalid("batch frame truncated by EOF".into())),
+                    }
+                }
+                for resp in engine.run_batch(&reqs) {
+                    writeln!(out, "{}", protocol::render(&resp))?;
+                }
+            }
+            Line::Req(req) => {
+                for resp in engine.run_batch(std::slice::from_ref(&req)) {
+                    writeln!(out, "{}", protocol::render(&resp))?;
+                }
+            }
+        }
+        out.flush()?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Serve requests from stdin to stdout — the CI smoke test's transport
+/// and the default when `--listen` is not given.
+pub fn serve_stdio(engine: &Engine) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    handle_connection(engine, stdin.lock(), std::io::BufWriter::new(stdout.lock()))
+}
+
+/// Bind `addr` and serve each connection on its own thread over the
+/// shared engine. Prints one `serve listening <addr>` line once bound
+/// (so scripts can wait for readiness), then runs until the process is
+/// killed.
+pub fn serve_tcp(engine: Arc<Engine>, addr: &str) -> Result<()> {
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    println!("serve listening {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let Ok(reader) = stream.try_clone() else { return };
+            let _ = handle_connection(
+                &engine,
+                std::io::BufReader::new(reader),
+                std::io::BufWriter::new(stream),
+            );
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, LoadedDataset};
+    use crate::serve::ScoringModel;
+    use std::io::Cursor;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ranksvm_daemon_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn engine(name: &str) -> Engine {
+        let ds = synthetic::queries(6, 5, 8, 7);
+        let w: Vec<f64> = (0..8).map(|j| 0.5 - 0.1 * j as f64).collect();
+        let path = tmp(&format!("{name}.rsm"));
+        ScoringModel::new(w, None).unwrap().save(&path).unwrap();
+        Engine::new(&path, Some(LoadedDataset::Owned(ds)), 2, true).unwrap()
+    }
+
+    fn drive(engine: &Engine, input: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        handle_connection(engine, Cursor::new(input.as_bytes()), &mut out).unwrap();
+        String::from_utf8(out).unwrap().lines().map(str::to_owned).collect()
+    }
+
+    #[test]
+    fn one_line_per_request_line() {
+        let eng = engine("pairing");
+        let out = drive(&eng, "ping\nrows 0 1\nnot-a-verb\nscore 1:2\ninfo\nquit\nrows 2\n");
+        // 5 answered lines; quit stops the loop before the last rows.
+        assert_eq!(out.len(), 5, "{out:?}");
+        assert_eq!(out[0], "ok v=1 pong");
+        assert!(out[1].starts_with("ok v=1 "), "{}", out[1]);
+        assert!(out[2].starts_with("err "), "{}", out[2]);
+        assert!(out[3].starts_with("ok v=1 "), "{}", out[3]);
+        assert!(out[4].contains(" dim=8 ") && out[4].contains(" threads=2 "), "{}", out[4]);
+    }
+
+    #[test]
+    fn batch_frames_stay_aligned() {
+        let eng = engine("framing");
+        // A control verb and a bad line inside the frame become err
+        // slots; the frame still answers exactly 4 lines, in order.
+        let out = drive(&eng, "batch 4\nrows 0\nping\nrows nope\nrows 1\n");
+        assert_eq!(out.len(), 4, "{out:?}");
+        assert!(out[0].starts_with("ok v=1 "), "{}", out[0]);
+        assert!(out[1].starts_with("err "), "{}", out[1]);
+        assert!(out[2].starts_with("err "), "{}", out[2]);
+        assert!(out[3].starts_with("ok v=1 "), "{}", out[3]);
+    }
+
+    #[test]
+    fn truncated_batch_answers_every_slot() {
+        let eng = engine("truncated");
+        let out = drive(&eng, "batch 3\nrows 0\n");
+        assert_eq!(out.len(), 3, "{out:?}");
+        assert!(out[0].starts_with("ok v=1 "), "{}", out[0]);
+        assert!(out[1].contains("truncated"), "{}", out[1]);
+        assert!(out[2].contains("truncated"), "{}", out[2]);
+    }
+
+    #[test]
+    fn swap_and_reload_bump_the_version() {
+        let eng = engine("swap");
+        let staged = tmp("swap_staged.rsm");
+        let w2: Vec<f64> = (0..8).map(|j| j as f64).collect();
+        ScoringModel::new(w2, None).unwrap().save(&staged).unwrap();
+        let input = format!("rows 0\nswap {}\nrows 0\nreload\nrows 0\nquit\n", staged.display());
+        let out = drive(&eng, &input);
+        assert_eq!(out.len(), 5, "{out:?}");
+        assert!(out[0].starts_with("ok v=1 "), "{}", out[0]);
+        assert_eq!(out[1], "ok v=2 swapped=true");
+        assert!(out[2].starts_with("ok v=2 "), "{}", out[2]);
+        assert_eq!(out[3], "ok v=3 reloaded=true");
+        assert!(out[4].starts_with("ok v=3 "), "{}", out[4]);
+        // The staged file was consumed by the atomic rename.
+        assert!(!staged.exists());
+        // Scores actually changed with the weights.
+        assert_ne!(out[0].split(' ').nth(2), out[2].split(' ').nth(2));
+    }
+
+    #[test]
+    fn swap_to_garbage_keeps_serving_old_model() {
+        let eng = engine("badswap");
+        let staged = tmp("badswap_staged.rsm");
+        std::fs::write(&staged, b"definitely not a model").unwrap();
+        let input = format!("rows 0\nswap {}\nrows 0\n", staged.display());
+        let out = drive(&eng, &input);
+        assert_eq!(out.len(), 3, "{out:?}");
+        let first = out[0].clone();
+        assert!(out[1].starts_with("err "), "{}", out[1]);
+        assert_eq!(out[2], first, "old model keeps serving byte-identically");
+    }
+}

@@ -1,0 +1,412 @@
+//! The serving engine: an immutable model epoch shared by concurrent
+//! score batches, with atomic zero-downtime hot swap.
+//!
+//! ## Versioning and swap semantics
+//!
+//! The live model sits behind one pointer swap: `slot:
+//! RwLock<Arc<ModelEpoch>>`. A batch snapshots the `Arc` **once**, at
+//! its start, and scores every request in the batch against that epoch
+//! — so a response is always consistent with exactly one model version
+//! (reported as `v=<n>` in the wire protocol), never a torn mix, and a
+//! swap takes effect at the next *batch boundary*. When the last
+//! in-flight batch holding an old epoch finishes, its `Arc` drop
+//! unmaps the old model file.
+//!
+//! Publishing a new model is [`ScoringModel::save`]'s atomic rename
+//! (or [`Engine::swap_from`], which renames a staged file over the
+//! live path). The engine stats the model path at each batch boundary
+//! and reloads when the file identity (length, mtime, inode) changes;
+//! a file that fails to load is remembered and *not* retried every
+//! batch — the previous epoch keeps serving until a good file shows
+//! up. Because publishes are renames, a changed identity is always a
+//! complete file, never a half-written one.
+//!
+//! ## Execution
+//!
+//! A batch fans out one [`Task`] per request onto the shared
+//! work-stealing [`WorkerPool`] — the same pool that runs training —
+//! with each task writing its own disjoint response slot. Scoring a
+//! single request is serial (the shared `score_row` kernel), so
+//! responses are bit-identical at any `--threads` value; the pool's
+//! internal batch lock serializes concurrent `run` calls, which is the
+//! request queue: callers line up, each batch drains fully before the
+//! next starts.
+
+use super::protocol::{Payload, Request, Response, Selector};
+use super::scoring::{score_row, ScoringModel};
+use crate::data::{DatasetView, LoadedDataset};
+use crate::losses::GroupIndex;
+use crate::runtime::{Task, WorkerPool};
+use anyhow::{bail, Context, Result};
+use std::cmp::Ordering;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One immutable generation of the live model. Batches hold an `Arc`
+/// to the epoch they scored against; the version number is what
+/// responses report.
+pub struct ModelEpoch {
+    pub version: u64,
+    pub model: ScoringModel,
+}
+
+/// File identity snapshot used to detect publishes: atomic renames
+/// change the inode, direct rewrites change length/mtime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Fingerprint {
+    len: u64,
+    mtime: (u64, u32),
+    ino: u64,
+}
+
+fn fingerprint(path: &Path) -> Option<Fingerprint> {
+    let md = std::fs::metadata(path).ok()?;
+    let mtime = md
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| (d.as_secs(), d.subsec_nanos()))
+        .unwrap_or((0, 0));
+    #[cfg(unix)]
+    let ino = {
+        use std::os::unix::fs::MetadataExt;
+        md.ino()
+    };
+    #[cfg(not(unix))]
+    let ino = 0;
+    Some(Fingerprint { len: md.len(), mtime, ino })
+}
+
+/// The long-lived serving state: model slot, optional feature store,
+/// precomputed group index, and the worker pool batches fan out on.
+pub struct Engine {
+    model_path: PathBuf,
+    verify: bool,
+    slot: RwLock<Arc<ModelEpoch>>,
+    /// Fingerprint of the last model file we *attempted* to load
+    /// (success or not), so a corrupt publish is not retried per batch.
+    source: Mutex<Fingerprint>,
+    data: Option<LoadedDataset>,
+    gindex: Option<Arc<GroupIndex>>,
+    pool: WorkerPool,
+    batches: AtomicU64,
+    requests: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl Engine {
+    /// Load the model (either format, via [`ScoringModel::load_auto_with`])
+    /// and build the serving state. `data` enables `rows`/`topk`
+    /// requests; its query-group index is precomputed here, once.
+    pub fn new(
+        model_path: impl AsRef<Path>,
+        data: Option<LoadedDataset>,
+        n_threads: usize,
+        verify: bool,
+    ) -> Result<Engine> {
+        let model_path = model_path.as_ref().to_path_buf();
+        let model = ScoringModel::load_auto_with(&model_path, verify)?;
+        let source = fingerprint(&model_path).unwrap_or_default();
+        let gindex = data.as_ref().and_then(|d| {
+            let v = d.view();
+            v.group_index()
+                .or_else(|| v.qid().map(|q| Arc::new(GroupIndex::build(q, v.y()))))
+        });
+        Ok(Engine {
+            model_path,
+            verify,
+            slot: RwLock::new(Arc::new(ModelEpoch { version: 1, model })),
+            source: Mutex::new(source),
+            data,
+            gindex,
+            pool: WorkerPool::new(n_threads),
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        })
+    }
+
+    /// The epoch new batches would score against right now.
+    pub fn current(&self) -> Arc<ModelEpoch> {
+        self.slot.read().expect("model slot poisoned").clone()
+    }
+
+    pub fn model_path(&self) -> &Path {
+        &self.model_path
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.pool.n_threads()
+    }
+
+    /// Rows in the attached feature store, if one was given.
+    pub fn n_rows(&self) -> Option<usize> {
+        self.data.as_ref().map(|d| d.view().len())
+    }
+
+    /// Query groups in the attached store, if it carries qids.
+    pub fn n_groups(&self) -> Option<usize> {
+        self.gindex.as_ref().map(|g| g.n_groups())
+    }
+
+    /// Cumulative `(batches, requests, swaps)` counters.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.batches.load(Relaxed), self.requests.load(Relaxed), self.swaps.load(Relaxed))
+    }
+
+    /// Batch-boundary publish check: reload if the model file identity
+    /// changed. Best-effort — on a failed load the old epoch keeps
+    /// serving and the bad fingerprint is remembered.
+    pub fn maybe_reload(&self) {
+        let _ = self.reload_impl(false);
+    }
+
+    /// Explicit `reload` command: always re-open the model path and
+    /// bump the version. Errors are returned to the caller (the old
+    /// epoch keeps serving).
+    pub fn force_reload(&self) -> Result<()> {
+        self.reload_impl(true)
+    }
+
+    fn reload_impl(&self, force: bool) -> Result<()> {
+        let mut src = self.source.lock().expect("source lock poisoned");
+        let fp = match fingerprint(&self.model_path) {
+            Some(fp) => fp,
+            None if force => bail!("stat {}: model file is gone", self.model_path.display()),
+            None => return Ok(()),
+        };
+        if !force && fp == *src {
+            return Ok(());
+        }
+        *src = fp;
+        let model = ScoringModel::load_auto_with(&self.model_path, self.verify)?;
+        let mut slot = self.slot.write().expect("model slot poisoned");
+        *slot = Arc::new(ModelEpoch { version: slot.version + 1, model });
+        drop(slot);
+        self.swaps.fetch_add(1, Relaxed);
+        Ok(())
+    }
+
+    /// Atomic hot swap from a staged file: validate the staged model,
+    /// `rename` it over the live path (the atomic publish), then
+    /// reload. A staged file that fails validation leaves the live
+    /// model untouched.
+    pub fn swap_from(&self, staged: impl AsRef<Path>) -> Result<()> {
+        let staged = staged.as_ref();
+        ScoringModel::load_auto_with(staged, self.verify)
+            .with_context(|| format!("staged model {}", staged.display()))?;
+        std::fs::rename(staged, &self.model_path).with_context(|| {
+            format!("publish {} over {}", staged.display(), self.model_path.display())
+        })?;
+        self.force_reload()
+    }
+
+    /// Score one batch: snapshot the current epoch once, fan one task
+    /// per request onto the pool (disjoint response slots), and answer
+    /// in request order, every response stamped with that epoch's
+    /// version. Blocks until the whole batch is done.
+    pub fn run_batch(&self, reqs: &[Request]) -> Vec<Response> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        self.maybe_reload();
+        let epoch = self.current();
+        self.batches.fetch_add(1, Relaxed);
+        self.requests.fetch_add(reqs.len() as u64, Relaxed);
+        let mut replies: Vec<Option<std::result::Result<Payload, String>>> = Vec::new();
+        replies.resize_with(reqs.len(), || None);
+        {
+            let model = &epoch.model;
+            let data = self.data.as_ref();
+            let gindex = self.gindex.as_deref();
+            let tasks: Vec<Task<'_>> = reqs
+                .iter()
+                .zip(replies.iter_mut())
+                .map(|(req, out)| {
+                    Box::new(move || *out = Some(handle_one(model, data, gindex, req)))
+                        as Task<'_>
+                })
+                .collect();
+            self.pool.run(tasks);
+        }
+        replies
+            .into_iter()
+            .map(|body| Response {
+                version: epoch.version,
+                body: body.expect("pool runs every task to completion"),
+            })
+            .collect()
+    }
+}
+
+/// Score one request against one epoch. Every failure is a structured
+/// message — nothing here panics on user input.
+fn handle_one(
+    model: &ScoringModel,
+    data: Option<&LoadedDataset>,
+    gindex: Option<&GroupIndex>,
+    req: &Request,
+) -> std::result::Result<Payload, String> {
+    match req {
+        Request::Invalid(msg) => Err(msg.clone()),
+        Request::Score(feats) => match model.score_indexed(feats) {
+            Ok(s) => Ok(Payload::Scores(vec![s])),
+            Err(e) => Err(e.to_string()),
+        },
+        Request::Rows(rows) => {
+            let Some(data) = data else {
+                return Err("no feature store attached (start serve with --data)".into());
+            };
+            let view = data.view();
+            let x = view.x();
+            let mut out = Vec::with_capacity(rows.len());
+            for &i in rows {
+                if i >= x.rows() {
+                    return Err(format!("row {i} out of range (store has {} rows)", x.rows()));
+                }
+                let (idx, val) = x.row(i);
+                out.push(score_row(model.w(), model.norms(), idx, val));
+            }
+            Ok(Payload::Scores(out))
+        }
+        Request::TopK { k, sel } => {
+            let Some(data) = data else {
+                return Err("no feature store attached (start serve with --data)".into());
+            };
+            let view = data.view();
+            let x = view.x();
+            let (w, norms) = (model.w(), model.norms());
+            let score = |i: usize| {
+                let (idx, val) = x.row(i);
+                score_row(w, norms, idx, val)
+            };
+            let ranked = match sel {
+                Selector::All => top_k((0..x.rows()).map(|i| (i, score(i))), *k),
+                Selector::Group(g) => {
+                    let Some(gi) = gindex else {
+                        return Err("store has no query ids (topk group needs them)".into());
+                    };
+                    if *g >= gi.n_groups() {
+                        return Err(format!(
+                            "group {g} out of range (store has {} groups)",
+                            gi.n_groups()
+                        ));
+                    }
+                    top_k(gi.group(*g).iter().map(|&i| (i, score(i))), *k)
+                }
+                Selector::Rows(rows) => {
+                    for &i in rows {
+                        if i >= x.rows() {
+                            return Err(format!(
+                                "row {i} out of range (store has {} rows)",
+                                x.rows()
+                            ));
+                        }
+                    }
+                    top_k(rows.iter().map(|&i| (i, score(i))), *k)
+                }
+            };
+            Ok(Payload::Ranked(ranked))
+        }
+    }
+}
+
+/// Heap entry; the ordering *is* the documented ranking contract:
+/// higher score wins, ties go to the smaller row index, and NaN is
+/// ordered (not panicking) via `total_cmp` — identical to
+/// `RankModel::rank`'s `total_cmp` + index sort.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    score: f64,
+    row: usize,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score.total_cmp(&other.score).then_with(|| other.row.cmp(&self.row))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+
+/// Best `k` of a score stream in `O(n log k)` via a bounded min-heap:
+/// keep the k best seen, replace the worst kept only when strictly
+/// beaten. Output is best-first and equals a full sort by
+/// `score desc, row asc` truncated to k, for any stream order
+/// (`tests/serve.rs` pins this against the brute-force reference).
+pub fn top_k(items: impl Iterator<Item = (usize, f64)>, k: usize) -> Vec<(usize, f64)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(k + 1);
+    for (row, score) in items {
+        let e = Entry { score, row };
+        if heap.len() < k {
+            heap.push(Reverse(e));
+        } else if e > heap.peek().expect("heap is at capacity").0 {
+            heap.pop();
+            heap.push(Reverse(e));
+        }
+    }
+    let mut kept: Vec<Entry> = heap.into_iter().map(|Reverse(e)| e).collect();
+    kept.sort_unstable_by(|a, b| b.cmp(a));
+    kept.into_iter().map(|e| (e.row, e.score)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The reference: full sort by score desc / row asc, truncated.
+    fn brute(scores: &[f64], k: usize) -> Vec<(usize, f64)> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+        idx.truncate(k);
+        idx.into_iter().map(|i| (i, scores[i])).collect()
+    }
+
+    #[test]
+    fn top_k_equals_sort_truncate() {
+        let scores = [3.0, -1.0, 3.0, 0.5, f64::NAN, 7.0, 0.5, -2.0, 7.0];
+        for k in 0..=scores.len() + 2 {
+            let got = top_k(scores.iter().copied().enumerate(), k);
+            let want = brute(&scores, k);
+            assert_eq!(got.len(), want.len(), "k={k}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0, "k={k}");
+                assert_eq!(g.1.to_bits(), w.1.to_bits(), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_is_stream_order_independent() {
+        let scores = [1.0, 2.0, 2.0, 2.0, 0.0, 5.0];
+        let forward = top_k(scores.iter().copied().enumerate(), 3);
+        let backward = top_k(scores.iter().copied().enumerate().rev(), 3);
+        assert_eq!(forward, backward);
+        assert_eq!(forward, brute(&scores, 3));
+    }
+
+    #[test]
+    fn entry_ordering_prefers_score_then_low_row() {
+        let a = Entry { score: 2.0, row: 5 };
+        let b = Entry { score: 2.0, row: 3 };
+        let c = Entry { score: 3.0, row: 9 };
+        assert!(c > a && c > b);
+        assert!(b > a, "tie broken toward the smaller row");
+        assert!(Entry { score: f64::NAN, row: 0 } > c, "total_cmp puts +NaN above all");
+    }
+}

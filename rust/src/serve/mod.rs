@@ -1,0 +1,36 @@
+//! Online scoring: the [`ScoringModel`] (versioned binary model
+//! format) and the `ranksvm serve` daemon built on it.
+//!
+//! Training produces a ranking function; this module is what runs it
+//! in production. The pieces, bottom up:
+//!
+//! - [`scoring`] — the standalone [`ScoringModel`]: weights **plus**
+//!   the recorded `--normalize` mode and training-set column norms, in
+//!   a checksummed mmap-able format (`.rsm`) that shares the pallas
+//!   store's header/checksum machinery. One scoring kernel
+//!   ([`scoring::score_row`]) is used by `predict`, `evaluate`, and
+//!   the daemon, so every path scores bit-identically.
+//! - [`engine`] — the [`Engine`]: an immutable model epoch behind one
+//!   pointer swap, score batches fanned onto the shared work-stealing
+//!   [`crate::runtime::WorkerPool`], per-query top-k via a bounded
+//!   heap, and atomic zero-downtime hot swap with a version counter
+//!   in every response.
+//! - [`protocol`] — the newline-delimited wire grammar and response
+//!   rendering (scores print with the same `{}` formatting as
+//!   `ranksvm predict`, making serving output byte-comparable).
+//! - [`daemon`] — transport front-ends: stdio (the default, and what
+//!   CI drives) and thread-per-connection TCP via `--listen`.
+//!
+//! `tests/serve.rs` pins serving parity, top-k correctness, hot-swap
+//! consistency, and the format fuzz battery; `docs/MODEL_FORMAT.md`
+//! is the normative format spec (pinned by `tests/model_spec.rs`).
+
+pub mod daemon;
+pub mod engine;
+pub mod protocol;
+pub mod scoring;
+
+pub use daemon::{handle_connection, serve_stdio, serve_tcp};
+pub use engine::{top_k, Engine, ModelEpoch};
+pub use protocol::{Payload, Request, Response, Selector};
+pub use scoring::{score_csr, score_row, ScoringModel};

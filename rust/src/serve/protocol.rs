@@ -1,0 +1,321 @@
+//! The serving wire protocol: newline-delimited text, one request per
+//! line, one response line per request, in order.
+//!
+//! Score lines reuse the libsvm feature grammar (and its single
+//! validation gate, `data::libsvm::parse_line`), so a feature vector
+//! pasted out of a dataset file is a valid request body. Responses
+//! carry the model version that scored them (`ok v=<version> …`) —
+//! the hot-swap tests assert on it — and print scores with Rust's
+//! shortest-round-trip `{}` float formatting, the same formatter
+//! `ranksvm predict` uses, which is what makes daemon output
+//! byte-comparable to the one-shot CLI.
+//!
+//! Request grammar (`<…>` required, `[…]` repeated):
+//!
+//! ```text
+//! score <idx>:<val> [<idx>:<val> …]   score one raw feature vector
+//!                                     (1-based indices, libsvm style)
+//! rows <i> [<i> …]                    score store rows (0-based)
+//! topk <k> all                        best k rows of the whole store
+//! topk <k> group <g>                  best k within query group g
+//! topk <k> rows <i> [<i> …]           best k among the listed rows
+//! batch <n>                           the next n lines are one batch
+//! info | ping | reload | swap <path> | quit
+//! ```
+//!
+//! Responses:
+//!
+//! ```text
+//! ok v=<version> <score> [<score> …]        score / rows
+//! ok v=<version> <row>:<score> [[…]]        topk (best first)
+//! err <message>                             structured failure (one line)
+//! ```
+//!
+//! Parsing never fails and never panics: a malformed line becomes
+//! [`Request::Invalid`], which the engine answers with an `err` line in
+//! the request's slot, keeping batch responses aligned with batch
+//! inputs.
+
+use crate::data::libsvm;
+use anyhow::{ensure, Result};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Largest `batch <n>` the daemon will frame — bounds the memory one
+/// connection can pin before any scoring happens.
+pub const MAX_BATCH: usize = 65_536;
+
+/// Which rows a `topk` request ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// Every row of the store.
+    All,
+    /// One query group of the store's group index.
+    Group(usize),
+    /// An explicit row list.
+    Rows(Vec<usize>),
+}
+
+/// One scoring request (the engine's unit of work).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Score one raw feature vector, `(0-based index, value)` pairs.
+    Score(Vec<(usize, f64)>),
+    /// Score the listed store rows (0-based).
+    Rows(Vec<usize>),
+    /// Top-k rows by score, best first.
+    TopK { k: usize, sel: Selector },
+    /// A malformed line; the engine answers `err` in this slot.
+    Invalid(String),
+}
+
+/// What a successful request produced.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// One score per requested item, request order.
+    Scores(Vec<f64>),
+    /// `(row, score)` ranked best-first.
+    Ranked(Vec<(usize, f64)>),
+}
+
+/// One response line: the model version that served it plus the
+/// payload or a structured error message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub version: u64,
+    pub body: std::result::Result<Payload, String>,
+}
+
+/// A classified input line: a connection-level command or a scoring
+/// request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Line {
+    Quit,
+    Ping,
+    Info,
+    Reload,
+    Swap(PathBuf),
+    /// The next `n` lines form one batch (scored against a single
+    /// model version, answered in order).
+    Batch(usize),
+    Req(Request),
+}
+
+/// Classify one input line. Never fails: anything malformed becomes
+/// `Line::Req(Request::Invalid(…))` so the caller answers `err` without
+/// breaking the line/response pairing.
+pub fn parse(line: &str) -> Line {
+    let line = line.trim();
+    let mut parts = line.split_ascii_whitespace();
+    let verb = parts.next().unwrap_or("");
+    let rest = line[verb.len()..].trim_start();
+    let invalid = |msg: String| Line::Req(Request::Invalid(msg));
+    match verb {
+        "quit" => Line::Quit,
+        "ping" => Line::Ping,
+        "info" => Line::Info,
+        "reload" => Line::Reload,
+        "swap" => {
+            if rest.is_empty() {
+                invalid("swap needs a path".into())
+            } else {
+                Line::Swap(PathBuf::from(rest))
+            }
+        }
+        "batch" => match rest.parse::<usize>() {
+            Ok(n) if (1..=MAX_BATCH).contains(&n) => Line::Batch(n),
+            Ok(n) => invalid(format!("batch size {n} outside 1..={MAX_BATCH}")),
+            Err(_) => invalid(format!("batch needs a count, got {rest:?}")),
+        },
+        "score" => match parse_score(rest) {
+            Ok(feats) => Line::Req(Request::Score(feats)),
+            Err(e) => invalid(e.to_string()),
+        },
+        "rows" => match parse_rows(rest) {
+            Ok(rows) => Line::Req(Request::Rows(rows)),
+            Err(e) => invalid(e.to_string()),
+        },
+        "topk" => match parse_topk(rest) {
+            Ok((k, sel)) => Line::Req(Request::TopK { k, sel }),
+            Err(e) => invalid(e.to_string()),
+        },
+        "" => invalid("empty request".into()),
+        other => invalid(format!(
+            "unknown verb {other:?} (expected score/rows/topk/batch/info/ping/reload/swap/quit)"
+        )),
+    }
+}
+
+/// Parse the feature tail of a `score` line through the libsvm gate
+/// (strictly increasing 1-based indices, finite values), returning
+/// 0-based pairs.
+fn parse_score(rest: &str) -> Result<Vec<(usize, f64)>> {
+    ensure!(!rest.is_empty(), "score needs at least one idx:val pair");
+    let mut ex = libsvm::Example::default();
+    // Prefix a dummy label so the request body is exactly the feature
+    // grammar of a dataset line.
+    let parsed = libsvm::parse_line(&format!("0 {rest}"), "request", 1, &mut ex)?;
+    ensure!(parsed, "score needs at least one idx:val pair");
+    ensure!(ex.qid.is_none(), "qid: is not allowed in a score request");
+    Ok(ex.feats.into_iter().map(|(j, v)| (j - 1, v)).collect())
+}
+
+fn parse_rows(rest: &str) -> Result<Vec<usize>> {
+    ensure!(!rest.is_empty(), "rows needs at least one row index");
+    rest.split_ascii_whitespace()
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad row index {t:?} (expected an unsigned integer)"))
+        })
+        .collect()
+}
+
+fn parse_topk(rest: &str) -> Result<(usize, Selector)> {
+    let mut parts = rest.split_ascii_whitespace();
+    let k = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("topk needs a count"))?
+        .parse::<usize>()
+        .map_err(|_| anyhow::anyhow!("topk needs a numeric count"))?;
+    ensure!(k > 0, "topk count must be positive");
+    let sel = match parts.next() {
+        Some("all") => {
+            ensure!(parts.next().is_none(), "topk all takes no further arguments");
+            Selector::All
+        }
+        Some("group") => {
+            let g = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("topk … group needs a group index"))?
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad group index"))?;
+            ensure!(parts.next().is_none(), "topk group takes exactly one index");
+            Selector::Group(g)
+        }
+        Some("rows") => {
+            let tail = parts.map(str::to_owned).collect::<Vec<_>>().join(" ");
+            Selector::Rows(parse_rows(&tail)?)
+        }
+        other => anyhow::bail!("topk selector must be all/group/rows, got {other:?}"),
+    };
+    Ok((k, sel))
+}
+
+/// Render one response line (no trailing newline). Scores use `{}` —
+/// the shortest representation that round-trips, identical to
+/// `ranksvm predict` output. Error messages are flattened to one line.
+pub fn render(resp: &Response) -> String {
+    match &resp.body {
+        Ok(Payload::Scores(s)) => {
+            let mut out = format!("ok v={}", resp.version);
+            for x in s {
+                let _ = write!(out, " {x}");
+            }
+            out
+        }
+        Ok(Payload::Ranked(items)) => {
+            let mut out = format!("ok v={}", resp.version);
+            for (row, score) in items {
+                let _ = write!(out, " {row}:{score}");
+            }
+            out
+        }
+        Err(msg) => format!("err {}", msg.replace(['\n', '\r'], " ")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_lines_use_the_libsvm_gate() {
+        let Line::Req(Request::Score(feats)) = parse("score 1:0.5 3:-2 7:1e3") else {
+            panic!("expected a score request");
+        };
+        assert_eq!(feats, vec![(0, 0.5), (2, -2.0), (6, 1e3)]);
+
+        // The gate's rules apply verbatim: order, duplicates, 0-index,
+        // non-finite values, qid.
+        for bad in [
+            "score 3:1 1:2",
+            "score 2:1 2:2",
+            "score 0:1",
+            "score 1:nan",
+            "score qid:3 1:2",
+            "score",
+            "score notafeat",
+        ] {
+            assert!(
+                matches!(parse(bad), Line::Req(Request::Invalid(_))),
+                "{bad:?} should be invalid"
+            );
+        }
+    }
+
+    #[test]
+    fn rows_and_topk_parse() {
+        assert_eq!(parse("rows 0 5 2"), Line::Req(Request::Rows(vec![0, 5, 2])));
+        assert_eq!(
+            parse("topk 3 all"),
+            Line::Req(Request::TopK { k: 3, sel: Selector::All })
+        );
+        assert_eq!(
+            parse("topk 10 group 4"),
+            Line::Req(Request::TopK { k: 10, sel: Selector::Group(4) })
+        );
+        assert_eq!(
+            parse("topk 2 rows 7 1"),
+            Line::Req(Request::TopK { k: 2, sel: Selector::Rows(vec![7, 1]) })
+        );
+        for bad in [
+            "rows",
+            "rows -1",
+            "rows 1.5",
+            "topk",
+            "topk 0 all",
+            "topk 3",
+            "topk 3 bogus",
+            "topk 3 group",
+            "topk 3 all extra",
+            "topk 3 rows",
+        ] {
+            assert!(
+                matches!(parse(bad), Line::Req(Request::Invalid(_))),
+                "{bad:?} should be invalid"
+            );
+        }
+    }
+
+    #[test]
+    fn control_lines_parse() {
+        assert_eq!(parse("quit"), Line::Quit);
+        assert_eq!(parse("ping"), Line::Ping);
+        assert_eq!(parse("info"), Line::Info);
+        assert_eq!(parse("reload"), Line::Reload);
+        assert_eq!(parse("swap /tmp/next.rsm"), Line::Swap(PathBuf::from("/tmp/next.rsm")));
+        assert_eq!(parse("batch 16"), Line::Batch(16));
+        for bad in ["batch", "batch 0", "batch nope", "swap", "", "  ", "frobnicate 3"] {
+            assert!(
+                matches!(parse(bad), Line::Req(Request::Invalid(_))),
+                "{bad:?} should be invalid"
+            );
+        }
+        assert!(matches!(
+            parse(&format!("batch {}", MAX_BATCH + 1)),
+            Line::Req(Request::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn render_matches_predict_formatting() {
+        let resp = Response { version: 3, body: Ok(Payload::Scores(vec![0.5, -1.25e-7, 3.0])) };
+        // `{}` Display — identical to a predict output line per score.
+        assert_eq!(render(&resp), "ok v=3 0.5 -0.000000125 3");
+        let ranked =
+            Response { version: 1, body: Ok(Payload::Ranked(vec![(4, 2.5), (0, -1.0)])) };
+        assert_eq!(render(&ranked), "ok v=1 4:2.5 0:-1");
+        let err = Response { version: 9, body: Err("multi\nline\rmessage".into()) };
+        assert_eq!(render(&err), "err multi line message");
+    }
+}

@@ -1,0 +1,677 @@
+//! The standalone scoring model and its versioned on-disk format
+//! (`.rsm`).
+//!
+//! [`ScoringModel`] is what the serving path loads: the trained weight
+//! vector *plus* everything needed to score **raw** feature vectors —
+//! in particular the `--normalize` mode and the training-set column
+//! norms. A model trained with `--normalize l2-col` lives in the
+//! normalized feature space; before this format existed the plain-text
+//! `RankModel` file silently expected callers to pre-scale their inputs
+//! with norms they did not have. A `ScoringModel` carries the norms, so
+//! `predict`/`serve` score raw inputs bit-identically to scoring
+//! explicitly pre-normalized data (pinned in `tests/serve.rs`).
+//!
+//! The binary format reuses the pallas-store machinery from
+//! `data/store/format.rs` — the same FNV-1a-64 [`Checksum`] stream
+//! discipline (payload first, then the header minus the checksum
+//! field), the same [`cast_slice`] zero-copy boundary, the same
+//! refusal policy (unknown version or flag bits are structured errors
+//! on the checked *and* unchecked open paths). The normative byte-level
+//! spec lives in `docs/MODEL_FORMAT.md`; `tests/model_spec.rs` pins
+//! this module to it.
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------
+//!      0     7  magic "RSMODL\0"
+//!      7     1  format version (1)
+//!      8     8  dim (n)                 u64 LE
+//!     16     8  flags (bit 0: norms)    u64 LE
+//!     24     8  checksum (FNV-1a 64)    u64 LE
+//!     32   2×8  section offsets         u64 LE each
+//!     48    48  reserved (must be zero)
+//!     96     …  sections (8-aligned):
+//!               weights  n·f64   trained weight vector
+//!               norms    n·f64   training-set column ℓ2 norms
+//!                                (flag bit 0 only)
+//! ```
+//!
+//! [`ScoringModel::save`] publishes atomically (write a temp file in
+//! the same directory, then `rename`), so a serving daemon watching the
+//! path never observes a torn file — that rename *is* the hot-swap
+//! protocol (`serve::Engine` picks the new version up at the next batch
+//! boundary).
+//!
+//! Legacy plain-text `ranksvm-model v1` files (un-normalized by
+//! construction) still load through [`ScoringModel::load_auto`].
+
+use crate::coordinator::model::RankModel;
+use crate::data::store::{cast_slice, Checksum, Mmap};
+use crate::data::DatasetView;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// File magic: the first 7 bytes of every binary scoring model.
+pub const MODEL_MAGIC: [u8; 7] = *b"RSMODL\0";
+
+/// Current scoring-model format version (byte 7).
+pub const MODEL_VERSION: u8 = 1;
+
+/// Total header size; the first section starts here (8-aligned).
+pub const MODEL_HEADER_LEN: usize = 96;
+
+/// Byte range of the checksum field inside the header — the only bytes
+/// the checksum stream skips.
+pub const MODEL_CHECKSUM_FIELD: std::ops::Range<usize> = 24..32;
+
+/// First byte of the section-offset array inside the header.
+pub const MODEL_OFFSETS_START: usize = 32;
+
+/// Section count/order. Indexes into [`ModelHeader::offsets`].
+pub const MSEC_WEIGHTS: usize = 0;
+pub const MSEC_NORMS: usize = 1;
+pub const MODEL_N_SECTIONS: usize = 2;
+
+/// Header flag bit: the model carries training-set column ℓ2 norms
+/// (i.e. it was trained with `--normalize l2-col` and scores raw
+/// inputs by applying that normalization itself).
+pub const MODEL_FLAG_HAS_NORMS: u64 = 1;
+
+/// Every flag bit this build understands; any other bit is refused.
+pub const MODEL_KNOWN_FLAGS: u64 = MODEL_FLAG_HAS_NORMS;
+
+/// Decoded scoring-model header. Field meanings per the module layout
+/// table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelHeader {
+    pub dim: u64,
+    pub flags: u64,
+    pub checksum: u64,
+    pub offsets: [u64; MODEL_N_SECTIONS],
+}
+
+impl ModelHeader {
+    pub fn has_norms(&self) -> bool {
+        self.flags & MODEL_FLAG_HAS_NORMS != 0
+    }
+
+    /// Byte length of each section, derived from `dim` — `None` when
+    /// the count is large enough to overflow (only reachable from a
+    /// corrupt header; [`Self::decode`] rejects such files).
+    pub fn checked_section_len(&self, sec: usize) -> Option<u64> {
+        match sec {
+            MSEC_WEIGHTS => self.dim.checked_mul(8),
+            MSEC_NORMS => {
+                if self.has_norms() {
+                    self.dim.checked_mul(8)
+                } else {
+                    Some(0)
+                }
+            }
+            _ => unreachable!("unknown model section {sec}"),
+        }
+    }
+
+    /// Byte length of each section for a header that already passed
+    /// [`Self::decode`].
+    pub fn section_len(&self, sec: usize) -> u64 {
+        self.checked_section_len(sec).expect("header counts validated by decode")
+    }
+
+    pub fn encode(&self) -> [u8; MODEL_HEADER_LEN] {
+        let mut out = [0u8; MODEL_HEADER_LEN];
+        out[..7].copy_from_slice(&MODEL_MAGIC);
+        out[7] = MODEL_VERSION;
+        for (k, v) in [self.dim, self.flags, self.checksum].iter().enumerate() {
+            out[8 + k * 8..16 + k * 8].copy_from_slice(&v.to_le_bytes());
+        }
+        for (k, v) in self.offsets.iter().enumerate() {
+            let at = MODEL_OFFSETS_START + k * 8;
+            out[at..at + 8].copy_from_slice(&v.to_le_bytes());
+        }
+        // Bytes MODEL_OFFSETS_START + 8·MODEL_N_SECTIONS .. HEADER_LEN
+        // stay zero (the reserved tail).
+        out
+    }
+
+    /// Decode and *structurally* validate a header against the file
+    /// length: magic, version, reserved bytes, flag registry, section
+    /// alignment/order/bounds. Content integrity (the checksum) is
+    /// verified separately by the checked open path.
+    pub fn decode(bytes: &[u8], file_len: u64) -> Result<ModelHeader> {
+        ensure!(bytes.len() >= MODEL_HEADER_LEN, "file too short for a scoring-model header");
+        ensure!(bytes[..7] == MODEL_MAGIC, "not a ranksvm scoring model (bad magic)");
+        let version = bytes[7];
+        if version != MODEL_VERSION {
+            bail!(
+                "unsupported scoring-model version {version} (this build reads \
+                 {MODEL_VERSION}; re-save the model with a matching build)"
+            );
+        }
+        let u64_at = |off: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[off..off + 8]);
+            u64::from_le_bytes(b)
+        };
+        let mut offsets = [0u64; MODEL_N_SECTIONS];
+        for (k, o) in offsets.iter_mut().enumerate() {
+            *o = u64_at(MODEL_OFFSETS_START + k * 8);
+        }
+        let h = ModelHeader { dim: u64_at(8), flags: u64_at(16), checksum: u64_at(24), offsets };
+        ensure!(
+            bytes[MODEL_OFFSETS_START + 8 * MODEL_N_SECTIONS..MODEL_HEADER_LEN]
+                .iter()
+                .all(|&b| b == 0),
+            "reserved header bytes are not zero"
+        );
+        // Unknown flag bits mean a feature this build cannot honor —
+        // reject them even on the unchecked path (the store's policy).
+        ensure!(
+            h.flags & !MODEL_KNOWN_FLAGS == 0,
+            "unknown scoring-model flag bits {:#x}",
+            h.flags & !MODEL_KNOWN_FLAGS
+        );
+        // Geometry: sections in declaration order, 8-aligned, inside
+        // the file, and the last one ends exactly at EOF.
+        let mut cursor = MODEL_HEADER_LEN as u64;
+        for sec in 0..MODEL_N_SECTIONS {
+            let off = h.offsets[sec];
+            let len = h
+                .checked_section_len(sec)
+                .ok_or_else(|| anyhow::anyhow!("section {sec} length overflows (corrupt dim)"))?;
+            ensure!(off % 8 == 0, "section {sec} offset {off} is not 8-byte aligned");
+            ensure!(off >= cursor, "section {sec} offset {off} overlaps its predecessor");
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| anyhow::anyhow!("section {sec} length overflows"))?;
+            ensure!(
+                end <= file_len,
+                "section {sec} ends at {end} but the file is {file_len} bytes (short file?)"
+            );
+            cursor = end;
+        }
+        ensure!(
+            cursor == file_len,
+            "file has {} trailing bytes past the last section",
+            file_len - cursor
+        );
+        Ok(h)
+    }
+}
+
+/// Fold a model header into the checksum stream: every header byte
+/// except the checksum field itself (the store's `update_header`
+/// discipline, at this format's field offsets).
+fn update_model_header(sum: &mut Checksum, header: &[u8]) {
+    debug_assert!(header.len() >= MODEL_HEADER_LEN);
+    sum.update(&header[..MODEL_CHECKSUM_FIELD.start]);
+    sum.update(&header[MODEL_CHECKSUM_FIELD.end..MODEL_HEADER_LEN]);
+}
+
+/// The serial per-row scoring kernel — the *only* dot-product loop in
+/// the crate, shared by [`RankModel::predict`] (`norms: None`), the
+/// [`ScoringModel`], and the serving engine, so every scoring path is
+/// bit-identical by construction.
+///
+/// Feature dimensions may differ (train/test splits of sparse data):
+/// entries at `j >= w.len()` contribute zero, matching the historical
+/// `RankModel::predict` contract. With `norms`, each value is divided
+/// by its column norm *before* the multiply — exactly the
+/// `map_values(v / norm)` fold `--normalize l2-col` applies at training
+/// time, so scoring raw inputs here equals scoring pre-normalized
+/// inputs without norms, to the last bit.
+#[inline]
+pub fn score_row(w: &[f64], norms: Option<&[f64]>, idx: &[u32], val: &[f64]) -> f64 {
+    let mut s = 0.0;
+    match norms {
+        None => {
+            for (&j, &v) in idx.iter().zip(val) {
+                if (j as usize) < w.len() {
+                    s += v * w[j as usize];
+                }
+            }
+        }
+        Some(nr) => {
+            for (&j, &v) in idx.iter().zip(val) {
+                let j = j as usize;
+                if j < w.len() {
+                    let vv = if nr[j] > 0.0 { v / nr[j] } else { v };
+                    s += vv * w[j];
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Score every row of a CSR view with [`score_row`], in row order.
+pub fn score_csr(w: &[f64], norms: Option<&[f64]>, x: &crate::linalg::CsrView<'_>) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.rows());
+    for i in 0..x.rows() {
+        let (idx, val) = x.row(i);
+        out.push(score_row(w, norms, idx, val));
+    }
+    out
+}
+
+/// How the model bytes are held: built in memory, or zero-copy off a
+/// memory-mapped `.rsm` file (the serving daemon's arrangement — the
+/// mapping lives exactly as long as the model, so an old version's
+/// pages are dropped when its last in-flight batch finishes).
+enum Backing {
+    Owned { w: Vec<f64>, norms: Option<Vec<f64>> },
+    Mapped { map: Mmap, w_span: (usize, usize), norms_span: Option<(usize, usize)> },
+}
+
+/// A trained linear ranking function plus its scoring-time feature
+/// normalization — everything `predict`/`serve` need to score raw
+/// inputs. See the module docs for the on-disk format.
+pub struct ScoringModel {
+    backing: Backing,
+    dim: usize,
+}
+
+impl ScoringModel {
+    /// Build from parts. `norms`, when present, must have one entry per
+    /// weight (the training-set column ℓ2 norms).
+    pub fn new(w: Vec<f64>, norms: Option<Vec<f64>>) -> Result<ScoringModel> {
+        if let Some(n) = &norms {
+            ensure!(
+                n.len() == w.len(),
+                "norms/weights length mismatch: {} norms for {} weights",
+                n.len(),
+                w.len()
+            );
+        }
+        let dim = w.len();
+        Ok(ScoringModel { backing: Backing::Owned { w, norms }, dim })
+    }
+
+    /// Wrap a bare [`RankModel`] (no normalization recorded — the
+    /// legacy text-format semantics).
+    pub fn from_rank_model(model: &RankModel) -> ScoringModel {
+        ScoringModel::new(model.w.clone(), None).expect("no norms to mismatch")
+    }
+
+    /// Number of weights (the feature-space width).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The weight vector (zero-copy for a mapped model).
+    pub fn w(&self) -> &[f64] {
+        match &self.backing {
+            Backing::Owned { w, .. } => w,
+            Backing::Mapped { map, w_span, .. } => {
+                cast_slice(&map.bytes()[w_span.0..w_span.1]).expect("validated at open")
+            }
+        }
+    }
+
+    /// Training-set column ℓ2 norms, when the model was trained with
+    /// `--normalize l2-col`.
+    pub fn norms(&self) -> Option<&[f64]> {
+        match &self.backing {
+            Backing::Owned { norms, .. } => norms.as_deref(),
+            Backing::Mapped { map, norms_span, .. } => norms_span
+                .map(|(lo, hi)| cast_slice(&map.bytes()[lo..hi]).expect("validated at open")),
+        }
+    }
+
+    /// The `--normalize` mode this model records.
+    pub fn normalize_name(&self) -> &'static str {
+        if self.norms().is_some() {
+            "l2-col"
+        } else {
+            "none"
+        }
+    }
+
+    /// True when backed by a live kernel mapping (false for in-memory
+    /// models and the mmap read fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            Backing::Owned { .. } => false,
+            Backing::Mapped { map, .. } => map.is_mapped(),
+        }
+    }
+
+    /// Scores for every example of a dataset, raw features in — the
+    /// recorded normalization is applied per entry by the shared
+    /// kernel.
+    pub fn scores(&self, ds: &dyn DatasetView) -> Vec<f64> {
+        score_csr(self.w(), self.norms(), &ds.x())
+    }
+
+    /// Score one sparse example given `(0-based index, value)` pairs.
+    /// Unlike the dataset path (which keeps the historical
+    /// out-of-dim-contributes-zero contract), an explicit request with
+    /// an out-of-range feature is a structured error — the serving
+    /// daemon's dimension check.
+    pub fn score_indexed(&self, feats: &[(usize, f64)]) -> Result<f64> {
+        let w = self.w();
+        let norms = self.norms();
+        let mut s = 0.0;
+        for &(j, v) in feats {
+            ensure!(
+                j < self.dim,
+                "feature index {} out of range (model dim {})",
+                j + 1,
+                self.dim
+            );
+            let vv = match norms {
+                Some(nr) if nr[j] > 0.0 => v / nr[j],
+                _ => v,
+            };
+            s += vv * w[j];
+        }
+        Ok(s)
+    }
+
+    /// Save in the versioned binary format, atomically: the bytes are
+    /// written to a temp file in the target directory and `rename`d
+    /// over `path`, so a concurrent reader (a serving daemon watching
+    /// the path) sees either the old complete file or the new one,
+    /// never a torn write. This rename is the hot-swap publish step.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let w = self.w();
+        let norms = self.norms();
+        let flags = if norms.is_some() { MODEL_FLAG_HAS_NORMS } else { 0 };
+        let w_off = MODEL_HEADER_LEN as u64;
+        let mut header = ModelHeader {
+            dim: self.dim as u64,
+            flags,
+            checksum: 0,
+            offsets: [w_off, w_off + 8 * self.dim as u64],
+        };
+        let mut payload = Vec::with_capacity(8 * (self.dim + norms.map_or(0, |n| n.len())));
+        for x in w {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(nr) = norms {
+            for x in nr {
+                payload.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        // Payload-first stream, then the header minus the checksum
+        // field — the store's coverage discipline.
+        let mut sum = Checksum::new();
+        sum.update(&payload);
+        update_model_header(&mut sum, &header.encode());
+        header.checksum = sum.finish();
+        let mut bytes = Vec::with_capacity(MODEL_HEADER_LEN + payload.len());
+        bytes.extend_from_slice(&header.encode());
+        bytes.extend_from_slice(&payload);
+        let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+        let tmp = dir
+            .unwrap_or_else(|| Path::new("."))
+            .join(format!(".rsm-tmp-{}", std::process::id()));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            std::fs::remove_file(&tmp).ok();
+            format!("publish {}", path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Open a binary scoring model with full integrity checking
+    /// (header geometry + whole-file checksum).
+    pub fn open(path: impl AsRef<Path>) -> Result<ScoringModel> {
+        Self::open_impl(path.as_ref(), true)
+    }
+
+    /// Open without the checksum pass. The header is still fully
+    /// validated — bad magic, unknown versions, unknown flag bits, and
+    /// broken geometry are refused here exactly as on the checked path;
+    /// only payload corruption can slip through.
+    pub fn open_unchecked(path: impl AsRef<Path>) -> Result<ScoringModel> {
+        Self::open_impl(path.as_ref(), false)
+    }
+
+    fn open_impl(path: &Path, verify: bool) -> Result<ScoringModel> {
+        let name = path.display().to_string();
+        let map = Mmap::open(path)?;
+        let bytes = map.bytes();
+        let header = ModelHeader::decode(bytes, bytes.len() as u64)
+            .with_context(|| format!("{name}: invalid scoring model"))?;
+        if verify {
+            let mut sum = Checksum::new();
+            sum.update(&bytes[MODEL_HEADER_LEN..]);
+            update_model_header(&mut sum, bytes);
+            ensure!(
+                sum.finish() == header.checksum,
+                "{name}: checksum mismatch — the model file is corrupt (expected {:#018x}, \
+                 found {:#018x})",
+                header.checksum,
+                sum.finish()
+            );
+        }
+        let dim = usize::try_from(header.dim).context("model dim overflows usize")?;
+        let span = |sec: usize| {
+            let off = header.offsets[sec] as usize;
+            (off, off + header.section_len(sec) as usize)
+        };
+        let w_span = span(MSEC_WEIGHTS);
+        let norms_span = header.has_norms().then(|| span(MSEC_NORMS));
+        // Validate the casts once so the accessors can't fail later.
+        cast_slice::<f64>(&bytes[w_span.0..w_span.1])
+            .with_context(|| format!("{name}: weights section"))?;
+        if let Some((lo, hi)) = norms_span {
+            cast_slice::<f64>(&bytes[lo..hi]).with_context(|| format!("{name}: norms section"))?;
+        }
+        Ok(ScoringModel { backing: Backing::Mapped { map, w_span, norms_span }, dim })
+    }
+
+    /// Load a model of either format: binary `.rsm` (sniffed by magic
+    /// bytes) or the legacy plain-text `ranksvm-model v1` (which never
+    /// records normalization — such models score raw features, the
+    /// pre-ScoringModel behavior). Rejects pallas stores by name so a
+    /// swapped `--model`/`--data` pair fails legibly.
+    pub fn load_auto(path: impl AsRef<Path>) -> Result<ScoringModel> {
+        Self::load_auto_with(path, true)
+    }
+
+    /// [`Self::load_auto`] with an explicit verification toggle for the
+    /// binary path (`false` maps to [`Self::open_unchecked`]).
+    pub fn load_auto_with(path: impl AsRef<Path>, verify: bool) -> Result<ScoringModel> {
+        let path = path.as_ref();
+        let mut magic = [0u8; 7];
+        let sniffed = std::fs::File::open(path)
+            .and_then(|mut f| std::io::Read::read_exact(&mut f, &mut magic))
+            .is_ok();
+        if sniffed && magic == MODEL_MAGIC {
+            return if verify { Self::open(path) } else { Self::open_unchecked(path) };
+        }
+        if sniffed && magic == crate::data::store::MAGIC {
+            bail!(
+                "{} is a pallas data store, not a model (pass it as --data)",
+                path.display()
+            );
+        }
+        Ok(Self::from_rank_model(&RankModel::load(path)?))
+    }
+}
+
+impl std::fmt::Debug for ScoringModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScoringModel")
+            .field("dim", &self.dim)
+            .field("normalize", &self.normalize_name())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ranksvm_scoring_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_model(with_norms: bool) -> ScoringModel {
+        let w = vec![1.5, -2.25e-10, 0.0, 3.7e8, -1.0];
+        let norms = with_norms.then(|| vec![2.0, 1.0, 0.0, 4.0, 0.5]);
+        ScoringModel::new(w, norms).unwrap()
+    }
+
+    #[test]
+    fn save_open_round_trips_bits() {
+        for with_norms in [false, true] {
+            let m = sample_model(with_norms);
+            let path = tmp(&format!("rt_{with_norms}.rsm"));
+            m.save(&path).unwrap();
+            let back = ScoringModel::open(&path).unwrap();
+            assert_eq!(back.w(), m.w());
+            assert_eq!(back.norms(), m.norms());
+            assert_eq!(back.dim(), m.dim());
+            let unchecked = ScoringModel::open_unchecked(&path).unwrap();
+            assert_eq!(unchecked.w(), m.w());
+        }
+    }
+
+    #[test]
+    fn save_is_byte_deterministic() {
+        let m = sample_model(true);
+        let (a, b) = (tmp("det_a.rsm"), tmp("det_b.rsm"));
+        m.save(&a).unwrap();
+        m.save(&b).unwrap();
+        assert_eq!(std::fs::read(a).unwrap(), std::fs::read(b).unwrap());
+    }
+
+    #[test]
+    fn kernel_matches_rank_model_predict() {
+        let ds = synthetic::cadata_like(40, 9);
+        let w: Vec<f64> = (0..ds.dim()).map(|j| (j as f64 - 3.0) * 0.25).collect();
+        let model = RankModel::new(w.clone());
+        let scoring = ScoringModel::from_rank_model(&model);
+        let a = model.predict(&ds);
+        let b = scoring.scores(&ds);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn norms_equal_scoring_pre_normalized_data() {
+        let ds = synthetic::cadata_like(60, 17);
+        let norms: Vec<f64> = crate::data::store::compute_col_stats(ds.x.view())
+            .iter()
+            .map(|s| s.sumsq.sqrt())
+            .collect();
+        let w: Vec<f64> = (0..ds.dim()).map(|j| 0.1 * (j as f64 + 1.0)).collect();
+        let with_norms = ScoringModel::new(w.clone(), Some(norms.clone())).unwrap();
+        let mut scaled = crate::data::materialize(&ds);
+        scaled.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
+        let plain = ScoringModel::new(w, None).unwrap();
+        let a = with_norms.scores(&ds);
+        let b = plain.scores(&scaled);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn score_indexed_rejects_out_of_dim() {
+        let m = sample_model(true);
+        assert!(m.score_indexed(&[(0, 1.0), (4, 2.0)]).is_ok());
+        let err = m.score_indexed(&[(5, 1.0)]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn legacy_text_models_still_load() {
+        let rank = RankModel::new(vec![0.5, -1.5, 2.0]);
+        let path = tmp("legacy.txt");
+        rank.save(&path).unwrap();
+        let m = ScoringModel::load_auto(&path).unwrap();
+        assert_eq!(m.w(), &rank.w[..]);
+        assert!(m.norms().is_none());
+        assert_eq!(m.normalize_name(), "none");
+    }
+
+    #[test]
+    fn load_auto_names_a_store_legibly() {
+        let ds = synthetic::cadata_like(20, 3);
+        let text = tmp("store_src.libsvm");
+        crate::data::libsvm::write(&ds, &text).unwrap();
+        let store = tmp("store_src.pstore");
+        let opts = crate::data::store::ConvertOptions::default();
+        crate::data::store::convert_libsvm(&text, &store, &opts).unwrap();
+        let err = ScoringModel::load_auto(&store).unwrap_err().to_string();
+        assert!(err.contains("pallas data store"), "{err}");
+    }
+
+    #[test]
+    fn checksum_skips_only_its_own_field() {
+        let m = sample_model(true);
+        let path = tmp("sum.rsm");
+        m.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header = ModelHeader::decode(&bytes, bytes.len() as u64).unwrap();
+        let mut sum = Checksum::new();
+        sum.update(&bytes[MODEL_HEADER_LEN..]);
+        update_model_header(&mut sum, &bytes);
+        assert_eq!(sum.finish(), header.checksum);
+    }
+
+    #[test]
+    fn header_roundtrip_and_refusals() {
+        let m = sample_model(true);
+        let path = tmp("hdr.rsm");
+        m.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let h = ModelHeader::decode(&good, good.len() as u64).unwrap();
+        assert_eq!(ModelHeader::decode(&h.encode(), good.len() as u64).unwrap(), h);
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let err = ModelHeader::decode(&bad, good.len() as u64).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        for bad_version in [0u8, 2, 99] {
+            let mut bad = good.clone();
+            bad[7] = bad_version;
+            let err = ModelHeader::decode(&bad, good.len() as u64).unwrap_err().to_string();
+            assert!(err.contains("version"), "{bad_version}: {err}");
+        }
+
+        let mut bad = good.clone();
+        bad[MODEL_HEADER_LEN - 1] = 1;
+        let err = ModelHeader::decode(&bad, good.len() as u64).unwrap_err().to_string();
+        assert!(err.contains("reserved"), "{err}");
+
+        // Unknown flag bit: refused structurally (both open paths).
+        let mut hdr = h;
+        hdr.flags |= 1 << 13;
+        let err = ModelHeader::decode(&hdr.encode(), good.len() as u64).unwrap_err().to_string();
+        assert!(err.contains("flag"), "{err}");
+
+        // Truncation and trailing bytes.
+        assert!(ModelHeader::decode(&good, good.len() as u64 - 8).is_err());
+        assert!(ModelHeader::decode(&good, good.len() as u64 + 8).is_err());
+        let mut hdr = h;
+        hdr.dim = u64::MAX;
+        assert!(ModelHeader::decode(&hdr.encode(), good.len() as u64).is_err());
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_temp_files() {
+        let m = sample_model(false);
+        let path = tmp("atomic.rsm");
+        m.save(&path).unwrap();
+        let dir = path.parent().unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".rsm-tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+}

@@ -1,0 +1,182 @@
+//! docs/MODEL_FORMAT.md ↔ `serve/scoring.rs` consistency.
+//!
+//! The model-format document is normative, so it must not drift from
+//! the code. Like `tests/docs_spec.rs` for the store format, this
+//! suite parses the spec's markdown tables (header fields, flag
+//! registry) and verifies every claimed offset, size, and constant
+//! against the real encoder — by probing an encoded header with
+//! sentinel values, not by trusting a second copy of the numbers.
+
+use ranksvm::serve::scoring::{
+    ModelHeader, MODEL_CHECKSUM_FIELD, MODEL_FLAG_HAS_NORMS, MODEL_HEADER_LEN, MODEL_KNOWN_FLAGS,
+    MODEL_MAGIC, MODEL_N_SECTIONS, MODEL_OFFSETS_START, MODEL_VERSION,
+};
+
+/// One parsed `| offset | size | `name` … |` table row.
+#[derive(Debug)]
+struct Row {
+    offset: usize,
+    size: usize,
+    name: String,
+}
+
+fn spec_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/MODEL_FORMAT.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {path}: {e} — the normative spec must exist"))
+}
+
+/// Extract the backticked token of a markdown cell ("`dim` — …" → "dim").
+fn backticked(cell: &str) -> Option<String> {
+    let start = cell.find('`')? + 1;
+    let end = start + cell[start..].find('`')?;
+    Some(cell[start..end].to_string())
+}
+
+/// Collect numeric table rows under the section whose heading contains
+/// `heading` (until the next heading).
+fn table_rows(doc: &str, heading: &str) -> Vec<Row> {
+    let mut in_section = false;
+    let mut rows = Vec::new();
+    for line in doc.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains(heading);
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        // A well-formed row splits into ["", offset, size, field, ""].
+        if cells.len() < 5 {
+            continue;
+        }
+        let (Ok(offset), Ok(size)) = (cells[1].parse::<usize>(), cells[2].parse::<usize>())
+        else {
+            continue; // separator / header rows
+        };
+        let Some(name) = backticked(cells[3]) else { continue };
+        rows.push(Row { offset, size, name });
+    }
+    rows
+}
+
+fn find<'a>(rows: &'a [Row], name: &str) -> &'a Row {
+    rows.iter()
+        .find(|r| r.name == name)
+        .unwrap_or_else(|| panic!("spec table is missing a `{name}` row: {rows:?}"))
+}
+
+/// Header with a distinct sentinel in every field, so a probe at a
+/// documented offset can only match the field the doc claims is there.
+fn sentinel_header() -> ModelHeader {
+    ModelHeader {
+        dim: 0x1111_1111_1111_1111,
+        flags: 0x2222_2222_2222_2222,
+        checksum: 0x3333_3333_3333_3333,
+        offsets: [0x0101_0101_0101_0101, 0x0202_0202_0202_0202],
+    }
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+#[test]
+fn header_table_offsets_match_the_encoder() {
+    let doc = spec_text();
+    let rows = table_rows(&doc, "Header");
+    let h = sentinel_header();
+    let bytes = h.encode();
+
+    let magic = find(&rows, "magic");
+    assert_eq!((magic.offset, magic.size), (0, MODEL_MAGIC.len()));
+    assert_eq!(&bytes[magic.offset..magic.offset + magic.size], &MODEL_MAGIC);
+
+    let version = find(&rows, "version");
+    assert_eq!((version.offset, version.size), (7, 1));
+    assert_eq!(bytes[version.offset], MODEL_VERSION);
+
+    // Every u64 field: the sentinel must sit at the documented offset,
+    // proving the doc describes the real encoding.
+    for (name, sentinel) in [("dim", h.dim), ("flags", h.flags), ("checksum", h.checksum)] {
+        let row = find(&rows, name);
+        assert_eq!(row.size, 8, "{name}");
+        assert_eq!(u64_at(&bytes, row.offset), sentinel, "{name} is not at offset {}", row.offset);
+    }
+    let checksum = find(&rows, "checksum");
+    assert_eq!(checksum.offset, MODEL_CHECKSUM_FIELD.start);
+    assert_eq!(checksum.offset + checksum.size, MODEL_CHECKSUM_FIELD.end);
+
+    let offsets = find(&rows, "section_offsets");
+    assert_eq!((offsets.offset, offsets.size), (MODEL_OFFSETS_START, 8 * MODEL_N_SECTIONS));
+    for (k, &sentinel) in h.offsets.iter().enumerate() {
+        assert_eq!(u64_at(&bytes, offsets.offset + 8 * k), sentinel, "section offset {k}");
+    }
+
+    let reserved = find(&rows, "reserved");
+    assert_eq!(reserved.offset, MODEL_OFFSETS_START + 8 * MODEL_N_SECTIONS);
+    assert_eq!(reserved.offset + reserved.size, MODEL_HEADER_LEN);
+    assert!(bytes[reserved.offset..MODEL_HEADER_LEN].iter().all(|&b| b == 0));
+
+    // The documented table covers the whole header, gap-free.
+    let mut covered: Vec<(usize, usize)> = rows.iter().map(|r| (r.offset, r.size)).collect();
+    covered.sort_unstable();
+    let mut cursor = 0usize;
+    for (off, size) in covered {
+        assert_eq!(off, cursor, "header table has a gap or overlap at byte {cursor}");
+        cursor = off + size;
+    }
+    assert_eq!(cursor, MODEL_HEADER_LEN, "header table does not cover the whole header");
+
+    // Prose constants.
+    assert!(doc.contains(&format!("{MODEL_HEADER_LEN}-byte header")), "header size prose");
+    assert!(doc.contains(&format!("version {MODEL_VERSION}")), "version prose");
+}
+
+#[test]
+fn flag_registry_matches_the_constants() {
+    let doc = spec_text();
+    // Parse `| bit | mask | `NAME` | …` rows of the registry table.
+    let mut masks = std::collections::HashMap::new();
+    for line in doc.lines() {
+        if !line.starts_with('|') || !line.contains("0x") {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 5 {
+            continue;
+        }
+        let Some(hex) = cells[2].strip_prefix("0x") else { continue };
+        let Ok(mask) = u64::from_str_radix(hex, 16) else { continue };
+        if let Some(name) = backticked(cells[3]) {
+            masks.insert(name, mask);
+        }
+    }
+    assert_eq!(masks.get("HAS_NORMS"), Some(&MODEL_FLAG_HAS_NORMS), "{masks:?}");
+    assert_eq!(
+        masks.values().fold(0u64, |a, &m| a | m),
+        MODEL_KNOWN_FLAGS,
+        "the registry must list exactly the known flag bits"
+    );
+}
+
+#[test]
+fn sections_table_matches_the_derived_lengths() {
+    let doc = spec_text();
+    // The sections table documents per-dim lengths `n × 8` for both
+    // sections; probe the real derivation at a sentinel dim.
+    let h = ModelHeader {
+        dim: 13,
+        flags: MODEL_FLAG_HAS_NORMS,
+        checksum: 0,
+        offsets: [MODEL_HEADER_LEN as u64, MODEL_HEADER_LEN as u64 + 13 * 8],
+    };
+    assert_eq!(h.section_len(0), 13 * 8);
+    assert_eq!(h.section_len(1), 13 * 8);
+    let plain = ModelHeader { flags: 0, ..h };
+    assert_eq!(plain.section_len(1), 0, "norms section is empty without HAS_NORMS");
+    for needle in ["| 0 | `weights` | n × 8 |", "| 1 | `norms` | n × 8 |"] {
+        assert!(doc.contains(needle), "sections table is missing {needle:?}");
+    }
+}

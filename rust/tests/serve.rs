@@ -1,0 +1,529 @@
+//! The serving battery: parity, top-k, hot swap, format fuzz, and the
+//! normalize round trip.
+//!
+//! The contracts pinned here (ISSUE 6):
+//!
+//! - **Parity** — daemon-scored batches are bit-identical to one-shot
+//!   `ranksvm predict` for the same model/data at `--threads 1/2/8`,
+//!   in-process and through the real CLI over stdio.
+//! - **Top-k** — bounded-heap results equal brute-force
+//!   full-sort-then-truncate (ties broken by the documented
+//!   `total_cmp` + index order), for every selector.
+//! - **Hot swap** — under concurrent score batches and atomic model
+//!   republishes, every response is consistent with exactly one model
+//!   version, and versions never run backwards.
+//! - **Format** — the seeded single-byte-flip fuzz from
+//!   `tests/store.rs`, ported to the `.rsm` format; unknown
+//!   version/flag bits are refused on checked AND unchecked opens.
+//! - **Normalize** — an `--normalize l2-col` model saved and reloaded
+//!   scores *raw* inputs bit-identically to scoring explicitly
+//!   pre-normalized data; legacy text models still load.
+
+use ranksvm::coordinator::{memprobe, train, Method, Normalize, RankModel, TrainConfig};
+use ranksvm::data::{materialize, synthetic, DatasetView, LoadedDataset};
+use ranksvm::serve::{
+    handle_connection, protocol, scoring, top_k, Engine, Request, ScoringModel, Selector,
+};
+use std::io::Cursor;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ranksvm_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Weights with irrational-ish magnitudes so scores exercise the full
+/// mantissa; parity failures can't hide in round numbers.
+fn weights(dim: usize) -> Vec<f64> {
+    (0..dim).map(|j| ((j as f64) + 0.5).sin() * 1.75).collect()
+}
+
+fn norms_of(ds: &ranksvm::data::Dataset) -> Vec<f64> {
+    ranksvm::data::store::compute_col_stats(ds.x.view())
+        .iter()
+        .map(|s| s.sumsq.sqrt())
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: row {i}: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------------- parity
+
+#[test]
+fn engine_batches_bit_identical_to_predict_at_any_thread_count() {
+    let ds = synthetic::zipf_queries(300, 40, 12, 1.2, 71);
+    for (tag, norms) in [("plain", None), ("l2col", Some(norms_of(&ds)))] {
+        let w = weights(ds.dim());
+        let model = ScoringModel::new(w.clone(), norms.clone()).unwrap();
+        let path = tmp(&format!("parity_{tag}.rsm"));
+        model.save(&path).unwrap();
+        // The reference: the shared kernel over the whole dataset —
+        // and, for the plain model, the historical RankModel::predict.
+        let expect = model.scores(&ds);
+        if norms.is_none() {
+            assert_bits_eq(&expect, &RankModel::new(w).predict(&ds), tag);
+        }
+        let all_rows: Vec<usize> = (0..ds.len()).collect();
+        let mut reference_lines: Option<Vec<String>> = None;
+        for threads in [1usize, 2, 8] {
+            let eng =
+                Engine::new(&path, Some(LoadedDataset::Owned(materialize(&ds))), threads, true)
+                    .unwrap();
+            // One request scoring every row…
+            let bulk = eng.run_batch(&[Request::Rows(all_rows.clone())]);
+            let Ok(ranksvm::serve::Payload::Scores(got)) = &bulk[0].body else {
+                panic!("{tag}: bulk rows failed: {:?}", bulk[0].body)
+            };
+            assert_bits_eq(got, &expect, &format!("{tag} bulk t={threads}"));
+            // …and one single-row request per row, as one batch (each
+            // task runs on whatever worker steals it — results must
+            // not care).
+            let singles: Vec<Request> =
+                all_rows.iter().map(|&i| Request::Rows(vec![i])).collect();
+            let resp = eng.run_batch(&singles);
+            let got: Vec<f64> = resp
+                .iter()
+                .map(|r| match &r.body {
+                    Ok(ranksvm::serve::Payload::Scores(s)) => s[0],
+                    other => panic!("{tag}: {other:?}"),
+                })
+                .collect();
+            assert_bits_eq(&got, &expect, &format!("{tag} singles t={threads}"));
+            // Rendered wire lines are identical across thread counts.
+            let lines: Vec<String> = resp.iter().map(protocol::render).collect();
+            match &reference_lines {
+                None => reference_lines = Some(lines),
+                Some(r) => assert_eq!(&lines, r, "{tag}: wire bytes differ at t={threads}"),
+            }
+        }
+        // And the wire text of each score equals predict's `{}` output.
+        for (line, s) in reference_lines.unwrap().iter().zip(&expect) {
+            assert_eq!(line, &format!("ok v=1 {s}"), "{tag}: formatting parity");
+        }
+    }
+}
+
+#[test]
+fn serve_cli_stdio_is_byte_identical_to_predict_cli() {
+    use std::process::{Command, Stdio};
+    let Ok(bin) = memprobe::find_cli_bin() else {
+        eprintln!("skipping: ranksvm binary not built (run `cargo build --release`)");
+        return;
+    };
+    let ds = synthetic::zipf_queries(120, 16, 10, 1.3, 99);
+    let data = tmp("cli_parity.libsvm");
+    ranksvm::data::libsvm::write(&ds, &data).unwrap();
+    for (tag, norms) in [("plain", None), ("l2col", Some(norms_of(&ds)))] {
+        let model_path = tmp(&format!("cli_parity_{tag}.rsm"));
+        ScoringModel::new(weights(ds.dim()), norms).unwrap().save(&model_path).unwrap();
+        let predict = Command::new(&bin)
+            .args(["predict", "--model", model_path.to_str().unwrap()])
+            .args(["--data", data.to_str().unwrap()])
+            .output()
+            .expect("spawn predict");
+        assert!(predict.status.success(), "{tag}: {}", String::from_utf8_lossy(&predict.stderr));
+        let predict_lines: Vec<String> = String::from_utf8(predict.stdout)
+            .unwrap()
+            .lines()
+            .map(str::to_owned)
+            .collect();
+        assert_eq!(predict_lines.len(), ds.len(), "{tag}");
+        let request: String = format!(
+            "rows {}\nquit\n",
+            (0..ds.len()).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        for threads in ["1", "2", "8"] {
+            let mut child = Command::new(&bin)
+                .args(["serve", "--model", model_path.to_str().unwrap()])
+                .args(["--data", data.to_str().unwrap()])
+                .args(["--threads", threads])
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn serve");
+            {
+                use std::io::Write as _;
+                child.stdin.as_mut().unwrap().write_all(request.as_bytes()).unwrap();
+            }
+            let out = child.wait_with_output().expect("serve exits after quit");
+            assert!(out.status.success(), "{tag} t={threads}");
+            let stdout = String::from_utf8(out.stdout).unwrap();
+            let line = stdout.lines().next().unwrap_or_else(|| panic!("{tag}: no response"));
+            let tokens: Vec<&str> = line.split(' ').collect();
+            assert_eq!(tokens[0], "ok", "{tag}: {line}");
+            assert_eq!(tokens[1], "v=1", "{tag}: {line}");
+            // Byte-for-byte: every serve score token equals the
+            // corresponding predict output line.
+            assert_eq!(tokens.len() - 2, predict_lines.len(), "{tag} t={threads}");
+            for (i, (tok, pl)) in tokens[2..].iter().zip(&predict_lines).enumerate() {
+                assert_eq!(tok, pl, "{tag} t={threads}: row {i} differs");
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- top-k
+
+/// Brute-force reference: full sort by `score desc, row asc`, truncate.
+fn brute_top_k(rows: &[usize], scores: &[f64], k: usize) -> Vec<(usize, f64)> {
+    let mut idx = rows.to_vec();
+    idx.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, scores[i])).collect()
+}
+
+#[test]
+fn topk_matches_brute_force_for_every_selector() {
+    let ds = synthetic::queries(12, 25, 8, 55);
+    let model = ScoringModel::new(weights(ds.dim()), None).unwrap();
+    let path = tmp("topk.rsm");
+    model.save(&path).unwrap();
+    let scores = model.scores(&ds);
+    let gi = ranksvm::losses::GroupIndex::build(ds.qid.as_ref().unwrap(), &ds.y);
+    let eng = Engine::new(&path, Some(LoadedDataset::Owned(materialize(&ds))), 4, true).unwrap();
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let some: Vec<usize> = (0..ds.len()).step_by(3).collect();
+    for k in [1usize, 3, 25, ds.len(), ds.len() + 10] {
+        let mut reqs = vec![
+            Request::TopK { k, sel: Selector::All },
+            Request::TopK { k, sel: Selector::Rows(some.clone()) },
+        ];
+        for g in 0..gi.n_groups() {
+            reqs.push(Request::TopK { k, sel: Selector::Group(g) });
+        }
+        let resp = eng.run_batch(&reqs);
+        let ranked = |r: &ranksvm::serve::Response| match &r.body {
+            Ok(ranksvm::serve::Payload::Ranked(v)) => v.clone(),
+            other => panic!("topk failed: {other:?}"),
+        };
+        assert_eq!(ranked(&resp[0]), brute_top_k(&all, &scores, k), "all k={k}");
+        assert_eq!(ranked(&resp[1]), brute_top_k(&some, &scores, k), "rows k={k}");
+        for g in 0..gi.n_groups() {
+            assert_eq!(
+                ranked(&resp[2 + g]),
+                brute_top_k(gi.group(g), &scores, k),
+                "group {g} k={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_tie_breaking_is_documented_order() {
+    // All-equal scores: top-k must be the k smallest row indices, and
+    // NaN (total_cmp's maximum) must sort above everything without
+    // panicking — same contract as RankModel::rank.
+    let ties: Vec<f64> = vec![2.5; 9];
+    assert_eq!(
+        top_k(ties.iter().copied().enumerate(), 4),
+        vec![(0, 2.5), (1, 2.5), (2, 2.5), (3, 2.5)]
+    );
+    let mut with_nan = ties.clone();
+    with_nan[6] = f64::NAN;
+    let got = top_k(with_nan.iter().copied().enumerate(), 3);
+    assert_eq!(got[0].0, 6, "NaN ranks first under total_cmp");
+    assert_eq!((got[1].0, got[2].0), (0, 1));
+}
+
+// ------------------------------------------------- structured errors
+
+#[test]
+fn malformed_requests_get_structured_errors_never_panics() {
+    let ds = synthetic::queries(5, 8, 6, 3);
+    let m = ds.len();
+    let path = tmp("errors.rsm");
+    ScoringModel::new(weights(ds.dim()), None).unwrap().save(&path).unwrap();
+    let eng = Engine::new(&path, Some(LoadedDataset::Owned(ds)), 2, true).unwrap();
+    let garbage = format!(
+        "score 99:1.0\nscore 7:2.0\nrows {m}\nrows 0 {m}\ntopk 3 group 99\n\
+         topk nope all\nscore 0:1\nscore 1:nan\nscore 3:1 1:2\nnonsense line\n\
+         rows -4\nscore\ntopk 0 all\nbatch 0\n\u{1F980} crab\nscore 1:1e309\nquit\n"
+    );
+    let mut out = Vec::new();
+    handle_connection(&eng, Cursor::new(garbage.into_bytes()), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 16, "one response per request line: {lines:?}");
+    // Every request above is malformed, out of range, or out of dim
+    // (the store is dim 6, so 1-based index 7 is already too wide).
+    for (i, line) in lines.iter().enumerate() {
+        assert!(line.starts_with("err "), "line {i} should be an error: {line}");
+        assert!(line.len() > 4, "line {i}: error must carry a message");
+    }
+    // Sanity: the same engine still serves good requests afterwards.
+    let ok = eng.run_batch(&[Request::Rows(vec![0])]);
+    assert!(ok[0].body.is_ok());
+}
+
+#[test]
+fn requests_needing_a_store_fail_cleanly_without_one() {
+    let path = tmp("nostore.rsm");
+    ScoringModel::new(weights(4), None).unwrap().save(&path).unwrap();
+    let eng = Engine::new(&path, None, 1, true).unwrap();
+    let resp = eng.run_batch(&[
+        Request::Rows(vec![0]),
+        Request::TopK { k: 3, sel: Selector::All },
+        Request::Score(vec![(1, 2.0)]),
+    ]);
+    assert!(resp[0].body.as_ref().unwrap_err().contains("--data"), "{:?}", resp[0].body);
+    assert!(resp[1].body.as_ref().unwrap_err().contains("--data"), "{:?}", resp[1].body);
+    assert!(resp[2].body.is_ok(), "score needs no store");
+}
+
+// -------------------------------------------------------------- hot swap
+
+#[test]
+fn concurrent_batches_see_exactly_one_version_each() {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    let ds = synthetic::cadata_like(80, 17);
+    let dim = ds.dim();
+    let rows: Vec<usize> = (0..ds.len()).collect();
+    // Two models with everywhere-different scores.
+    let model_a = ScoringModel::new(vec![1.0; dim], None).unwrap();
+    let model_b = ScoringModel::new(vec![-2.0; dim], None).unwrap();
+    let expect_a = model_a.scores(&ds);
+    let expect_b = model_b.scores(&ds);
+    let live = tmp("hotswap_live.rsm");
+    model_a.save(&live).unwrap();
+    let eng = Engine::new(&live, Some(LoadedDataset::Owned(ds)), 4, true).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let seen: Mutex<HashMap<u64, Vec<f64>>> = Mutex::new(HashMap::new());
+    std::thread::scope(|s| {
+        // Swapper: republish A/B alternately via the atomic save path.
+        s.spawn(|| {
+            for i in 0..40u32 {
+                let m = if i % 2 == 0 { &model_b } else { &model_a };
+                m.save(&live).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        // Scorers: hammer batches, recording (version, scores).
+        for _ in 0..3 {
+            s.spawn(|| {
+                let mut last_version = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let resp = eng.run_batch(&[Request::Rows(rows.clone())]);
+                    let r = &resp[0];
+                    let Ok(ranksvm::serve::Payload::Scores(scores)) = &r.body else {
+                        panic!("batch failed: {:?}", r.body)
+                    };
+                    // Versions never run backwards within a scorer.
+                    assert!(r.version >= last_version, "{} < {last_version}", r.version);
+                    last_version = r.version;
+                    // The whole batch matches exactly one model.
+                    let is_a = scores[0].to_bits() == expect_a[0].to_bits();
+                    let expect = if is_a { &expect_a } else { &expect_b };
+                    for (i, (g, e)) in scores.iter().zip(expect).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            e.to_bits(),
+                            "row {i}: torn batch at version {}",
+                            r.version
+                        );
+                    }
+                    // And one version always maps to one score vector.
+                    let mut seen = seen.lock().unwrap();
+                    match seen.get(&r.version) {
+                        None => {
+                            seen.insert(r.version, scores.clone());
+                        }
+                        Some(prev) => {
+                            for (p, g) in prev.iter().zip(scores) {
+                                assert_eq!(
+                                    p.to_bits(),
+                                    g.to_bits(),
+                                    "version {} served two different models",
+                                    r.version
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let (_, _, swaps) = eng.counters();
+    assert!(swaps > 0, "the test never actually swapped");
+}
+
+#[test]
+fn swap_command_round_trips_through_the_daemon() {
+    let ds = synthetic::cadata_like(30, 9);
+    let dim = ds.dim();
+    let live = tmp("swapcmd_live.rsm");
+    let staged = tmp("swapcmd_staged.rsm");
+    ScoringModel::new(vec![0.5; dim], None).unwrap().save(&live).unwrap();
+    ScoringModel::new(vec![3.0; dim], None).unwrap().save(&staged).unwrap();
+    let eng = Engine::new(&live, Some(LoadedDataset::Owned(ds)), 2, true).unwrap();
+    let input = format!("rows 0 1 2\nswap {}\nrows 0 1 2\nquit\n", staged.display());
+    let mut out = Vec::new();
+    handle_connection(&eng, Cursor::new(input.into_bytes()), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let before = lines[0].strip_prefix("ok v=1 ").expect(lines[0]);
+    assert_eq!(lines[1], "ok v=2 swapped=true");
+    let after = lines[2].strip_prefix("ok v=2 ").expect(lines[2]);
+    assert_ne!(before, after, "the staged model must actually change the scores");
+    assert!(!staged.exists(), "swap consumes the staged file (rename, not copy)");
+}
+
+// ---------------------------------------------------------- format fuzz
+
+/// The store's seeded flip fuzz, ported: any single-byte flip over a
+/// valid model must surface as a *structured error* from `open()` —
+/// never a panic, never a silent success. The unchecked path may accept
+/// a payload flip by contract, but must never panic either.
+#[test]
+fn fuzzed_single_byte_flips_never_panic_and_always_error() {
+    use ranksvm::util::rng::Rng;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let good_path = tmp("fuzz_good.rsm");
+    let w: Vec<f64> = weights(37);
+    let norms: Vec<f64> = (0..37).map(|j| (j as f64 * 0.37).cos().abs() + 0.1).collect();
+    ScoringModel::new(w, Some(norms)).unwrap().save(&good_path).unwrap();
+    let good = std::fs::read(&good_path).unwrap();
+    let victim = tmp("fuzz_flip.rsm");
+    let mut rng = Rng::new(0xF11B);
+    for trial in 0..250usize {
+        let pos = rng.below(good.len());
+        let bit = 1u8 << rng.below(8);
+        let mut bad = good.clone();
+        bad[pos] ^= bit;
+        std::fs::write(&victim, &bad).unwrap();
+        let outcome = catch_unwind(AssertUnwindSafe(|| ScoringModel::open(&victim).map(|_| ())));
+        let Ok(result) = outcome else {
+            panic!("trial {trial}: open() panicked on byte {pos} bit {bit:#04x}")
+        };
+        let err = match result {
+            Err(e) => e,
+            Ok(()) => panic!(
+                "trial {trial}: model with byte {pos} bit {bit:#04x} flipped \
+                 opened successfully — corruption went undetected"
+            ),
+        };
+        assert!(!err.to_string().is_empty(), "empty error message");
+        let unchecked = catch_unwind(AssertUnwindSafe(|| {
+            ScoringModel::open_unchecked(&victim).map(|_| ()).is_ok()
+        }));
+        assert!(
+            unchecked.is_ok(),
+            "trial {trial}: open_unchecked() panicked on byte {pos} bit {bit:#04x}"
+        );
+    }
+}
+
+#[test]
+fn unknown_version_and_flags_refused_on_both_open_paths() {
+    use ranksvm::data::store::Checksum;
+    let path = tmp("refusal_good.rsm");
+    ScoringModel::new(weights(9), None).unwrap().save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Re-checksum a doctored file so the refusal under test is the
+    // structural one, not a checksum mismatch.
+    let reseal = |mut bytes: Vec<u8>| -> Vec<u8> {
+        let mut sum = Checksum::new();
+        sum.update(&bytes[scoring::MODEL_HEADER_LEN..]);
+        sum.update(&bytes[..scoring::MODEL_CHECKSUM_FIELD.start]);
+        sum.update(&bytes[scoring::MODEL_CHECKSUM_FIELD.end..scoring::MODEL_HEADER_LEN]);
+        let digest = sum.finish().to_le_bytes();
+        bytes[scoring::MODEL_CHECKSUM_FIELD].copy_from_slice(&digest);
+        bytes
+    };
+
+    let open_both = |path: &PathBuf, needle: &str| {
+        for unchecked in [false, true] {
+            let result = if unchecked {
+                ScoringModel::open_unchecked(path).map(|_| ())
+            } else {
+                ScoringModel::open(path).map(|_| ())
+            };
+            let err = result.unwrap_err().to_string();
+            assert!(err.contains(needle), "unchecked={unchecked}: {err}");
+        }
+    };
+
+    // Future version byte, checksum valid → version refusal, both paths.
+    let mut future = good.clone();
+    future[7] = scoring::MODEL_VERSION + 1;
+    let future_path = tmp("refusal_version.rsm");
+    std::fs::write(&future_path, reseal(future)).unwrap();
+    open_both(&future_path, "version");
+
+    // Unknown flag bit, checksum valid → flag refusal, both paths.
+    let mut flagged = good.clone();
+    flagged[16] |= 0x80;
+    let flagged_path = tmp("refusal_flag.rsm");
+    std::fs::write(&flagged_path, reseal(flagged)).unwrap();
+    open_both(&flagged_path, "flag");
+
+    // Control: the reseal helper itself round-trips the good file.
+    let resealed_path = tmp("refusal_control.rsm");
+    std::fs::write(&resealed_path, reseal(good)).unwrap();
+    assert!(ScoringModel::open(&resealed_path).is_ok());
+}
+
+// ------------------------------------------------- normalize round trip
+
+#[test]
+fn l2col_model_round_trips_and_scores_raw_inputs_bit_identically() {
+    let ds = synthetic::cadata_like(250, 41);
+    let cfg = TrainConfig {
+        method: Method::Tree,
+        lambda: 0.1,
+        epsilon: 1e-3,
+        normalize: Normalize::L2Col,
+        ..Default::default()
+    };
+    let out = train(&ds, &cfg).unwrap();
+    assert!(out.converged);
+    let path = tmp("roundtrip_l2col.rsm");
+    out.scoring_model().save(&path).unwrap();
+    let back = ScoringModel::load_auto(&path).unwrap();
+    assert_eq!(back.normalize_name(), "l2-col");
+    assert_eq!(back.w(), &out.model.w[..]);
+
+    // Reference: pre-normalize explicitly, score with a plain model.
+    let norms = norms_of(&ds);
+    let mut scaled = materialize(&ds);
+    scaled.x.map_values(|c, v| if norms[c] > 0.0 { v / norms[c] } else { v });
+    let plain = ScoringModel::new(out.model.w.clone(), None).unwrap();
+    assert_bits_eq(&back.scores(&ds), &plain.scores(&scaled), "predict path");
+
+    // Serving path: same raw rows through the engine.
+    let eng = Engine::new(&path, Some(LoadedDataset::Owned(materialize(&ds))), 3, true).unwrap();
+    let resp = eng.run_batch(&[Request::Rows((0..ds.len()).collect())]);
+    let Ok(ranksvm::serve::Payload::Scores(served)) = &resp[0].body else {
+        panic!("{:?}", resp[0].body)
+    };
+    assert_bits_eq(served, &plain.scores(&scaled), "serve path");
+}
+
+#[test]
+fn legacy_text_models_serve_unnormalized() {
+    let ds = synthetic::cadata_like(40, 23);
+    let rank = RankModel::new(weights(ds.dim()));
+    let path = tmp("legacy_serve.txt");
+    rank.save(&path).unwrap();
+    // The daemon loads the legacy format and scores raw features as-is.
+    let eng = Engine::new(&path, Some(LoadedDataset::Owned(materialize(&ds))), 2, true).unwrap();
+    assert_eq!(eng.current().model.normalize_name(), "none");
+    let resp = eng.run_batch(&[Request::Rows((0..ds.len()).collect())]);
+    let Ok(ranksvm::serve::Payload::Scores(served)) = &resp[0].body else {
+        panic!("{:?}", resp[0].body)
+    };
+    assert_bits_eq(served, &rank.predict(&ds), "legacy parity");
+}
