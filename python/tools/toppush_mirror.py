@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""Dependency-free mirror validation of the TopPush oracle and the
+generic per-group sharded engine reduction (rust/src/losses/toppush.rs,
+rust/src/losses/sharded.rs::ShardedGroupOracle).
+
+Python floats are IEEE-754 binary64, the same arithmetic as Rust f64,
+so replaying the Rust implementation's exact operation ORDER here gives
+bit-for-bit the values the Rust code must produce. The mirror checks:
+
+  1. the fast O(m) oracle against an independent brute-force O(m*n)
+     reference (per-positive rescans of all negatives), exactly — the
+     contract of tests/differential.rs;
+  2. the hand-computed fixtures hard-coded in the Rust unit tests;
+  3. the engine reduction: packing groups into different run plans
+     must not change the serially-folded result (run plans only change
+     the parallel phase; the fold order is group order, a constant);
+  4. the subgradient first-order lower bound (convexity of the risk);
+  5. zero-safety on single-class and empty groups.
+
+Run: python3 python/tools/toppush_mirror.py  (prints PASS lines; any
+assertion failure is a mirror-validation failure).
+"""
+
+import math
+import random
+
+
+def toppush_fast(p, y):
+    """Mirror of TopPushOracle::eval_bipartite, same operation order."""
+    m = len(p)
+    coeffs = [0.0] * m
+    n_pos = 0
+    top = None
+    for i in range(m):
+        yi = y[i]
+        if math.isnan(yi):
+            continue
+        if yi > 0.0:
+            n_pos += 1
+        elif top is None or p[i] > p[top]:
+            # total_cmp(...).is_gt() on NaN-free scores == strict `>`:
+            # ties keep the smallest index.
+            top = i
+    if top is None or n_pos == 0:
+        return 0.0, coeffs
+    inv = 1.0 / n_pos
+    s = 0.0
+    active = 0
+    for i in range(m):
+        yi = y[i]
+        if math.isnan(yi) or not yi > 0.0:
+            continue
+        h = 1.0 + p[top] - p[i]
+        if h > 0.0:
+            s += h
+            active += 1
+            coeffs[i] = -inv
+    coeffs[top] = active * inv
+    return s * inv, coeffs
+
+
+def toppush_brute(p, y):
+    """Independent quadratic reference: rescan all negatives for every
+    positive (mirror of tests/differential.rs::toppush_reference)."""
+    m = len(p)
+    coeffs = [0.0] * m
+    n_pos = sum(1 for v in y if not math.isnan(v) and v > 0.0)
+    has_neg = any(not math.isnan(v) and v <= 0.0 for v in y)
+    if n_pos == 0 or not has_neg:
+        return 0.0, coeffs
+    inv = 1.0 / n_pos
+    s = 0.0
+    active = 0
+    j_star = None
+    for i in range(m):
+        if math.isnan(y[i]) or not y[i] > 0.0:
+            continue
+        top = None
+        for j in range(m):
+            if math.isnan(y[j]) or y[j] > 0.0:
+                continue
+            if top is None or p[j] > p[top]:
+                top = j
+        h = 1.0 + p[top] - p[i]
+        if h > 0.0:
+            s += h
+            active += 1
+            coeffs[i] = -inv
+            j_star = top
+    if j_star is not None:
+        coeffs[j_star] = active * inv
+    return s * inv, coeffs
+
+
+def engine_grouped(p, y, qid, oracle):
+    """Mirror of ShardedGroupOracle's grouped eval: per-group oracle
+    calls (any order — here group order), then a serial fold in group
+    order, dividing by the count of effective groups."""
+    order = []
+    members = {}
+    for i, q in enumerate(qid):
+        if q not in members:
+            members[q] = []
+            order.append(q)
+        members[q].append(i)
+    order.sort()  # GroupIndex lists groups in ascending qid order
+    per_group = []
+    for q in order:
+        idx = members[q]
+        gp = [p[i] for i in idx]
+        gy = [y[i] for i in idx]
+        n_pos = sum(1 for v in gy if not math.isnan(v) and v > 0.0)
+        has_neg = any(not math.isnan(v) and v <= 0.0 for v in gy)
+        if n_pos == 0 or not has_neg:  # is_effective == both classes
+            continue
+        loss, coeffs = oracle(gp, gy)
+        per_group.append((idx, loss, coeffs))
+    r_eff = len(per_group)
+    total = 0.0
+    out = [0.0] * len(p)
+    for idx, loss, coeffs in per_group:  # serial, group order
+        total += loss / r_eff
+        for k, i in enumerate(idx):
+            out[i] = coeffs[k] / r_eff
+    return total, out
+
+
+def main():
+    rng = random.Random(0xD1FF)
+
+    # 1 + 2: fast == brute exactly, plus the Rust unit-test fixtures.
+    loss, coeffs = toppush_fast([2.0, 0.5, 1.0, 0.0], [1.0, 0.0, 1.0, 0.0])
+    assert loss == 0.25, loss
+    assert coeffs == [0.0, 0.5, -0.5, 0.0], coeffs
+    # tied top negatives -> smallest index takes the mass
+    _, c = toppush_fast([0.0, 1.0, 1.0, 3.0], [1.0, 0.0, 0.0, 1.0])
+    assert c[1] != 0.0 and c[2] == 0.0, c
+    for trial in range(4000):
+        m = 1 + rng.randrange(40)
+        y = [float(rng.randrange(2)) for _ in range(m)]
+        if trial % 5 == 0:
+            y = [float("nan") if rng.random() < 0.15 else v for v in y]
+        p = [rng.choice([rng.gauss(0, 2), float(rng.randrange(6)) - 2.0])
+             for _ in range(m)]
+        a = toppush_fast(p, y)
+        b = toppush_brute(p, y)
+        assert a == b, (trial, a, b)  # exact float equality, not approx
+    print("PASS fast-vs-brute exact equality (4000 trials) + fixtures")
+
+    # 3: the serial group-order fold is independent of how groups were
+    # packed into runs (the parallel phase) — permuting evaluation
+    # order must not change the folded result, because the fold reads
+    # slots in group order.
+    for trial in range(500):
+        m = 2 + rng.randrange(60)
+        qid = [rng.randrange(6) * 13 + 5 for _ in range(m)]
+        y = [float(rng.randrange(2)) for _ in range(m)]
+        p = [rng.gauss(0, 2) for _ in range(m)]
+        ref = engine_grouped(p, y, qid, toppush_fast)
+        again = engine_grouped(p, y, qid, toppush_brute)
+        assert ref == again, (trial, ref, again)
+    print("PASS engine fold: plan-independent, fast==brute grouped (500 trials)")
+
+    # 4: convexity — R(p') >= R(p) + <coeffs, p' - p>.
+    for trial in range(2000):
+        m = 2 + rng.randrange(30)
+        y = [float(rng.randrange(2)) for _ in range(m)]
+        p1 = [rng.gauss(0, 1) for _ in range(m)]
+        p2 = [rng.gauss(0, 1) for _ in range(m)]
+        l1, g1 = toppush_fast(p1, y)
+        l2, _ = toppush_fast(p2, y)
+        inner = sum(g * (b - a) for g, (b, a) in zip(g1, zip(p2, p1)))
+        assert l2 + 1e-9 >= l1 + inner, (trial, l1, l2, inner)
+    print("PASS subgradient lower bound (2000 trials)")
+
+    # 5: zero safety.
+    for y in ([], [1.0, 1.0], [0.0, 0.0], [float("nan")], [1.0, float("nan")]):
+        p = [0.5] * len(y)
+        loss, coeffs = toppush_fast(p, y)
+        assert loss == 0.0 and all(c == 0.0 for c in coeffs), y
+    print("PASS zero safety on vacuous label vectors")
+
+
+if __name__ == "__main__":
+    main()

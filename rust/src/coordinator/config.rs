@@ -1,65 +1,90 @@
-//! Training configuration: method registry, hyper-parameters, and the
-//! λ ↔ C conversion the paper describes (§5.1).
+//! Training configuration: the registry-backed method handle,
+//! hyper-parameters, and the λ ↔ C conversion the paper describes
+//! (§5.1).
 
-/// Which loss/subgradient oracle (and hence which algorithm from the
-/// paper's evaluation) drives training.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
+use crate::losses::registry::{self, LossSpec};
+
+/// Which loss/subgradient oracle drives training — a handle to one
+/// [`LossSpec`] in the loss registry
+/// ([`crate::losses::registry::SPECS`]). The historical enum-style
+/// spellings (`Method::Tree`, `Method::Pair`, …) are associated
+/// constants, so existing call sites keep compiling; parsing accepts
+/// every registered name and alias, so *new* registry losses need no
+/// change here at all.
+#[derive(Clone, Copy)]
+pub struct Method(&'static LossSpec);
+
+#[allow(non_upper_case_globals)]
+impl Method {
     /// TreeRSVM — Algorithm 3 with the order-statistics red-black tree.
-    Tree,
+    pub const Tree: Method = Method(&registry::TREE);
     /// TreeRSVM with the duplicate-merging (`nodesize`) tree variant.
-    TreeDedup,
+    pub const TreeDedup: Method = Method(&registry::TREE_DEDUP);
     /// TreeRSVM with the Fenwick counter (ablation).
-    TreeFenwick,
+    pub const TreeFenwick: Method = Method(&registry::TREE_FENWICK);
     /// PairRSVM — explicit O(m²) pair iteration under the same BMRM.
-    Pair,
+    pub const Pair: Method = Method(&registry::PAIR);
     /// SVM^rank stand-in — the r-level algorithm of Joachims (2006).
-    RLevel,
+    pub const RLevel: Method = Method(&registry::RLEVEL);
     /// PRSVM — truncated Newton on the squared pairwise hinge, with the
     /// faithful O(m²)-memory pair materialization.
-    Prsvm,
+    pub const Prsvm: Method = Method(&registry::PRSVM);
     /// PRSVM objective with our O(m log m) sum-augmented-tree oracle
     /// (the Chapelle & Keerthi "improved version" — extension feature).
-    PrsvmTree,
+    pub const PrsvmTree: Method = Method(&registry::PRSVM_TREE);
+    /// TopPush (arXiv:1410.1462) — bipartite top-of-ranking loss, the
+    /// first non-pairwise registry entry.
+    pub const TopPush: Method = Method(&registry::TOPPUSH);
 }
 
+/// Every registered method, registry order (includes every loss family;
+/// filter on [`LossSpec::normalization`] to select the paper's
+/// pairwise-comparable set for Fig.-4-style sweeps).
+static ALL: [Method; 8] = [
+    Method::Tree,
+    Method::TreeDedup,
+    Method::TreeFenwick,
+    Method::Pair,
+    Method::RLevel,
+    Method::Prsvm,
+    Method::PrsvmTree,
+    Method::TopPush,
+];
+
 impl Method {
+    /// Resolve a CLI spelling via the registry (canonical names and
+    /// aliases).
     pub fn parse(s: &str) -> Option<Method> {
-        Some(match s {
-            "tree" | "treersvm" => Method::Tree,
-            "tree-dedup" | "dedup" => Method::TreeDedup,
-            "tree-fenwick" | "fenwick" => Method::TreeFenwick,
-            "pair" | "pairrsvm" => Method::Pair,
-            "rlevel" | "svmrank" => Method::RLevel,
-            "prsvm" | "squared" | "newton" => Method::Prsvm,
-            "prsvm-tree" | "squared-tree" => Method::PrsvmTree,
-            _ => return None,
-        })
+        registry::find(s).map(Method)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            Method::Tree => "tree",
-            Method::TreeDedup => "tree-dedup",
-            Method::TreeFenwick => "tree-fenwick",
-            Method::Pair => "pair",
-            Method::RLevel => "rlevel",
-            Method::Prsvm => "prsvm",
-            Method::PrsvmTree => "prsvm-tree",
-        }
+        self.0.name
     }
 
-    /// All methods, for bench sweeps.
+    /// The registry record behind this handle (solver family, parallel
+    /// substrate, normalization, oracle constructor).
+    pub fn spec(&self) -> &'static LossSpec {
+        self.0
+    }
+
+    /// All registered methods, for sweeps.
     pub fn all() -> &'static [Method] {
-        &[
-            Method::Tree,
-            Method::TreeDedup,
-            Method::TreeFenwick,
-            Method::Pair,
-            Method::RLevel,
-            Method::Prsvm,
-            Method::PrsvmTree,
-        ]
+        &ALL
+    }
+}
+
+impl PartialEq for Method {
+    fn eq(&self, other: &Self) -> bool {
+        std::ptr::eq(self.0, other.0)
+    }
+}
+
+impl Eq for Method {}
+
+impl std::fmt::Debug for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Method").field(&self.0.name).finish()
     }
 }
 
@@ -192,7 +217,22 @@ mod tests {
             assert_eq!(Method::parse(m.name()), Some(m));
         }
         assert_eq!(Method::parse("svmrank"), Some(Method::RLevel));
+        assert_eq!(Method::parse("toppush"), Some(Method::TopPush));
+        assert_eq!(Method::parse("top-push"), Some(Method::TopPush));
         assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn method_handles_expose_their_registry_spec() {
+        use crate::losses::registry::{NewtonKind, SolverFamily, Substrate};
+        assert_eq!(Method::Tree.spec().substrate, Substrate::ShardedTree);
+        assert_eq!(Method::TopPush.spec().substrate, Substrate::ShardedGroups);
+        assert_eq!(Method::Prsvm.spec().solver, SolverFamily::Newton);
+        assert_eq!(Method::Prsvm.spec().newton, Some(NewtonKind::MaterializedPairs));
+        assert_eq!(Method::PrsvmTree.spec().newton, Some(NewtonKind::SumTree));
+        assert_eq!(format!("{:?}", Method::TopPush), "Method(\"toppush\")");
+        // Every registered loss is reachable as a Method.
+        assert_eq!(Method::all().len(), crate::losses::registry::SPECS.len());
     }
 
     #[test]

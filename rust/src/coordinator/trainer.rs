@@ -2,15 +2,13 @@
 //! oracle, and an optimizer into one call — the coordinator face of the
 //! library.
 
-use super::config::{BackendKind, Method, Normalize, TrainConfig};
+use super::config::{BackendKind, Normalize, TrainConfig};
 use super::model::RankModel;
 use crate::bmrm::{self, BmrmConfig, ScoreOracle};
 use crate::compute::{ComputeBackend, NativeBackend, ParallelBackend};
 use crate::data::{materialize, Dataset, DatasetView};
-use crate::losses::{
-    count_comparable_pairs, tree::fenwick_oracle, GroupIndex, PairOracle, QueryGrouped,
-    RLevelOracle, RankingOracle, ShardedTreeOracle, SquaredPairOracle, TreeOracle,
-};
+use crate::losses::registry::{NewtonKind, OracleCtx};
+use crate::losses::{count_comparable_pairs, GroupIndex, RankingOracle, SquaredPairOracle};
 use crate::newton::{self, HessianOracle, NewtonConfig};
 use crate::runtime::WorkerPool;
 use crate::util::json::Json;
@@ -22,6 +20,9 @@ use std::sync::Arc;
 pub struct TrainOutcome {
     pub model: RankModel,
     pub method: &'static str,
+    /// Solver family that produced the model (`"bmrm"` or `"newton"`),
+    /// from the method's registry spec.
+    pub solver: &'static str,
     pub backend: &'static str,
     pub iterations: usize,
     pub converged: bool,
@@ -65,6 +66,7 @@ impl TrainOutcome {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("method", self.method.into()),
+            ("solver", self.solver.into()),
             ("backend", self.backend.into()),
             ("iterations", self.iterations.into()),
             ("converged", self.converged.into()),
@@ -228,39 +230,6 @@ fn make_xla_backend(_cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
     )
 }
 
-/// Build the score-space oracle for a BMRM-family method. The paper's
-/// main method runs on the query-sharded parallel engine (which also
-/// subsumes the query-grouped averaging), sharing the trainer's
-/// persistent pool with the compute backend; the ablation variants stay
-/// serial, wrapped in the grouped averager when the dataset has query
-/// structure.
-fn make_ranking_oracle(
-    method: Method,
-    ds: &dyn DatasetView,
-    index: Option<Arc<GroupIndex>>,
-    pool: &Arc<WorkerPool>,
-) -> Box<dyn RankingOracle> {
-    let base: Box<dyn RankingOracle> = match method {
-        Method::Tree => {
-            return Box::new(match index {
-                Some(gi) => ShardedTreeOracle::with_pool_index(Arc::clone(pool), gi),
-                None => ShardedTreeOracle::with_pool(Arc::clone(pool), None, ds.y()),
-            })
-        }
-        Method::TreeDedup => Box::new(TreeOracle::new_dedup()),
-        Method::TreeFenwick => Box::new(fenwick_oracle(ds.y())),
-        Method::Pair => Box::new(PairOracle::new()),
-        Method::RLevel => Box::new(RLevelOracle::new()),
-        Method::Prsvm | Method::PrsvmTree => {
-            unreachable!("PRSVM goes through SquaredDatasetOracle")
-        }
-    };
-    match index {
-        Some(gi) => Box::new(QueryGrouped::with_index(base, gi)),
-        None => base,
-    }
-}
-
 /// Per-column ℓ2 norms of a training set: `sqrt(Σ_i x_ij²)` per column.
 /// Consumes the source's cached column statistics when present (a v3
 /// pallas store — no data scan at all), otherwise recomputes them with
@@ -331,11 +300,16 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let backend = make_backend(cfg, &pool)?;
     let backend_name = backend.name();
 
-    let outcome = if cfg.method == Method::Prsvm || cfg.method == Method::PrsvmTree {
-        let mut oracle = if cfg.method == Method::Prsvm {
-            SquaredDatasetOracle::new(ds, backend)
-        } else {
-            SquaredDatasetOracle::new_tree(ds, backend)
+    // Dispatch by the method's registry spec: Newton-family losses run
+    // truncated Newton over their tagged Hessian oracle, everything
+    // else builds its score-space oracle through the registry
+    // constructor and runs BMRM. Adding a loss means adding a
+    // `LossSpec` (docs/LOSSES.md), not editing this function.
+    let spec = cfg.method.spec();
+    let outcome = if let Some(kind) = spec.newton {
+        let mut oracle = match kind {
+            NewtonKind::MaterializedPairs => SquaredDatasetOracle::new(ds, backend),
+            NewtonKind::SumTree => SquaredDatasetOracle::new_tree(ds, backend),
         };
         let ncfg = NewtonConfig {
             lambda: cfg.lambda,
@@ -348,6 +322,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
         TrainOutcome {
             model: RankModel::new(res.w),
             method: cfg.method.name(),
+            solver: spec.solver.name(),
             backend: backend_name,
             iterations: res.iterations,
             converged: res.converged,
@@ -367,7 +342,8 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 .n_pairs_hint()
                 .unwrap_or_else(|| count_comparable_pairs(ds.y()) as f64),
         };
-        let inner = make_ranking_oracle(cfg.method, ds, index, &pool);
+        let ctor = spec.bmrm.expect("non-Newton registry losses carry a BMRM oracle constructor");
+        let inner = ctor(OracleCtx { ds, index, pool: &pool });
         let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
         let bcfg = BmrmConfig {
             lambda: cfg.lambda,
@@ -396,6 +372,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
         TrainOutcome {
             model: RankModel::new(res.w),
             method: cfg.method.name(),
+            solver: spec.solver.name(),
             backend: backend_name,
             iterations: res.iterations,
             converged: res.converged,
@@ -452,6 +429,7 @@ fn pairwise_error_for(p: &[f64], ds: &dyn DatasetView) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    use super::super::config::Method;
     use super::*;
     use crate::data::synthetic;
 
@@ -609,6 +587,58 @@ mod tests {
         let out = train(&ds, &cfg(Method::Tree)).unwrap();
         let s = out.to_json().to_string();
         assert!(s.contains("\"method\":\"tree\""));
+        assert!(s.contains("\"solver\":\"bmrm\""));
         assert!(s.contains("\"converged\":true"));
+        let out = train(&ds, &cfg(Method::Prsvm)).unwrap();
+        assert!(out.to_json().to_string().contains("\"solver\":\"newton\""));
+    }
+
+    #[test]
+    fn toppush_trains_end_to_end_and_is_thread_invariant() {
+        // Grouped fixture with zero-centered labels: every group splits
+        // into positives (y > 0) and negatives, the bipartite regime
+        // TopPush is for.
+        let ds = synthetic::queries(14, 16, 6, 91);
+        let mut reference: Option<TrainOutcome> = None;
+        for threads in [1usize, 2, 8] {
+            let c = TrainConfig { n_threads: threads, ..cfg(Method::TopPush) };
+            let out = train(&ds, &c).unwrap();
+            assert_eq!(out.method, "toppush");
+            assert_eq!(out.solver, "bmrm");
+            match &reference {
+                None => reference = Some(out),
+                Some(base) => {
+                    assert_eq!(out.model.w, base.model.w, "{threads} threads");
+                    assert_eq!(out.objective.to_bits(), base.objective.to_bits());
+                    assert_eq!(out.iterations, base.iterations);
+                }
+            }
+        }
+        let out = reference.unwrap();
+        assert!(out.converged, "gap={}", out.gap);
+        // The learned ranking separates the classes far better than the
+        // zero model's 0.5.
+        let p = out.model.predict(&ds);
+        let yb: Vec<f64> = ds.y.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect();
+        let err = crate::metrics::grouped_pairwise_error(&p, &yb, ds.qid().unwrap());
+        assert!(err < 0.35, "binarized grouped error {err}");
+    }
+
+    #[test]
+    fn toppush_trains_on_ungrouped_bipartite_data() {
+        // One global ranking (no qid): the generic engine's inline
+        // single-group mode.
+        let mut ds = synthetic::cadata_like(250, 17);
+        let mut sorted = ds.y.clone();
+        sorted.sort_unstable_by(|a, b| a.total_cmp(b));
+        let med = sorted[sorted.len() / 2];
+        for v in &mut ds.y {
+            *v = if *v > med { 1.0 } else { 0.0 };
+        }
+        let out = train(&ds, &cfg(Method::TopPush)).unwrap();
+        assert!(out.converged, "gap={}", out.gap);
+        let p = out.model.predict(&ds);
+        let err = crate::metrics::pairwise_error(&p, &ds.y);
+        assert!(err < 0.35, "bipartite error {err} (AUC {})", 1.0 - err);
     }
 }

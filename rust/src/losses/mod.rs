@@ -13,12 +13,22 @@
 //! - [`squared::SquaredPairOracle`] — the squared pairwise hinge of
 //!   Chapelle & Keerthi (2010) ("PRSVM"), with explicit pair
 //!   materialization (quadratic memory, reproducing Fig. 3);
+//! - [`toppush::TopPushOracle`] — TopPush (arXiv:1410.1462), the first
+//!   non-pairwise loss: bipartite top-of-ranking hinge, `O(m)` per call;
 //! - [`query::QueryGrouped`] — per-query averaging wrapper (§2, §4.3 end);
 //! - [`sharded::ShardedTreeOracle`] — the tree oracle sharded across a
 //!   persistent [`crate::runtime::WorkerPool`] (by query group, or by
 //!   balanced query ranges over the score-sorted order for a single
 //!   global ranking), with bit-identical output to the serial path for
-//!   any shard count.
+//!   any shard count;
+//! - [`sharded::ShardedGroupOracle`] — the generic per-group engine:
+//!   any [`GroupOracle`] evaluated per query group on the same
+//!   work-stealing pool with the same serial group-order reduction.
+//!
+//! Losses are wired into the trainer through the [`registry`] — a
+//! [`registry::LossSpec`] per loss naming its solver family, parallel
+//! substrate, and normalization owner (normative contract:
+//! docs/LOSSES.md).
 //!
 //! The gradient w.r.t. `w` is then `a = Xᵀ·coeffs` (row-example
 //! convention), computed by a [`crate::compute::ComputeBackend`], so the
@@ -26,18 +36,21 @@
 
 pub mod pairwise;
 pub mod query;
+pub mod registry;
 pub mod rlevel;
 pub mod sharded;
 pub mod squared;
 pub mod squared_tree;
+pub mod toppush;
 pub mod tree;
 
 pub use pairwise::PairOracle;
 pub use query::{GroupIndex, QueryGrouped};
 pub use rlevel::RLevelOracle;
-pub use sharded::ShardedTreeOracle;
+pub use sharded::{ShardedGroupOracle, ShardedTreeOracle};
 pub use squared::SquaredPairOracle;
 pub use squared_tree::SquaredTreeOracle;
+pub use toppush::TopPushOracle;
 pub use tree::TreeOracle;
 
 /// Result of one oracle evaluation.
@@ -72,6 +85,60 @@ impl RankingOracle for Box<dyn RankingOracle> {
     }
     fn name(&self) -> &'static str {
         (**self).name()
+    }
+}
+
+/// A *per-query-group* subgradient oracle — the pluggable unit of the
+/// generic sharded engine ([`sharded::ShardedGroupOracle`]).
+///
+/// The contract (normative: docs/LOSSES.md):
+///
+/// - `eval_group` receives one group's scores/labels (gathered
+///   contiguously) and returns the group's risk and coefficients
+///   **fully normalized within the group** — the normalizer (comparable
+///   pairs, positive count, …) is owned by the loss, never by the
+///   engine or the trainer. The engine only averages over effective
+///   groups.
+/// - `is_effective` decides whether a group contributes at all; an
+///   ineffective group must have identically zero loss and
+///   coefficients, and is excluded from the effective-group average.
+///   The decision must be a pure function of `(y, pairs)` so the
+///   effective count cannot depend on scores or scheduling.
+/// - One evaluation must be bit-reproducible (same inputs ⇒ same bits):
+///   iterate in ascending index order and keep any internal tie-breaks
+///   deterministic. That, plus the engine's serial group-order
+///   reduction, yields thread-count-invariant training
+///   (docs/DETERMINISM.md) — `tests/properties.rs` holds every
+///   registered loss to it.
+///
+/// `Send` because each engine task owns one boxed oracle and tasks
+/// migrate between pool workers.
+pub trait GroupOracle: Send {
+    /// Evaluate one group. `pairs` is the group's comparable-pair count
+    /// (from [`GroupIndex`]); pair-normalized losses consume it, others
+    /// ignore it.
+    fn eval_group(&mut self, p: &[f64], y: &[f64], pairs: u64) -> OracleOutput;
+
+    /// Does a group with these labels/pairs contribute to the risk?
+    fn is_effective(&self, y: &[f64], pairs: u64) -> bool;
+
+    /// Loss name for logs and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Every tree-family oracle is a [`GroupOracle`]: pair-normalized
+/// within the group, effective iff the group has comparable pairs —
+/// exactly the per-group arithmetic [`query::QueryGrouped`] and the
+/// sharded engine's grouped mode have always performed.
+impl<T: crate::rbtree::RankCounter + Send> GroupOracle for tree::GenericTreeOracle<T> {
+    fn eval_group(&mut self, p: &[f64], y: &[f64], pairs: u64) -> OracleOutput {
+        RankingOracle::eval(self, p, y, pairs as f64)
+    }
+    fn is_effective(&self, _y: &[f64], pairs: u64) -> bool {
+        pairs > 0
+    }
+    fn name(&self) -> &'static str {
+        RankingOracle::name(self)
     }
 }
 

@@ -1,0 +1,320 @@
+//! The loss registry — the single place a subgradient oracle is wired
+//! into the trainer.
+//!
+//! Each [`LossSpec`] names a loss, its CLI spellings, the solver family
+//! it runs under ([`SolverFamily`]), the parallel substrate its oracle
+//! evaluates on ([`Substrate`]), and who owns normalization
+//! ([`Normalization`]). BMRM-family losses carry a constructor that
+//! builds their score-space [`RankingOracle`] from an [`OracleCtx`];
+//! Newton-family losses carry a [`NewtonKind`] tag the trainer maps to
+//! the squared-hinge Hessian oracles (those borrow the dataset and the
+//! compute backend together, so they are built in
+//! `coordinator/trainer.rs` rather than behind a constructor here —
+//! the one documented asymmetry, see docs/LOSSES.md).
+//!
+//! Adding a loss is a registry entry plus an oracle implementation —
+//! the checklist lives in docs/LOSSES.md, and `tests/properties.rs`
+//! holds every entry to the thread-invariance and zero-safety contract
+//! automatically. The table in docs/LOSSES.md is pinned to [`SPECS`] by
+//! `tests/docs_spec.rs`.
+
+use super::query::GroupIndex;
+use super::sharded::{ShardedGroupOracle, ShardedTreeOracle};
+use super::toppush::TopPushOracle;
+use super::tree::{fenwick_oracle, TreeOracle};
+use super::{GroupOracle, PairOracle, QueryGrouped, RLevelOracle, RankingOracle};
+use crate::data::DatasetView;
+use crate::runtime::WorkerPool;
+use std::sync::Arc;
+
+/// Which optimizer drives a loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverFamily {
+    /// BMRM cutting-plane over a score-space subgradient oracle.
+    Bmrm,
+    /// Truncated Newton over a generalized-Hessian oracle (PRSVM).
+    Newton,
+}
+
+impl SolverFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverFamily::Bmrm => "bmrm",
+            SolverFamily::Newton => "newton",
+        }
+    }
+}
+
+/// Which parallel substrate evaluates the oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Substrate {
+    /// The chunked sorted-order counting engine (tree oracle only):
+    /// sharded in global mode *and* grouped mode.
+    ShardedTree,
+    /// The generic per-group engine: any [`GroupOracle`] on the
+    /// work-stealing pool, serial group-order reduction.
+    ShardedGroups,
+    /// Serial evaluation (wrapped in [`QueryGrouped`] for grouped data).
+    Serial,
+}
+
+impl Substrate {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Substrate::ShardedTree => "sharded-tree",
+            Substrate::ShardedGroups => "sharded-groups",
+            Substrate::Serial => "serial",
+        }
+    }
+}
+
+/// Which squared-hinge implementation backs a Newton-family loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NewtonKind {
+    /// Faithful PRSVM: explicit pair materialization (O(m²) memory).
+    MaterializedPairs,
+    /// The sum-augmented-tree oracle (O(m log m) time, O(m) memory).
+    SumTree,
+}
+
+/// Who owns the risk normalizer — the loss does, always; this records
+/// *which* normalizer, for docs and for selecting comparable method
+/// families in tests/benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalization {
+    /// Divide by the comparable-pair count `N = |{(i,j): y_i < y_j}|`
+    /// (per group, averaged over effective groups) — the paper's
+    /// pairwise family. All such losses optimize the same risk, which
+    /// is what makes their objectives/test errors comparable.
+    ComparablePairs,
+    /// Divide by the per-group positive count `n₊` (TopPush).
+    GroupPositives,
+}
+
+impl Normalization {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Normalization::ComparablePairs => "pairs",
+            Normalization::GroupPositives => "positives",
+        }
+    }
+}
+
+/// Everything the trainer needs to build a BMRM score-space oracle.
+pub struct OracleCtx<'a> {
+    pub ds: &'a dyn DatasetView,
+    /// Query-group index (None for one global ranking), shared with the
+    /// pair count so both see identical group structure.
+    pub index: Option<Arc<GroupIndex>>,
+    /// The trainer's persistent work-stealing pool.
+    pub pool: &'a Arc<WorkerPool>,
+}
+
+/// One registered loss.
+pub struct LossSpec {
+    /// Canonical CLI/JSON name.
+    pub name: &'static str,
+    /// Accepted alternate spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `ranksvm losses`).
+    pub about: &'static str,
+    pub solver: SolverFamily,
+    pub substrate: Substrate,
+    pub normalization: Normalization,
+    /// BMRM family: builds the score-space oracle. `None` ⇔ Newton.
+    pub bmrm: Option<fn(OracleCtx<'_>) -> Box<dyn RankingOracle>>,
+    /// Newton family: which Hessian oracle the trainer instantiates.
+    /// `None` ⇔ BMRM.
+    pub newton: Option<NewtonKind>,
+}
+
+/// Serial base oracle → grouped averaging wrapper when the dataset has
+/// query structure (the [`Substrate::Serial`] arrangement).
+fn grouped(base: Box<dyn RankingOracle>, index: Option<Arc<GroupIndex>>) -> Box<dyn RankingOracle> {
+    match index {
+        Some(gi) => Box::new(QueryGrouped::with_index(base, gi)),
+        None => base,
+    }
+}
+
+fn make_tree(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    Box::new(match ctx.index {
+        Some(gi) => ShardedTreeOracle::with_pool_index(Arc::clone(ctx.pool), gi),
+        None => ShardedTreeOracle::with_pool(Arc::clone(ctx.pool), None, ctx.ds.y()),
+    })
+}
+
+fn make_tree_dedup(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    grouped(Box::new(TreeOracle::new_dedup()), ctx.index)
+}
+
+fn make_tree_fenwick(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    grouped(Box::new(fenwick_oracle(ctx.ds.y())), ctx.index)
+}
+
+fn make_pair(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    grouped(Box::new(PairOracle::new()), ctx.index)
+}
+
+fn make_rlevel(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    grouped(Box::new(RLevelOracle::new()), ctx.index)
+}
+
+fn toppush_factory() -> Box<dyn GroupOracle> {
+    Box::new(TopPushOracle::new())
+}
+
+fn make_toppush(ctx: OracleCtx<'_>) -> Box<dyn RankingOracle> {
+    Box::new(ShardedGroupOracle::new(
+        Arc::clone(ctx.pool),
+        ctx.index,
+        toppush_factory,
+        "sharded-toppush",
+    ))
+}
+
+pub static TREE: LossSpec = LossSpec {
+    name: "tree",
+    aliases: &["treersvm"],
+    about: "TreeRSVM — pairwise hinge via the order-statistics red-black tree (the paper's \
+            Algorithm 3), on the query-sharded parallel engine",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::ShardedTree,
+    normalization: Normalization::ComparablePairs,
+    bmrm: Some(make_tree),
+    newton: None,
+};
+
+pub static TREE_DEDUP: LossSpec = LossSpec {
+    name: "tree-dedup",
+    aliases: &["dedup"],
+    about: "TreeRSVM with the duplicate-merging (nodesize) tree variant (ablation)",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: Some(make_tree_dedup),
+    newton: None,
+};
+
+pub static TREE_FENWICK: LossSpec = LossSpec {
+    name: "tree-fenwick",
+    aliases: &["fenwick"],
+    about: "TreeRSVM with the Fenwick counter over the compressed label universe (ablation)",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: Some(make_tree_fenwick),
+    newton: None,
+};
+
+pub static PAIR: LossSpec = LossSpec {
+    name: "pair",
+    aliases: &["pairrsvm"],
+    about: "PairRSVM — explicit O(m²) pairwise-hinge iteration under the same BMRM",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: Some(make_pair),
+    newton: None,
+};
+
+pub static RLEVEL: LossSpec = LossSpec {
+    name: "rlevel",
+    aliases: &["svmrank"],
+    about: "SVM^rank stand-in — the r-level pairwise-hinge algorithm of Joachims (2006)",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: Some(make_rlevel),
+    newton: None,
+};
+
+pub static PRSVM: LossSpec = LossSpec {
+    name: "prsvm",
+    aliases: &["squared", "newton"],
+    about: "PRSVM — truncated Newton on the squared pairwise hinge with faithful O(m²)-memory \
+            pair materialization",
+    solver: SolverFamily::Newton,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: None,
+    newton: Some(NewtonKind::MaterializedPairs),
+};
+
+pub static PRSVM_TREE: LossSpec = LossSpec {
+    name: "prsvm-tree",
+    aliases: &["squared-tree"],
+    about: "PRSVM objective with the O(m log m) sum-augmented-tree oracle (extension)",
+    solver: SolverFamily::Newton,
+    substrate: Substrate::Serial,
+    normalization: Normalization::ComparablePairs,
+    bmrm: None,
+    newton: Some(NewtonKind::SumTree),
+};
+
+pub static TOPPUSH: LossSpec = LossSpec {
+    name: "toppush",
+    aliases: &["top-push"],
+    about: "TopPush (arXiv:1410.1462) — bipartite top-of-ranking hinge against the top-scoring \
+            negative, O(m) per group, on the generic sharded group engine",
+    solver: SolverFamily::Bmrm,
+    substrate: Substrate::ShardedGroups,
+    normalization: Normalization::GroupPositives,
+    bmrm: Some(make_toppush),
+    newton: None,
+};
+
+/// Every registered loss, in the canonical (docs/CLI) order.
+pub static SPECS: [&LossSpec; 8] =
+    [&TREE, &TREE_DEDUP, &TREE_FENWICK, &PAIR, &RLEVEL, &PRSVM, &PRSVM_TREE, &TOPPUSH];
+
+/// Look a loss up by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static LossSpec> {
+    SPECS.iter().copied().find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+/// Canonical names of every registered loss, registry order.
+pub fn names() -> impl Iterator<Item = &'static str> {
+    SPECS.iter().map(|s| s.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_resolves_names_and_aliases() {
+        for spec in SPECS {
+            assert!(std::ptr::eq(find(spec.name).unwrap(), spec));
+            for a in spec.aliases {
+                assert!(std::ptr::eq(find(a).unwrap(), spec), "alias {a}");
+            }
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn names_and_aliases_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for spec in SPECS {
+            assert!(seen.insert(spec.name), "duplicate name {}", spec.name);
+            for a in spec.aliases {
+                assert!(seen.insert(a), "duplicate alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn solver_family_matches_constructor_shape() {
+        for spec in SPECS {
+            match spec.solver {
+                SolverFamily::Bmrm => {
+                    assert!(spec.bmrm.is_some() && spec.newton.is_none(), "{}", spec.name)
+                }
+                SolverFamily::Newton => {
+                    assert!(spec.bmrm.is_none() && spec.newton.is_some(), "{}", spec.name)
+                }
+            }
+        }
+    }
+}

@@ -19,13 +19,17 @@
 //! groups coalesce, a giant group (the norm under Zipf-like group-size
 //! skew, the regime WMRB (Liu, 2017) targets with batch decomposition)
 //! becomes a run of its own, and no group is ever split. Each run is one
-//! stealable task evaluating its groups with its own [`TreeOracle`] —
-//! the PR 1–3 plan of one coarse task per worker serialized a batch
-//! behind the giant group's owner; with run-granularity tasks the other
+//! stealable task evaluating its groups with its own oracle — the
+//! PR 1–3 plan of one coarse task per worker serialized a batch behind
+//! the giant group's owner; with run-granularity tasks the other
 //! workers steal the remaining runs while one worker chews the giant.
 //! Per-group results are reduced serially *in group order*, so the
 //! output is bit-identical to the serial [`super::QueryGrouped`] wrapper
-//! for every run-plan and thread count.
+//! for every run-plan and thread count. This mode is **generic over the
+//! loss**: [`ShardedGroupOracle`] drives any [`GroupOracle`] from the
+//! registry (TopPush is the first non-pairwise one) through exactly
+//! this plan/reduce machinery, and [`ShardedTreeOracle`]'s grouped mode
+//! is just that engine instantiated with per-task [`TreeOracle`]s.
 //!
 //! **One global ranking**: the frequencies `c_i`/`d_i` of eqs. (5)–(6)
 //! are *integer* dominance counts over the margin window
@@ -60,7 +64,7 @@
 //! embarrassingly parallel. (The pre-PR-2 window-end ownership collapsed
 //! this case onto one shard; see ROADMAP history.)
 
-use super::{assemble_from_counts, GroupIndex, OracleOutput, RankingOracle};
+use super::{assemble_from_counts, GroupIndex, GroupOracle, OracleOutput, RankingOracle};
 use crate::linalg::ops::{adaptive_chunks, par_argsort_into};
 use crate::losses::tree::TreeOracle;
 use crate::rbtree::OsTree;
@@ -72,53 +76,236 @@ use std::sync::Arc;
 enum Plan {
     /// One global ranking: contiguous chunks of the score-sorted order.
     Global,
-    /// Disjoint query groups (first-seen order, as in
-    /// [`super::QueryGrouped`]), packed into bounded-weight contiguous
-    /// group runs — one stealable task each, no group split.
-    Grouped {
-        /// The flat group partition (shared convention with
-        /// [`super::QueryGrouped`] and the pallas store; `Arc`-shared so
-        /// a store-carried index is referenced, not copied).
-        index: Arc<GroupIndex>,
-        /// Effective group count for averaging (groups with pairs).
-        r_eff: f64,
-        /// Per task: `[lo, hi)` range of group indices (a [`WorkPlan`]
-        /// over group sizes, fixed at construction).
-        runs: Vec<(usize, usize)>,
-    },
+    /// Disjoint query groups: delegated to the generic per-group engine
+    /// with a per-task [`TreeOracle`] — the tree loss is just the first
+    /// registry loss on that engine.
+    Grouped(ShardedGroupOracle),
 }
 
-/// Per-task worker state, reused across oracle calls (and hence across
-/// BMRM cutting-plane iterations — the trees and buffers are allocated
-/// once and only grow).
+/// Per-task worker state for the global chunked counting mode, reused
+/// across oracle calls (and hence across BMRM cutting-plane iterations —
+/// the trees and buffers are allocated once and only grow).
 struct TaskState {
-    /// Incremental counter for the partial-chunk sweep (global mode).
+    /// Incremental counter for the partial-chunk sweep.
     tree: OsTree,
     /// Counts for this task's owned queries, in sweep order.
     c_out: Vec<u64>,
     d_out: Vec<u64>,
-    /// Grouped mode: a full per-run tree oracle plus gather buffers.
-    oracle: TreeOracle,
-    p_buf: Vec<f64>,
-    y_buf: Vec<f64>,
-    /// Grouped mode: concatenated per-group coefficient outputs plus
-    /// `(group, offset, len, loss)` records.
-    coeff_buf: Vec<f64>,
-    meta: Vec<(usize, usize, usize, f64)>,
 }
 
 impl TaskState {
     fn new() -> Self {
-        TaskState {
-            tree: OsTree::new(),
-            c_out: Vec::new(),
-            d_out: Vec::new(),
-            oracle: TreeOracle::new(),
+        TaskState { tree: OsTree::new(), c_out: Vec::new(), d_out: Vec::new() }
+    }
+}
+
+/// Per-task state of the generic grouped engine: one boxed
+/// [`GroupOracle`] plus gather/output buffers, all reused across calls.
+struct GroupTaskState {
+    oracle: Box<dyn GroupOracle>,
+    p_buf: Vec<f64>,
+    y_buf: Vec<f64>,
+    /// Concatenated per-group coefficient outputs plus
+    /// `(group, offset, len, loss)` records for effective groups.
+    coeff_buf: Vec<f64>,
+    meta: Vec<(usize, usize, usize, f64)>,
+}
+
+impl GroupTaskState {
+    fn new(factory: fn() -> Box<dyn GroupOracle>) -> Self {
+        GroupTaskState {
+            oracle: factory(),
             p_buf: Vec::new(),
             y_buf: Vec::new(),
             coeff_buf: Vec::new(),
             meta: Vec::new(),
         }
+    }
+}
+
+/// The generic per-group parallel engine: evaluates **any**
+/// [`GroupOracle`] per query group on the work-stealing pool, with the
+/// exact reduction contract the tree loss has always used — group runs
+/// packed by a [`WorkPlan`] (no group split), every run one stealable
+/// task with its own oracle instance, and a serial *group-order* float
+/// reduction dividing by the effective-group count. Which worker runs
+/// which task never touches a result bit (docs/DETERMINISM.md); what a
+/// new loss must guarantee per group is written down in docs/LOSSES.md.
+///
+/// Without a [`GroupIndex`] the whole dataset is one group, evaluated
+/// inline by the single per-engine oracle — there is no decomposition a
+/// scheduler could exploit without a per-loss splitting rule, and an
+/// inline call is trivially thread-invariant.
+pub struct ShardedGroupOracle {
+    pool: Arc<WorkerPool>,
+    /// `None`: single implicit group. `Some`: the flat group partition
+    /// (shared convention with [`super::QueryGrouped`] and the pallas
+    /// store) plus the `[lo, hi)` group ranges of the run plan.
+    grouping: Option<(Arc<GroupIndex>, Vec<(usize, usize)>)>,
+    states: Vec<GroupTaskState>,
+    name: &'static str,
+}
+
+impl ShardedGroupOracle {
+    /// Build on a persistent pool. `factory` creates one oracle per
+    /// task (each task owns private mutable state); `name` is the
+    /// engine's [`RankingOracle::name`].
+    pub fn new(
+        pool: Arc<WorkerPool>,
+        index: Option<Arc<GroupIndex>>,
+        factory: fn() -> Box<dyn GroupOracle>,
+        name: &'static str,
+    ) -> Self {
+        Self::with_run_target(pool, index, factory, name, None)
+    }
+
+    /// [`Self::new`] with an explicit [`WorkPlan`] run-target override
+    /// (the same balance-vs-overhead knob as
+    /// [`ShardedTreeOracle::with_run_target`]; cannot change a result
+    /// bit).
+    pub fn with_run_target(
+        pool: Arc<WorkerPool>,
+        index: Option<Arc<GroupIndex>>,
+        factory: fn() -> Box<dyn GroupOracle>,
+        name: &'static str,
+        target_tasks: Option<usize>,
+    ) -> Self {
+        let n_workers = pool.n_threads().max(1);
+        let default_tasks = if n_workers == 1 { 1 } else { adaptive_chunks(n_workers) };
+        let n_tasks = target_tasks.unwrap_or(default_tasks).max(1);
+        let (grouping, n_states) = match index {
+            None => (None, 1),
+            Some(index) => {
+                let runs = WorkPlan::pack(index.n_groups(), n_tasks, |g| index.group(g).len())
+                    .runs()
+                    .to_vec();
+                let n_states = runs.len();
+                (Some((index, runs)), n_states)
+            }
+        };
+        ShardedGroupOracle {
+            pool,
+            grouping,
+            states: (0..n_states).map(|_| GroupTaskState::new(factory)).collect(),
+            name,
+        }
+    }
+
+    /// Query-group count (None for the single implicit group).
+    pub fn n_groups(&self) -> Option<usize> {
+        self.grouping.as_ref().map(|(index, _)| index.n_groups())
+    }
+
+    /// Per-task `[lo, hi)` group-index ranges (None for the single
+    /// implicit group). Contiguous and non-overlapping: a query group
+    /// is never split across tasks.
+    pub fn group_ranges(&self) -> Option<&[(usize, usize)]> {
+        self.grouping.as_ref().map(|(_, runs)| runs.as_slice())
+    }
+
+    /// Total comparable pairs across groups (grouped reporting).
+    pub fn total_pairs(&self) -> Option<f64> {
+        self.grouping.as_ref().map(|(index, _)| index.total_pairs())
+    }
+
+    fn eval_grouped(&mut self, p: &[f64], y: &[f64]) -> OracleOutput {
+        let m = p.len();
+        assert_eq!(m, y.len());
+        let (index, runs) = self.grouping.as_ref().expect("grouped eval requires an index");
+        let states = &mut self.states;
+        debug_assert_eq!(states.len(), runs.len());
+
+        let gi: &GroupIndex = index;
+        if self.pool.n_threads() == 1 || runs.len() <= 1 {
+            for (state, &range) in states.iter_mut().zip(runs.iter()) {
+                group_run_worker(state, range, gi, p, y);
+            }
+        } else {
+            // One stealable task per group run: a worker stuck on a
+            // giant group's run loses its remaining runs to the idle
+            // workers instead of serializing the batch.
+            let mut tasks: Vec<Task> = Vec::with_capacity(runs.len());
+            for (state, &range) in states.iter_mut().zip(runs.iter()) {
+                tasks.push(Box::new(move || group_run_worker(state, range, gi, p, y)));
+            }
+            self.pool.run(tasks);
+        }
+
+        // The effective-group count is the total number of per-group
+        // records — an exact integer decomposed over disjoint runs, so
+        // it cannot depend on the run plan or the scheduling. (For the
+        // tree loss this equals `GroupIndex::n_effective_groups()`:
+        // effectiveness is pairs > 0.)
+        let r_eff = self.states.iter().map(|s| s.meta.len()).sum::<usize>().max(1) as f64;
+
+        // Reduce in run order. Runs hold contiguous ascending group
+        // ranges, so iterating runs then their records reproduces the
+        // serial QueryGrouped accumulation order bit-for-bit — for any
+        // run plan and regardless of which worker ran which task.
+        let mut loss = 0.0;
+        let mut coeffs = vec![0.0; m];
+        for state in self.states.iter() {
+            for &(g, off, len, group_loss) in &state.meta {
+                loss += group_loss / r_eff;
+                let idx = index.group(g);
+                debug_assert_eq!(len, idx.len());
+                for (k, &i) in idx.iter().enumerate() {
+                    coeffs[i] = state.coeff_buf[off + k] / r_eff;
+                }
+            }
+        }
+        OracleOutput { loss, coeffs }
+    }
+}
+
+impl RankingOracle for ShardedGroupOracle {
+    /// Grouped data: per-group evaluation on the pool. Ungrouped data:
+    /// one inline whole-dataset group (`n_pairs`, rounded to an exact
+    /// integer pair count, feeds the oracle's effectiveness test and any
+    /// pair-normalized arithmetic).
+    fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
+        if self.grouping.is_some() {
+            return self.eval_grouped(p, y);
+        }
+        let state = &mut self.states[0];
+        let pairs = if n_pairs > 0.0 { n_pairs as u64 } else { 0 };
+        if p.is_empty() || !state.oracle.is_effective(y, pairs) {
+            return OracleOutput { loss: 0.0, coeffs: vec![0.0; p.len()] };
+        }
+        state.oracle.eval_group(p, y, pairs)
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Grouped-engine worker: evaluate one group run with the task's own
+/// oracle, recording per-group losses and coefficients for the
+/// effective groups.
+fn group_run_worker(
+    state: &mut GroupTaskState,
+    range: (usize, usize),
+    index: &GroupIndex,
+    p: &[f64],
+    y: &[f64],
+) {
+    state.meta.clear();
+    state.coeff_buf.clear();
+    for g in range.0..range.1 {
+        let pairs = index.group_pairs(g);
+        let idx = index.group(g);
+        state.p_buf.clear();
+        state.p_buf.extend(idx.iter().map(|&i| p[i]));
+        state.y_buf.clear();
+        state.y_buf.extend(idx.iter().map(|&i| y[i]));
+        if !state.oracle.is_effective(&state.y_buf, pairs) {
+            continue;
+        }
+        let out = state.oracle.eval_group(&state.p_buf, &state.y_buf, pairs);
+        let off = state.coeff_buf.len();
+        state.coeff_buf.extend_from_slice(&out.coeffs);
+        state.meta.push((g, off, idx.len(), out.loss));
     }
 }
 
@@ -219,22 +406,21 @@ impl ShardedTreeOracle {
         let n_workers = pool.n_threads().max(1);
         let default_tasks = if n_workers == 1 { 1 } else { adaptive_chunks(n_workers) };
         let n_chunks = target_tasks.unwrap_or(default_tasks).max(1);
-        let (plan, n_states) = match index {
-            None => (Plan::Global, 0),
-            Some(index) => {
-                let r_eff = index.n_effective_groups().max(1) as f64;
-                let runs = WorkPlan::pack(index.n_groups(), n_chunks, |g| index.group(g).len())
-                    .runs()
-                    .to_vec();
-                let n_states = runs.len();
-                (Plan::Grouped { index, r_eff, runs }, n_states)
-            }
+        let plan = match index {
+            None => Plan::Global,
+            Some(index) => Plan::Grouped(ShardedGroupOracle::with_run_target(
+                Arc::clone(&pool),
+                Some(index),
+                || Box::new(TreeOracle::new()),
+                "sharded-tree",
+                target_tasks,
+            )),
         };
         ShardedTreeOracle {
             pool,
             n_chunks,
             plan,
-            states: (0..n_states).map(|_| TaskState::new()).collect(),
+            states: Vec::new(),
             sorted_labels: Vec::new(),
             pi: Vec::new(),
             sort_scratch: Vec::new(),
@@ -256,7 +442,7 @@ impl ShardedTreeOracle {
     pub fn n_groups(&self) -> Option<usize> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { index, .. } => Some(index.n_groups()),
+            Plan::Grouped(engine) => engine.n_groups(),
         }
     }
 
@@ -266,7 +452,7 @@ impl ShardedTreeOracle {
     pub fn group_ranges(&self) -> Option<&[(usize, usize)]> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { runs, .. } => Some(runs),
+            Plan::Grouped(engine) => engine.group_ranges(),
         }
     }
 
@@ -274,7 +460,7 @@ impl ShardedTreeOracle {
     pub fn total_pairs(&self) -> Option<f64> {
         match &self.plan {
             Plan::Global => None,
-            Plan::Grouped { index, .. } => Some(index.total_pairs()),
+            Plan::Grouped(engine) => engine.total_pairs(),
         }
     }
 
@@ -410,51 +596,6 @@ impl ShardedTreeOracle {
         }
         assemble_from_counts(p, &self.c, &self.d, n_pairs)
     }
-
-    fn eval_grouped(&mut self, p: &[f64], y: &[f64]) -> OracleOutput {
-        let m = p.len();
-        assert_eq!(m, y.len());
-        let Plan::Grouped { index, r_eff, runs } = &self.plan else {
-            unreachable!("eval_grouped requires a grouped plan")
-        };
-        let r_eff = *r_eff;
-        let states = &mut self.states;
-        debug_assert_eq!(states.len(), runs.len());
-
-        let gi: &GroupIndex = index;
-        if self.pool.n_threads() == 1 || runs.len() <= 1 {
-            for (state, &range) in states.iter_mut().zip(runs.iter()) {
-                grouped_worker(state, range, gi, p, y);
-            }
-        } else {
-            // One stealable task per group run: a worker stuck on a
-            // giant group's run loses its remaining runs to the idle
-            // workers instead of serializing the batch.
-            let mut tasks: Vec<Task> = Vec::with_capacity(runs.len());
-            for (state, &range) in states.iter_mut().zip(runs.iter()) {
-                tasks.push(Box::new(move || grouped_worker(state, range, gi, p, y)));
-            }
-            self.pool.run(tasks);
-        }
-
-        // Reduce in run order. Runs hold contiguous ascending group
-        // ranges, so iterating runs then their records reproduces the
-        // serial QueryGrouped accumulation order bit-for-bit — for any
-        // run plan and regardless of which worker ran which task.
-        let mut loss = 0.0;
-        let mut coeffs = vec![0.0; m];
-        for state in self.states.iter() {
-            for &(g, off, len, group_loss) in &state.meta {
-                loss += group_loss / r_eff;
-                let idx = index.group(g);
-                debug_assert_eq!(len, idx.len());
-                for (k, &i) in idx.iter().enumerate() {
-                    coeffs[i] = state.coeff_buf[off + k] / r_eff;
-                }
-            }
-        }
-        OracleOutput { loss, coeffs }
-    }
 }
 
 impl RankingOracle for ShardedTreeOracle {
@@ -462,43 +603,14 @@ impl RankingOracle for ShardedTreeOracle {
     /// per-group counts fixed at construction are authoritative (same
     /// contract as [`super::QueryGrouped`]).
     fn eval(&mut self, p: &[f64], y: &[f64], n_pairs: f64) -> OracleOutput {
-        if matches!(self.plan, Plan::Global) {
-            self.eval_global(p, y, n_pairs)
-        } else {
-            self.eval_grouped(p, y)
+        if let Plan::Grouped(engine) = &mut self.plan {
+            return engine.eval(p, y, n_pairs);
         }
+        self.eval_global(p, y, n_pairs)
     }
 
     fn name(&self) -> &'static str {
         "sharded-tree"
-    }
-}
-
-/// Grouped-mode worker: evaluate one group run with its own reusable
-/// tree oracle, recording per-group losses and coefficients.
-fn grouped_worker(
-    state: &mut TaskState,
-    range: (usize, usize),
-    index: &GroupIndex,
-    p: &[f64],
-    y: &[f64],
-) {
-    state.meta.clear();
-    state.coeff_buf.clear();
-    for g in range.0..range.1 {
-        let ng = index.group_pairs(g) as f64;
-        if ng == 0.0 {
-            continue;
-        }
-        let idx = index.group(g);
-        state.p_buf.clear();
-        state.p_buf.extend(idx.iter().map(|&i| p[i]));
-        state.y_buf.clear();
-        state.y_buf.extend(idx.iter().map(|&i| y[i]));
-        let out = state.oracle.eval(&state.p_buf, &state.y_buf, ng);
-        let off = state.coeff_buf.len();
-        state.coeff_buf.extend_from_slice(&out.coeffs);
-        state.meta.push((g, off, idx.len(), out.loss));
     }
 }
 
@@ -863,6 +975,94 @@ mod tests {
             assert_eq!(got.coeffs, expect_grouped.coeffs, "grouped, target {target}");
             assert_eq!(got.loss.to_bits(), expect_grouped.loss.to_bits());
         }
+    }
+
+    #[test]
+    fn generic_engine_with_tree_factory_is_the_grouped_path() {
+        // The tree loss on the generic engine is bit-identical to the
+        // (delegating) ShardedTreeOracle and the serial wrapper.
+        let mut rng = Rng::new(9010);
+        let m = 220;
+        let qid: Vec<u64> = (0..m).map(|_| rng.below(15) as u64).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(4) as f64).collect();
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let mut serial = QueryGrouped::new(TreeOracle::new(), &qid, &y);
+        let expect = serial.eval(&p, &y, serial.total_pairs());
+        for threads in [1usize, 2, 8] {
+            let pool = Arc::new(WorkerPool::new(threads));
+            let index = Arc::new(GroupIndex::build(&qid, &y));
+            let mut engine = ShardedGroupOracle::new(
+                pool,
+                Some(index),
+                || Box::new(TreeOracle::new()),
+                "sharded-tree",
+            );
+            let got = engine.eval(&p, &y, 0.0);
+            assert_eq!(got.coeffs, expect.coeffs, "{threads} threads");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn toppush_grouped_bit_identical_to_serial_for_any_plan() {
+        // Binary labels make QueryGrouped's pairs>0 effectiveness
+        // coincide with TopPush's both-classes-present rule, so the
+        // serial wrapper is an exact reference for the generic engine.
+        use crate::losses::TopPushOracle;
+        let mut rng = Rng::new(9011);
+        for trial in 0..20 {
+            let m = 1 + rng.below(240);
+            let n_queries = 1 + rng.below(14);
+            let qid: Vec<u64> = (0..m).map(|_| rng.below(n_queries) as u64 * 5).collect();
+            let y: Vec<f64> = (0..m).map(|_| rng.below(2) as f64).collect();
+            let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut serial = QueryGrouped::new(TopPushOracle::new(), &qid, &y);
+            let expect = serial.eval(&p, &y, 0.0);
+            for threads in [1usize, 2, 8, 40] {
+                let pool = Arc::new(WorkerPool::new(threads));
+                for target in [None, Some(1), Some(7), Some(500)] {
+                    let index = Arc::new(GroupIndex::build(&qid, &y));
+                    let mut engine = ShardedGroupOracle::with_run_target(
+                        Arc::clone(&pool),
+                        Some(index),
+                        || Box::new(TopPushOracle::new()),
+                        "sharded-toppush",
+                        target,
+                    );
+                    let got = engine.eval(&p, &y, 0.0);
+                    assert_eq!(
+                        got.coeffs, expect.coeffs,
+                        "trial {trial}, {threads} threads, target {target:?}"
+                    );
+                    assert_eq!(
+                        got.loss.to_bits(),
+                        expect.loss.to_bits(),
+                        "trial {trial}, {threads} threads, target {target:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generic_engine_single_group_mode_runs_inline() {
+        use crate::losses::TopPushOracle;
+        let y = [1.0, 0.0, 1.0, 0.0];
+        let p = [2.0, 0.5, 1.0, 0.0];
+        let pool = Arc::new(WorkerPool::new(4));
+        let factory: fn() -> Box<dyn GroupOracle> = || Box::new(TopPushOracle::new());
+        let mut engine = ShardedGroupOracle::new(pool, None, factory, "sharded-toppush");
+        let mut reference = TopPushOracle::new();
+        let expect = reference.eval(&p, &y, 4.0);
+        let got = engine.eval(&p, &y, 4.0);
+        assert_eq!(got.coeffs, expect.coeffs);
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits());
+        assert!(engine.n_groups().is_none());
+        assert_eq!(engine.name(), "sharded-toppush");
+        // Single-class input is zero-safe through the engine too.
+        let out = engine.eval(&[1.0, 2.0], &[3.0, 4.0], 1.0);
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(out.coeffs, vec![0.0, 0.0]);
     }
 
     #[test]

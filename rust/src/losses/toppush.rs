@@ -1,0 +1,225 @@
+//! TopPush — bipartite ranking loss that optimizes accuracy *at the top*
+//! of the list (Li, Jin & Zhou, "Top Rank Optimization in Linear Time",
+//! arXiv:1410.1462).
+//!
+//! Instead of penalizing every misordered pair, TopPush penalizes each
+//! positive only against the **highest-scoring negative**:
+//!
+//! ```text
+//! R(p) = (1/n₊) Σ_{i : y_i > 0} [ 1 + max_{j : y_j ≤ 0} p_j − p_i ]₊
+//! ```
+//!
+//! Pushing every positive above the top negative is exactly what
+//! optimizes precision at the very top of the ranking, and — the reason
+//! the loss fits this engine — the inner maximum makes one oracle call
+//! `O(m)`: one pass finds the top negative, one pass accumulates the
+//! hinges. `R` stays convex in `p` (a sum of maxima of affine
+//! functions), so it drops straight into the BMRM cutting-plane solver
+//! behind the same [`OracleOutput`] contract as the pairwise family.
+//!
+//! Normalization is owned by this loss (the [`GroupOracle`] contract):
+//! the per-group risk divides by the positive count `n₊`, *not* by the
+//! comparable-pair count the pairwise hinges use — `pairs` is ignored.
+//! Labels partition at zero: `y > 0` is positive, any other non-NaN
+//! label is negative, NaN labels belong to neither class (consistent
+//! with the NaN-incomparability convention of the tree sweeps).
+//!
+//! Determinism: the top negative is selected by `total_cmp` with a
+//! strictly-greater predicate, so ties keep the *smallest index* — the
+//! subgradient never depends on iteration order, and the hinge
+//! accumulation runs in ascending example order. One evaluation is
+//! bit-reproducible, which is all the sharded engine's serial
+//! group-order reduction needs (docs/DETERMINISM.md).
+
+use super::{GroupOracle, OracleOutput, RankingOracle};
+
+/// The TopPush subgradient oracle. Stateless — kept as a unit struct so
+/// it plugs into the per-task `Box<dyn GroupOracle>` slots of the
+/// sharded engine like the buffered tree oracles do.
+#[derive(Default)]
+pub struct TopPushOracle;
+
+impl TopPushOracle {
+    pub fn new() -> Self {
+        TopPushOracle
+    }
+}
+
+/// One bipartite TopPush evaluation over a single (query-group) slice.
+///
+/// Subgradient: every *active* positive (`1 + p_{j*} − p_i > 0`, the
+/// same strict-hinge predicate as the pairwise sweeps) contributes
+/// `−1/n₊` to its own coefficient and `+1/n₊` to the top negative `j*`;
+/// the `j*` coefficient is assembled as one `active·(1/n₊)` product so
+/// the result cannot depend on accumulation order.
+fn eval_bipartite(p: &[f64], y: &[f64]) -> OracleOutput {
+    let m = p.len();
+    debug_assert_eq!(m, y.len());
+    let mut coeffs = vec![0.0; m];
+    let mut n_pos = 0u64;
+    let mut top_neg: Option<usize> = None;
+    for i in 0..m {
+        let yi = y[i];
+        if yi.is_nan() {
+            continue;
+        }
+        if yi > 0.0 {
+            n_pos += 1;
+        } else {
+            let better = match top_neg {
+                None => true,
+                Some(j) => p[i].total_cmp(&p[j]).is_gt(),
+            };
+            if better {
+                top_neg = Some(i);
+            }
+        }
+    }
+    let (Some(j_star), true) = (top_neg, n_pos > 0) else {
+        // Single-class (or empty) slice: zero loss, zero subgradient.
+        return OracleOutput { loss: 0.0, coeffs };
+    };
+    let inv = 1.0 / n_pos as f64;
+    let margin = p[j_star];
+    let mut sum = 0.0;
+    let mut active = 0u64;
+    for i in 0..m {
+        let yi = y[i];
+        if yi.is_nan() || yi <= 0.0 {
+            continue;
+        }
+        let h = 1.0 + margin - p[i];
+        if h > 0.0 {
+            sum += h;
+            active += 1;
+            coeffs[i] = -inv;
+        }
+    }
+    coeffs[j_star] = active as f64 * inv;
+    OracleOutput { loss: sum * inv, coeffs }
+}
+
+impl GroupOracle for TopPushOracle {
+    /// `pairs` is ignored: TopPush normalizes by its positive count.
+    fn eval_group(&mut self, p: &[f64], y: &[f64], _pairs: u64) -> OracleOutput {
+        eval_bipartite(p, y)
+    }
+
+    /// A group contributes iff both classes are present (the loss and
+    /// subgradient are identically zero otherwise).
+    fn is_effective(&self, y: &[f64], _pairs: u64) -> bool {
+        let mut pos = false;
+        let mut neg = false;
+        for &v in y {
+            if v.is_nan() {
+                continue;
+            }
+            if v > 0.0 {
+                pos = true;
+            } else {
+                neg = true;
+            }
+            if pos && neg {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "toppush"
+    }
+}
+
+impl RankingOracle for TopPushOracle {
+    /// Serial whole-dataset evaluation (one implicit group). `n_pairs`
+    /// is ignored — normalization is the oracle's own (see module docs);
+    /// the `n_pairs == 0` ⇒ zero contract still holds because zero
+    /// comparable pairs means a single label value, hence one class.
+    fn eval(&mut self, p: &[f64], y: &[f64], _n_pairs: f64) -> OracleOutput {
+        eval_bipartite(p, y)
+    }
+
+    fn name(&self) -> &'static str {
+        "toppush"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_computed_case() {
+        // Negatives at idx 1 (0.5) and 3 (0.0) → j* = 1, margin 0.5.
+        // Positive idx 0 clears the margin (2.0 ≥ 1.5), idx 2 does not.
+        let p = [2.0, 0.5, 1.0, 0.0];
+        let y = [1.0, 0.0, 1.0, 0.0];
+        let out = eval_bipartite(&p, &y);
+        assert!((out.loss - 0.25).abs() < 1e-15);
+        assert_eq!(out.coeffs, vec![0.0, 0.5, -0.5, 0.0]);
+    }
+
+    #[test]
+    fn single_class_is_zero_safe() {
+        let mut o = TopPushOracle::new();
+        for y in [vec![1.0, 2.0, 3.0], vec![0.0, -1.0, 0.0], vec![]] {
+            let p = vec![0.5; y.len()];
+            let out = o.eval(&p, &y, 0.0);
+            assert_eq!(out.loss, 0.0);
+            assert!(out.coeffs.iter().all(|&c| c == 0.0));
+            assert!(!o.is_effective(&y, 0));
+        }
+    }
+
+    #[test]
+    fn tied_top_negatives_pick_smallest_index() {
+        // Two negatives tied at the top score: the subgradient mass must
+        // land on index 1 (first seen), deterministically.
+        let p = [0.0, 3.0, 3.0];
+        let y = [1.0, 0.0, 0.0];
+        let out = eval_bipartite(&p, &y);
+        assert_eq!(out.coeffs, vec![-1.0, 1.0, 0.0]);
+        assert!((out.loss - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inactive_positives_contribute_nothing() {
+        // All positives clear the margin: zero loss, zero coefficients
+        // (including the top negative's, since no hinge is active).
+        let p = [5.0, 4.0, 0.0];
+        let y = [2.0, 1.0, 0.0];
+        let out = eval_bipartite(&p, &y);
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(out.coeffs, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nan_labels_belong_to_neither_class() {
+        // The NaN row would be the top "negative" by score if counted.
+        let p = [0.0, 9.0, 1.0];
+        let y = [1.0, f64::NAN, 0.0];
+        let out = eval_bipartite(&p, &y);
+        assert_eq!(out.coeffs[1], 0.0);
+        assert_eq!(out.coeffs, vec![-1.0, 0.0, 1.0]);
+        assert!((out.loss - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn subgradient_is_a_lower_bound() {
+        // Convexity check: R(q) ≥ R(p) + ⟨g, q − p⟩ for random pairs.
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut o = TopPushOracle::new();
+        for _ in 0..50 {
+            let m = 2 + rng.below(40);
+            let y: Vec<f64> = (0..m).map(|_| rng.below(2) as f64).collect();
+            let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let q: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let at_p = o.eval(&p, &y, 0.0);
+            let at_q = o.eval(&q, &y, 0.0);
+            let lin: f64 =
+                at_p.coeffs.iter().zip(p.iter().zip(&q)).map(|(g, (a, b))| g * (b - a)).sum();
+            assert!(at_q.loss >= at_p.loss + lin - 1e-9, "subgradient overestimates");
+        }
+    }
+}

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!
 //! - `train`      — train a model on a libsvm/pstore file or a synthetic set
-//! - `eval`       — pairwise ranking error of a saved model on a dataset
+//! - `eval`       — ranking quality of a saved model on a dataset
+//!   (pairwise error, AUC, precision@k — grouped means when qids exist)
+//! - `losses`     — list the registered losses (one JSON line each)
 //! - `predict`    — one score per line for a dataset (raw features; a
 //!   model's recorded `--normalize` norms are applied automatically)
 //! - `serve`      — long-running scoring daemon (stdio or `--listen` TCP)
@@ -36,13 +38,21 @@ fn usage() -> ! {
         "ranksvm — linearithmic linear RankSVM training (TreeRSVM reproduction)
 
 USAGE:
-  ranksvm train     (--data F | --synthetic K --m M) [--method tree|pair|rlevel|prsvm|tree-dedup|tree-fenwick]
+  ranksvm train     (--data F | --synthetic K --m M) [--loss NAME]
+                    (--method is an accepted alias; `ranksvm losses` lists
+                      the registered names — tree, pair, rlevel, prsvm,
+                      toppush, ... — plus solver family and substrate)
                     [--lambda L] [--epsilon E] [--max-iter I] [--backend native|native-csc|xla]
                     [--threads T]  (0 = all cores; results are identical for any T)
                     [--normalize none|l2-col]  (l2-col divides each column by its
                       l2 norm, consuming store-cached stats when available)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
-  ranksvm eval      --model MODEL --data F
+  ranksvm eval      --model MODEL --data F [--k K]
+                    (pairwise_error + auc + precision_at_k JSON; metrics
+                      are per-query means when the data carries qids;
+                      --k sets the precision cutoff, default 10)
+  ranksvm losses    (one JSON line per registered loss: name, aliases,
+                      solver family, parallel substrate, normalization)
   ranksvm predict   --model MODEL (--data F | --synthetic K --m M)
                     (one score per line, raw features in — an l2-col
                       model applies its recorded norms itself)
@@ -105,10 +115,27 @@ fn load_dataset(args: &Args) -> Result<LoadedDataset> {
     Ok(LoadedDataset::Owned(ds))
 }
 
+/// Resolve `--loss` (registry-era spelling) or `--method` (historical
+/// alias) through the loss registry. The unknown-name error lists every
+/// registered loss *from the registry* — no hardcoded spellings to
+/// drift — and `tests/cli.rs` pins that.
+fn parse_loss(args: &Args) -> Result<Method> {
+    let (flag, name) = match args.get("loss") {
+        Some(v) => ("--loss", v),
+        None => ("--method", args.get("method").unwrap_or("tree")),
+    };
+    Method::parse(name).ok_or_else(|| {
+        let names: Vec<&str> = ranksvm::losses::registry::names().collect();
+        anyhow::anyhow!(
+            "unknown {flag} {name:?} — registered losses: {} (see `ranksvm losses`)",
+            names.join(", ")
+        )
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let loaded = load_dataset(args)?;
-    let method = Method::parse(&args.str_or("method", "tree"))
-        .context("bad --method (tree|tree-dedup|tree-fenwick|pair|rlevel|prsvm)")?;
+    let method = parse_loss(args)?;
     let backend = BackendKind::parse(&args.str_or("backend", "native")).context("bad --backend")?;
     let cfg = TrainConfig {
         method,
@@ -177,21 +204,67 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    use ranksvm::metrics;
     // Either model format, autodetected: binary .rsm or legacy text.
     let model = ScoringModel::load_auto(args.get("model").context("need --model")?)?;
     let loaded = load_dataset(args)?;
     let ds = loaded.view();
-    let err = evaluate_scoring(&model, ds);
+    let k = args.usize_or("k", 10)?;
+    // One scoring pass feeds every metric. With qids each metric is the
+    // per-query mean over its effective groups (matching the grouped
+    // training risk); without, it is computed over the one global
+    // ranking. AUC and precision@k treat y > 0 as relevant — the same
+    // label partition TopPush trains on — so a `--loss toppush` model
+    // is measurable here with no external tooling.
+    let p = model.scores(ds);
+    let (err, auc, prec) = match ds.qid() {
+        Some(q) => (
+            metrics::grouped_pairwise_error(&p, ds.y(), q),
+            metrics::grouped_auc(&p, ds.y(), q),
+            metrics::grouped_precision_at_k(&p, ds.y(), q, k, 0.0),
+        ),
+        None => (
+            metrics::pairwise_error(&p, ds.y()),
+            metrics::auc(&p, ds.y()),
+            metrics::precision_at_k(&p, ds.y(), k, 0.0),
+        ),
+    };
     println!(
         "{}",
         Json::obj(vec![
             ("dataset", Json::Str(ds.name().to_string())),
             ("m", ds.len().into()),
+            ("grouped", ds.qid().is_some().into()),
             ("normalize", Json::Str(model.normalize_name().to_string())),
             ("pairwise_error", err.into()),
+            ("auc", auc.into()),
+            ("k", k.into()),
+            ("precision_at_k", prec.into()),
         ])
         .to_string()
     );
+    Ok(())
+}
+
+/// `ranksvm losses` — the registry, one JSON line per loss (stable
+/// field order; CI and scripts iterate this instead of hardcoding
+/// method lists).
+fn cmd_losses() -> Result<()> {
+    for spec in ranksvm::losses::registry::SPECS {
+        let aliases: Vec<Json> = spec.aliases.iter().map(|a| Json::Str(a.to_string())).collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("name", Json::Str(spec.name.to_string())),
+                ("aliases", Json::Arr(aliases)),
+                ("solver", Json::Str(spec.solver.name().to_string())),
+                ("substrate", Json::Str(spec.substrate.name().to_string())),
+                ("normalization", Json::Str(spec.normalization.name().to_string())),
+                ("about", Json::Str(spec.about.to_string())),
+            ])
+            .to_string()
+        );
+    }
     Ok(())
 }
 
@@ -493,7 +566,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
 }
 
 fn cmd_mem_probe(args: &Args) -> Result<()> {
-    let method = Method::parse(&args.str_or("method", "tree")).context("bad --method")?;
+    let method = parse_loss(args)?;
     let lambda = args.f64_or("lambda", 1e-4)?;
     let max_iter = args.usize_or("max-iter", 10)?;
     if let Some(path) = args.get("data") {
@@ -518,6 +591,7 @@ fn run() -> Result<()> {
         Some("stats") => cmd_stats(&args),
         Some("info") => cmd_info(&args),
         Some("mem-probe") => cmd_mem_probe(&args),
+        Some("losses") => cmd_losses(),
         Some("perf") => cmd_perf(&args),
         _ => usage(),
     }

@@ -94,6 +94,85 @@ pub fn grouped_pairwise_error(pred: &[f64], y: &[f64], qid: &[u64]) -> f64 {
     }
 }
 
+/// Partition example indices by qid, groups in first-seen order (the
+/// same convention as [`crate::losses::GroupIndex`]), so grouped metric
+/// averages accumulate in a deterministic order.
+fn groups_first_seen(qid: &[u64]) -> Vec<Vec<usize>> {
+    let mut map: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, &q) in qid.iter().enumerate() {
+        let g = *map.entry(q).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(i);
+    }
+    groups
+}
+
+/// Mean of `metric` over the query groups where `effective(y_group)`
+/// holds, in first-seen qid order. Returns 0 when no group qualifies.
+fn grouped_mean(
+    pred: &[f64],
+    y: &[f64],
+    qid: &[u64],
+    effective: impl Fn(&[f64]) -> bool,
+    metric: impl Fn(&[f64], &[f64]) -> f64,
+) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    assert_eq!(pred.len(), qid.len());
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for idx in groups_first_seen(qid) {
+        let yg: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+        if !effective(&yg) {
+            continue;
+        }
+        let pg: Vec<f64> = idx.iter().map(|&i| pred[i]).collect();
+        sum += metric(&pg, &yg);
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Query-grouped AUC: [`auc`] per group, averaged over groups with at
+/// least one comparable pair (groups whose labels are all tied carry no
+/// ranking information). For bipartite labels this is the mean per-query
+/// Wilcoxon–Mann–Whitney statistic.
+pub fn grouped_auc(pred: &[f64], y: &[f64], qid: &[u64]) -> f64 {
+    grouped_mean(
+        pred,
+        y,
+        qid,
+        |yg| crate::losses::count_comparable_pairs(yg) > 0,
+        |pg, yg| auc(pg, yg),
+    )
+}
+
+/// Query-grouped precision@k: [`precision_at_k`] per group, averaged
+/// over groups with at least one relevant example (`y > threshold`) —
+/// the standard IR convention; a query with nothing relevant says
+/// nothing about the ranker.
+pub fn grouped_precision_at_k(
+    pred: &[f64],
+    y: &[f64],
+    qid: &[u64],
+    k: usize,
+    threshold: f64,
+) -> f64 {
+    grouped_mean(
+        pred,
+        y,
+        qid,
+        |yg| yg.iter().any(|&v| v > threshold),
+        |pg, yg| precision_at_k(pg, yg, k, threshold),
+    )
+}
+
 /// Kendall's τ-a over comparable pairs: `1 − 2·error` (in [−1, 1]).
 pub fn kendall_tau(pred: &[f64], y: &[f64]) -> f64 {
     1.0 - 2.0 * pairwise_error(pred, y)
@@ -254,6 +333,35 @@ mod tests {
         assert_eq!(ndcg_at_k(&[], &[], 5), 0.0);
         assert_eq!(ndcg_at_k(&[1.0, 2.0], &[0.0, 0.0], 2), 0.0); // no gain anywhere
         assert_eq!(ndcg_at_k(&[1.0], &[1.0], 0), 0.0);
+    }
+
+    #[test]
+    fn grouped_auc_averages_effective_groups() {
+        // Group 0 perfect (AUC 1), group 1 reversed (AUC 0), group 2
+        // single-class (excluded) → mean 0.5.
+        let y = [0.0, 1.0, 0.0, 1.0, 1.0, 1.0];
+        let p = [0.0, 1.0, 1.0, 0.0, 9.0, 8.0];
+        let qid = [0u64, 0, 1, 1, 2, 2];
+        assert!((grouped_auc(&p, &y, &qid) - 0.5).abs() < 1e-12);
+        // Identity with the grouped pairwise error on the same data.
+        let err = grouped_pairwise_error(&p, &y, &qid);
+        assert!((grouped_auc(&p, &y, &qid) - (1.0 - err)).abs() < 1e-12);
+        // No effective group at all.
+        assert_eq!(grouped_auc(&[1.0, 2.0], &[1.0, 1.0], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn grouped_precision_at_k_skips_groups_without_relevant() {
+        // Group 0: top-1 is relevant (P@1 = 1). Group 1: top-1 is not
+        // (P@1 = 0). Group 2: nothing relevant — excluded, not zero.
+        let y = [1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let p = [5.0, 1.0, 7.0, 2.0, 3.0, 4.0];
+        let qid = [0u64, 0, 1, 1, 2, 2];
+        assert!((grouped_precision_at_k(&p, &y, &qid, 1, 0.0) - 0.5).abs() < 1e-12);
+        // k larger than any group truncates per group: group 0 → 1/2,
+        // group 1 → 1/2, mean 1/2.
+        assert!((grouped_precision_at_k(&p, &y, &qid, 10, 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(grouped_precision_at_k(&p, &y, &[9u64; 6], 2, 5.0), 0.0);
     }
 
     #[test]

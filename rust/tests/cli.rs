@@ -107,6 +107,8 @@ fn full_cli_workflow() {
     ]);
     assert!(ok);
     assert!(stdout.contains("\"pairwise_error\":"), "eval output: {stdout}");
+    assert!(stdout.contains("\"auc\":"), "eval output: {stdout}");
+    assert!(stdout.contains("\"precision_at_k\":"), "eval output: {stdout}");
 
     // mem-probe protocol
     let (ok, stdout, err) = run(&[
@@ -156,10 +158,18 @@ fn cli_rejects_bad_inputs() {
     // unknown subcommand → usage, nonzero exit
     let (ok, _, _) = run(&["frobnicate"]);
     assert!(!ok);
-    // bad method
+    // bad method: the error names the flag and lists every registered
+    // loss, straight from the registry
     let (ok, _, err) = run(&["train", "--synthetic", "cadata", "--m", "50", "--method", "magic"]);
     assert!(!ok);
-    assert!(err.contains("method"), "stderr: {err}");
+    assert!(err.contains("--method") && err.contains("magic"), "stderr: {err}");
+    for name in ["tree", "tree-dedup", "tree-fenwick", "pair", "rlevel", "prsvm", "toppush"] {
+        assert!(err.contains(name), "registry name {name} missing from: {err}");
+    }
+    // same contract under the --loss spelling
+    let (ok, _, err) = run(&["train", "--synthetic", "cadata", "--m", "50", "--loss", "nope"]);
+    assert!(!ok);
+    assert!(err.contains("--loss") && err.contains("toppush"), "stderr: {err}");
     // missing data source
     let (ok, _, _) = run(&["train", "--m", "50"]);
     assert!(!ok);
@@ -173,19 +183,42 @@ fn cli_train_all_methods_smoke() {
     if bin().is_none() {
         return;
     }
-    for method in ["tree", "tree-dedup", "tree-fenwick", "pair", "rlevel", "prsvm", "prsvm-tree"] {
+    // Every registered loss, alternating the legacy --method and the
+    // canonical --loss spellings (both must keep working). cadata's
+    // real-valued labels put both signs in the data, so the bipartite
+    // losses train too.
+    for (i, method) in ranksvm::losses::registry::names().enumerate() {
+        let flag = if i % 2 == 0 { "--method" } else { "--loss" };
         let (ok, stdout, err) = run(&[
             "train",
             "--synthetic",
             "cadata",
             "--m",
             "200",
-            "--method",
+            flag,
             method,
             "--lambda",
             "0.1",
         ]);
-        assert!(ok, "method {method} failed: {err}");
+        assert!(ok, "loss {method} via {flag} failed: {err}");
         assert!(stdout.contains(&format!("\"method\":\"{method}\"")), "{method}: {stdout}");
+        assert!(stdout.contains("\"solver\":\""), "{method}: missing solver field: {stdout}");
+    }
+}
+
+#[test]
+fn cli_losses_lists_the_registry() {
+    if bin().is_none() {
+        return;
+    }
+    let (ok, stdout, err) = run(&["losses"]);
+    assert!(ok, "losses failed: {err}");
+    for spec in ranksvm::losses::registry::SPECS {
+        assert!(
+            stdout.contains(&format!("\"name\":\"{}\"", spec.name)),
+            "{} missing: {stdout}",
+            spec.name
+        );
+        assert!(stdout.contains(&format!("\"solver\":\"{}\"", spec.solver.name())), "{stdout}");
     }
 }

@@ -8,8 +8,8 @@
 
 use ranksvm::compute::{ComputeBackend, NativeBackend, ParallelBackend};
 use ranksvm::losses::{
-    count_comparable_pairs, PairOracle, QueryGrouped, RLevelOracle, RankingOracle,
-    ShardedTreeOracle, SquaredPairOracle, SquaredTreeOracle, TreeOracle,
+    count_comparable_pairs, OracleOutput, PairOracle, QueryGrouped, RLevelOracle, RankingOracle,
+    ShardedTreeOracle, SquaredPairOracle, SquaredTreeOracle, TopPushOracle, TreeOracle,
 };
 use ranksvm::util::rng::Rng;
 
@@ -157,6 +157,106 @@ fn sharded_grouped_respects_query_boundaries_and_matches_serial() {
                 expect.loss.to_bits(),
                 "trial {trial}, {threads} threads"
             );
+        }
+    }
+}
+
+/// Brute-force TopPush reference: for every positive, independently
+/// re-scan *all* negatives for the maximum score (quadratic work, no
+/// shared top-negative state), then assemble exactly the subgradient
+/// the contract in `docs/LOSSES.md` specifies. Strict `>` on the scan
+/// keeps the smallest index among tied top negatives.
+fn toppush_reference(p: &[f64], y: &[f64]) -> OracleOutput {
+    let m = p.len();
+    let mut coeffs = vec![0.0; m];
+    let n_pos = y.iter().filter(|v| **v > 0.0).count();
+    if n_pos == 0 || !y.iter().any(|v| *v <= 0.0 && !v.is_nan()) {
+        return OracleOutput { loss: 0.0, coeffs };
+    }
+    let inv = 1.0 / n_pos as f64;
+    let mut sum = 0.0;
+    let mut active = 0usize;
+    let mut j_star = usize::MAX;
+    for i in 0..m {
+        if !(y[i] > 0.0) || y[i].is_nan() {
+            continue;
+        }
+        // Quadratic: each positive pays a full pass over the negatives.
+        let mut top = usize::MAX;
+        for (j, (&pj, &yj)) in p.iter().zip(y).enumerate() {
+            if yj.is_nan() || yj > 0.0 {
+                continue;
+            }
+            if top == usize::MAX || pj > p[top] {
+                top = j;
+            }
+        }
+        let h = 1.0 + p[top] - p[i];
+        if h > 0.0 {
+            sum += h;
+            active += 1;
+            coeffs[i] = -inv;
+            j_star = top;
+        }
+    }
+    if j_star != usize::MAX {
+        coeffs[j_star] = active as f64 * inv;
+    }
+    OracleOutput { loss: sum * inv, coeffs }
+}
+
+#[test]
+fn toppush_oracle_matches_quadratic_reference() {
+    // Exact bit equality: the fast oracle and the reference accumulate
+    // the same hinges in the same ascending-index order and assemble
+    // coefficients through the identical `active * inv` product.
+    let mut rng = Rng::new(0xD1FF_0008);
+    for trial in 0..120 {
+        let m = 1 + rng.below(250);
+        // All tie regimes, including single-class and all-NaN-adjacent
+        // corners: regime 3 (all tied at 7.5) is all-positive → zero.
+        let mut y = labels(&mut rng, m, trial);
+        if trial % 5 == 0 {
+            for v in y.iter_mut() {
+                if rng.bool(0.1) {
+                    *v = f64::NAN;
+                }
+            }
+        }
+        let p = scores(&mut rng, m, trial / 4);
+        let mut fast = TopPushOracle::new();
+        let got = fast.eval(&p, &y, 0.0);
+        let expect = toppush_reference(&p, &y);
+        assert_eq!(got.coeffs, expect.coeffs, "trial {trial}");
+        assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "trial {trial}");
+    }
+}
+
+#[test]
+fn toppush_sharded_engine_matches_serial_grouping() {
+    // The generic per-group engine vs a serial loop over the same
+    // groups using the quadratic reference, normalized by the number
+    // of effective (both-classes-present) groups. Bitwise on coeffs.
+    let mut rng = Rng::new(0xD1FF_0009);
+    for trial in 0..30 {
+        let m = 2 + rng.below(240);
+        let n_queries = 1 + rng.below(12);
+        let qid: Vec<u64> = (0..m).map(|_| rng.below(n_queries) as u64 * 7 + 3).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(2) as f64).collect();
+        let p = scores(&mut rng, m, trial / 3);
+
+        let mut serial = QueryGrouped::new(TopPushOracle::new(), &qid, &y);
+        let expect = serial.eval(&p, &y, 0.0);
+        for threads in [1usize, 2, 8] {
+            let pool = std::sync::Arc::new(ranksvm::runtime::WorkerPool::new(threads));
+            let index = std::sync::Arc::new(ranksvm::losses::GroupIndex::build(&qid, &y));
+            let factory: fn() -> Box<dyn ranksvm::losses::GroupOracle> =
+                || Box::new(TopPushOracle::new());
+            let mut engine =
+                ranksvm::losses::ShardedGroupOracle::new(pool, Some(index), factory, "toppush");
+            let got = engine.eval(&p, &y, 0.0);
+            assert_eq!(got.coeffs, expect.coeffs, "trial {trial}, {threads} threads");
+            assert_eq!(got.loss.to_bits(), expect.loss.to_bits(), "trial {trial}");
         }
     }
 }

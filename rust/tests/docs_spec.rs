@@ -1,11 +1,12 @@
-//! docs/STORE_FORMAT.md ↔ `format.rs` consistency.
+//! Normative docs ↔ code consistency.
 //!
-//! The store-format document is normative, so it must not drift from
-//! the code. This suite parses the spec's markdown tables (header
-//! fields, COLSTATS layout, flag registry) and verifies every claimed
-//! offset, size, and constant against the real encoder — by probing an
-//! encoded header with sentinel values, not by trusting a second copy
-//! of the numbers.
+//! docs/STORE_FORMAT.md and docs/LOSSES.md are normative, so they must
+//! not drift from the code. This suite parses their markdown tables
+//! (header fields, COLSTATS layout, flag registry, the loss registry
+//! table) and verifies every claimed offset, size, constant, and
+//! registry row against the real encoder and the real
+//! [`ranksvm::losses::registry::SPECS`] — by probing, not by trusting
+//! a second copy of the numbers.
 
 use ranksvm::data::store::{
     ColStat, Header, CHECKSUM_FIELD, COLSTAT_BYTES, FLAG_HAS_COLSTATS, FLAG_HAS_QID,
@@ -174,6 +175,68 @@ fn colstats_table_matches_the_struct_layout() {
     }
     assert_eq!(COLSTAT_BYTES, std::mem::size_of::<ColStat>());
     assert!(doc.contains("n × 40"), "colstats section length prose");
+}
+
+/// All backticked tokens of a markdown cell, in order.
+fn all_backticked(cell: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = cell;
+    while let Some(start) = rest.find('`') {
+        let tail = &rest[start + 1..];
+        let Some(end) = tail.find('`') else { break };
+        out.push(tail[..end].to_string());
+        rest = &tail[end + 1..];
+    }
+    out
+}
+
+#[test]
+fn losses_doc_table_matches_the_registry() {
+    use ranksvm::losses::registry::SPECS;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/LOSSES.md");
+    let doc = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {path}: {e} — the normative spec must exist"));
+
+    // Parse `| `name` | aliases | solver | substrate | normalization |`
+    // rows under the "Registered losses" heading.
+    let mut in_section = false;
+    let mut rows: Vec<(String, Vec<String>, String, String, String)> = Vec::new();
+    for line in doc.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains("Registered losses");
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 7 {
+            continue;
+        }
+        let Some(name) = backticked(cells[1]) else { continue }; // header/separator rows
+        rows.push((
+            name,
+            all_backticked(cells[2]),
+            cells[3].to_string(),
+            cells[4].to_string(),
+            cells[5].to_string(),
+        ));
+    }
+
+    assert_eq!(
+        rows.len(),
+        SPECS.len(),
+        "docs/LOSSES.md table must list every registered loss exactly once: {rows:?}"
+    );
+    // Same order as the registry — the table *is* the registry, rendered.
+    for (row, spec) in rows.iter().zip(SPECS) {
+        let (name, aliases, solver, substrate, normalization) = row;
+        assert_eq!(name, spec.name, "row order must match registry order");
+        assert_eq!(aliases, spec.aliases, "aliases of {}", spec.name);
+        assert_eq!(solver, spec.solver.name(), "solver of {}", spec.name);
+        assert_eq!(substrate, spec.substrate.name(), "substrate of {}", spec.name);
+        assert_eq!(normalization, spec.normalization.name(), "normalization of {}", spec.name);
+    }
 }
 
 #[test]

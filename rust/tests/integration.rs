@@ -14,15 +14,23 @@ fn cfg(method: Method, lambda: f64) -> TrainConfig {
 #[test]
 fn fig4_sanity_all_methods_similar_test_error() {
     // The paper's Fig. 4: despite implementation differences, every
-    // method lands at a similar test pairwise error.
+    // *pairwise-comparable* method lands at a similar test pairwise
+    // error. Registry losses with a different normalizer (TopPush
+    // optimizes top-of-ranking accuracy, not the pairwise risk) are out
+    // of scope for this equivalence by construction.
+    use ranksvm::losses::registry::Normalization;
     let ds = synthetic::cadata_like(1200, 4);
     let (tr, te) = ds.split(300, 9);
     let mut errors = Vec::new();
     for &m in Method::all() {
+        if m.spec().normalization != Normalization::ComparablePairs {
+            continue;
+        }
         let out = train(&tr, &cfg(m, 0.1)).unwrap();
         let err = evaluate(&out.model, &te);
         errors.push((m.name(), err));
     }
+    assert!(errors.len() >= 7, "expected the full pairwise family, got {errors:?}");
     let base = errors[0].1;
     for (name, err) in &errors {
         assert!(

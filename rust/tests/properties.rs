@@ -322,6 +322,97 @@ fn prop_training_thread_invariant_on_skewed_fixtures() {
     });
 }
 
+/// Property: every registered loss is thread-invariant — full training
+/// through its registry dispatch produces bit-identical weights and
+/// objective at 1, 2, and 8 threads. This is the registry-wide form of
+/// the engine contract in docs/DETERMINISM.md: a loss cannot land in
+/// [`ranksvm::losses::registry::SPECS`] without inheriting it, because
+/// this test iterates the registry rather than a hardcoded list.
+#[test]
+fn prop_registry_losses_thread_invariant() {
+    use ranksvm::coordinator::{train, Method, TrainConfig};
+    use ranksvm::data::synthetic;
+    for_cases(2, |rng| {
+        // Grouped fixture with real-valued labels: both signs appear in
+        // every query with overwhelming probability, so the bipartite
+        // losses see positives and negatives and the pairwise losses
+        // see comparable pairs.
+        let ds = synthetic::queries(8, 12, 5, rng.next_u64());
+        for &m in Method::all() {
+            let mut reference: Option<(Vec<f64>, u64)> = None;
+            for threads in [1usize, 2, 8] {
+                let cfg = TrainConfig {
+                    method: m,
+                    lambda: 0.1,
+                    epsilon: 1e-2,
+                    max_iter: 30,
+                    n_threads: threads,
+                    ..Default::default()
+                };
+                let out = train(&ds, &cfg).unwrap();
+                match &reference {
+                    None => reference = Some((out.model.w, out.objective.to_bits())),
+                    Some((w, obj)) => {
+                        assert_eq!(&out.model.w, w, "{}: {threads} threads vs 1", m.name());
+                        assert_eq!(out.objective.to_bits(), *obj, "{}: objective", m.name());
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Property: every registered loss is zero-safe — on labels that make
+/// the risk vacuous (all tied: no comparable pairs for the pairwise
+/// family, a single class for TopPush), the oracle returns exactly
+/// zero loss and all-zero coefficients, grouped or not, at any thread
+/// count. Dispatched through the registry so new entries are held to
+/// the contract automatically.
+#[test]
+fn prop_registry_losses_zero_safe() {
+    use ranksvm::coordinator::Method;
+    use ranksvm::data::Dataset;
+    use ranksvm::linalg::CsrMatrix;
+    use ranksvm::losses::registry::{NewtonKind, OracleCtx};
+    use ranksvm::losses::{GroupIndex, SquaredTreeOracle};
+    use ranksvm::runtime::WorkerPool;
+    use std::sync::Arc;
+    for_cases(12, |rng| {
+        let m = 1 + rng.below(60);
+        let tied = if rng.bool(0.5) { 1.0 } else { -2.0 }; // all-pos or all-neg
+        let y = vec![tied; m];
+        let qid: Option<Vec<u64>> =
+            rng.bool(0.5).then(|| (0..m).map(|i| (i as u64) % 5).collect());
+        let triplets: Vec<(usize, usize, f64)> = (0..m).map(|i| (i, i % 4, rng.normal())).collect();
+        let ds = Dataset::new(CsrMatrix::from_triplets(m, 4, triplets), y, qid, "tied");
+        let p: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let pool = Arc::new(WorkerPool::new(1 + rng.below(8)));
+        let index = ds.qid.as_ref().map(|q| Arc::new(GroupIndex::build(q, &ds.y)));
+        for &meth in Method::all() {
+            let spec = meth.spec();
+            let out = if let Some(kind) = spec.newton {
+                match kind {
+                    NewtonKind::MaterializedPairs => {
+                        SquaredPairOracle::new(&ds.y).eval_full(&p, 0.0)
+                    }
+                    NewtonKind::SumTree => SquaredTreeOracle::new().eval_full(&p, &ds.y, 0.0),
+                }
+            } else {
+                let ctor = spec.bmrm.expect("BMRM loss must carry a constructor");
+                let mut oracle = ctor(OracleCtx { ds: &ds, index: index.clone(), pool: &pool });
+                oracle.eval(&p, &ds.y, 0.0)
+            };
+            assert!(out.loss == 0.0, "{}: loss {} on vacuous labels", spec.name, out.loss);
+            assert_eq!(out.coeffs.len(), m, "{}", spec.name);
+            assert!(
+                out.coeffs.iter().all(|c| *c == 0.0),
+                "{}: nonzero coefficients on vacuous labels",
+                spec.name
+            );
+        }
+    });
+}
+
 /// Property: subgradient validity — for random w, w', the first-order
 /// lower bound R(w') ≥ R(w) + ⟨w' − w, ∇R(w)⟩ holds (convexity + correct
 /// subgradient), exercised through score space with X = I.
