@@ -31,6 +31,33 @@ pub fn header(title: &str) {
     println!("================================================================");
 }
 
+/// True when the bench should emit only its snapshot *schema* — the
+/// real envelope and key sets with null metric values — and exit
+/// immediately. CI sets `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` to check the
+/// committed `BENCH_*.json` files against what the binaries would
+/// write, without paying for a real bench run.
+pub fn schema_only() -> bool {
+    std::env::var("RANKSVM_SNAPSHOT_SCHEMA_ONLY").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Where a bench's tracked snapshot lives: `BENCH_<bench>.json` under
+/// `$RANKSVM_SNAPSHOT_DIR` when set (the CI schema gate points this at
+/// a temp dir), else at the repo root.
+pub fn snapshot_path(bench: &str) -> std::path::PathBuf {
+    let dir = std::env::var("RANKSVM_SNAPSHOT_DIR")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/..").to_string());
+    std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"))
+}
+
+/// Write the bench's snapshot through the shared envelope
+/// ([`ranksvm::obs::snapshot::bench_snapshot`], docs/OBSERVABILITY.md).
+pub fn write_snapshot(bench: &str, placeholder: bool, params: Json, metrics: Vec<Json>) {
+    let snap = ranksvm::obs::snapshot::bench_snapshot(bench, placeholder, params, metrics);
+    let path = snapshot_path(bench);
+    std::fs::write(&path, format!("{}\n", snap.to_string())).unwrap();
+    println!("snapshot written to {}", path.display());
+}
+
 /// Real-data hook: when `RANKSVM_DATA` names a dataset file (libsvm
 /// text or, ideally, a `.pstore` pallas store — autodetected by magic
 /// bytes), the scalability benches add a panel over growing prefixes of

@@ -7,12 +7,34 @@
 //! `docs/DETERMINISM.md`).
 //!
 //! `FULL=1` runs the paper-scale fixture; `M=<rows>` overrides.
+//!
+//! The tracked snapshot `BENCH_convert_throughput.json` is written
+//! through the shared envelope (`ranksvm::obs::snapshot`,
+//! docs/OBSERVABILITY.md): one metric row per thread count;
+//! `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` emits the placeholder schema and
+//! exits.
 
 mod common;
 
 use common::full_scale;
 use ranksvm::data::store::{convert_libsvm, ConvertOptions};
 use ranksvm::data::{libsvm, synthetic};
+use ranksvm::util::json::Json;
+
+/// Snapshot fixture parameters (key set is part of the schema gate).
+fn params(m: usize, text_bytes: Json) -> Json {
+    Json::obj(vec![("m", m.into()), ("text_bytes", text_bytes)])
+}
+
+/// One snapshot metric row (null values in schema-only mode).
+fn metric_row(threads: Json, shards: Json, secs: Json, mb_per_s: Json) -> Json {
+    Json::obj(vec![
+        ("threads", threads),
+        ("shards", shards),
+        ("secs", secs),
+        ("mb_per_s", mb_per_s),
+    ])
+}
 
 fn main() {
     let default_m = if full_scale() { 400_000 } else { 60_000 };
@@ -20,6 +42,16 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(default_m);
+    if common::schema_only() {
+        let n = || Json::Null;
+        common::write_snapshot(
+            "convert_throughput",
+            true,
+            params(m, Json::Null),
+            vec![metric_row(n(), n(), n(), n())],
+        );
+        return;
+    }
     let dir = std::env::temp_dir().join(format!("ranksvm_convert_bench_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let text = dir.join("bench.libsvm");
@@ -37,6 +69,7 @@ fn main() {
     let mut configs = vec![1usize, (all / 2).max(2), all];
     configs.dedup();
     let mut reference: Option<Vec<u8>> = None;
+    let mut rows = Vec::new();
     for threads in configs {
         let out = dir.join(format!("bench.t{threads}.pstore"));
         let opts = ConvertOptions { chunk_bytes: 8 << 20, n_threads: threads };
@@ -59,8 +92,21 @@ fn main() {
             stats.shards,
             text_bytes as f64 / 1e6 / secs,
         );
+        rows.push(metric_row(
+            threads.into(),
+            stats.shards.into(),
+            secs.into(),
+            (text_bytes as f64 / 1e6 / secs).into(),
+        ));
         std::fs::remove_file(&out).ok();
     }
     std::fs::remove_file(&text).ok();
     std::fs::remove_dir(&dir).ok();
+
+    common::write_snapshot(
+        "convert_throughput",
+        false,
+        params(m, (text_bytes as usize).into()),
+        rows,
+    );
 }

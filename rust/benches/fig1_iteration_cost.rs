@@ -7,6 +7,12 @@
 //! the *shape* (who wins, roughly what factor, crossover behaviour) on
 //! this testbed. `FULL=1 cargo bench --bench fig1_iteration_cost` runs
 //! the paper's grids.
+//!
+//! The tracked snapshot `BENCH_fig1_iteration_cost.json` is written
+//! through the shared envelope (`ranksvm::obs::snapshot`,
+//! docs/OBSERVABILITY.md): one metric row per (panel, m);
+//! `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` emits the placeholder schema and
+//! exits.
 
 mod common;
 
@@ -52,7 +58,33 @@ fn oracle_cost(ds: &dyn DatasetView, oracle: Box<dyn RankingOracle>, reps: usize
     t.elapsed().as_secs_f64() / reps as f64
 }
 
-fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap: usize) {
+/// Snapshot fixture parameters (key set is part of the schema gate).
+fn params(full: bool, pair_cap: usize, threads: usize) -> Json {
+    Json::obj(vec![
+        ("full", full.into()),
+        ("pair_cap", pair_cap.into()),
+        ("threads", threads.into()),
+    ])
+}
+
+/// One snapshot metric row (null values in schema-only mode).
+fn metric_row(panel: Json, m: Json, tree_secs: Json, sharded_secs: Json, pair_secs: Json) -> Json {
+    Json::obj(vec![
+        ("panel", panel),
+        ("m", m),
+        ("tree_secs", tree_secs),
+        ("sharded_secs", sharded_secs),
+        ("pair_secs", pair_secs),
+    ])
+}
+
+fn panel(
+    name: &str,
+    make: &dyn Fn(usize) -> Dataset,
+    sizes: &[usize],
+    pair_cap: usize,
+    rows: &mut Vec<Json>,
+) {
     let threads = host_threads();
     // One persistent pool for the whole panel — the trainer's
     // arrangement: workers are spawned once and reused by the sharded
@@ -72,11 +104,12 @@ fn panel(name: &str, make: &dyn Fn(usize) -> Dataset, sizes: &[usize], pair_cap:
     );
     for &m in sizes {
         let ds = make(m);
-        size_row(name, &ds, m, &pool, threads, pair_cap);
+        size_row(name, &ds, m, &pool, threads, pair_cap, rows);
     }
 }
 
 /// One measured size within a panel.
+#[allow(clippy::too_many_arguments)]
 fn size_row(
     name: &str,
     ds: &dyn DatasetView,
@@ -84,6 +117,7 @@ fn size_row(
     pool: &Arc<WorkerPool>,
     threads: usize,
     pair_cap: usize,
+    rows: &mut Vec<Json>,
 ) {
     let reps = if m <= 4000 { 5 } else { 2 };
     let tree = oracle_cost(ds, Box::new(TreeOracle::new()), reps);
@@ -115,6 +149,13 @@ fn size_row(
             ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
         ]),
     );
+    rows.push(metric_row(
+        name.into(),
+        m.into(),
+        tree.into(),
+        sharded.into(),
+        pair.map(Json::Num).unwrap_or(Json::Null),
+    ));
 }
 
 fn main() {
@@ -129,9 +170,20 @@ fn main() {
         vec![1000, 2000, 4000, 8000, 16000, 32000, 64000]
     };
     let pair_cap = if full { 512000 } else { 16000 };
+    if common::schema_only() {
+        let n = || Json::Null;
+        common::write_snapshot(
+            "fig1_iteration_cost",
+            true,
+            params(full, pair_cap, host_threads()),
+            vec![metric_row(n(), n(), n(), n(), n())],
+        );
+        return;
+    }
+    let mut rows = Vec::new();
 
-    panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, pair_cap);
-    panel("reuters", &|m| synthetic::reuters_like(m, 200), &reuters_sizes, pair_cap);
+    panel("cadata", &|m| synthetic::cadata_like(m, 100), &cadata_sizes, pair_cap, &mut rows);
+    panel("reuters", &|m| synthetic::reuters_like(m, 200), &reuters_sizes, pair_cap, &mut rows);
 
     // Real-data panel: growing zero-copy prefixes of a mapped store
     // (RANKSVM_DATA=foo.pstore — convert once, mmap forever).
@@ -145,9 +197,16 @@ fn main() {
         ));
         for m in prefix_grid(view.len()) {
             let prefix = view.prefix_view(m);
-            size_row(view.name(), &prefix, m, &pool, threads, pair_cap);
+            size_row(view.name(), &prefix, m, &pool, threads, pair_cap, &mut rows);
         }
     }
+
+    common::write_snapshot(
+        "fig1_iteration_cost",
+        false,
+        params(full, pair_cap, host_threads()),
+        rows,
+    );
 
     println!("\nExpected shape (paper): tree ≈ m·log m (near-linear rows), pair ≈ m²");
     println!("(4× more data → pair column grows ~16×, tree column ~4–5×).");

@@ -18,23 +18,13 @@
 //!
 //! Output: the usual table on stdout + JSONL via `common::record`, and
 //! the tracked snapshot `BENCH_serve_qps.json` at the repo root is
-//! rewritten in place. Snapshot schema (one JSON object):
-//!
-//! ```json
-//! {
-//!   "bench": "serve_qps",          // constant
-//!   "m": 20000,                    // store rows
-//!   "groups": 512,                 // query groups (Zipf(1.1) sizes)
-//!   "dim": 16,                     // feature dimension
-//!   "requests": 4000,              // trace length per mode
-//!   "batch": 64,                   // throughput-mode batch size
-//!   "topk_share": 0.1,             // fraction of topk-group requests
-//!   "placeholder": false,          // true ⇒ metrics are null (not run)
-//!   "modes": [                     // one entry per thread count
-//!     {"threads": 1, "p50_us": 1.2, "p99_us": 3.4, "qps": 56789.0}
-//!   ]
-//! }
-//! ```
+//! rewritten through the shared snapshot envelope
+//! (`ranksvm::obs::snapshot`, docs/OBSERVABILITY.md): params are the
+//! fixture (`m`, `groups`, `dim`, `requests`, `batch`, `topk_share`),
+//! metric rows are `{threads, p50_us, p99_us, qps}`, one per thread
+//! count. `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` writes a `placeholder:
+//! true` snapshot with null metric values and exits — CI's schema
+//! drift gate.
 //!
 //! Regenerate with `cargo bench --bench serve_qps` (FULL=1 for the
 //! paper-scale store).
@@ -76,6 +66,28 @@ fn percentile_us(sorted: &[f64], p: f64) -> f64 {
     sorted[i] * 1e6
 }
 
+/// Snapshot fixture parameters (key set is part of the schema gate).
+fn params(m: usize, groups: usize, dim: usize, requests: usize) -> Json {
+    Json::obj(vec![
+        ("m", m.into()),
+        ("groups", groups.into()),
+        ("dim", dim.into()),
+        ("requests", requests.into()),
+        ("batch", BATCH.into()),
+        ("topk_share", TOPK_SHARE.into()),
+    ])
+}
+
+/// One snapshot metric row (null values in schema-only mode).
+fn mode_row(threads: Json, p50_us: Json, p99_us: Json, qps: Json) -> Json {
+    Json::obj(vec![
+        ("threads", threads),
+        ("p50_us", p50_us),
+        ("p99_us", p99_us),
+        ("qps", qps),
+    ])
+}
+
 fn main() {
     let max_threads = ranksvm::util::resolve_threads(0);
     let (m, n_groups, dim, n_requests) = if full_scale() {
@@ -83,6 +95,16 @@ fn main() {
     } else {
         (20_000, 512, 16, 4_000)
     };
+    if common::schema_only() {
+        let null_row = mode_row(Json::Null, Json::Null, Json::Null, Json::Null);
+        common::write_snapshot(
+            "serve_qps",
+            true,
+            params(m, n_groups, dim, n_requests),
+            vec![null_row],
+        );
+        return;
+    }
     let ds = synthetic::zipf_queries(m, n_groups, dim, 1.1, 42);
     let w: Vec<f64> = (0..ds.dim()).map(|j| ((j as f64) + 0.5).sin() * 1.75).collect();
     let model = ScoringModel::new(w, None).unwrap();
@@ -157,28 +179,10 @@ fn main() {
                 ("qps", qps.into()),
             ]),
         );
-        modes.push(Json::obj(vec![
-            ("threads", threads.into()),
-            ("p50_us", p50.into()),
-            ("p99_us", p99.into()),
-            ("qps", qps.into()),
-        ]));
+        modes.push(mode_row(threads.into(), p50.into(), p99.into(), qps.into()));
     }
     std::fs::remove_file(&model_path).ok();
 
-    // Rewrite the tracked snapshot at the repo root (schema above).
-    let snapshot = Json::obj(vec![
-        ("bench", "serve_qps".into()),
-        ("m", m.into()),
-        ("groups", n_groups.into()),
-        ("dim", dim.into()),
-        ("requests", requests.len().into()),
-        ("batch", BATCH.into()),
-        ("topk_share", TOPK_SHARE.into()),
-        ("placeholder", false.into()),
-        ("modes", Json::Arr(modes)),
-    ]);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_qps.json");
-    std::fs::write(path, format!("{}\n", snapshot.to_string())).unwrap();
-    println!("snapshot written to {path}");
+    // Rewrite the tracked snapshot through the shared envelope.
+    common::write_snapshot("serve_qps", false, params(m, n_groups, dim, requests.len()), modes);
 }

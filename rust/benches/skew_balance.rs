@@ -10,8 +10,12 @@
 //! the serial grouped oracle (asserted here on the first eval); the
 //! table shows what the plan costs in wall-clock.
 //!
-//! Build with `--features pool-stats` to additionally print the
-//! executed/stolen task counters proving the stealing engages.
+//! The pool's executed/stolen task counters (always on since the
+//! telemetry layer — docs/OBSERVABILITY.md) are printed per plan, and
+//! on a multi-thread host the bench asserts the fine plan actually
+//! steals. The tracked snapshot `BENCH_skew_balance.json` is written
+//! through the shared envelope; `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1`
+//! emits the placeholder schema and exits.
 
 mod common;
 
@@ -32,10 +36,52 @@ fn avg_eval(oracle: &mut dyn RankingOracle, p: &[f64], y: &[f64], reps: usize) -
     t.elapsed().as_secs_f64() / reps as f64
 }
 
+/// Snapshot fixture parameters (key set is part of the schema gate).
+fn params(m: usize, groups: usize, threads: usize, reps: usize) -> Json {
+    Json::obj(vec![
+        ("m", m.into()),
+        ("groups", groups.into()),
+        ("threads", threads.into()),
+        ("reps", reps.into()),
+    ])
+}
+
+/// One snapshot metric row (null values in schema-only mode).
+#[allow(clippy::too_many_arguments)]
+fn metric_row(
+    serial_secs: Json,
+    coarse_secs: Json,
+    fine_secs: Json,
+    coarse_runs: Json,
+    fine_runs: Json,
+    coarse_stolen: Json,
+    fine_stolen: Json,
+) -> Json {
+    Json::obj(vec![
+        ("serial_secs", serial_secs),
+        ("coarse_secs", coarse_secs),
+        ("fine_secs", fine_secs),
+        ("coarse_runs", coarse_runs),
+        ("fine_runs", fine_runs),
+        ("coarse_stolen", coarse_stolen),
+        ("fine_stolen", fine_stolen),
+    ])
+}
+
 fn main() {
     let threads = ranksvm::util::resolve_threads(0);
     let (m, reps) = if full_scale() { (400_000, 5) } else { (60_000, 5) };
     let n_groups = m / 8;
+    if common::schema_only() {
+        let n = || Json::Null;
+        common::write_snapshot(
+            "skew_balance",
+            true,
+            params(m, n_groups, threads, reps),
+            vec![metric_row(n(), n(), n(), n(), n(), n(), n())],
+        );
+        return;
+    }
     let ds = synthetic::zipf_queries(m, n_groups, 10, 1.1, 42);
     let qid = ds.qid.as_ref().unwrap();
     let mut sizes = vec![0usize; n_groups];
@@ -70,16 +116,12 @@ fn main() {
 
     let t_serial = avg_eval(&mut serial, &p, &ds.y, reps);
 
-    #[cfg(feature = "pool-stats")]
     pool.reset_stats();
     let t_coarse = avg_eval(&mut coarse, &p, &ds.y, reps);
-    #[cfg(feature = "pool-stats")]
     let coarse_stats = pool.stats();
 
-    #[cfg(feature = "pool-stats")]
     pool.reset_stats();
     let t_fine = avg_eval(&mut fine, &p, &ds.y, reps);
-    #[cfg(feature = "pool-stats")]
     let fine_stats = pool.stats();
 
     println!(
@@ -102,20 +144,18 @@ fn main() {
         t_coarse / t_fine.max(1e-12)
     );
 
-    #[cfg(feature = "pool-stats")]
-    {
-        println!(
-            "pool-stats: coarse executed {} stolen {}  |  fine executed {} stolen {}",
-            coarse_stats.executed, coarse_stats.stolen, fine_stats.executed, fine_stats.stolen
-        );
+    println!(
+        "pool stats: coarse executed {} stolen {}  |  fine executed {} stolen {}",
+        coarse_stats.executed, coarse_stats.stolen, fine_stats.executed, fine_stats.stolen
+    );
+    if threads > 1 {
         assert!(
             fine_stats.stolen > 0,
             "fine plan produced no steals on a Zipf fixture — scheduler asleep?"
         );
     }
 
-    #[cfg_attr(not(feature = "pool-stats"), allow(unused_mut))]
-    let mut rec = vec![
+    let rec = vec![
         ("bench", Json::Str("skew_balance".into())),
         ("m", m.into()),
         ("groups", n_groups.into()),
@@ -126,11 +166,23 @@ fn main() {
         ("fine_secs", t_fine.into()),
         ("coarse_runs", coarse_runs.into()),
         ("fine_runs", fine_runs.into()),
+        ("fine_stolen", (fine_stats.stolen as usize).into()),
+        ("coarse_stolen", (coarse_stats.stolen as usize).into()),
     ];
-    #[cfg(feature = "pool-stats")]
-    {
-        rec.push(("fine_stolen", (fine_stats.stolen as usize).into()));
-        rec.push(("coarse_stolen", (coarse_stats.stolen as usize).into()));
-    }
     record("skew_balance", Json::obj(rec));
+
+    common::write_snapshot(
+        "skew_balance",
+        false,
+        params(m, n_groups, threads, reps),
+        vec![metric_row(
+            t_serial.into(),
+            t_coarse.into(),
+            t_fine.into(),
+            coarse_runs.into(),
+            fine_runs.into(),
+            (coarse_stats.stolen as usize).into(),
+            (fine_stats.stolen as usize).into(),
+        )],
+    );
 }

@@ -83,6 +83,9 @@ pub struct IterStats {
     pub gap: f64,
     /// Empirical risk at the evaluated point.
     pub risk: f64,
+    /// Line-search probe evaluations this iteration (0 when the line
+    /// search is disabled or not yet engaged).
+    pub ls_steps: usize,
     /// Oracle wall-clock seconds for this iteration.
     pub oracle_secs: f64,
 }
@@ -105,6 +108,24 @@ pub struct BmrmResult {
 
 /// Run Algorithm 1 from `w0` (usually zeros).
 pub fn optimize<O: ScoreOracle>(oracle: &mut O, cfg: &BmrmConfig, w0: Vec<f64>) -> BmrmResult {
+    optimize_observed(oracle, cfg, w0, &mut |_, _| {})
+}
+
+/// [`optimize`] with a per-iteration observer, called after each
+/// [`IterStats`] is recorded with read access to the stats and the
+/// oracle (for e.g. phase-clock snapshots).
+///
+/// The observer is the trace hook for `train --trace`
+/// (docs/OBSERVABILITY.md): it runs *between* iterations, after all of
+/// the iteration's numerics, and nothing it does can feed back into the
+/// solver state — so a run with an observer is byte-identical to a run
+/// without one (pinned by `tests/obs.rs`).
+pub fn optimize_observed<O: ScoreOracle>(
+    oracle: &mut O,
+    cfg: &BmrmConfig,
+    w0: Vec<f64>,
+    observer: &mut dyn FnMut(&IterStats, &mut O),
+) -> BmrmResult {
     let n = oracle.dim();
     assert_eq!(w0.len(), n);
     let lambda = cfg.lambda;
@@ -136,10 +157,12 @@ pub fn optimize<O: ScoreOracle>(oracle: &mut O, cfg: &BmrmConfig, w0: Vec<f64>) 
         // segment [w_b, w_cur] instead of at w_cur (Franc–Sonnenburg
         // style). Scores are affine along the segment, so the probes cost
         // no extra matvecs.
+        let mut ls_steps = 0usize;
         let (w_eval, p_eval) = if cfg.line_search && p_b.is_some() {
             let pb = p_b.as_ref().unwrap();
             let beta = linesearch::golden_section(
                 |beta| {
+                    ls_steps += 1;
                     let p_mix: Vec<f64> =
                         pb.iter().zip(&p_cur).map(|(a, b)| a + beta * (b - a)).collect();
                     let risk = oracle.risk_value_at(&p_mix);
@@ -197,14 +220,17 @@ pub fn optimize<O: ScoreOracle>(oracle: &mut O, cfg: &BmrmConfig, w0: Vec<f64>) 
 
         // Gap (line 12): ε_t = J(w_b) − J_t(w_t).
         gap = j_best - lower;
-        trace.push(IterStats {
+        let stats = IterStats {
             iter: t,
             best_objective: j_best,
             lower_bound: lower,
             gap,
             risk,
+            ls_steps,
             oracle_secs,
-        });
+        };
+        observer(&stats, oracle);
+        trace.push(stats);
 
         if gap < cfg.epsilon {
             converged = true;
@@ -302,6 +328,34 @@ mod tests {
             let expect = ti / (1.0 + lambda);
             assert!((wi - expect).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn observer_sees_every_iteration_and_probe_counts() {
+        let cfg = BmrmConfig {
+            lambda: 0.25,
+            epsilon: 1e-8,
+            max_iter: 500,
+            line_search: true,
+            ..Default::default()
+        };
+        let mut oracle = QuadOracle { target: vec![2.0, -3.0] };
+        let mut seen = 0usize;
+        let mut probed = 0usize;
+        let res = optimize_observed(&mut oracle, &cfg, vec![0.0; 2], &mut |s, _| {
+            seen += 1;
+            probed += s.ls_steps;
+        });
+        assert_eq!(seen, res.iterations);
+        assert!(probed > 0, "line search never probed");
+        // Iteration 1 has no best-point scores yet → no probes.
+        assert_eq!(res.trace[0].ls_steps, 0);
+        // An observed run is bitwise identical to an unobserved one.
+        let mut oracle2 = QuadOracle { target: vec![2.0, -3.0] };
+        let res2 = optimize(&mut oracle2, &cfg, vec![0.0; 2]);
+        let bits = |w: &[f64]| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&res.w), bits(&res2.w));
+        assert_eq!(res.objective.to_bits(), res2.objective.to_bits());
     }
 
     #[test]

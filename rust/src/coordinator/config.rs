@@ -163,6 +163,11 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Emit per-iteration JSON lines to stderr.
     pub verbose: bool,
+    /// When set, write a structured JSONL run trace here — one event per
+    /// BMRM iteration (docs/OBSERVABILITY.md; CLI `train --trace`).
+    /// Tracing is inert: the trained model is byte-identical with or
+    /// without it (pinned by `tests/obs.rs`).
+    pub trace_path: Option<String>,
     /// Worker threads for the sharded oracle and the parallel native
     /// backend; `0` (the default) resolves to the host's available
     /// parallelism. Any value produces bit-identical training results —
@@ -187,6 +192,7 @@ impl Default for TrainConfig {
             line_search: false,
             artifacts_dir: "artifacts".to_string(),
             verbose: false,
+            trace_path: None,
             n_threads: 0,
             normalize: Normalize::None,
         }

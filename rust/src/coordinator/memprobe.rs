@@ -30,16 +30,15 @@ pub fn run_probe(
     let cfg = TrainConfig { method, lambda, max_iter, ..Default::default() };
     let out = train(&ds, &cfg)?;
     let peak = crate::util::peak_rss_kib().context("VmHWM unavailable")?;
-    println!(
-        "{}",
-        Json::obj(vec![
+    crate::obs::log::data(
+        &Json::obj(vec![
             ("dataset", dataset.into()),
             ("m", m.into()),
             ("method", method.name().into()),
             ("iterations", out.iterations.into()),
             ("peak_rss_kib", (peak as usize).into()),
         ])
-        .to_string()
+        .to_string(),
     );
     Ok(())
 }
@@ -62,9 +61,8 @@ pub fn run_probe_path(
     let cfg = TrainConfig { method, lambda, max_iter, ..Default::default() };
     let out = train(ds, &cfg)?;
     let peak = crate::util::peak_rss_kib().context("VmHWM unavailable")?;
-    println!(
-        "{}",
-        Json::obj(vec![
+    crate::obs::log::data(
+        &Json::obj(vec![
             ("dataset", ds.name().into()),
             ("format", if loaded.is_store() { "pstore" } else { "libsvm" }.into()),
             ("m", ds.len().into()),
@@ -72,7 +70,7 @@ pub fn run_probe_path(
             ("iterations", out.iterations.into()),
             ("peak_rss_kib", (peak as usize).into()),
         ])
-        .to_string()
+        .to_string(),
     );
     Ok(())
 }

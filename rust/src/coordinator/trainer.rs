@@ -10,6 +10,7 @@ use crate::data::{materialize, Dataset, DatasetView};
 use crate::losses::registry::{NewtonKind, OracleCtx};
 use crate::losses::{count_comparable_pairs, GroupIndex, RankingOracle, SquaredPairOracle};
 use crate::newton::{self, HessianOracle, NewtonConfig};
+use crate::obs::{self, trace::TraceSink};
 use crate::runtime::WorkerPool;
 use crate::util::json::Json;
 use anyhow::Result;
@@ -99,6 +100,12 @@ impl<'a> DatasetOracle<'a> {
     ) -> Self {
         backend.prepare(ds.x());
         DatasetOracle { ds, backend, inner, n_pairs }
+    }
+
+    /// Cumulative phase clocks of the wrapped loss oracle, if it keeps
+    /// any (read-only; feeds the `train --trace` phase split).
+    pub fn phase_times(&self) -> Option<&crate::util::timer::PhaseTimes> {
+        self.inner.phase_times()
     }
 }
 
@@ -319,6 +326,31 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             ..Default::default()
         };
         let res = newton::optimize(&mut oracle, &ncfg, vec![0.0; ds.dim()]);
+        // Newton-family runs have no BMRM iterations to trace; a
+        // requested trace still gets its start/end envelope
+        // (docs/OBSERVABILITY.md).
+        if let Some(path) = &cfg.trace_path {
+            let mut sink = TraceSink::create(path)?;
+            sink.event(&obs::trace::start_event(&obs::trace::StartInfo {
+                method: cfg.method.name(),
+                m: ds.len(),
+                dim: ds.dim(),
+                n_pairs: oracle.n_pairs,
+                lambda: cfg.lambda,
+                epsilon: cfg.epsilon,
+                max_iter: cfg.max_iter,
+                threads: cfg.resolved_threads(),
+            }))?;
+            sink.event(&obs::trace::end_event(&obs::trace::EndInfo {
+                iterations: res.iterations,
+                converged: res.converged,
+                objective: res.objective,
+                gap: res.trace.last().map(|t| t.2).unwrap_or(f64::INFINITY),
+                train_secs: timer.elapsed().as_secs_f64(),
+                oracle_secs: res.oracle_secs_total,
+            }))?;
+            sink.finish()?;
+        }
         TrainOutcome {
             model: RankModel::new(res.w),
             method: cfg.method.name(),
@@ -352,20 +384,88 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             line_search: cfg.line_search,
             ..Default::default()
         };
-        let res = bmrm::optimize(&mut oracle, &bcfg, vec![0.0; ds.dim()]);
+        // Structured run trace (`train --trace`): one JSONL event per
+        // BMRM iteration, written from the observer *between*
+        // iterations. The observer only reads solver state — a traced
+        // run trains the byte-identical model (tests/obs.rs).
+        let mut sink = match &cfg.trace_path {
+            Some(path) => Some(TraceSink::create(path)?),
+            None => None,
+        };
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&obs::trace::start_event(&obs::trace::StartInfo {
+                method: cfg.method.name(),
+                m: ds.len(),
+                dim: ds.dim(),
+                n_pairs,
+                lambda: cfg.lambda,
+                epsilon: cfg.epsilon,
+                max_iter: cfg.max_iter,
+                threads: cfg.resolved_threads(),
+            }))?;
+        }
+        let mut prev_phases: Vec<(String, f64)> = Vec::new();
+        let mut prev_tasks = obs::metrics::POOL_TASKS.get();
+        let mut prev_stolen = obs::metrics::POOL_STOLEN.get();
+        let mut trace_err: Option<anyhow::Error> = None;
+        let res = bmrm::optimize_observed(
+            &mut oracle,
+            &bcfg,
+            vec![0.0; ds.dim()],
+            &mut |s, o| {
+                let Some(sink) = sink.as_mut() else { return };
+                let phases = match o.phase_times() {
+                    Some(t) => obs::trace::phase_deltas(t, &mut prev_phases),
+                    None => Vec::new(),
+                };
+                let tasks = obs::metrics::POOL_TASKS.get();
+                let stolen = obs::metrics::POOL_STOLEN.get();
+                let ev = obs::trace::iter_event(&obs::trace::IterInfo {
+                    iter: s.iter,
+                    objective: s.best_objective,
+                    lower_bound: s.lower_bound,
+                    gap: s.gap,
+                    risk: s.risk,
+                    ls_steps: s.ls_steps,
+                    oracle_secs: s.oracle_secs,
+                    phases,
+                    pool_tasks_delta: tasks.saturating_sub(prev_tasks),
+                    pool_stolen_delta: stolen.saturating_sub(prev_stolen),
+                });
+                prev_tasks = tasks;
+                prev_stolen = stolen;
+                if let Err(e) = sink.event(&ev) {
+                    trace_err.get_or_insert(e);
+                }
+            },
+        );
+        if let Some(e) = trace_err {
+            return Err(e);
+        }
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&obs::trace::end_event(&obs::trace::EndInfo {
+                iterations: res.iterations,
+                converged: res.converged,
+                objective: res.objective,
+                gap: res.gap,
+                train_secs: timer.elapsed().as_secs_f64(),
+                oracle_secs: res.oracle_secs_total,
+            }))?;
+            sink.finish()?;
+        }
         if cfg.verbose {
             for s in &res.trace {
-                eprintln!(
-                    "{}",
-                    Json::obj(vec![
+                obs::log::info(
+                    &Json::obj(vec![
                         ("iter", s.iter.into()),
                         ("objective", s.best_objective.into()),
                         ("lower_bound", s.lower_bound.into()),
                         ("gap", s.gap.into()),
                         ("risk", s.risk.into()),
+                        ("ls_steps", s.ls_steps.into()),
                         ("oracle_secs", s.oracle_secs.into()),
                     ])
-                    .to_string()
+                    .to_string(),
                 );
             }
         }
@@ -385,20 +485,19 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
             norms,
         }
     };
-    // `pool-stats` builds: surface the scheduler's balance evidence
-    // (how many tasks ran, how many were stolen off a busy worker).
-    #[cfg(feature = "pool-stats")]
+    // Surface the scheduler's balance evidence (how many tasks ran, how
+    // many were stolen off a busy worker). Always compiled since the
+    // counters moved out of the `pool-stats` feature.
     if cfg.verbose {
         let s = pool.stats();
-        eprintln!(
-            "{}",
-            Json::obj(vec![
+        obs::log::info(
+            &Json::obj(vec![
                 ("pool_batches", (s.batches as usize).into()),
                 ("pool_tasks", (s.executed as usize).into()),
                 ("pool_stolen", (s.stolen as usize).into()),
                 ("pool_inline_tasks", (s.inline_tasks as usize).into()),
             ])
-            .to_string()
+            .to_string(),
         );
     }
     Ok(outcome)

@@ -408,6 +408,13 @@ pub fn convert_libsvm(
             std::fs::remove_file(val).ok();
         }
     }
+    if let Ok(stats) = &result {
+        // Global telemetry mirror (docs/OBSERVABILITY.md): cumulative
+        // across every conversion this process performed.
+        crate::obs::metrics::CONVERT_ROWS.add(stats.rows as u64);
+        crate::obs::metrics::CONVERT_BYTES.add(stats.out_bytes);
+        crate::obs::metrics::CONVERT_SHARDS.add(stats.shards as u64);
+    }
     result
 }
 

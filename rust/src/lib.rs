@@ -40,7 +40,12 @@
 //!   mode and training-set column norms (so raw inputs score
 //!   correctly), and the `ranksvm serve` daemon — batched scoring on
 //!   the shared worker pool, bounded-heap top-k, and atomic
-//!   zero-downtime model hot swap.
+//!   zero-downtime model hot swap;
+//! - [`obs`] — the unified telemetry layer (docs/OBSERVABILITY.md): the
+//!   process-wide metrics registry, the leveled log facade every
+//!   subcommand shares, structured `train --trace` run traces, and the
+//!   bench snapshot schema — all provably inert (training output is
+//!   byte-identical with telemetry on or off, pinned by `tests/obs.rs`).
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //!
@@ -63,6 +68,7 @@ pub mod linalg;
 pub mod losses;
 pub mod metrics;
 pub mod newton;
+pub mod obs;
 pub mod rbtree;
 pub mod runtime;
 pub mod serve;

@@ -77,6 +77,14 @@ pub trait RankingOracle {
 
     /// Human-readable name used in logs and bench reports.
     fn name(&self) -> &'static str;
+
+    /// Cumulative per-phase clocks, if this oracle keeps any (the tree
+    /// oracle times its sort/sweep phases — the paper's per-phase cost
+    /// split). Read-only telemetry for `train --trace`
+    /// (docs/OBSERVABILITY.md); `None` for losses without phase clocks.
+    fn phase_times(&self) -> Option<&crate::util::timer::PhaseTimes> {
+        None
+    }
 }
 
 impl RankingOracle for Box<dyn RankingOracle> {
@@ -85,6 +93,9 @@ impl RankingOracle for Box<dyn RankingOracle> {
     }
     fn name(&self) -> &'static str {
         (**self).name()
+    }
+    fn phase_times(&self) -> Option<&crate::util::timer::PhaseTimes> {
+        (**self).phase_times()
     }
 }
 

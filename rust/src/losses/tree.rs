@@ -181,6 +181,10 @@ impl<T: RankCounter> RankingOracle for GenericTreeOracle<T> {
     fn name(&self) -> &'static str {
         "tree"
     }
+
+    fn phase_times(&self) -> Option<&PhaseTimes> {
+        Some(&self.phases)
+    }
 }
 
 #[cfg(test)]

@@ -16,10 +16,16 @@
 //! - `stats`      — pretty-print a store's cached per-column statistics
 //! - `mem-probe`  — child process used by the Fig.-3 memory benchmark
 //! - `info`       — dataset statistics (m, n, s, r, N)
+//! - `report`     — render a `train --trace` JSONL run trace as a table
 //!
 //! `--data` accepts either format everywhere: pallas stores are
 //! autodetected by magic bytes and memory-mapped (no parse), anything
 //! else is parsed as libsvm text. Run with no args for usage.
+//!
+//! Every subcommand accepts `--verbose` / `--quiet`, resolved once here
+//! into the process-wide [`ranksvm::obs::log`] level (verbose wins when
+//! both are given); protocol output (scores, JSON records, serve
+//! responses) is unaffected by either flag.
 //!
 //! Errors (including malformed flag values) print one `error:` line and
 //! exit with code 2 — no panics, no backtraces.
@@ -47,6 +53,10 @@ USAGE:
                     [--normalize none|l2-col]  (l2-col divides each column by its
                       l2 norm, consuming store-cached stats when available)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
+                    [--trace OUT.jsonl]  (structured per-iteration run trace,
+                      one JSON line per BMRM iteration — inert: the trained
+                      model is byte-identical with or without it;
+                      docs/OBSERVABILITY.md)
   ranksvm eval      --model MODEL --data F [--k K]
                     (pairwise_error + auc + precision_at_k JSON; metrics
                       are per-query means when the data carries qids;
@@ -59,8 +69,8 @@ USAGE:
   ranksvm serve     --model MODEL [--data F] [--threads T] [--listen ADDR]
                     [--no-verify]
                     (newline protocol on stdio, or TCP with --listen;
-                      requests: score/rows/topk/batch/info/ping/reload/
-                      swap/quit — see docs/MODEL_FORMAT.md and README)
+                      requests: score/rows/topk/batch/metrics/info/ping/
+                      reload/swap/quit — see docs/MODEL_FORMAT.md and README)
   ranksvm gen-data  --synthetic K --m M --out F [--seed S]
   ranksvm convert   --data F.libsvm --out F.pstore [--chunk-kib N] [--threads T]
                     (parallel parse; output bytes identical for every T)
@@ -70,6 +80,12 @@ USAGE:
   ranksvm mem-probe (--dataset K | --data F) --m M --method NAME [--lambda L] [--max-iter I]
   ranksvm perf      [--sizes N,N,..] [--reps R] [--synthetic K]
                     [--method tree|tree-fenwick|sharded|par-sort] [--threads T]
+  ranksvm report    --trace RUN.jsonl
+                    (human summary table of a `train --trace` run)
+
+  Every subcommand accepts --verbose / --quiet (log level of diagnostic
+  stderr output; verbose wins when both are given). Protocol output —
+  scores, JSON records, serve responses — is never affected.
 
   --data F: libsvm text or a pallas store (.pstore, autodetected by magic
   bytes and memory-mapped zero-copy). --no-verify skips the store
@@ -146,6 +162,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         line_search: args.flag("line-search"),
         artifacts_dir: args.str_or("artifacts", "artifacts"),
         verbose: args.flag("verbose"),
+        trace_path: args.get("trace").map(str::to_string),
         n_threads: args.usize_or("threads", 0)?,
         normalize: Normalize::parse(&args.str_or("normalize", "none"))
             .context("bad --normalize (none|l2-col)")?,
@@ -198,7 +215,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         // Versioned binary format (docs/MODEL_FORMAT.md): weights plus
         // the recorded normalization, checksummed, published atomically.
         scoring.save(path)?;
-        eprintln!("model saved to {path}");
+        ranksvm::obs::log::info(&format!("model saved to {path}"));
     }
     Ok(())
 }
@@ -311,7 +328,11 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     let out = args.get("out").context("need --out")?;
     let ds = loaded.view();
     libsvm::write(ds, out)?;
-    eprintln!("wrote {} examples ({} features) to {out}", ds.len(), ds.dim());
+    ranksvm::obs::log::info(&format!(
+        "wrote {} examples ({} features) to {out}",
+        ds.len(),
+        ds.dim()
+    ));
     Ok(())
 }
 
@@ -382,7 +403,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
         .to_string()
     );
     let Some(stats) = stats else {
-        eprintln!("{path}: no cached column statistics in this store");
+        ranksvm::obs::log::info(&format!("{path}: no cached column statistics in this store"));
         return Ok(());
     };
     let limit = args.usize_or("limit", 20)?;
@@ -405,7 +426,10 @@ fn cmd_stats(args: &Args) -> Result<()> {
         );
     }
     if shown < stats.len() {
-        eprintln!("... {} more columns (--limit 0 prints all)", stats.len() - shown);
+        ranksvm::obs::log::info(&format!(
+            "... {} more columns (--limit 0 prints all)",
+            stats.len() - shown
+        ));
     }
     Ok(())
 }
@@ -565,6 +589,19 @@ fn cmd_perf(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ranksvm report` — render a `train --trace` JSONL run trace as a
+/// fixed-width human summary (header, one row per iteration, footer).
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(1).cloned())
+        .context("need a trace: ranksvm report --trace RUN.jsonl")?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    print!("{}", ranksvm::obs::trace::render_report(&text)?);
+    Ok(())
+}
+
 fn cmd_mem_probe(args: &Args) -> Result<()> {
     let method = parse_loss(args)?;
     let lambda = args.f64_or("lambda", 1e-4)?;
@@ -581,6 +618,12 @@ fn cmd_mem_probe(args: &Args) -> Result<()> {
 
 fn run() -> Result<()> {
     let args = Args::from_env();
+    // One --verbose/--quiet story for every subcommand: resolve the
+    // flags into the process-wide log level before dispatch.
+    ranksvm::obs::log::set_level(ranksvm::obs::log::level_from_flags(
+        args.flag("quiet"),
+        args.flag("verbose"),
+    ));
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
@@ -593,6 +636,7 @@ fn run() -> Result<()> {
         Some("mem-probe") => cmd_mem_probe(&args),
         Some("losses") => cmd_losses(),
         Some("perf") => cmd_perf(&args),
+        Some("report") => cmd_report(&args),
         _ => usage(),
     }
 }

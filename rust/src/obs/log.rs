@@ -1,0 +1,95 @@
+//! Leveled logging facade shared by every subcommand
+//! (docs/OBSERVABILITY.md "Log levels").
+//!
+//! Library code must not call `eprintln!`/`println!` directly (a CI grep
+//! enforces this outside `obs/` and `main.rs`); diagnostics go through
+//! [`info`]/[`debug`] so `--quiet` and `--verbose` mean the same thing
+//! for `train`, `convert`, `serve`, and `predict`. Machine-readable
+//! protocol output (the mem-probe JSON lines, the serve TCP readiness
+//! line) goes through [`data`], the one sanctioned stdout door.
+//!
+//! The level is process-global, set once in `main` before dispatch;
+//! everything here is a relaxed atomic read, so logging can never
+//! perturb scheduling or numerics (the inertness contract).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity: `Quiet` (`--quiet`) < `Info` (default) < `Debug`
+/// (`--verbose`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Quiet = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-global level (called once by `main` from
+/// `--quiet`/`--verbose` before dispatching the subcommand).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Resolve the level implied by the shared CLI flags (`--verbose` wins
+/// over `--quiet` when both are given, matching the usage text).
+pub fn level_from_flags(quiet: bool, verbose: bool) -> Level {
+    if verbose {
+        Level::Debug
+    } else if quiet {
+        Level::Quiet
+    } else {
+        Level::Info
+    }
+}
+
+pub fn info_enabled() -> bool {
+    level() >= Level::Info
+}
+
+pub fn debug_enabled() -> bool {
+    level() >= Level::Debug
+}
+
+/// Progress note → stderr, suppressed by `--quiet`.
+pub fn info(msg: &str) {
+    if info_enabled() {
+        eprintln!("{msg}");
+    }
+}
+
+/// Diagnostic detail → stderr, shown only under `--verbose`.
+pub fn debug(msg: &str) {
+    if debug_enabled() {
+        eprintln!("{msg}");
+    }
+}
+
+/// Data-plane line → stdout, unconditionally (protocol output a caller
+/// or pipeline consumes; never subject to the log level).
+pub fn data(line: &str) {
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_resolution_orders_levels() {
+        assert_eq!(level_from_flags(false, false), Level::Info);
+        assert_eq!(level_from_flags(true, false), Level::Quiet);
+        assert_eq!(level_from_flags(false, true), Level::Debug);
+        assert_eq!(level_from_flags(true, true), Level::Debug);
+        assert!(Level::Quiet < Level::Info && Level::Info < Level::Debug);
+    }
+}

@@ -1,0 +1,383 @@
+//! Process-wide metrics registry (docs/OBSERVABILITY.md "Metric
+//! registry").
+//!
+//! All primitives are lock-free and const-constructible so they can live
+//! in statics and be bumped from worker threads with `Relaxed` atomics.
+//! Observing a metric never branches on its value — the registry is
+//! write-mostly bookkeeping whose only reader is the exposition path
+//! ([`render_prometheus`]) and the `info` counter snapshot.
+//!
+//! Histogram buckets are **fixed at compile time** and documented
+//! normatively in docs/OBSERVABILITY.md (pinned by `tests/docs_spec.rs`);
+//! bucket assignment is a binary search over the upper-bound table,
+//! cross-checked against a brute-force linear scan in `tests/obs.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter. `Relaxed` everywhere: per-metric totals are exact
+/// (atomic RMW) but cross-metric snapshots are only loosely consistent,
+/// which is all exposition needs.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-write-wins gauge (e.g. the currently served model version).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Upper bound on `bounds.len()` for any [`Histogram`] (one slot per
+/// finite bound plus the `+Inf` overflow slot).
+pub const MAX_HISTOGRAM_BOUNDS: usize = 23;
+
+/// Fixed-bucket histogram over `u64` observations.
+///
+/// `bounds` are *inclusive* upper bounds in ascending order; an
+/// observation `v` lands in the first bucket with `v <= bound`, or the
+/// overflow (`+Inf`) bucket past the last bound. Bucket counts and the
+/// running sum are independent relaxed atomics, so a concurrent render
+/// sees a loosely consistent snapshot (counts never decrease).
+pub struct Histogram {
+    bounds: &'static [u64],
+    buckets: [AtomicU64; MAX_HISTOGRAM_BOUNDS + 1],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// `bounds` must be non-empty, strictly ascending, and at most
+    /// [`MAX_HISTOGRAM_BOUNDS`] long (checked at compile time for the
+    /// registry statics — `new` is const and panics in const eval).
+    pub const fn new(bounds: &'static [u64]) -> Self {
+        assert!(!bounds.is_empty() && bounds.len() <= MAX_HISTOGRAM_BOUNDS);
+        let mut i = 1;
+        while i < bounds.len() {
+            assert!(bounds[i - 1] < bounds[i], "histogram bounds must ascend");
+            i += 1;
+        }
+        Histogram {
+            bounds,
+            buckets: [const { AtomicU64::new(0) }; MAX_HISTOGRAM_BOUNDS + 1],
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket receiving `v`: binary search for the first
+    /// bound `>= v` (`partition_point` on `bound < v`), overflow slot if
+    /// none. `tests/obs.rs` checks this against a linear scan.
+    #[inline]
+    pub fn bucket_index(&self, v: u64) -> usize {
+        self.bounds.partition_point(|&b| b < v)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[self.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts (`bounds.len() + 1` entries; last is overflow).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        (0..=self.bounds.len()).map(|i| self.buckets[i].load(Ordering::Relaxed)).collect()
+    }
+
+    /// Total observations (sum of bucket counts — one consistent read
+    /// set, so cumulative `le` lines in the render never regress).
+    pub fn count(&self) -> u64 {
+        self.bucket_counts().iter().sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+}
+
+/// Request-latency bucket upper bounds, **microseconds**
+/// (docs/OBSERVABILITY.md "Histogram buckets").
+pub static LATENCY_BUCKETS_US: &[u64] =
+    &[50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000];
+
+/// Batch-size bucket upper bounds, **requests per batch** (powers of
+/// four up to the protocol cap `MAX_BATCH = 65536`).
+pub static BATCH_SIZE_BUCKETS: &[u64] = &[1, 4, 16, 64, 256, 1_024, 4_096, 16_384, 65_536];
+
+// ----------------------------------------------------------------- pool
+/// Tasks executed by pool workers (always-on successor of the old
+/// `pool-stats` feature counters; mirrors `WorkerPool::stats`).
+pub static POOL_TASKS: Counter = Counter::new();
+/// Tasks that ran on a worker other than the one they were seeded to.
+pub static POOL_STOLEN: Counter = Counter::new();
+/// Batches submitted to any pool (`run_batch` calls).
+pub static POOL_BATCHES: Counter = Counter::new();
+/// Tasks run inline on the caller (pool bypassed: 1 thread or tiny batch).
+pub static POOL_INLINE_TASKS: Counter = Counter::new();
+
+// ------------------------------------------------------------ converter
+/// Rows written by the store converter.
+pub static CONVERT_ROWS: Counter = Counter::new();
+/// Bytes of pstore output written by the converter.
+pub static CONVERT_BYTES: Counter = Counter::new();
+/// Shards encoded by the converter.
+pub static CONVERT_SHARDS: Counter = Counter::new();
+
+// ---------------------------------------------------------------- serve
+/// Requests answered by the serve engine (one per protocol line).
+pub static SERVE_REQUESTS: Counter = Counter::new();
+/// Batches executed by the serve engine.
+pub static SERVE_BATCHES: Counter = Counter::new();
+/// Completed hot swaps / reloads.
+pub static SERVE_SWAPS: Counter = Counter::new();
+/// Requests answered with a structured error line.
+pub static SERVE_ERRORS: Counter = Counter::new();
+/// Version stamp of the currently served model epoch.
+pub static SERVE_MODEL_VERSION: Gauge = Gauge::new();
+/// Wall-clock latency of each served request, microseconds.
+pub static SERVE_REQUEST_LATENCY_US: Histogram = Histogram::new(LATENCY_BUCKETS_US);
+/// Requests per executed batch.
+pub static SERVE_BATCH_SIZE: Histogram = Histogram::new(BATCH_SIZE_BUCKETS);
+
+/// What a registry entry points at.
+pub enum Kind {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+impl Kind {
+    /// Prometheus `# TYPE` word for this metric.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Kind::Counter(_) => "counter",
+            Kind::Gauge(_) => "gauge",
+            Kind::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One exported metric: wire name, unit, help text, storage.
+pub struct MetricDef {
+    pub name: &'static str,
+    pub unit: &'static str,
+    pub help: &'static str,
+    pub kind: Kind,
+}
+
+/// Every exported metric, in exposition order. The table in
+/// docs/OBSERVABILITY.md mirrors this slice row-by-row (pinned by
+/// `tests/docs_spec.rs`).
+pub static REGISTRY: &[MetricDef] = &[
+    MetricDef {
+        name: "ranksvm_pool_tasks_total",
+        unit: "tasks",
+        help: "tasks executed by worker-pool threads",
+        kind: Kind::Counter(&POOL_TASKS),
+    },
+    MetricDef {
+        name: "ranksvm_pool_stolen_total",
+        unit: "tasks",
+        help: "pool tasks that ran on a non-owner worker (work stealing)",
+        kind: Kind::Counter(&POOL_STOLEN),
+    },
+    MetricDef {
+        name: "ranksvm_pool_batches_total",
+        unit: "batches",
+        help: "task batches submitted to any worker pool",
+        kind: Kind::Counter(&POOL_BATCHES),
+    },
+    MetricDef {
+        name: "ranksvm_pool_inline_tasks_total",
+        unit: "tasks",
+        help: "tasks run inline on the caller (pool bypassed)",
+        kind: Kind::Counter(&POOL_INLINE_TASKS),
+    },
+    MetricDef {
+        name: "ranksvm_convert_rows_total",
+        unit: "rows",
+        help: "rows written by the pstore converter",
+        kind: Kind::Counter(&CONVERT_ROWS),
+    },
+    MetricDef {
+        name: "ranksvm_convert_bytes_total",
+        unit: "bytes",
+        help: "pstore output bytes written by the converter",
+        kind: Kind::Counter(&CONVERT_BYTES),
+    },
+    MetricDef {
+        name: "ranksvm_convert_shards_total",
+        unit: "shards",
+        help: "shards encoded by the converter",
+        kind: Kind::Counter(&CONVERT_SHARDS),
+    },
+    MetricDef {
+        name: "ranksvm_serve_requests_total",
+        unit: "requests",
+        help: "requests answered by the serve engine",
+        kind: Kind::Counter(&SERVE_REQUESTS),
+    },
+    MetricDef {
+        name: "ranksvm_serve_batches_total",
+        unit: "batches",
+        help: "batches executed by the serve engine",
+        kind: Kind::Counter(&SERVE_BATCHES),
+    },
+    MetricDef {
+        name: "ranksvm_serve_swaps_total",
+        unit: "swaps",
+        help: "completed model hot swaps / reloads",
+        kind: Kind::Counter(&SERVE_SWAPS),
+    },
+    MetricDef {
+        name: "ranksvm_serve_errors_total",
+        unit: "errors",
+        help: "requests answered with a structured error",
+        kind: Kind::Counter(&SERVE_ERRORS),
+    },
+    MetricDef {
+        name: "ranksvm_serve_model_version",
+        unit: "version",
+        help: "version stamp of the served model epoch",
+        kind: Kind::Gauge(&SERVE_MODEL_VERSION),
+    },
+    MetricDef {
+        name: "ranksvm_serve_request_latency_us",
+        unit: "us",
+        help: "wall-clock latency per served request",
+        kind: Kind::Histogram(&SERVE_REQUEST_LATENCY_US),
+    },
+    MetricDef {
+        name: "ranksvm_serve_batch_size",
+        unit: "requests",
+        help: "requests per executed serve batch",
+        kind: Kind::Histogram(&SERVE_BATCH_SIZE),
+    },
+];
+
+/// Render the whole registry as Prometheus-style text. Deterministic in
+/// structure (registry order, fixed `le` labels); terminated by a
+/// `# EOF` line so the serve newline protocol can frame the one
+/// multi-line response it ever sends.
+pub fn render_prometheus() -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for m in REGISTRY {
+        let _ = writeln!(out, "# HELP {} {}", m.name, m.help);
+        let _ = writeln!(out, "# TYPE {} {}", m.name, m.kind.type_name());
+        match &m.kind {
+            Kind::Counter(c) => {
+                let _ = writeln!(out, "{} {}", m.name, c.get());
+            }
+            Kind::Gauge(g) => {
+                let _ = writeln!(out, "{} {}", m.name, g.get());
+            }
+            Kind::Histogram(h) => {
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (i, b) in h.bounds().iter().enumerate() {
+                    cum += counts[i];
+                    let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", m.name, b, cum);
+                }
+                cum += counts[h.bounds().len()];
+                let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", m.name, cum);
+                let _ = writeln!(out, "{}_sum {}", m.name, h.sum());
+                let _ = writeln!(out, "{}_count {}", m.name, cum);
+            }
+        }
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_buckets_edges() {
+        let h = Histogram::new(&[10, 20, 40]);
+        for v in [0, 10, 11, 20, 40, 41, u64::MAX] {
+            h.observe(v);
+        }
+        // 0,10 → le=10; 11,20 → le=20; 40 → le=40; 41,MAX → +Inf.
+        assert_eq!(h.bucket_counts(), vec![2, 2, 1, 2]);
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn render_is_framed_and_names_every_metric() {
+        let text = render_prometheus();
+        assert!(text.ends_with("# EOF\n"));
+        for m in REGISTRY {
+            let ty = format!("# TYPE {} {}", m.name, m.kind.type_name());
+            assert!(text.contains(&ty), "{}", m.name);
+        }
+        // Histogram renders cumulative buckets with a +Inf terminator
+        // and _sum/_count lines.
+        assert!(text.contains("ranksvm_serve_request_latency_us_bucket{le=\"50\"}"));
+        assert!(text.contains("ranksvm_serve_request_latency_us_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("ranksvm_serve_request_latency_us_sum"));
+        assert!(text.contains("ranksvm_serve_request_latency_us_count"));
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_prefixed() {
+        let mut names: Vec<_> = REGISTRY.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), REGISTRY.len());
+        for m in REGISTRY {
+            assert!(m.name.starts_with("ranksvm_"), "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Unified telemetry layer: metrics registry, leveled logging, and
+//! structured run traces (docs/OBSERVABILITY.md).
+//!
+//! Everything in this module is **provably inert**: instrumentation may
+//! read clocks and bump relaxed atomics, but it must never feed a value
+//! back into numeric control flow. Training with tracing on produces a
+//! byte-identical model to training with tracing off (pinned by
+//! `tests/obs.rs`), and the metrics registry is append-only bookkeeping
+//! that no solver or scheduler decision ever reads. The contract is
+//! spelled out normatively in docs/OBSERVABILITY.md and referenced from
+//! the docs/DETERMINISM.md new-code checklist.
+//!
+//! Four sub-facilities:
+//!
+//! * [`metrics`] — process-wide registry of monotonic counters, gauges,
+//!   and fixed-bucket histograms, rendered as Prometheus-style text by
+//!   the serve daemon's `metrics` verb.
+//! * [`log`] — a leveled stderr facade (`--quiet` / default / `--verbose`)
+//!   shared by every subcommand, plus the one sanctioned stdout door for
+//!   data-plane protocol lines outside `main.rs`.
+//! * [`trace`] — the `train --trace out.jsonl` run-trace sink (one JSONL
+//!   event per BMRM iteration) and the `ranksvm report` renderer.
+//! * [`snapshot`] — the shared `BENCH_*.json` metrics-snapshot schema
+//!   emitted by every bench binary and gated in CI.
+
+pub mod log;
+pub mod metrics;
+pub mod snapshot;
+pub mod trace;

@@ -1,0 +1,70 @@
+//! Shared `BENCH_*.json` metrics-snapshot schema
+//! (docs/OBSERVABILITY.md "Bench snapshots").
+//!
+//! Every bench binary (`serve_qps`, `skew_balance`,
+//! `fig1_iteration_cost`, `convert_throughput`) emits its committed
+//! snapshot through [`bench_snapshot`], so the perf trajectory
+//! accumulates records with one comparable shape:
+//!
+//! ```json
+//! {"schema":"ranksvm-bench-snapshot","schema_version":1,
+//!  "bench":"serve_qps","placeholder":false,
+//!  "params":{...fixture parameters...},
+//!  "metrics":[{...one object per measured mode...}]}
+//! ```
+//!
+//! `placeholder: true` marks a schema-only snapshot (no measurements —
+//! all metric values `null`); CI runs each bench with
+//! `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` and fails when the emitted key sets
+//! drift from the committed `BENCH_*.json`.
+
+use crate::util::json::Json;
+
+/// Value of the `schema` discriminator field.
+pub const SNAPSHOT_SCHEMA: &str = "ranksvm-bench-snapshot";
+
+/// Bumped whenever the envelope (not a bench's own metric keys) changes.
+pub const SNAPSHOT_SCHEMA_VERSION: i64 = 1;
+
+/// Envelope field names, in emission order.
+pub static SNAPSHOT_FIELDS: &[&str] =
+    &["schema", "schema_version", "bench", "placeholder", "params", "metrics"];
+
+/// Wrap a bench's parameters and per-mode metric rows in the shared
+/// snapshot envelope. `params` must be an object, `metrics` an array of
+/// objects with identical key sets (one row per measured mode).
+pub fn bench_snapshot(bench: &str, placeholder: bool, params: Json, metrics: Vec<Json>) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), SNAPSHOT_SCHEMA.into()),
+        ("schema_version".into(), Json::Int(SNAPSHOT_SCHEMA_VERSION)),
+        ("bench".into(), bench.into()),
+        ("placeholder".into(), placeholder.into()),
+        ("params".into(), params),
+        ("metrics".into(), Json::Arr(metrics)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_matches_the_normative_field_list() {
+        let snap = bench_snapshot(
+            "serve_qps",
+            true,
+            Json::Obj(vec![("m".into(), 100usize.into())]),
+            vec![Json::Obj(vec![("qps".into(), Json::Null)])],
+        );
+        match &snap {
+            Json::Obj(kv) => {
+                let keys: Vec<&str> = kv.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(keys, SNAPSHOT_FIELDS);
+            }
+            other => panic!("expected object, got {other}"),
+        }
+        let text = snap.to_string();
+        assert!(text.contains("\"schema\":\"ranksvm-bench-snapshot\""), "{text}");
+        assert!(text.contains("\"schema_version\":1"), "{text}");
+    }
+}

@@ -1,0 +1,379 @@
+//! Structured run traces: `train --trace out.jsonl` and the
+//! `ranksvm report` renderer (docs/OBSERVABILITY.md "Trace events").
+//!
+//! A trace is JSONL — one object per line, `event` discriminated:
+//! exactly one `start` line, one `iter` line per BMRM iteration, one
+//! `end` line. The field lists are normative constants here so the
+//! docs table, the emitting trainer, and the schema-pinning tests all
+//! reference one definition.
+//!
+//! Inertness: the sink is written *between* solver iterations from an
+//! observer callback that reads — never writes — solver state. Timing
+//! fields (`oracle_secs`, `phases`, pool deltas) are nondeterministic
+//! wall-clock measurements; every numeric the solver computes
+//! (`objective`, `gap`, …) is byte-identical with tracing on or off
+//! (pinned by `tests/obs.rs`).
+
+use crate::util::json::Json;
+use crate::util::timer::PhaseTimes;
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+
+/// Bumped whenever an event gains/loses/renames a field.
+pub const TRACE_SCHEMA_VERSION: i64 = 1;
+
+/// Fields of the `start` event, in emission order.
+pub static START_FIELDS: &[&str] = &[
+    "event",
+    "schema_version",
+    "method",
+    "m",
+    "dim",
+    "n_pairs",
+    "lambda",
+    "epsilon",
+    "max_iter",
+    "threads",
+];
+
+/// Fields of the per-iteration `iter` event, in emission order.
+pub static ITER_FIELDS: &[&str] = &[
+    "event",
+    "iter",
+    "objective",
+    "lower_bound",
+    "gap",
+    "risk",
+    "ls_steps",
+    "oracle_secs",
+    "phases",
+    "pool_tasks_delta",
+    "pool_stolen_delta",
+];
+
+/// Fields of the `end` event, in emission order.
+pub static END_FIELDS: &[&str] = &[
+    "event",
+    "iterations",
+    "converged",
+    "objective",
+    "gap",
+    "train_secs",
+    "oracle_secs",
+];
+
+/// Problem-shape parameters stamped on the `start` event.
+pub struct StartInfo<'a> {
+    pub method: &'a str,
+    pub m: usize,
+    pub dim: usize,
+    pub n_pairs: f64,
+    pub lambda: f64,
+    pub epsilon: f64,
+    pub max_iter: usize,
+    pub threads: usize,
+}
+
+/// Build the `start` event (keys exactly [`START_FIELDS`]).
+pub fn start_event(s: &StartInfo) -> Json {
+    Json::Obj(vec![
+        ("event".into(), "start".into()),
+        ("schema_version".into(), Json::Int(TRACE_SCHEMA_VERSION)),
+        ("method".into(), s.method.into()),
+        ("m".into(), s.m.into()),
+        ("dim".into(), s.dim.into()),
+        ("n_pairs".into(), s.n_pairs.into()),
+        ("lambda".into(), s.lambda.into()),
+        ("epsilon".into(), s.epsilon.into()),
+        ("max_iter".into(), s.max_iter.into()),
+        ("threads".into(), s.threads.into()),
+    ])
+}
+
+/// Per-iteration measurements for the `iter` event.
+pub struct IterInfo {
+    pub iter: usize,
+    pub objective: f64,
+    pub lower_bound: f64,
+    pub gap: f64,
+    pub risk: f64,
+    pub ls_steps: usize,
+    pub oracle_secs: f64,
+    /// Oracle phase split *for this iteration* (deltas of the oracle's
+    /// cumulative [`PhaseTimes`]), seconds. Empty when the loss keeps
+    /// no phase clocks.
+    pub phases: Vec<(String, f64)>,
+    pub pool_tasks_delta: u64,
+    pub pool_stolen_delta: u64,
+}
+
+/// Build the `iter` event (keys exactly [`ITER_FIELDS`]).
+pub fn iter_event(it: &IterInfo) -> Json {
+    let phases =
+        Json::Obj(it.phases.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+    Json::Obj(vec![
+        ("event".into(), "iter".into()),
+        ("iter".into(), it.iter.into()),
+        ("objective".into(), it.objective.into()),
+        ("lower_bound".into(), it.lower_bound.into()),
+        ("gap".into(), it.gap.into()),
+        ("risk".into(), it.risk.into()),
+        ("ls_steps".into(), it.ls_steps.into()),
+        ("oracle_secs".into(), it.oracle_secs.into()),
+        ("phases".into(), phases),
+        ("pool_tasks_delta".into(), Json::Int(it.pool_tasks_delta as i64)),
+        ("pool_stolen_delta".into(), Json::Int(it.pool_stolen_delta as i64)),
+    ])
+}
+
+/// Final-outcome measurements for the `end` event.
+pub struct EndInfo {
+    pub iterations: usize,
+    pub converged: bool,
+    pub objective: f64,
+    pub gap: f64,
+    pub train_secs: f64,
+    pub oracle_secs: f64,
+}
+
+/// Build the `end` event (keys exactly [`END_FIELDS`]).
+pub fn end_event(e: &EndInfo) -> Json {
+    Json::Obj(vec![
+        ("event".into(), "end".into()),
+        ("iterations".into(), e.iterations.into()),
+        ("converged".into(), e.converged.into()),
+        ("objective".into(), e.objective.into()),
+        ("gap".into(), e.gap.into()),
+        ("train_secs".into(), e.train_secs.into()),
+        ("oracle_secs".into(), e.oracle_secs.into()),
+    ])
+}
+
+/// Compute the per-iteration phase split: current cumulative
+/// [`PhaseTimes`] minus the previously seen totals (which are updated
+/// in place). Phase order follows the oracle's registration order.
+pub fn phase_deltas(times: &PhaseTimes, prev: &mut Vec<(String, f64)>) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, d) in times.entries() {
+        let secs = d.as_secs_f64();
+        let before = prev
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .map(|e| std::mem::replace(&mut e.1, secs))
+            .unwrap_or_else(|| {
+                prev.push((name.clone(), secs));
+                0.0
+            });
+        out.push((name.clone(), secs - before));
+    }
+    out
+}
+
+/// Append-only JSONL sink for one training run.
+pub struct TraceSink {
+    out: BufWriter<std::fs::File>,
+}
+
+impl TraceSink {
+    pub fn create(path: &str) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink { out: BufWriter::new(f) })
+    }
+
+    /// Write one event as a single JSONL line.
+    pub fn event(&mut self, ev: &Json) -> Result<()> {
+        writeln!(self.out, "{}", ev).context("writing trace event")?;
+        Ok(())
+    }
+
+    pub fn finish(&mut self) -> Result<()> {
+        self.out.flush().context("flushing trace file")?;
+        Ok(())
+    }
+}
+
+/// Render a JSONL trace into the human summary table printed by
+/// `ranksvm report`.
+pub fn render_report(trace_text: &str) -> Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let mut n_iters = 0usize;
+    for (lineno, line) in trace_text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line).with_context(|| format!("trace line {}", lineno + 1))?;
+        match ev.get("event").and_then(Json::as_str) {
+            Some("start") => {
+                let _ = writeln!(
+                    out,
+                    "trace: method={} m={} dim={} n_pairs={} lambda={} epsilon={} threads={}",
+                    ev.get("method").and_then(Json::as_str).unwrap_or("?"),
+                    fmt_num(&ev, "m"),
+                    fmt_num(&ev, "dim"),
+                    fmt_num(&ev, "n_pairs"),
+                    fmt_num(&ev, "lambda"),
+                    fmt_num(&ev, "epsilon"),
+                    fmt_num(&ev, "threads"),
+                );
+                let _ = writeln!(
+                    out,
+                    "{:>4}  {:>14}  {:>11}  {:>11}  {:>3}  {:>9}  {:>7}",
+                    "iter", "objective", "gap", "risk", "ls", "oracle_s", "stolen"
+                );
+            }
+            Some("iter") => {
+                n_iters += 1;
+                let f = |k: &str| ev.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let _ = writeln!(
+                    out,
+                    "{:>4}  {:>14.6e}  {:>11.3e}  {:>11.3e}  {:>3}  {:>9.4}  {:>7}",
+                    ev.get("iter").and_then(Json::as_i64).unwrap_or(-1),
+                    f("objective"),
+                    f("gap"),
+                    f("risk"),
+                    ev.get("ls_steps").and_then(Json::as_i64).unwrap_or(0),
+                    f("oracle_secs"),
+                    ev.get("pool_stolen_delta").and_then(Json::as_i64).unwrap_or(0),
+                );
+            }
+            Some("end") => {
+                let f = |k: &str| ev.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let _ = writeln!(
+                    out,
+                    "done: {} iterations, converged={}, objective={:.6e}, gap={:.3e}",
+                    fmt_num(&ev, "iterations"),
+                    ev.get("converged").and_then(Json::as_bool).unwrap_or(false),
+                    f("objective"),
+                    f("gap"),
+                );
+                let _ = writeln!(
+                    out,
+                    "time: {:.4}s total, {:.4}s in the oracle",
+                    f("train_secs"),
+                    f("oracle_secs"),
+                );
+            }
+            other => {
+                anyhow::bail!("trace line {}: unknown event {:?}", lineno + 1, other)
+            }
+        }
+    }
+    if n_iters == 0 {
+        anyhow::bail!("trace has no iter events — is this a --trace output file?");
+    }
+    Ok(out)
+}
+
+fn fmt_num(ev: &Json, key: &str) -> String {
+    match ev.get(key) {
+        Some(Json::Int(i)) => i.to_string(),
+        Some(Json::Num(n)) => format!("{n}"),
+        _ => "?".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(j: &Json) -> Vec<String> {
+        match j {
+            Json::Obj(kv) => kv.iter().map(|(k, _)| k.clone()).collect(),
+            other => panic!("expected object, got {other}"),
+        }
+    }
+
+    #[test]
+    fn event_builders_match_the_normative_field_lists() {
+        let start = start_event(&StartInfo {
+            method: "tree",
+            m: 10,
+            dim: 4,
+            n_pairs: 45.0,
+            lambda: 0.1,
+            epsilon: 0.01,
+            max_iter: 5,
+            threads: 2,
+        });
+        assert_eq!(keys(&start), START_FIELDS);
+        let iter = iter_event(&IterInfo {
+            iter: 1,
+            objective: 1.0,
+            lower_bound: 0.5,
+            gap: 0.5,
+            risk: 0.9,
+            ls_steps: 12,
+            oracle_secs: 0.001,
+            phases: vec![("sort".into(), 0.0005)],
+            pool_tasks_delta: 3,
+            pool_stolen_delta: 1,
+        });
+        assert_eq!(keys(&iter), ITER_FIELDS);
+        let end = end_event(&EndInfo {
+            iterations: 1,
+            converged: true,
+            objective: 1.0,
+            gap: 0.001,
+            train_secs: 0.1,
+            oracle_secs: 0.05,
+        });
+        assert_eq!(keys(&end), END_FIELDS);
+    }
+
+    #[test]
+    fn phase_deltas_subtract_previous_totals() {
+        let mut times = PhaseTimes::default();
+        times.add("sort", std::time::Duration::from_millis(10));
+        let mut prev = Vec::new();
+        let d1 = phase_deltas(&times, &mut prev);
+        assert_eq!(d1.len(), 1);
+        assert!((d1[0].1 - 0.010).abs() < 1e-9);
+        times.add("sort", std::time::Duration::from_millis(5));
+        let d2 = phase_deltas(&times, &mut prev);
+        assert!((d2[0].1 - 0.005).abs() < 1e-9, "delta {}", d2[0].1);
+    }
+
+    #[test]
+    fn report_renders_header_rows_and_footer() {
+        let start = start_event(&StartInfo {
+            method: "tree",
+            m: 10,
+            dim: 4,
+            n_pairs: 45.0,
+            lambda: 0.1,
+            epsilon: 0.01,
+            max_iter: 5,
+            threads: 2,
+        });
+        let iter = iter_event(&IterInfo {
+            iter: 1,
+            objective: 2.5,
+            lower_bound: 1.0,
+            gap: 1.5,
+            risk: 2.0,
+            ls_steps: 0,
+            oracle_secs: 0.001,
+            phases: vec![],
+            pool_tasks_delta: 0,
+            pool_stolen_delta: 0,
+        });
+        let end = end_event(&EndInfo {
+            iterations: 1,
+            converged: true,
+            objective: 2.5,
+            gap: 0.0,
+            train_secs: 0.1,
+            oracle_secs: 0.05,
+        });
+        let text = format!("{start}\n{iter}\n{end}\n");
+        let report = render_report(&text).unwrap();
+        assert!(report.contains("method=tree"), "{report}");
+        assert!(report.contains("converged=true"), "{report}");
+        assert!(report.contains("objective"), "{report}");
+        // Garbage input errors out instead of panicking.
+        assert!(render_report("{\"event\":\"bogus\"}").is_err());
+        assert!(render_report("").is_err());
+    }
+}

@@ -45,11 +45,15 @@
 //! free of synchronization; empty and singleton batches always take the
 //! inline path.
 //!
-//! Per-batch executed/stolen counters live behind the `pool-stats` cargo
-//! feature (see `PoolStats`): the skew benchmark uses them to show the
-//! stealing actually engages on imbalanced plans, while default builds
-//! pay nothing for them.
+//! Per-batch executed/stolen counters are always on (see [`PoolStats`]):
+//! relaxed atomics on the coarse task path cost nothing measurable, the
+//! skew benchmark uses them to show the stealing actually engages on
+//! imbalanced plans, and every increment is mirrored into the global
+//! [`crate::obs::metrics`] registry so the serve daemon's `metrics` verb
+//! and `train --trace` pool deltas see them too. The `pool-stats` cargo
+//! feature remains as a deprecated no-op alias.
 
+use crate::obs::metrics as obs_metrics;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -63,11 +67,11 @@ pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
 
 type StaticTask = Box<dyn FnOnce() + Send + 'static>;
 
-/// Cumulative scheduler counters (`pool-stats` builds only). `executed`
-/// counts tasks that went through the scheduler (inline fast-path tasks
-/// are tallied separately), `stolen` the subset a worker took from
-/// another worker's deque — the balance evidence the skew bench prints.
-#[cfg(feature = "pool-stats")]
+/// Cumulative scheduler counters (always on since the telemetry layer
+/// landed; formerly behind the `pool-stats` feature). `executed` counts
+/// tasks that went through the scheduler (inline fast-path tasks are
+/// tallied separately), `stolen` the subset a worker took from another
+/// worker's deque — the balance evidence the skew bench prints.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Batches dispatched through the deques (inline batches excluded).
@@ -80,7 +84,6 @@ pub struct PoolStats {
     pub inline_tasks: u64,
 }
 
-#[cfg(feature = "pool-stats")]
 #[derive(Default)]
 struct StatCounters {
     batches: std::sync::atomic::AtomicU64,
@@ -115,21 +118,19 @@ struct PoolShared {
     /// threads queue up here instead of interleaving their tasks (and
     /// their panic accounting) in the deques.
     batch: Mutex<()>,
-    #[cfg(feature = "pool-stats")]
     stats: StatCounters,
 }
 
 impl PoolShared {
     /// Execute one task, keeping the completion accounting correct even
-    /// when the task panics. `stolen` feeds the `pool-stats` counters.
+    /// when the task panics. `stolen` feeds the scheduler counters
+    /// (per-pool and the global obs registry mirror).
     fn run_task(&self, task: StaticTask, stolen: bool) {
-        let _ = stolen;
-        #[cfg(feature = "pool-stats")]
-        {
-            self.stats.executed.fetch_add(1, Ordering::Relaxed);
-            if stolen {
-                self.stats.stolen.fetch_add(1, Ordering::Relaxed);
-            }
+        self.stats.executed.fetch_add(1, Ordering::Relaxed);
+        obs_metrics::POOL_TASKS.inc();
+        if stolen {
+            self.stats.stolen.fetch_add(1, Ordering::Relaxed);
+            obs_metrics::POOL_STOLEN.inc();
         }
         let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
         if !ok {
@@ -233,7 +234,6 @@ impl WorkerPool {
             pending: AtomicUsize::new(0),
             panicked: AtomicUsize::new(0),
             batch: Mutex::new(()),
-            #[cfg(feature = "pool-stats")]
             stats: StatCounters::default(),
         });
         let handles = (1..n_threads)
@@ -254,7 +254,6 @@ impl WorkerPool {
     }
 
     /// Snapshot of the cumulative scheduler counters.
-    #[cfg(feature = "pool-stats")]
     pub fn stats(&self) -> PoolStats {
         let s = &self.shared.stats;
         PoolStats {
@@ -265,8 +264,9 @@ impl WorkerPool {
         }
     }
 
-    /// Reset the cumulative counters (e.g. between bench phases).
-    #[cfg(feature = "pool-stats")]
+    /// Reset the cumulative per-pool counters (e.g. between bench
+    /// phases). The global obs registry mirror is monotonic and is
+    /// deliberately *not* reset.
     pub fn reset_stats(&self) {
         let s = &self.shared.stats;
         s.batches.store(0, Ordering::Relaxed);
@@ -296,11 +296,8 @@ impl WorkerPool {
         // Inline path: single worker, or a single task — nothing to
         // schedule. (Panics propagate directly, same net effect.)
         if self.handles.is_empty() || tasks.len() == 1 {
-            #[cfg(feature = "pool-stats")]
-            self.shared
-                .stats
-                .inline_tasks
-                .fetch_add(tasks.len() as u64, Ordering::Relaxed);
+            self.shared.stats.inline_tasks.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+            obs_metrics::POOL_INLINE_TASKS.add(tasks.len() as u64);
             for task in tasks {
                 task();
             }
@@ -338,8 +335,8 @@ impl WorkerPool {
         // worker finishing a stale sweep may pop a freshly dealt task
         // the instant it lands in a deque.
         self.shared.pending.store(n_tasks, Ordering::SeqCst);
-        #[cfg(feature = "pool-stats")]
         self.shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        obs_metrics::POOL_BATCHES.inc();
 
         // Deal contiguous blocks: worker w owns tasks
         // [w·T/N, (w+1)·T/N) — neighbouring tasks usually touch
@@ -592,7 +589,6 @@ mod tests {
         drop(pool); // must not hang
     }
 
-    #[cfg(feature = "pool-stats")]
     #[test]
     fn stats_count_batches_and_engage_stealing_on_skew() {
         use std::sync::atomic::AtomicBool;

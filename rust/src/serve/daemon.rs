@@ -17,6 +17,7 @@
 
 use super::engine::Engine;
 use super::protocol::{self, Line, Request};
+use crate::obs;
 use anyhow::{Context, Result};
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -31,13 +32,15 @@ fn as_batch_slot(line: Line) -> Request {
     }
 }
 
-/// The engine's `info` response: one `ok` line of `key=value` pairs.
+/// The engine's `info` response: one `ok` line of `key=value` pairs
+/// (the key set is normative — docs/OBSERVABILITY.md).
 fn info_line(engine: &Engine) -> String {
     let epoch = engine.current();
     let (batches, requests, swaps) = engine.counters();
     let dim_or = |v: Option<usize>| v.map_or_else(|| "-".into(), |n| n.to_string());
     format!(
-        "ok v={} dim={} normalize={} rows={} groups={} threads={} batches={} requests={} swaps={}",
+        "ok v={} dim={} normalize={} rows={} groups={} threads={} batches={} requests={} \
+         swaps={} errors={} uptime_s={}",
         epoch.version,
         epoch.model.dim(),
         epoch.model.normalize_name(),
@@ -46,7 +49,9 @@ fn info_line(engine: &Engine) -> String {
         engine.n_threads(),
         batches,
         requests,
-        swaps
+        swaps,
+        engine.errors_count(),
+        engine.uptime_secs()
     )
 }
 
@@ -72,6 +77,11 @@ pub fn handle_connection<R: BufRead, W: Write>(
             }
             Line::Info => {
                 writeln!(out, "{}", info_line(engine))?;
+            }
+            Line::Metrics => {
+                // The protocol's one multi-line response; the trailing
+                // `# EOF` line is the client's frame terminator.
+                out.write_all(obs::metrics::render_prometheus().as_bytes())?;
             }
             Line::Reload => match engine.force_reload() {
                 Ok(()) => {
@@ -127,7 +137,7 @@ pub fn serve_stdio(engine: &Engine) -> Result<()> {
 pub fn serve_tcp(engine: Arc<Engine>, addr: &str) -> Result<()> {
     let listener =
         std::net::TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    println!("serve listening {}", listener.local_addr()?);
+    obs::log::data(&format!("serve listening {}", listener.local_addr()?));
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let engine = Arc::clone(&engine);

@@ -36,12 +36,14 @@ use super::protocol::{Payload, Request, Response, Selector};
 use super::scoring::{score_row, ScoringModel};
 use crate::data::{DatasetView, LoadedDataset};
 use crate::losses::GroupIndex;
+use crate::obs::metrics as obs_metrics;
 use crate::runtime::{Task, WorkerPool};
 use anyhow::{bail, Context, Result};
 use std::cmp::Ordering;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 /// One immutable generation of the live model. Batches hold an `Arc`
 /// to the epoch they scored against; the version number is what
@@ -93,6 +95,10 @@ pub struct Engine {
     batches: AtomicU64,
     requests: AtomicU64,
     swaps: AtomicU64,
+    /// Requests answered with an `err` body (structured failures, not
+    /// protocol-level drops). Mirrored into `ranksvm_serve_errors_total`.
+    errors: AtomicU64,
+    started: Instant,
 }
 
 impl Engine {
@@ -113,6 +119,7 @@ impl Engine {
             v.group_index()
                 .or_else(|| v.qid().map(|q| Arc::new(GroupIndex::build(q, v.y()))))
         });
+        obs_metrics::SERVE_MODEL_VERSION.set(1);
         Ok(Engine {
             model_path,
             verify,
@@ -124,6 +131,8 @@ impl Engine {
             batches: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            started: Instant::now(),
         })
     }
 
@@ -155,6 +164,16 @@ impl Engine {
         (self.batches.load(Relaxed), self.requests.load(Relaxed), self.swaps.load(Relaxed))
     }
 
+    /// Requests that produced a structured `err` response.
+    pub fn errors_count(&self) -> u64 {
+        self.errors.load(Relaxed)
+    }
+
+    /// Whole seconds since this engine was constructed.
+    pub fn uptime_secs(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
     /// Batch-boundary publish check: reload if the model file identity
     /// changed. Best-effort — on a failed load the old epoch keeps
     /// serving and the bad fingerprint is remembered.
@@ -182,9 +201,12 @@ impl Engine {
         *src = fp;
         let model = ScoringModel::load_auto_with(&self.model_path, self.verify)?;
         let mut slot = self.slot.write().expect("model slot poisoned");
-        *slot = Arc::new(ModelEpoch { version: slot.version + 1, model });
+        let version = slot.version + 1;
+        *slot = Arc::new(ModelEpoch { version, model });
         drop(slot);
         self.swaps.fetch_add(1, Relaxed);
+        obs_metrics::SERVE_SWAPS.inc();
+        obs_metrics::SERVE_MODEL_VERSION.set(version);
         Ok(())
     }
 
@@ -214,6 +236,9 @@ impl Engine {
         let epoch = self.current();
         self.batches.fetch_add(1, Relaxed);
         self.requests.fetch_add(reqs.len() as u64, Relaxed);
+        obs_metrics::SERVE_BATCHES.inc();
+        obs_metrics::SERVE_REQUESTS.add(reqs.len() as u64);
+        obs_metrics::SERVE_BATCH_SIZE.observe(reqs.len() as u64);
         let mut replies: Vec<Option<std::result::Result<Payload, String>>> = Vec::new();
         replies.resize_with(reqs.len(), || None);
         {
@@ -224,19 +249,30 @@ impl Engine {
                 .iter()
                 .zip(replies.iter_mut())
                 .map(|(req, out)| {
-                    Box::new(move || *out = Some(handle_one(model, data, gindex, req)))
-                        as Task<'_>
+                    Box::new(move || {
+                        let t0 = Instant::now();
+                        let body = handle_one(model, data, gindex, req);
+                        let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                        obs_metrics::SERVE_REQUEST_LATENCY_US.observe(us);
+                        *out = Some(body);
+                    }) as Task<'_>
                 })
                 .collect();
             self.pool.run(tasks);
         }
-        replies
+        let responses: Vec<Response> = replies
             .into_iter()
             .map(|body| Response {
                 version: epoch.version,
                 body: body.expect("pool runs every task to completion"),
             })
-            .collect()
+            .collect();
+        let n_err = responses.iter().filter(|r| r.body.is_err()).count() as u64;
+        if n_err > 0 {
+            self.errors.fetch_add(n_err, Relaxed);
+            obs_metrics::SERVE_ERRORS.add(n_err);
+        }
+        responses
     }
 }
 

@@ -20,6 +20,7 @@
 //! topk <k> group <g>                  best k within query group g
 //! topk <k> rows <i> [<i> …]           best k among the listed rows
 //! batch <n>                           the next n lines are one batch
+//! metrics                             Prometheus-style registry dump
 //! info | ping | reload | swap <path> | quit
 //! ```
 //!
@@ -30,6 +31,11 @@
 //! ok v=<version> <row>:<score> [[…]]        topk (best first)
 //! err <message>                             structured failure (one line)
 //! ```
+//!
+//! `metrics` is the one deliberate exception to one-line responses: it
+//! answers with the multi-line Prometheus-style text of the whole
+//! metrics registry, terminated by a `# EOF` line so clients can frame
+//! it (docs/OBSERVABILITY.md).
 //!
 //! Parsing never fails and never panics: a malformed line becomes
 //! [`Request::Invalid`], which the engine answers with an `err` line in
@@ -93,6 +99,8 @@ pub enum Line {
     Quit,
     Ping,
     Info,
+    /// Dump the metrics registry (multi-line, `# EOF`-terminated).
+    Metrics,
     Reload,
     Swap(PathBuf),
     /// The next `n` lines form one batch (scored against a single
@@ -114,6 +122,7 @@ pub fn parse(line: &str) -> Line {
         "quit" => Line::Quit,
         "ping" => Line::Ping,
         "info" => Line::Info,
+        "metrics" => Line::Metrics,
         "reload" => Line::Reload,
         "swap" => {
             if rest.is_empty() {
@@ -141,7 +150,8 @@ pub fn parse(line: &str) -> Line {
         },
         "" => invalid("empty request".into()),
         other => invalid(format!(
-            "unknown verb {other:?} (expected score/rows/topk/batch/info/ping/reload/swap/quit)"
+            "unknown verb {other:?} (expected \
+             score/rows/topk/batch/metrics/info/ping/reload/swap/quit)"
         )),
     }
 }
@@ -292,6 +302,7 @@ mod tests {
         assert_eq!(parse("quit"), Line::Quit);
         assert_eq!(parse("ping"), Line::Ping);
         assert_eq!(parse("info"), Line::Info);
+        assert_eq!(parse("metrics"), Line::Metrics);
         assert_eq!(parse("reload"), Line::Reload);
         assert_eq!(parse("swap /tmp/next.rsm"), Line::Swap(PathBuf::from("/tmp/next.rsm")));
         assert_eq!(parse("batch 16"), Line::Batch(16));

@@ -1,9 +1,13 @@
-//! Minimal JSON emission for metric logs and bench reports.
+//! Minimal JSON emission and parsing for metric logs, run traces, and
+//! bench reports.
 //!
 //! The offline crate set ships no `serde`/`serde_json`; benches and the
-//! trainer emit machine-readable records through this tiny writer instead.
-//! Only what we need: objects, arrays, strings, numbers, bools.
+//! trainer emit machine-readable records through this tiny writer
+//! instead, and `ranksvm report` reads trace JSONL back through
+//! [`Json::parse`]. Only what we need: objects, arrays, strings,
+//! numbers, bools.
 
+use anyhow::{ensure, Result};
 use std::fmt::Write as _;
 
 /// A JSON value builder producing compact single-line output.
@@ -29,11 +33,60 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
+    /// Parse a JSON document (recursive descent over the full grammar
+    /// this writer emits, plus whitespace and `\u` escapes).
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as f64 (`Int` widens losslessly for our ranges).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -93,6 +146,208 @@ impl Json {
     }
 }
 
+/// Compact single-line serialization (also powers
+/// `Json::to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+/// Byte-cursor recursive-descent parser.
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        ensure!(self.peek() == Some(c), "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json> {
+        ensure!(self.b[self.i..].starts_with(lit.as_bytes()), "bad literal at byte {}", self.i);
+        self.i += lit.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        let mut float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' | b'-' | b'+' => self.i += 1,
+                b'.' | b'e' | b'E' => {
+                    float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number");
+        if !float {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        let x: f64 = text.parse().map_err(|e| anyhow::anyhow!("bad number {text:?}: {e}"))?;
+        Ok(Json::Num(x))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = match self.peek() {
+                Some(c) => c,
+                None => anyhow::bail!("unterminated string at byte {}", self.i),
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek();
+                    self.i += 1;
+                    match e {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Combine a UTF-16 surrogate pair if one
+                            // follows; lone surrogates are an error.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "bad low surrogate at byte {}",
+                                    self.i
+                                );
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(c)
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match ch {
+                                Some(ch) => out.push(ch),
+                                None => anyhow::bail!("bad \\u escape at byte {}", self.i),
+                            }
+                        }
+                        other => {
+                            let shown = other.map(|c| c as char);
+                            anyhow::bail!("bad escape {:?} at byte {}", shown, self.i)
+                        }
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: re-decode from the byte before.
+                    let rest = std::str::from_utf8(&self.b[self.i - 1..])
+                        .map_err(|_| anyhow::anyhow!("bad utf-8 at byte {}", self.i - 1))?;
+                    let ch = rest.chars().next().expect("non-empty");
+                    out.push(ch);
+                    self.i += ch.len_utf8() - 1;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape at byte {}", self.i);
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {}", self.i))?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {}", self.i))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())
@@ -145,5 +400,49 @@ mod tests {
     fn nested_arrays() {
         let j = Json::Arr(vec![Json::nums(&[1.0, 2.5]), Json::Null]);
         assert_eq!(j.to_string(), "[[1,2.5],null]");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj(vec![
+            ("method", "tree".into()),
+            ("m", 1000usize.into()),
+            ("loss", 0.25f64.into()),
+            ("ok", true.into()),
+            ("none", Json::Null),
+            ("xs", Json::nums(&[1.0, -2.5e-3])),
+            ("nested", Json::obj(vec![("s", "a\"b\\c\nd".into())])),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text);
+        assert_eq!(back.get("method").and_then(Json::as_str), Some("tree"));
+        assert_eq!(back.get("m").and_then(Json::as_i64), Some(1000));
+        assert_eq!(back.get("loss").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(back.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(back.get("xs").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        let s = back.get("nested").and_then(|n| n.get("s")).and_then(Json::as_str);
+        assert_eq!(s, Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_escapes() {
+        let j = Json::parse(" { \"a\" : [ 1 , 2.5 , \"\\u00e9\\u2603\" ] } ").unwrap();
+        let xs = j.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(xs[0].as_i64(), Some(1));
+        assert_eq!(xs[2].as_str(), Some("é☃"));
+        // Surrogate pair (🦀 U+1F980).
+        let crab = Json::parse("\"\\ud83e\\udd80\"").unwrap();
+        assert_eq!(crab.as_str(), Some("🦀"));
+        // Raw multi-byte UTF-8 passes through.
+        let raw = Json::parse("\"héllo\"").unwrap();
+        assert_eq!(raw.as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "tru", "1 2", "\"\\q\"", "\"\\ud800\"", "nan"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
     }
 }

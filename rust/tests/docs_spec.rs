@@ -1,12 +1,13 @@
 //! Normative docs ↔ code consistency.
 //!
-//! docs/STORE_FORMAT.md and docs/LOSSES.md are normative, so they must
-//! not drift from the code. This suite parses their markdown tables
-//! (header fields, COLSTATS layout, flag registry, the loss registry
-//! table) and verifies every claimed offset, size, constant, and
-//! registry row against the real encoder and the real
-//! [`ranksvm::losses::registry::SPECS`] — by probing, not by trusting
-//! a second copy of the numbers.
+//! docs/STORE_FORMAT.md, docs/LOSSES.md, and docs/OBSERVABILITY.md are
+//! normative, so they must not drift from the code. This suite parses
+//! their markdown tables (header fields, COLSTATS layout, flag
+//! registry, the loss registry table, the metrics registry, the trace
+//! event schemas, the bench snapshot envelope) and verifies every
+//! claimed offset, size, constant, and registry row against the real
+//! encoder and the real registries — by probing, not by trusting a
+//! second copy of the numbers.
 
 use ranksvm::data::store::{
     ColStat, Header, CHECKSUM_FIELD, COLSTAT_BYTES, FLAG_HAS_COLSTATS, FLAG_HAS_QID,
@@ -264,5 +265,113 @@ fn flag_registry_matches_the_constants() {
         masks.values().fold(0u64, |a, &m| a | m),
         KNOWN_FLAGS,
         "the registry must list exactly the known flag bits"
+    );
+}
+
+// ------------------------------------------------- docs/OBSERVABILITY.md
+
+fn obs_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/OBSERVABILITY.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {path}: {e} — the normative spec must exist"))
+}
+
+/// Backticked first-cell tokens of the table rows under the heading
+/// containing `heading` (header/separator rows have no backticks and
+/// drop out).
+fn field_rows(doc: &str, heading: &str) -> Vec<String> {
+    let mut in_section = false;
+    let mut fields = Vec::new();
+    for line in doc.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains(heading);
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 4 {
+            continue;
+        }
+        if let Some(name) = backticked(cells[1]) {
+            fields.push(name);
+        }
+    }
+    fields
+}
+
+#[test]
+fn observability_metrics_table_matches_the_registry() {
+    use ranksvm::obs::metrics::REGISTRY;
+    let doc = obs_text();
+    // Parse `| `name` | type | unit | help |` rows under the
+    // "Metrics registry" heading.
+    let mut in_section = false;
+    let mut rows: Vec<(String, String, String, String)> = Vec::new();
+    for line in doc.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains("Metrics registry");
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 6 {
+            continue;
+        }
+        let Some(name) = backticked(cells[1]) else { continue }; // header/separator rows
+        rows.push((name, cells[2].to_string(), cells[3].to_string(), cells[4].to_string()));
+    }
+
+    assert_eq!(
+        rows.len(),
+        REGISTRY.len(),
+        "the docs table must list every registered metric exactly once: {rows:?}"
+    );
+    // Same order as the registry — the table *is* the registry, rendered.
+    for ((name, kind, unit, help), def) in rows.iter().zip(REGISTRY) {
+        assert_eq!(name, def.name, "row order must match registry order");
+        assert_eq!(kind, def.kind.type_name(), "type of {}", def.name);
+        assert_eq!(unit, def.unit, "unit of {}", def.name);
+        assert_eq!(help, def.help, "help of {}", def.name);
+    }
+}
+
+#[test]
+fn observability_histogram_bounds_match_the_constants() {
+    use ranksvm::obs::metrics::{BATCH_SIZE_BUCKETS, LATENCY_BUCKETS_US};
+    let doc = obs_text();
+    let fmt = |bounds: &[u64]| {
+        let strs: Vec<String> = bounds.iter().map(|b| b.to_string()).collect();
+        format!("`{}`", strs.join(", "))
+    };
+    assert!(doc.contains(&fmt(LATENCY_BUCKETS_US)), "latency bucket bounds");
+    assert!(doc.contains(&fmt(BATCH_SIZE_BUCKETS)), "batch-size bucket bounds");
+}
+
+#[test]
+fn observability_trace_tables_match_the_field_lists() {
+    use ranksvm::obs::trace::{END_FIELDS, ITER_FIELDS, START_FIELDS, TRACE_SCHEMA_VERSION};
+    let doc = obs_text();
+    assert_eq!(field_rows(&doc, "`start` event"), START_FIELDS);
+    assert_eq!(field_rows(&doc, "`iter` event"), ITER_FIELDS);
+    assert_eq!(field_rows(&doc, "`end` event"), END_FIELDS);
+    assert!(
+        doc.contains(&format!("trace schema_version is {TRACE_SCHEMA_VERSION}")),
+        "trace schema version prose"
+    );
+}
+
+#[test]
+fn observability_snapshot_table_matches_the_envelope() {
+    use ranksvm::obs::snapshot::{SNAPSHOT_FIELDS, SNAPSHOT_SCHEMA, SNAPSHOT_SCHEMA_VERSION};
+    let doc = obs_text();
+    assert_eq!(field_rows(&doc, "Bench snapshots"), SNAPSHOT_FIELDS);
+    assert!(doc.contains(&format!("`\"{SNAPSHOT_SCHEMA}\"`")), "schema name");
+    assert!(
+        doc.contains(&format!("schema_version {SNAPSHOT_SCHEMA_VERSION}")),
+        "envelope schema version prose"
     );
 }

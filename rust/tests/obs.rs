@@ -1,0 +1,263 @@
+//! The telemetry battery: inertness, histogram math, trace schema,
+//! and serve exposition formats.
+//!
+//! The contracts pinned here (ISSUE 8):
+//!
+//! - **Inertness** — training with `--trace` produces a bit-identical
+//!   model, objective, and iteration count to training without it, at
+//!   1/2/8 threads, on both a global-order and a grouped fixture. The
+//!   observability layer may watch the solver; it may never steer it.
+//! - **Histogram math** — `bucket_index` (a `partition_point` over
+//!   inclusive upper bounds) agrees with a brute-force linear scan at
+//!   every bound, at the bounds' neighbours, and at the extremes, for
+//!   the real registered bucket layouts and a small synthetic one.
+//! - **Trace schema** — a traced run emits exactly one `start` line,
+//!   one `iter` line per BMRM iteration, and one `end` line, each with
+//!   exactly the normative key sets (`START_FIELDS` / `ITER_FIELDS` /
+//!   `END_FIELDS`, mirrored by docs/OBSERVABILITY.md), and
+//!   `ranksvm report` renders the file.
+//! - **Serve exposition** — `metrics` answers Prometheus-style text
+//!   covering every `REGISTRY` entry and framed by a final `# EOF`
+//!   line; `info` carries the extended `errors=`/`uptime_s=` keys.
+//!   Formats are pinned, not values: the registry is process-global
+//!   and tests in this binary run concurrently.
+
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::{synthetic, LoadedDataset};
+use ranksvm::obs::metrics::{Histogram, BATCH_SIZE_BUCKETS, LATENCY_BUCKETS_US, REGISTRY};
+use ranksvm::obs::trace::{END_FIELDS, ITER_FIELDS, START_FIELDS, TRACE_SCHEMA_VERSION};
+use ranksvm::serve::{handle_connection, Engine, ScoringModel};
+use ranksvm::util::json::Json;
+use std::io::Cursor;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ranksvm_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn cfg(threads: usize, trace: Option<PathBuf>) -> TrainConfig {
+    TrainConfig {
+        method: Method::Tree,
+        lambda: 0.1,
+        epsilon: 1e-3,
+        n_threads: threads,
+        trace_path: trace.map(|p| p.display().to_string()),
+        ..Default::default()
+    }
+}
+
+/// Key list of a JSON object, in emission order.
+fn keys(j: &Json) -> Vec<&str> {
+    match j {
+        Json::Obj(kvs) => kvs.iter().map(|(k, _)| k.as_str()).collect(),
+        other => panic!("expected object, got {other}"),
+    }
+}
+
+// ------------------------------------------------------------- inertness
+
+#[test]
+fn tracing_is_bitwise_inert_at_any_thread_count() {
+    let fixtures = [
+        ("global", synthetic::cadata_like(300, 88)),
+        ("grouped", synthetic::queries(12, 18, 5, 89)),
+    ];
+    for (tag, ds) in &fixtures {
+        for threads in [1usize, 2, 8] {
+            let base = train(ds, &cfg(threads, None)).unwrap();
+            let path = tmp(&format!("inert_{tag}_{threads}.jsonl"));
+            let traced = train(ds, &cfg(threads, Some(path.clone()))).unwrap();
+            assert_eq!(traced.model.w, base.model.w, "{tag}: {threads} threads");
+            assert_eq!(
+                traced.objective.to_bits(),
+                base.objective.to_bits(),
+                "{tag}: {threads} threads"
+            );
+            assert_eq!(traced.iterations, base.iterations, "{tag}: {threads} threads");
+            // The trace actually got written — inert, not absent.
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(text.lines().count() >= 3, "{tag}: trace too short");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+// -------------------------------------------------------- histogram math
+
+/// Reference implementation: with inclusive upper bounds, value `v`
+/// lands in the first bucket whose bound is `>= v` — equivalently, past
+/// every bound `< v`.
+fn brute_force_index(bounds: &[u64], v: u64) -> usize {
+    bounds.iter().filter(|&&b| b < v).count()
+}
+
+#[test]
+fn histogram_bucket_index_matches_brute_force() {
+    static SMALL_BOUNDS: &[u64] = &[10, 20, 40, 100];
+    static SMALL: Histogram = Histogram::new(SMALL_BOUNDS);
+    let layouts: [(&Histogram, &[u64]); 3] = [
+        (&SMALL, SMALL_BOUNDS),
+        (&ranksvm::obs::metrics::SERVE_REQUEST_LATENCY_US, LATENCY_BUCKETS_US),
+        (&ranksvm::obs::metrics::SERVE_BATCH_SIZE, BATCH_SIZE_BUCKETS),
+    ];
+    for (h, bounds) in layouts {
+        assert_eq!(h.bounds(), bounds);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let mut probes = vec![0u64, u64::MAX];
+        for &b in bounds {
+            probes.extend([b.saturating_sub(1), b, b + 1]);
+        }
+        for v in probes {
+            assert_eq!(
+                h.bucket_index(v),
+                brute_force_index(bounds, v),
+                "layout {bounds:?}, value {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn histogram_counts_and_sum_track_observations() {
+    // A dedicated static so concurrent tests can't touch these counts.
+    static BOUNDS: &[u64] = &[10, 20, 40, 100];
+    static H: Histogram = Histogram::new(BOUNDS);
+    let values = [0u64, 1, 9, 10, 11, 20, 39, 40, 41, 100, 101, 5_000];
+    let mut expect = vec![0u64; BOUNDS.len() + 1];
+    for &v in &values {
+        H.observe(v);
+        expect[brute_force_index(BOUNDS, v)] += 1;
+    }
+    assert_eq!(H.bucket_counts(), expect);
+    assert_eq!(H.count(), values.len() as u64);
+    assert_eq!(H.sum(), values.iter().sum::<u64>());
+}
+
+// ----------------------------------------------------------- trace schema
+
+#[test]
+fn trace_jsonl_matches_the_normative_schema() {
+    let ds = synthetic::queries(12, 18, 5, 89);
+    let path = tmp("schema.jsonl");
+    let c = TrainConfig { line_search: true, ..cfg(2, Some(path.clone())) };
+    let out = train(&ds, &c).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert!(lines.len() >= 3, "start + iters + end");
+
+    let start = &lines[0];
+    assert_eq!(start.get("event").and_then(Json::as_str), Some("start"));
+    assert_eq!(keys(start), START_FIELDS, "start keys");
+    assert_eq!(start.get("schema_version").and_then(Json::as_i64), Some(TRACE_SCHEMA_VERSION));
+    assert_eq!(start.get("method").and_then(Json::as_str), Some("tree"));
+    assert_eq!(start.get("m").and_then(Json::as_i64), Some(ds.len() as i64));
+    assert_eq!(start.get("threads").and_then(Json::as_i64), Some(2));
+
+    let end = lines.last().unwrap();
+    assert_eq!(end.get("event").and_then(Json::as_str), Some("end"));
+    assert_eq!(keys(end), END_FIELDS, "end keys");
+    assert_eq!(end.get("iterations").and_then(Json::as_i64), Some(out.iterations as i64));
+    assert_eq!(end.get("converged").and_then(Json::as_bool), Some(out.converged));
+
+    let iters = &lines[1..lines.len() - 1];
+    assert_eq!(iters.len(), out.iterations, "one iter event per BMRM iteration");
+    let mut probed = 0i64;
+    for (i, ev) in iters.iter().enumerate() {
+        assert_eq!(ev.get("event").and_then(Json::as_str), Some("iter"));
+        assert_eq!(keys(ev), ITER_FIELDS, "iter keys at index {i}");
+        assert_eq!(ev.get("iter").and_then(Json::as_i64), Some(i as i64 + 1));
+        let gap = ev.get("gap").and_then(Json::as_f64).unwrap();
+        assert!(gap.is_finite() && gap >= 0.0, "gap {gap}");
+        probed += ev.get("ls_steps").and_then(Json::as_i64).unwrap();
+    }
+    // Line search was on: later iterations probe cached best points.
+    assert!(probed > 0, "line search never probed");
+
+    // The report renderer accepts exactly what the trainer emitted.
+    let report = ranksvm::obs::trace::render_report(&text).unwrap();
+    assert!(report.ends_with('\n'));
+    assert!(report.contains("method=tree"), "{report}");
+    assert!(report.contains(&format!("done: {} iterations", out.iterations)), "{report}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------------ serve exposition
+
+#[test]
+fn serve_metrics_and_info_formats_are_pinned() {
+    let ds = synthetic::queries(6, 5, 8, 7);
+    let w: Vec<f64> = (0..8).map(|j| ((j as f64) + 0.5).sin() * 1.75).collect();
+    let path = tmp("metrics.rsm");
+    ScoringModel::new(w, None).unwrap().save(&path).unwrap();
+    let eng = Engine::new(&path, Some(LoadedDataset::Owned(ds)), 2, true).unwrap();
+
+    let mut raw = Vec::new();
+    handle_connection(
+        &eng,
+        Cursor::new(b"score 0:1\ninfo\nmetrics\nquit\n" as &[u8]),
+        &mut raw,
+    )
+    .unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+
+    assert!(lines[0].starts_with("ok v=1 "), "{}", lines[0]);
+    let info = lines[1];
+    for key in [
+        " dim=", " normalize=", " rows=", " groups=", " threads=", " batches=", " requests=",
+        " swaps=", " errors=", " uptime_s=",
+    ] {
+        assert!(info.contains(key), "info line missing `{key}`: {info}");
+    }
+
+    // Everything between the info line and `quit` is the one multi-line
+    // response the protocol ever sends, framed by its `# EOF` line.
+    let body = &lines[2..];
+    assert_eq!(*body.last().unwrap(), "# EOF", "metrics frame terminator");
+    let mtext = body.join("\n");
+    for def in REGISTRY {
+        assert!(mtext.contains(def.name), "metrics output missing {}", def.name);
+        assert!(
+            mtext.contains(&format!("# TYPE {} {}", def.name, def.kind.type_name())),
+            "missing TYPE line for {}",
+            def.name
+        );
+    }
+    assert!(mtext.contains("ranksvm_serve_request_latency_us_bucket{le=\"+Inf\"}"));
+    assert!(mtext.contains("ranksvm_serve_batch_size_sum"));
+    // `# EOF` appears exactly once — it is the frame terminator, so a
+    // second occurrence would desynchronise clients.
+    assert_eq!(mtext.matches("# EOF").count(), 1);
+}
+
+// ----------------------------------------------------- pool counter mirror
+
+#[test]
+fn pool_counters_are_always_on() {
+    use ranksvm::obs::metrics::{POOL_BATCHES, POOL_TASKS};
+    use ranksvm::runtime::{Task, WorkerPool};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let before_tasks = POOL_TASKS.get();
+    let before_batches = POOL_BATCHES.get();
+    let pool = WorkerPool::new(2);
+    let hits = AtomicU64::new(0);
+    let tasks: Vec<Task<'_>> = (0..16)
+        .map(|_| {
+            Box::new(|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }) as Task<'_>
+        })
+        .collect();
+    pool.run(tasks);
+    assert_eq!(hits.load(Ordering::Relaxed), 16);
+    let stats = pool.stats();
+    assert_eq!(stats.executed, 16, "per-pool counter");
+    assert_eq!(stats.batches, 1, "per-pool counter");
+    // The global mirror is monotonic and shared across concurrently
+    // running tests, so assert deltas as lower bounds only.
+    assert!(POOL_TASKS.get() >= before_tasks + 16, "global mirror");
+    assert!(POOL_BATCHES.get() >= before_batches + 1, "global mirror");
+}
