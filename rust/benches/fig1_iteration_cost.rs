@@ -21,6 +21,7 @@ use ranksvm::bmrm::ScoreOracle;
 use ranksvm::coordinator::trainer::DatasetOracle;
 use ranksvm::compute::NativeBackend;
 use ranksvm::data::{synthetic, Dataset, DatasetView};
+use ranksvm::linalg::simd::{self, Kernel};
 use ranksvm::losses::{
     count_comparable_pairs, PairOracle, RankingOracle, ShardedTreeOracle, TreeOracle,
 };
@@ -59,20 +60,33 @@ fn oracle_cost(ds: &dyn DatasetView, oracle: Box<dyn RankingOracle>, reps: usize
 }
 
 /// Snapshot fixture parameters (key set is part of the schema gate).
+/// `kernel` records the resolved dispatch the timed columns ran on
+/// (docs/OBSERVABILITY.md "Kernel dispatch").
 fn params(full: bool, pair_cap: usize, threads: usize) -> Json {
     Json::obj(vec![
         ("full", full.into()),
         ("pair_cap", pair_cap.into()),
         ("threads", threads.into()),
+        ("kernel", simd::active().name().into()),
     ])
 }
 
 /// One snapshot metric row (null values in schema-only mode).
-fn metric_row(panel: Json, m: Json, tree_secs: Json, sharded_secs: Json, pair_secs: Json) -> Json {
+/// `tree_scalar_secs` is the same tree-oracle measurement with the
+/// dispatch forced scalar — the per-size SIMD speedup differential.
+fn metric_row(
+    panel: Json,
+    m: Json,
+    tree_secs: Json,
+    tree_scalar_secs: Json,
+    sharded_secs: Json,
+    pair_secs: Json,
+) -> Json {
     Json::obj(vec![
         ("panel", panel),
         ("m", m),
         ("tree_secs", tree_secs),
+        ("tree_scalar_secs", tree_scalar_secs),
         ("sharded_secs", sharded_secs),
         ("pair_secs", pair_secs),
     ])
@@ -94,11 +108,13 @@ fn panel(
         "Fig 1 ({name}): avg subgradient-computation cost per iteration"
     ));
     println!(
-        "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "{:>9} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9} {:>9}",
         "m",
         "TreeRSVM",
+        "Tree(scalar)",
         format!("Sharded({threads})"),
         "PairRSVM",
+        "simd ×",
         "par ×",
         "pair ×"
     );
@@ -121,6 +137,13 @@ fn size_row(
 ) {
     let reps = if m <= 4000 { 5 } else { 2 };
     let tree = oracle_cost(ds, Box::new(TreeOracle::new()), reps);
+    // The same measurement with the dispatch pinned to the scalar
+    // reference: the "simd ×" column. The paths are bit-identical
+    // (docs/DETERMINISM.md "Kernel dispatch"), so this differs in
+    // wall-clock only.
+    simd::force(Some(Kernel::Scalar));
+    let tree_scalar = oracle_cost(ds, Box::new(TreeOracle::new()), reps);
+    simd::force(None);
     let sharded_oracle = ShardedTreeOracle::with_pool(Arc::clone(pool), None, ds.y());
     let sharded = oracle_cost(ds, Box::new(sharded_oracle), reps);
     let (pair, speedup) = if m <= pair_cap {
@@ -130,11 +153,13 @@ fn size_row(
         (None, f64::NAN)
     };
     println!(
-        "{:>9} {:>14} {:>14} {:>14} {:>9} {:>9}",
+        "{:>9} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9} {:>9}",
         m,
         fmt_secs(tree),
+        fmt_secs(tree_scalar),
         fmt_secs(sharded),
         pair.map(fmt_secs).unwrap_or_else(|| "(skipped)".into()),
+        format!("{:.2}×", tree_scalar / tree.max(1e-12)),
         format!("{:.2}×", tree / sharded.max(1e-12)),
         if speedup.is_nan() { "-".into() } else { format!("{speedup:.1}×") },
     );
@@ -144,8 +169,10 @@ fn size_row(
             ("panel", name.into()),
             ("m", m.into()),
             ("tree_secs", tree.into()),
+            ("tree_scalar_secs", tree_scalar.into()),
             ("sharded_secs", sharded.into()),
             ("threads", threads.into()),
+            ("kernel", simd::active().name().into()),
             ("pair_secs", pair.map(Json::Num).unwrap_or(Json::Null)),
         ]),
     );
@@ -153,6 +180,7 @@ fn size_row(
         name.into(),
         m.into(),
         tree.into(),
+        tree_scalar.into(),
         sharded.into(),
         pair.map(Json::Num).unwrap_or(Json::Null),
     ));
@@ -176,7 +204,7 @@ fn main() {
             "fig1_iteration_cost",
             true,
             params(full, pair_cap, host_threads()),
-            vec![metric_row(n(), n(), n(), n(), n())],
+            vec![metric_row(n(), n(), n(), n(), n(), n())],
         );
         return;
     }

@@ -37,12 +37,15 @@ fn avg_eval(oracle: &mut dyn RankingOracle, p: &[f64], y: &[f64], reps: usize) -
 }
 
 /// Snapshot fixture parameters (key set is part of the schema gate).
+/// `kernel` records the resolved compute-kernel dispatch the timings
+/// ran on (docs/OBSERVABILITY.md "Kernel dispatch").
 fn params(m: usize, groups: usize, threads: usize, reps: usize) -> Json {
     Json::obj(vec![
         ("m", m.into()),
         ("groups", groups.into()),
         ("threads", threads.into()),
         ("reps", reps.into()),
+        ("kernel", ranksvm::linalg::simd::active().name().into()),
     ])
 }
 

@@ -8,6 +8,7 @@
 //! (`runtime::XlaBackend`, behind the `xla` feature). Python is never on
 //! this path: the XLA backend loads pre-built `artifacts/*.hlo.txt`.
 
+use crate::linalg::simd;
 use crate::linalg::{CscMatrix, CsrView};
 use crate::runtime::pool::{Task, WorkerPool};
 use std::sync::Arc;
@@ -100,13 +101,14 @@ const GRAD_CHUNKS: usize = 16;
 /// Multi-threaded native kernels on a persistent work-stealing
 /// [`WorkerPool`].
 ///
-/// - `scores`: rows are dealt to [`crate::linalg::ops::adaptive_chunks`]
-///   contiguous ranges — individually stealable tasks, finer than the
-///   worker count, so rows of uneven density (sparse corpora are
-///   Zipf-skewed too) balance across threads. Each output score is a
-///   single row dot product, so the result is bit-identical to the
-///   serial [`NativeBackend`] regardless of the partition or the
-///   scheduling.
+/// - `scores`: rows are dealt to cache-sized contiguous ranges
+///   ([`crate::runtime::cache::sized_chunks`], floored at the adaptive
+///   plan) — individually stealable tasks, finer than the worker count,
+///   so rows of uneven density (sparse corpora are Zipf-skewed too)
+///   balance across threads while each chunk's CSR bytes fit a cache
+///   fraction. Each output score is a single row dot product, so the
+///   result is bit-identical to the serial [`NativeBackend`] regardless
+///   of the partition or the scheduling.
 /// - `grad`: rows are dealt to `GRAD_CHUNKS` fixed chunks — already
 ///   one stealable task each — accumulating a dense partial
 ///   `Xᵀ·coeffs`; the partials are then combined by a fixed-topology
@@ -114,10 +116,18 @@ const GRAD_CHUNKS: usize = 16;
 ///   serial scatter, so the gradient can differ from [`NativeBackend`]
 ///   in the last bits — but never between runs or across thread counts:
 ///   the chunk *contents* and the reduction order are fixed, and the
-///   pool only decides which thread runs which chunk.
+///   pool only decides which thread runs which chunk. Each task zeroes
+///   its own partial (first touch: the accumulation pages belong to the
+///   worker that scatters into them), and the reduced result is *taken*
+///   out of slot 0, not cloned.
+///
+/// Both sweeps run their inner loops through the [`simd`] kernel
+/// dispatch point, which is bit-invisible by construction
+/// (docs/DETERMINISM.md "Kernel dispatch").
 pub struct ParallelBackend {
     pool: Arc<WorkerPool>,
-    /// Per-chunk gradient partials, reused across iterations.
+    /// Per-chunk gradient partials, reused across iterations (slot 0 is
+    /// re-grown each call after being handed to the caller).
     grad_parts: Vec<Vec<f64>>,
 }
 
@@ -156,11 +166,14 @@ impl ComputeBackend for ParallelBackend {
             x.matvec(w, &mut out);
             return out;
         }
-        // One stealable task per adaptive chunk (not per worker): each
-        // score is an independent row dot, so the chunk plan cannot
-        // change a bit, and the surplus tasks let the stealing pool
-        // absorb row-density skew.
-        let chunks = crate::linalg::ops::adaptive_chunks(self.n_threads()).min(m);
+        // One stealable task per cache-sized chunk (not per worker):
+        // each score is an independent row dot, so the chunk plan cannot
+        // change a bit; surplus tasks let the stealing pool absorb
+        // row-density skew, and the cache sizing keeps a chunk's CSR
+        // bytes resident while a worker streams them.
+        let bytes = x.nnz() * 12 + m * 8; // u32 idx + f64 val per nnz, f64 out per row
+        let chunks = crate::runtime::cache::sized_chunks(self.n_threads(), bytes).min(m);
+        simd::note_pass(simd::active());
         let mut tasks: Vec<Task> = Vec::with_capacity(chunks);
         {
             let mut rest: &mut [f64] = &mut out;
@@ -190,20 +203,27 @@ impl ComputeBackend for ParallelBackend {
         assert_eq!(coeffs.len(), m);
         let chunks = GRAD_CHUNKS.min(m).max(1);
         self.grad_parts.resize_with(chunks, Vec::new);
-        for part in self.grad_parts.iter_mut() {
-            part.clear();
-            part.resize(n, 0.0);
-        }
+        let k = simd::active();
+        simd::note_pass(k);
+        // Each task zeroes its own partial before scattering: when the
+        // dimension is unchanged that is one `fill(0.0)` over memory the
+        // same worker is about to write (no realloc, no serial zeroing
+        // sweep on the caller, and on NUMA hosts the pages are first
+        // touched by the thread that accumulates into them).
         let fill = |part: &mut Vec<f64>, c: usize| {
+            if part.len() == n {
+                part.fill(0.0);
+            } else {
+                part.clear();
+                part.resize(n, 0.0);
+            }
             let lo = m * c / chunks;
             let hi = m * (c + 1) / chunks;
             for i in lo..hi {
                 let vi = coeffs[i];
                 if vi != 0.0 {
                     let (idx, val) = x.row(i);
-                    for (&j, &v) in idx.iter().zip(val) {
-                        part[j as usize] += vi * v;
-                    }
+                    simd::scatter_axpy(k, idx, val, vi, part);
                 }
             }
         };
@@ -238,7 +258,10 @@ impl ComputeBackend for ParallelBackend {
             }
             stride *= 2;
         }
-        self.grad_parts[0].clone()
+        // Hand the reduced partial to the caller instead of cloning it
+        // (the clone was a full O(n) copy per BMRM iteration); the next
+        // call's fill re-grows slot 0 from empty.
+        std::mem::take(&mut self.grad_parts[0])
     }
 }
 
@@ -312,6 +335,35 @@ mod tests {
                 Some(first) => assert_eq!(&g, first, "{threads} threads"),
             }
         }
+    }
+
+    #[test]
+    fn parallel_backend_grad_is_stable_across_repeated_calls() {
+        // Regression: grad hands its reduced partial to the caller with
+        // `mem::take` instead of cloning, so the next iteration must
+        // rebuild slot 0 from empty and still produce identical bits —
+        // including after the input dimensions change.
+        let mut rng = Rng::new(703);
+        let mut triplets = Vec::new();
+        for i in 0..90 {
+            for j in 0..25 {
+                if rng.bool(0.2) {
+                    triplets.push((i, j, rng.normal()));
+                }
+            }
+        }
+        let x = CsrMatrix::from_triplets(90, 25, triplets);
+        let c: Vec<f64> = (0..90).map(|_| rng.normal()).collect();
+        let mut par = ParallelBackend::new(4);
+        par.prepare(x.view());
+        let first = par.grad(x.view(), &c);
+        let again = par.grad(x.view(), &c);
+        assert_eq!(first, again, "taken partial must be rebuilt");
+
+        let y = CsrMatrix::from_triplets(7, 60, vec![(3, 59, 2.5)]);
+        let g = par.grad(y.view(), &[0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(g.len(), 60, "partials must re-size with the data");
+        assert_eq!(g[59], 5.0);
     }
 
     #[test]

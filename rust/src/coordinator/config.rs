@@ -179,6 +179,14 @@ pub struct TrainConfig {
     /// Feature normalization applied before optimization (CLI
     /// `--normalize`).
     pub normalize: Normalize,
+    /// Per-chunk working-set target for the cache-aware parallel plans,
+    /// in KiB (CLI `--chunk-target-kib`); `0` (the default) probes half
+    /// of L2 from sysfs, and the `RANKSVM_CHUNK_KIB` environment
+    /// variable slots between the two. Chunk counts shape only
+    /// integer-exact decompositions — never a float reduction — so any
+    /// value produces bit-identical training results
+    /// ([`crate::runtime::cache`]).
+    pub chunk_target_kib: usize,
 }
 
 impl Default for TrainConfig {
@@ -195,6 +203,7 @@ impl Default for TrainConfig {
             trace_path: None,
             n_threads: 0,
             normalize: Normalize::None,
+            chunk_target_kib: 0,
         }
     }
 }

@@ -280,6 +280,10 @@ fn group_index_for(ds: &dyn DatasetView) -> Option<Arc<GroupIndex>> {
 /// a memory-mapped pallas store — the run is bit-identical either way.
 pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let timer = std::time::Instant::now();
+    // Wire the configured cache-target override before any parallel plan
+    // is sized (inert for results: chunk counts only shape integer-exact
+    // decompositions — docs/DETERMINISM.md).
+    crate::runtime::cache::set_chunk_target_kib(cfg.chunk_target_kib);
     // Mapped stores: start paging the file in now (madvise WILLNEED),
     // so the first sweep reads warm pages instead of faulting serially.
     ds.prefetch();
@@ -340,6 +344,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 epsilon: cfg.epsilon,
                 max_iter: cfg.max_iter,
                 threads: cfg.resolved_threads(),
+                kernel: crate::linalg::simd::active().name(),
             }))?;
             sink.event(&obs::trace::end_event(&obs::trace::EndInfo {
                 iterations: res.iterations,
@@ -402,6 +407,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 epsilon: cfg.epsilon,
                 max_iter: cfg.max_iter,
                 threads: cfg.resolved_threads(),
+                kernel: crate::linalg::simd::active().name(),
             }))?;
         }
         let mut prev_phases: Vec<(String, f64)> = Vec::new();

@@ -680,13 +680,23 @@ fn sum_spill_pair(
     Ok(())
 }
 
+/// Read-buffer size for copying a spill of `expect` bytes with a
+/// requested chunk size of `chunk_bytes`: the full chunk the caller
+/// asked for (the old `clamp(4096, 8 << 20)` silently shrank requests
+/// above 8 MiB, turning one configured read into many), shrunk to the
+/// spill's actual length when that is smaller, floored at 4 KiB.
+fn read_buf_len(chunk_bytes: usize, expect: u64) -> usize {
+    let want = chunk_bytes.max(4096);
+    (expect.min(want as u64) as usize).max(4096)
+}
+
 /// Copy a finalized spill file into the output in `chunk_bytes`-bounded
 /// reads, then delete it. Verifies the byte count written during the
 /// parse pass survived the round trip.
 fn copy_spill(w: &mut SectionWriter, spill: SpillBuf, chunk_bytes: usize) -> Result<()> {
     let expect = spill.len();
     let (mut file, path) = spill.into_reader()?;
-    let mut buf = vec![0u8; chunk_bytes.clamp(4096, 8 << 20)];
+    let mut buf = vec![0u8; read_buf_len(chunk_bytes, expect)];
     let mut copied = 0u64;
     loop {
         let n = file.read(&mut buf).context("reading spill file")?;
@@ -702,4 +712,22 @@ fn copy_spill(w: &mut SectionWriter, spill: SpillBuf, chunk_bytes: usize) -> Res
         bail!("spill file {} changed size during conversion ({copied} vs {expect})", path.display());
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_buffer_covers_the_requested_chunk_size() {
+        // Floors: tiny requests and tiny spills still get a sane buffer.
+        assert_eq!(read_buf_len(0, 10), 4096);
+        assert_eq!(read_buf_len(1024, 1 << 20), 4096);
+        // A small spill never allocates the whole chunk.
+        assert_eq!(read_buf_len(8 << 20, 10_000), 10_000);
+        // The regression: chunk requests above 8 MiB are honored instead
+        // of being silently clamped down to 8 MiB reads.
+        assert_eq!(read_buf_len(32 << 20, u64::MAX), 32 << 20);
+        assert_eq!(read_buf_len(8 << 20, u64::MAX), 8 << 20);
+    }
 }

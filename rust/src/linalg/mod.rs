@@ -7,6 +7,7 @@
 
 pub mod dense;
 pub mod ops;
+pub mod simd;
 pub mod sparse;
 
 pub use dense::DenseMatrix;

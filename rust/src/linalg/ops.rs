@@ -7,28 +7,20 @@
 //! deterministic parallel merge sort [`par_argsort_into`] that removes
 //! the oracle's last serial `O(m log m)` term.
 
+use crate::linalg::simd;
 use crate::runtime::pool::{Task, WorkerPool};
 
 /// Dot product. Panics if lengths differ (debug) / truncates never.
+///
+/// Routed through the [`simd`] dispatch point. The scalar reference is
+/// this function's historical 4-accumulator body verbatim and the AVX2
+/// path keeps one accumulator per lane with the same
+/// `((a₀+a₁)+a₂)+a₃` fold, so the result is bit-identical on either
+/// path (pinned by `tests/kernels.rs`).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation helps the auto-vectorizer and reduces
-    // the sequential FP dependency chain.
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for k in 0..chunks {
-        let i = k * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dense_dot(simd::active(), a, b)
 }
 
 /// `y += alpha * x`.
@@ -113,6 +105,21 @@ pub fn adaptive_chunks(n_threads: usize) -> usize {
 /// Below this length the serial sort wins over chunk + merge scheduling.
 pub const PAR_SORT_MIN: usize = 1024;
 
+/// Caller-owned scratch for [`par_argsort_into`], reused across calls so
+/// the parallel path stops allocating once warm (DETERMINISM.md
+/// checklist: "hoist allocations out of the steady-state loop"). Holds
+/// the two buffers whose size scales with the input — the O(m) ping-pong
+/// merge destination and the chunk boundary table. The per-level task
+/// boxes are *not* hoistable: `WorkerPool::run` consumes its task vector
+/// by value, and at ≤ 64 chunks they are noise next to the O(m) buffers.
+#[derive(Default)]
+pub struct SortScratch {
+    /// Ping-pong merge destination (`m` slots).
+    pong: Vec<usize>,
+    /// Chunk boundary table (`chunks + 1` entries).
+    bounds: Vec<usize>,
+}
+
 /// Parallel argsort on a [`WorkerPool`]: deterministic merge sort over an
 /// [`adaptive_chunks`]-chunk plan (derived from the pool size) with
 /// fixed-topology pairwise merges (stride 1, 2, 4, …). Each merge level
@@ -125,12 +132,12 @@ pub const PAR_SORT_MIN: usize = 1024;
 /// [`argsort_into`] (value, then index), the permutation is
 /// **bit-identical to the serial argsort for any thread count** (the
 /// chunk count only changes how the unique answer is assembled);
-/// `scratch` is a caller-owned ping-pong buffer reused across BMRM
+/// `scratch` is the caller-owned [`SortScratch`] reused across BMRM
 /// iterations.
 pub fn par_argsort_into(
     v: &[f64],
     idx: &mut Vec<usize>,
-    scratch: &mut Vec<usize>,
+    scratch: &mut SortScratch,
     pool: &WorkerPool,
 ) {
     let m = v.len();
@@ -141,7 +148,9 @@ pub fn par_argsort_into(
         idx.sort_unstable_by(|&a, &b| key_cmp(v, a, b));
         return;
     }
-    let bounds: Vec<usize> = (0..=chunks).map(|c| c * m / chunks).collect();
+    scratch.bounds.clear();
+    scratch.bounds.extend((0..=chunks).map(|c| c * m / chunks));
+    let bounds: &[usize] = &scratch.bounds;
 
     // Phase 1: sort each chunk independently.
     {
@@ -158,17 +167,17 @@ pub fn par_argsort_into(
     }
 
     // Phase 2: pairwise merge levels, ping-ponging between `idx` and
-    // `scratch`. With ⌈log₂ chunks⌉ odd (e.g. 8 or 32 chunks) the final
-    // merge lands in `scratch` and one O(m) copy brings it home — noise
-    // next to the sort itself.
-    scratch.clear();
-    scratch.resize(m, 0);
+    // the scratch buffer. With ⌈log₂ chunks⌉ odd (e.g. 8 or 32 chunks)
+    // the final merge lands in the scratch and one O(m) copy brings it
+    // home — noise next to the sort itself.
+    scratch.pong.clear();
+    scratch.pong.resize(m, 0);
     let mut src: &mut [usize] = idx;
-    let mut dst: &mut [usize] = scratch;
+    let mut dst: &mut [usize] = &mut scratch.pong;
     let mut stride = 1;
     let mut in_idx = true;
     while stride < chunks {
-        merge_level(v, src, dst, &bounds, stride, pool);
+        merge_level(v, src, dst, bounds, stride, pool);
         std::mem::swap(&mut src, &mut dst);
         in_idx = !in_idx;
         stride *= 2;
@@ -343,7 +352,7 @@ mod tests {
                 for threads in [1usize, 2, 3, 8] {
                     let pool = WorkerPool::new(threads);
                     let mut idx = Vec::new();
-                    let mut scratch = Vec::new();
+                    let mut scratch = SortScratch::default();
                     par_argsort_into(&v, &mut idx, &mut scratch, &pool);
                     assert_eq!(idx, expect, "{threads} threads, m={}", v.len());
                 }
@@ -355,7 +364,7 @@ mod tests {
     fn par_argsort_small_inputs_take_serial_path() {
         let pool = WorkerPool::new(4);
         let mut idx = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = SortScratch::default();
         for v in [vec![], vec![5.0], vec![3.0, 1.0, 2.0, 1.0]] {
             par_argsort_into(&v, &mut idx, &mut scratch, &pool);
             assert_eq!(idx, argsort(&v));
@@ -367,12 +376,16 @@ mod tests {
         let pool = WorkerPool::new(4);
         let mut rng = crate::util::rng::Rng::new(304);
         let mut idx = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = SortScratch::default();
         for m in [PAR_SORT_MIN * 3, 10, PAR_SORT_MIN + 1, PAR_SORT_MIN * 2] {
             let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
             par_argsort_into(&v, &mut idx, &mut scratch, &pool);
             assert_eq!(idx, argsort(&v), "m={m}");
         }
+        // Steady state: the scratch buffers are warm and at least as
+        // large as the biggest parallel input seen so far.
+        assert!(scratch.pong.capacity() >= PAR_SORT_MIN * 3);
+        assert!(scratch.bounds.capacity() > 0);
     }
 
     #[test]

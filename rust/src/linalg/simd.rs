@@ -1,0 +1,441 @@
+//! Vectorized sparse/dense kernels behind one runtime dispatch point,
+//! under the bit-identity contract of `docs/DETERMINISM.md`.
+//!
+//! Every kernel here exists in two implementations — a **scalar
+//! reference fold** and an **AVX2 lane-parallel** form — that are
+//! *bit-identical by construction*, so the dispatch choice is invisible
+//! in any result byte:
+//!
+//! * **Fixed 4-accumulator fold.** Both paths accumulate element `k`
+//!   into accumulator `k % 4` and fold the four partials in the fixed
+//!   serial order `((a₀ + a₁) + a₂) + a₃`, with the `len % 4` remainder
+//!   added last, scalar, in element order. The AVX2 form keeps one
+//!   partial per 64-bit lane, so its per-lane sums round exactly like
+//!   the reference fold's accumulators.
+//! * **No FMA.** The vector paths use separate `mul`/`add` instructions
+//!   (`_mm256_mul_pd` + `_mm256_add_pd`), never fused multiply-add: an
+//!   FMA rounds once where mul-then-add rounds twice, which would break
+//!   scalar/SIMD bit parity. The speedup here comes from width and from
+//!   shortening the sequential FP dependency chain, not from fusion.
+//! * **Scatter stays ordered.** AVX2 has gathers but no scatter, so
+//!   [`scatter_axpy`] vectorizes only the products (one 4-wide multiply)
+//!   and applies the adds scalar, in entry order — the exact reference
+//!   sequence, entry for entry.
+//!
+//! Dispatch is resolved once per process (`RANKSVM_KERNEL` env override
+//! `auto`/`scalar`/`simd`, then CPU feature detection — AVX2 on x86_64,
+//! scalar everywhere else) and cached in one atomic; [`force`] lets
+//! tests and benches pin a path. Each kernel *pass* (a whole matvec /
+//! gradient scatter, not each row) bumps a registry counter
+//! (`ranksvm_kernel_*_passes_total`, docs/OBSERVABILITY.md "Kernel
+//! dispatch") so the chosen path is visible in `--trace` runs and serve
+//! `metrics` output. `tests/kernels.rs` pins the scalar/SIMD bitwise
+//! differential on adversarial CSR shapes and whole-training byte
+//! identity with the dispatch forced both ways.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel implementation a pass runs. Resolved once per process
+/// by [`active`]; both variants produce bit-identical results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Reference fold: plain Rust, fixed 4-accumulator unroll.
+    Scalar,
+    /// AVX2 lane-parallel form of the same fold (x86_64 only).
+    Simd,
+}
+
+impl Kernel {
+    /// Stable wire name (`--trace` start event, bench snapshot params).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
+    }
+}
+
+const UNRESOLVED: u8 = 0;
+const FORCED_SCALAR: u8 = 1;
+const FORCED_SIMD: u8 = 2;
+
+/// Cached dispatch decision. 0 = not yet resolved; the first [`active`]
+/// call resolves from the environment + CPU features and every later
+/// call is one relaxed load.
+static STATE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// The kernel path this process runs. First call resolves
+/// `RANKSVM_KERNEL` (`scalar` / `simd` / anything else = auto) against
+/// CPU feature detection; a `simd` request on unsupported hardware
+/// falls back to scalar (the two are bit-identical, so this is a speed
+/// decision only).
+#[inline]
+pub fn active() -> Kernel {
+    match STATE.load(Ordering::Relaxed) {
+        FORCED_SCALAR => Kernel::Scalar,
+        FORCED_SIMD => Kernel::Simd,
+        _ => resolve(),
+    }
+}
+
+#[cold]
+fn resolve() -> Kernel {
+    let choice = match std::env::var("RANKSVM_KERNEL").as_deref() {
+        Ok("scalar") => Kernel::Scalar,
+        Ok("simd") if simd_supported() => Kernel::Simd,
+        Ok("simd") => Kernel::Scalar,
+        _ if simd_supported() => Kernel::Simd,
+        _ => Kernel::Scalar,
+    };
+    STATE.store(encode(choice), Ordering::Relaxed);
+    choice
+}
+
+fn encode(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => FORCED_SCALAR,
+        Kernel::Simd => FORCED_SIMD,
+    }
+}
+
+/// Pin the dispatch decision (tests / benches), or `None` to drop back
+/// to lazy env + feature resolution. Forcing [`Kernel::Simd`] on a host
+/// without AVX2 support makes the wrappers fall through to the scalar
+/// reference — results are identical either way.
+pub fn force(k: Option<Kernel>) {
+    STATE.store(k.map(encode).unwrap_or(UNRESOLVED), Ordering::Relaxed);
+}
+
+/// True when the vector path can actually run on this host.
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Count one kernel *pass* (a whole matvec / scatter sweep, not a row)
+/// against the dispatch-visibility counters. Called by the pass-level
+/// wrappers, never from per-row inner loops, so the relaxed RMW cannot
+/// contend on the hot path.
+#[inline]
+pub fn note_pass(k: Kernel) {
+    match k {
+        Kernel::Scalar => crate::obs::metrics::KERNEL_SCALAR_PASSES.inc(),
+        Kernel::Simd => crate::obs::metrics::KERNEL_SIMD_PASSES.inc(),
+    }
+}
+
+/// Largest gatherable vector length: AVX2 gathers take 32-bit signed
+/// element offsets, so the vector path only engages when every index
+/// fits in `i32` (always true for u32 CSR columns into slices below
+/// 2³¹ elements; checked per call anyway).
+const GATHER_MAX: usize = i32::MAX as usize;
+
+// ------------------------------------------------------------- kernels
+
+/// Sparse·dense gather dot: `Σₖ val[k] · w[idx[k]]`. Backs
+/// `CsrView::row_dot`, the CSR `matvec` rows, and the CSC column
+/// gather.
+#[inline]
+pub fn sparse_dot(k: Kernel, idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+    match k {
+        Kernel::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if w.len() <= GATHER_MAX {
+                    // SAFETY: `Kernel::Simd` is only resolved or forced
+                    // effective when AVX2 was detected at runtime.
+                    return unsafe { x86::sparse_dot_avx2(idx, val, w) };
+                }
+            }
+            sparse_dot_scalar(idx, val, w)
+        }
+        Kernel::Scalar => sparse_dot_scalar(idx, val, w),
+    }
+}
+
+/// Dense dot product under the same fixed fold. Backs
+/// [`crate::linalg::ops::dot`].
+#[inline]
+pub fn dense_dot(k: Kernel, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match k {
+        Kernel::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Simd is only effective with AVX2 detected.
+                return unsafe { x86::dense_dot_avx2(a, b) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            dense_dot_scalar(a, b)
+        }
+        Kernel::Scalar => dense_dot_scalar(a, b),
+    }
+}
+
+/// Sparse scatter-axpy: `out[idx[k]] += val[k] · alpha`, in entry
+/// order. Backs the CSR `matvec_t` rows and the parallel backend's
+/// gradient scatter. Both paths round each product once and apply the
+/// adds in the identical order, so this kernel's bits match the
+/// historical scalar loop exactly.
+#[inline]
+pub fn scatter_axpy(k: Kernel, idx: &[u32], val: &[f64], alpha: f64, out: &mut [f64]) {
+    match k {
+        Kernel::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Simd is only effective with AVX2 detected.
+                return unsafe { x86::scatter_axpy_avx2(idx, val, alpha, out) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            scatter_axpy_scalar(idx, val, alpha, out)
+        }
+        Kernel::Scalar => scatter_axpy_scalar(idx, val, alpha, out),
+    }
+}
+
+// -------------------------------------------------- scalar reference
+
+/// The reference fold both paths must match bit for bit: element `k`
+/// accumulates into `acc[k % 4]`, partials fold as `((a₀+a₁)+a₂)+a₃`,
+/// remainder added last in element order.
+fn sparse_dot_scalar(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let n = idx.len();
+    let mut acc = [0.0f64; 4];
+    let quads = n / 4;
+    for q in 0..quads {
+        let k = q * 4;
+        acc[0] += val[k] * w[idx[k] as usize];
+        acc[1] += val[k + 1] * w[idx[k + 1] as usize];
+        acc[2] += val[k + 2] * w[idx[k + 2] as usize];
+        acc[3] += val[k + 3] * w[idx[k + 3] as usize];
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for k in quads * 4..n {
+        s += val[k] * w[idx[k] as usize];
+    }
+    s
+}
+
+/// Dense form of the reference fold — the historical `ops::dot` body,
+/// verbatim, so routing `dot` through dispatch changed no result bit.
+fn dense_dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let quads = a.len() / 4;
+    for q in 0..quads {
+        let i = q * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in quads * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Reference scatter: one rounded product and one in-order add per
+/// entry — the historical `matvec_t` inner loop.
+fn scatter_axpy_scalar(idx: &[u32], val: &[f64], alpha: f64, out: &mut [f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&j, &v) in idx.iter().zip(val) {
+        out[j as usize] += v * alpha;
+    }
+}
+
+// ------------------------------------------------------- AVX2 (x86_64)
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support and `w.len() <= i32::MAX`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sparse_dot_avx2(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+        debug_assert_eq!(idx.len(), val.len());
+        let n = idx.len();
+        let quads = n / 4;
+        // One f64 accumulator per lane = the reference fold's acc[0..4].
+        let mut acc = _mm256_setzero_pd();
+        for q in 0..quads {
+            let k = q * 4;
+            let v = _mm256_loadu_pd(val.as_ptr().add(k));
+            let i = _mm_loadu_si128(idx.as_ptr().add(k) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(w.as_ptr(), i);
+            // mul then add, deliberately unfused (module docs).
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(v, g));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for k in quads * 4..n {
+            s += val[k] * w[idx[k] as usize];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let quads = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for q in 0..quads {
+            let i = q * 4;
+            let x = _mm256_loadu_pd(a.as_ptr().add(i));
+            let y = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(x, y));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        for i in quads * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_axpy_avx2(idx: &[u32], val: &[f64], alpha: f64, out: &mut [f64]) {
+        debug_assert_eq!(idx.len(), val.len());
+        let n = idx.len();
+        let quads = n / 4;
+        let va = _mm256_set1_pd(alpha);
+        let mut prod = [0.0f64; 4];
+        for q in 0..quads {
+            let k = q * 4;
+            let v = _mm256_loadu_pd(val.as_ptr().add(k));
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(v, va));
+            // No AVX2 scatter exists; the adds run scalar, in entry
+            // order — the exact reference sequence.
+            out[*idx.get_unchecked(k) as usize] += prod[0];
+            out[*idx.get_unchecked(k + 1) as usize] += prod[1];
+            out[*idx.get_unchecked(k + 2) as usize] += prod[2];
+            out[*idx.get_unchecked(k + 3) as usize] += prod[3];
+        }
+        for k in quads * 4..n {
+            out[idx[k] as usize] += val[k] * alpha;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Adversarial value pool: denormals, ±0.0, huge/tiny magnitudes —
+    /// anything that could expose a rounding-order difference (NaN is
+    /// excluded by the crate's NaN-free data contract).
+    fn adversarial_value(rng: &mut Rng) -> f64 {
+        match rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::MIN_POSITIVE / 2.0,  // subnormal
+            3 => -f64::MIN_POSITIVE / 4.0, // subnormal
+            4 => 1e300,
+            5 => -1e-300,
+            _ => rng.normal(),
+        }
+    }
+
+    fn random_case(rng: &mut Rng, n: usize, cols: usize) -> (Vec<u32>, Vec<f64>, Vec<f64>) {
+        let idx: Vec<u32> = (0..n).map(|_| rng.below(cols) as u32).collect();
+        let val: Vec<f64> = (0..n).map(|_| adversarial_value(rng)).collect();
+        let w: Vec<f64> = (0..cols).map(|_| adversarial_value(rng)).collect();
+        (idx, val, w)
+    }
+
+    #[test]
+    fn scalar_reference_folds_match_by_construction() {
+        // dense_dot over contiguous indices equals sparse_dot bit for
+        // bit — same fold, gather degenerating to a load.
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 4, 5, 8, 17, 64, 255] {
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let a: Vec<f64> = (0..n).map(|_| adversarial_value(&mut rng)).collect();
+            let b: Vec<f64> = (0..n).map(|_| adversarial_value(&mut rng)).collect();
+            let s = sparse_dot(Kernel::Scalar, &idx, &a, &b);
+            let d = dense_dot(Kernel::Scalar, &a, &b);
+            assert_eq!(s.to_bits(), d.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_sparse_dot_is_bit_identical_to_scalar() {
+        if !simd_supported() {
+            return; // nothing to differentiate on this host
+        }
+        let mut rng = Rng::new(12);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 64, 100, 1023] {
+            let cols = 1 + rng.below(200);
+            let (idx, val, w) = random_case(&mut rng, n, cols);
+            let a = sparse_dot(Kernel::Scalar, &idx, &val, &w);
+            let b = sparse_dot(Kernel::Simd, &idx, &val, &w);
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_dense_dot_is_bit_identical_to_scalar() {
+        if !simd_supported() {
+            return;
+        }
+        let mut rng = Rng::new(13);
+        for n in [0usize, 1, 3, 4, 6, 8, 13, 64, 257, 1000] {
+            let a: Vec<f64> = (0..n).map(|_| adversarial_value(&mut rng)).collect();
+            let b: Vec<f64> = (0..n).map(|_| adversarial_value(&mut rng)).collect();
+            let x = dense_dot(Kernel::Scalar, &a, &b);
+            let y = dense_dot(Kernel::Simd, &a, &b);
+            assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn simd_scatter_axpy_is_bit_identical_to_scalar() {
+        if !simd_supported() {
+            return;
+        }
+        let mut rng = Rng::new(14);
+        for n in [0usize, 1, 3, 4, 5, 8, 11, 63, 200] {
+            let cols = 1 + rng.below(50);
+            // Repeated indices on purpose: accumulation order matters.
+            let (idx, val, _) = random_case(&mut rng, n, cols);
+            let alpha = adversarial_value(&mut rng);
+            let mut a: Vec<f64> = (0..cols).map(|_| adversarial_value(&mut rng)).collect();
+            let mut b = a.clone();
+            scatter_axpy(Kernel::Scalar, &idx, &val, alpha, &mut a);
+            scatter_axpy(Kernel::Simd, &idx, &val, alpha, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Simd.name(), "simd");
+    }
+
+    #[test]
+    fn active_resolves_to_a_runnable_kernel() {
+        // Whatever env/CPU this test runs under, the decision must be
+        // executable here (Simd implies hardware support).
+        if active() == Kernel::Simd {
+            assert!(simd_supported());
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! interpreted relative to `indptr[0]`, which makes row-range subviews
 //! (the growing-prefix benches) O(1) slices rather than copies.
 
+use crate::linalg::simd;
 use anyhow::{ensure, Result};
 
 /// Borrowed CSR view (`rows × cols`): the zero-copy substrate shared by
@@ -118,43 +119,44 @@ impl<'a> CsrView<'a> {
         (&self.indices[lo..hi], &self.values[lo..hi])
     }
 
-    /// `p = X·w` (length `rows`), `O(nnz)`.
+    /// `p = X·w` (length `rows`), `O(nnz)`. One row-gather-dot kernel
+    /// pass through the [`simd`] dispatch point (bit-identical on either
+    /// path; counted once per call in the kernel-dispatch counters).
     pub fn matvec(&self, w: &[f64], out: &mut [f64]) {
         assert_eq!(w.len(), self.cols);
         assert_eq!(out.len(), self.rows);
+        let k = simd::active();
+        simd::note_pass(k);
         for (i, o) in out.iter_mut().enumerate() {
             let (idx, val) = self.row(i);
-            let mut s = 0.0;
-            for (&j, &v) in idx.iter().zip(val) {
-                s += v * w[j as usize];
-            }
-            *o = s;
+            *o = simd::sparse_dot(k, idx, val, w);
         }
     }
 
     /// `a = Xᵀ·v` (length `cols`), `O(nnz)` scatter. `out` overwritten.
+    /// One scatter-axpy kernel pass; the kernel applies each row's adds
+    /// in entry order, so the bits match the historical scalar loop.
     pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
         out.iter_mut().for_each(|x| *x = 0.0);
+        let k = simd::active();
+        simd::note_pass(k);
         for (i, &vi) in v.iter().enumerate() {
             if vi != 0.0 {
                 let (idx, val) = self.row(i);
-                for (&j, &x) in idx.iter().zip(val) {
-                    out[j as usize] += vi * x;
-                }
+                simd::scatter_axpy(k, idx, val, vi, out);
             }
         }
     }
 
     /// Dot product of row `i` with a dense vector (prediction path).
+    /// Dispatches per call but does not count a pass: callers that sweep
+    /// many rows ([`matvec`], the parallel score plan) count themselves.
+    #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
         let (idx, val) = self.row(i);
-        let mut s = 0.0;
-        for (&j, &v) in idx.iter().zip(val) {
-            s += v * w[j as usize];
-        }
-        s
+        simd::sparse_dot(simd::active(), idx, val, w)
     }
 
     /// Zero-copy row-range subview `[lo, hi)` — the growing-prefix
@@ -417,16 +419,16 @@ impl CscMatrix {
 
     /// `a = Xᵀ·v` computed column-wise: each `a[j]` is a gather over the
     /// column — no scatter, better locality when `v` is hot in cache.
+    /// One gather-dot kernel pass per call (same kernel as the CSR row
+    /// dot, with the roles of stored and gathered operand unchanged).
     pub fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
+        let k = simd::active();
+        simd::note_pass(k);
         for j in 0..self.cols {
             let (idx, val) = self.col(j);
-            let mut s = 0.0;
-            for (&i, &x) in idx.iter().zip(val) {
-                s += x * v[i as usize];
-            }
-            out[j] = s;
+            out[j] = simd::sparse_dot(k, idx, val, v);
         }
     }
 

@@ -65,9 +65,10 @@
 //! this case onto one shard; see ROADMAP history.)
 
 use super::{assemble_from_counts, GroupIndex, GroupOracle, OracleOutput, RankingOracle};
-use crate::linalg::ops::{adaptive_chunks, par_argsort_into};
+use crate::linalg::ops::{adaptive_chunks, par_argsort_into, SortScratch};
 use crate::losses::tree::TreeOracle;
 use crate::rbtree::OsTree;
+use crate::runtime::cache;
 use crate::runtime::plan::WorkPlan;
 use crate::runtime::pool::{Task, WorkerPool};
 use std::sync::Arc;
@@ -171,7 +172,19 @@ impl ShardedGroupOracle {
         target_tasks: Option<usize>,
     ) -> Self {
         let n_workers = pool.n_threads().max(1);
-        let default_tasks = if n_workers == 1 { 1 } else { adaptive_chunks(n_workers) };
+        // Default plan: the adaptive count, raised cache-aware when the
+        // index says the corpus is large enough that a run's ~16-byte-
+        // per-example working set would overflow the chunk target
+        // (small corpora keep their historical plans — the sizing only
+        // ever adds runs above the adaptive floor).
+        let default_tasks = if n_workers == 1 {
+            1
+        } else {
+            match &index {
+                Some(ix) => cache::sized_chunks(n_workers, ix.n_examples() * 16),
+                None => adaptive_chunks(n_workers),
+            }
+        };
         let n_tasks = target_tasks.unwrap_or(default_tasks).max(1);
         let (grouping, n_states) = match index {
             None => (None, 1),
@@ -342,6 +355,11 @@ pub struct ShardedTreeOracle {
     /// granularity cannot change a result bit (pinned by
     /// `tests/scheduler.rs`).
     n_chunks: usize,
+    /// True when `n_chunks` is the adaptive default rather than an
+    /// explicit [`Self::with_run_target`] override: only then may the
+    /// global mode raise the per-eval count cache-aware (an explicit
+    /// target — e.g. the skew bench's coarse baseline — is authoritative).
+    adaptive_plan: bool,
     plan: Plan,
     states: Vec<TaskState>,
     /// Per-chunk sorted labels, outside [`TaskState`] so phase-B workers
@@ -349,7 +367,7 @@ pub struct ShardedTreeOracle {
     sorted_labels: Vec<Vec<f64>>,
     // Per-eval scratch (global mode), reused across calls.
     pi: Vec<usize>,
-    sort_scratch: Vec<usize>,
+    sort_scratch: SortScratch,
     p_sorted: Vec<f64>,
     y_sorted: Vec<f64>,
     w_end: Vec<usize>,
@@ -419,11 +437,12 @@ impl ShardedTreeOracle {
         ShardedTreeOracle {
             pool,
             n_chunks,
+            adaptive_plan: target_tasks.is_none(),
             plan,
             states: Vec::new(),
             sorted_labels: Vec::new(),
             pi: Vec::new(),
-            sort_scratch: Vec::new(),
+            sort_scratch: SortScratch::default(),
             p_sorted: Vec::new(),
             y_sorted: Vec::new(),
             w_end: Vec::new(),
@@ -526,7 +545,20 @@ impl ShardedTreeOracle {
         // ends that land on chunk boundaries contribute binary searches
         // only, so that case redistributes across all tasks instead of
         // collapsing onto the owner of the last chunk.
-        let n_tasks = if self.pool.n_threads() == 1 { 1 } else { self.n_chunks.clamp(1, m) };
+        let n_tasks = if self.pool.n_threads() == 1 {
+            1
+        } else {
+            // Cache-aware refinement of the constructed plan: the sweep
+            // streams ~16 bytes per sorted example, so a large m raises
+            // the chunk count above the adaptive floor (never below —
+            // small inputs keep their historical plans, and an explicit
+            // run-target override is honoured verbatim).
+            let mut t = self.n_chunks;
+            if self.adaptive_plan {
+                t = t.max(cache::sized_chunks(self.pool.n_threads(), m * 16));
+            }
+            t.clamp(1, m)
+        };
         let bounds: Vec<usize> = (0..=n_tasks).map(|c| c * m / n_tasks).collect();
         if self.states.len() < n_tasks {
             self.states.resize_with(n_tasks, TaskState::new);

@@ -10,7 +10,7 @@
 //! of distinct levels `r`.
 
 use super::{assemble_from_counts, OracleOutput, RankingOracle};
-use crate::linalg::ops::{argsort_into, par_argsort_into};
+use crate::linalg::ops::{argsort_into, par_argsort_into, SortScratch};
 use crate::rbtree::{OsTree, RankCounter};
 use crate::runtime::pool::WorkerPool;
 use crate::util::timer::PhaseTimes;
@@ -35,7 +35,7 @@ pub struct GenericTreeOracle<T: RankCounter> {
     /// [`par_argsort_into`]); the tree sweeps themselves stay serial —
     /// that is [`super::sharded::ShardedTreeOracle`]'s job.
     pool: Option<Arc<WorkerPool>>,
-    sort_scratch: Vec<usize>,
+    sort_scratch: SortScratch,
     /// Per-phase timing (sort / sweep / assemble), for §Perf.
     pub phases: PhaseTimes,
 }
@@ -76,7 +76,7 @@ impl<T: RankCounter> GenericTreeOracle<T> {
             p_sorted: Vec::new(),
             y_sorted: Vec::new(),
             pool: None,
-            sort_scratch: Vec::new(),
+            sort_scratch: SortScratch::default(),
             phases: PhaseTimes::new(),
         }
     }

@@ -50,6 +50,9 @@ USAGE:
                       toppush, ... — plus solver family and substrate)
                     [--lambda L] [--epsilon E] [--max-iter I] [--backend native|native-csc|xla]
                     [--threads T]  (0 = all cores; results are identical for any T)
+                    [--chunk-target-kib K]  (per-chunk working-set target for the
+                      cache-aware parallel plans; 0 = auto-probe half of L2.
+                      Purely a speed knob — results are identical for any K)
                     [--normalize none|l2-col]  (l2-col divides each column by its
                       l2 norm, consuming store-cached stats when available)
                     [--artifacts DIR] [--line-search] [--test-size T] [--seed S] [--out MODEL] [--verbose]
@@ -166,6 +169,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         n_threads: args.usize_or("threads", 0)?,
         normalize: Normalize::parse(&args.str_or("normalize", "none"))
             .context("bad --normalize (none|l2-col)")?,
+        chunk_target_kib: args.usize_or("chunk-target-kib", 0)?,
     };
     let test_size = args.usize_or("test-size", 0)?;
     // A shuffled split needs owned storage; materialize a store first.
@@ -530,7 +534,7 @@ fn cmd_perf(args: &Args) -> Result<()> {
             let mut p = vec![0.0; ds.len()];
             ds.x.matvec(&w, &mut p);
             let mut idx = Vec::new();
-            let mut scratch = Vec::new();
+            let mut scratch = ranksvm::linalg::ops::SortScratch::default();
             ranksvm::linalg::ops::argsort_into(&p, &mut idx);
             let t = std::time::Instant::now();
             for _ in 0..reps {

@@ -152,6 +152,13 @@ pub static POOL_BATCHES: Counter = Counter::new();
 /// Tasks run inline on the caller (pool bypassed: 1 thread or tiny batch).
 pub static POOL_INLINE_TASKS: Counter = Counter::new();
 
+// --------------------------------------------------------------- kernels
+/// Kernel passes (whole matvec / gradient-scatter sweeps) executed on
+/// the scalar reference path (`linalg::simd` dispatch).
+pub static KERNEL_SCALAR_PASSES: Counter = Counter::new();
+/// Kernel passes executed on the vectorized (AVX2) path.
+pub static KERNEL_SIMD_PASSES: Counter = Counter::new();
+
 // ------------------------------------------------------------ converter
 /// Rows written by the store converter.
 pub static CONVERT_ROWS: Counter = Counter::new();
@@ -229,6 +236,18 @@ pub static REGISTRY: &[MetricDef] = &[
         unit: "tasks",
         help: "tasks run inline on the caller (pool bypassed)",
         kind: Kind::Counter(&POOL_INLINE_TASKS),
+    },
+    MetricDef {
+        name: "ranksvm_kernel_scalar_passes_total",
+        unit: "passes",
+        help: "kernel passes executed on the scalar reference path",
+        kind: Kind::Counter(&KERNEL_SCALAR_PASSES),
+    },
+    MetricDef {
+        name: "ranksvm_kernel_simd_passes_total",
+        unit: "passes",
+        help: "kernel passes executed on the vectorized (AVX2) path",
+        kind: Kind::Counter(&KERNEL_SIMD_PASSES),
     },
     MetricDef {
         name: "ranksvm_convert_rows_total",

@@ -20,7 +20,9 @@ use anyhow::{Context, Result};
 use std::io::{BufWriter, Write};
 
 /// Bumped whenever an event gains/loses/renames a field.
-pub const TRACE_SCHEMA_VERSION: i64 = 1;
+/// v2: `start` gained `kernel` (the resolved compute-kernel dispatch,
+/// `"scalar"` or `"simd"` — [`crate::linalg::simd`]).
+pub const TRACE_SCHEMA_VERSION: i64 = 2;
 
 /// Fields of the `start` event, in emission order.
 pub static START_FIELDS: &[&str] = &[
@@ -34,6 +36,7 @@ pub static START_FIELDS: &[&str] = &[
     "epsilon",
     "max_iter",
     "threads",
+    "kernel",
 ];
 
 /// Fields of the per-iteration `iter` event, in emission order.
@@ -72,6 +75,8 @@ pub struct StartInfo<'a> {
     pub epsilon: f64,
     pub max_iter: usize,
     pub threads: usize,
+    /// Resolved kernel dispatch for this run (`"scalar"` / `"simd"`).
+    pub kernel: &'a str,
 }
 
 /// Build the `start` event (keys exactly [`START_FIELDS`]).
@@ -87,6 +92,7 @@ pub fn start_event(s: &StartInfo) -> Json {
         ("epsilon".into(), s.epsilon.into()),
         ("max_iter".into(), s.max_iter.into()),
         ("threads".into(), s.threads.into()),
+        ("kernel".into(), s.kernel.into()),
     ])
 }
 
@@ -296,6 +302,7 @@ mod tests {
             epsilon: 0.01,
             max_iter: 5,
             threads: 2,
+            kernel: "scalar",
         });
         assert_eq!(keys(&start), START_FIELDS);
         let iter = iter_event(&IterInfo {
@@ -346,6 +353,7 @@ mod tests {
             epsilon: 0.01,
             max_iter: 5,
             threads: 2,
+            kernel: "scalar",
         });
         let iter = iter_event(&IterInfo {
             iter: 1,

@@ -1,0 +1,210 @@
+//! Cache topology probing and cache-aware chunk sizing for the
+//! integer-exact parallel work plans.
+//!
+//! The flat `adaptive_chunks = clamp(4·threads, 4, 64)` plan sizes
+//! chunks by *count*, which on large inputs produces chunks far bigger
+//! than any cache level: a 60 MB score pass cut into 32 chunks streams
+//! ~2 MB per task, evicting the weight vector between rows.
+//! [`sized_chunks`] sizes chunks by *bytes* instead — it aims each
+//! chunk's working set at a fraction of L2 (probed from sysfs once,
+//! overridable) while never dropping below the adaptive count, so small
+//! inputs keep their historical plans bit for bit.
+//!
+//! **Determinism scope** (docs/DETERMINISM.md): cache-aware counts are
+//! legal only where the chunk plan is *exact* — integer decompositions
+//! and disjoint-write maps such as the score pass and the sharded
+//! oracle's counting sweeps. Float reductions keep their fixed plans
+//! (`compute::GRAD_CHUNKS`); nothing here may ever size one.
+//!
+//! Override precedence: [`set_chunk_target_kib`] (wired from
+//! `TrainConfig.chunk_target_kib` / `--chunk-target-kib`) beats the
+//! `RANKSVM_CHUNK_KIB` environment variable, which beats the sysfs
+//! probe, which falls back to a fixed constant off Linux.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Fallback L2 size when the sysfs probe fails (non-Linux, sandboxes):
+/// 512 KiB is conservative for every x86_64/aarch64 part of the last
+/// decade.
+const DEFAULT_L2_BYTES: usize = 512 * 1024;
+
+/// Fallback last-level size under the same conditions.
+const DEFAULT_LLC_BYTES: usize = 8 * 1024 * 1024;
+
+/// Upper bound on any chunk plan: with ≤ 64 adaptive chunks below and
+/// ≥ 4 KiB targets, 4096 chunks caps scheduler overhead on huge inputs.
+const MAX_CHUNKS: usize = 4096;
+
+/// Parse a sysfs cache size string like `"512K"` / `"8M"` / `"32768"`.
+fn parse_size(s: &str) -> Option<usize> {
+    let t = s.trim();
+    let (digits, mult) = match t.as_bytes().last()? {
+        b'K' | b'k' => (&t[..t.len() - 1], 1024),
+        b'M' | b'm' => (&t[..t.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&t[..t.len() - 1], 1024 * 1024 * 1024),
+        _ => (t, 1),
+    };
+    digits.trim().parse::<usize>().ok().map(|n| n * mult)
+}
+
+/// One pass over `/sys/devices/system/cpu/cpu0/cache/index*`: returns
+/// `(l2_bytes, llc_bytes)` from the data/unified caches, with fallbacks
+/// for whatever the probe cannot see.
+fn probe() -> (usize, usize) {
+    let mut l2 = None;
+    let mut llc: Option<(u32, usize)> = None;
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    if let Ok(entries) = std::fs::read_dir(base) {
+        for e in entries.flatten() {
+            let p = e.path();
+            let read = |f: &str| std::fs::read_to_string(p.join(f)).unwrap_or_default();
+            if read("type").trim() == "Instruction" {
+                continue;
+            }
+            let level: u32 = match read("level").trim().parse() {
+                Ok(l) => l,
+                Err(_) => continue,
+            };
+            let size = match parse_size(&read("size")) {
+                Some(s) if s > 0 => s,
+                _ => continue,
+            };
+            if level == 2 {
+                l2 = Some(size);
+            }
+            if llc.map(|(ll, _)| level > ll).unwrap_or(true) {
+                llc = Some((level, size));
+            }
+        }
+    }
+    let l2 = l2.unwrap_or(DEFAULT_L2_BYTES);
+    let llc = llc.map(|(_, s)| s).unwrap_or(DEFAULT_LLC_BYTES).max(l2);
+    (l2, llc)
+}
+
+fn probed() -> &'static (usize, usize) {
+    static CACHE: OnceLock<(usize, usize)> = OnceLock::new();
+    CACHE.get_or_init(probe)
+}
+
+/// L2 data-cache size in bytes (probed once; fallback constant).
+pub fn l2_bytes() -> usize {
+    probed().0
+}
+
+/// Last-level cache size in bytes (probed once; fallback constant).
+pub fn llc_bytes() -> usize {
+    probed().1
+}
+
+/// Config override for the per-chunk byte target, in KiB; 0 = auto.
+static CHUNK_TARGET_KIB: AtomicUsize = AtomicUsize::new(0);
+
+/// Set (or with 0, clear) the configured per-chunk byte target. Wired
+/// from `TrainConfig.chunk_target_kib` at trainer start; process-global
+/// like the observability level, and equally inert: chunk counts only
+/// shape integer-exact decompositions, never a float reduction, so this
+/// knob cannot change any result bit.
+pub fn set_chunk_target_kib(kib: usize) {
+    CHUNK_TARGET_KIB.store(kib, Ordering::Relaxed);
+}
+
+fn env_target_kib() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("RANKSVM_CHUNK_KIB")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// The per-chunk working-set target in bytes: config override, else
+/// `RANKSVM_CHUNK_KIB`, else half of L2 (clamped to `[64 KiB, LLC]` so
+/// absurd probe results stay sane).
+pub fn chunk_target_bytes() -> usize {
+    let cfg = CHUNK_TARGET_KIB.load(Ordering::Relaxed);
+    if cfg > 0 {
+        return cfg * 1024;
+    }
+    let env = env_target_kib();
+    if env > 0 {
+        return env * 1024;
+    }
+    (l2_bytes() / 2).clamp(64 * 1024, llc_bytes())
+}
+
+/// Pure sizing rule, separated for tests: enough chunks that each holds
+/// at most `target_bytes` of working set, floored at the adaptive count
+/// (small inputs keep their historical plans) and capped at
+/// [`MAX_CHUNKS`].
+pub fn chunks_for(total_bytes: usize, target_bytes: usize, floor: usize) -> usize {
+    let by_cache = total_bytes.div_ceil(target_bytes.max(1));
+    by_cache.clamp(floor, MAX_CHUNKS.max(floor))
+}
+
+/// Cache-aware chunk count for an integer-exact parallel plan over
+/// `total_bytes` of working set. Callers still `.min(n_items)` exactly
+/// as they did with `adaptive_chunks`.
+pub fn sized_chunks(n_threads: usize, total_bytes: usize) -> usize {
+    chunks_for(
+        total_bytes,
+        chunk_target_bytes(),
+        crate::linalg::ops::adaptive_chunks(n_threads),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_strings_parse() {
+        assert_eq!(parse_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_size(" 32768 "), Some(32768));
+        assert_eq!(parse_size("1G"), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_size("nope"), None);
+        assert_eq!(parse_size(""), None);
+    }
+
+    #[test]
+    fn probe_yields_sane_sizes() {
+        // Whether sysfs answered or the fallbacks kicked in: nonzero,
+        // ordered, and within physical plausibility.
+        let l2 = l2_bytes();
+        let llc = llc_bytes();
+        assert!(l2 >= 16 * 1024, "l2 {l2}");
+        assert!(llc >= l2, "llc {llc} < l2 {l2}");
+        assert!(llc <= 16 * 1024 * 1024 * 1024usize, "llc {llc}");
+    }
+
+    #[test]
+    fn chunks_for_floors_small_and_scales_large() {
+        // Small totals: the adaptive floor wins — historical plans are
+        // preserved bit for bit.
+        assert_eq!(chunks_for(0, 256 * 1024, 8), 8);
+        assert_eq!(chunks_for(4_000, 256 * 1024, 32), 32);
+        // Large totals: one chunk per target-sized slab.
+        assert_eq!(chunks_for(100 * 256 * 1024, 256 * 1024, 8), 100);
+        // Cap: absurd totals cannot explode the scheduler.
+        assert_eq!(chunks_for(usize::MAX / 2, 1, 4), MAX_CHUNKS);
+        // Zero target is treated as 1 byte, not a division by zero.
+        assert_eq!(chunks_for(10, 0, 4), 10);
+    }
+
+    #[test]
+    fn default_target_is_an_l2_fraction() {
+        // Without overrides in play the auto target sits in the probed
+        // hierarchy. (The config/env overrides are process-global, so
+        // they are exercised in `tests/kernels.rs`, not here — lib tests
+        // share the process.)
+        if std::env::var_os("RANKSVM_CHUNK_KIB").is_some() {
+            return; // an external override is in force; nothing to pin
+        }
+        let t = chunk_target_bytes();
+        assert!(t >= 64 * 1024, "target {t}");
+        assert!(t <= llc_bytes(), "target {t}");
+    }
+}

@@ -29,6 +29,7 @@
 //! and stays available unconditionally (the AOT pipeline and its tests
 //! don't need a device runtime).
 
+pub mod cache;
 mod manifest;
 pub mod plan;
 pub mod pool;

@@ -65,6 +65,13 @@ use std::thread::JoinHandle;
 /// bounded interval during which it blocks on task completion.
 pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
 
+/// Slots each worker reserves in its own deque when it starts, so the
+/// backing allocation is first-touched by the thread that owns the
+/// deque (on NUMA hosts the pages then sit on that worker's node rather
+/// than the constructing thread's). 64 covers the largest adaptive
+/// chunk plan; cache-sized plans beyond it grow in place on first use.
+const DEQUE_SEED_CAPACITY: usize = 64;
+
 type StaticTask = Box<dyn FnOnce() + Send + 'static>;
 
 /// Cumulative scheduler counters (always on since the telemetry layer
@@ -236,6 +243,11 @@ impl WorkerPool {
             batch: Mutex::new(()),
             stats: StatCounters::default(),
         });
+        // Slot 0 belongs to the batch-submitting thread — which is the
+        // constructing thread's role — so its first touch happens here;
+        // every spawned worker first-touches its own deque in
+        // `worker_loop`.
+        shared.deques[0].lock().unwrap().reserve(DEQUE_SEED_CAPACITY);
         let handles = (1..n_threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
@@ -393,6 +405,10 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &PoolShared, me: usize) {
+    // First-touch this worker's scratch: reserving from the owning
+    // thread allocates the deque's buffer on this worker's NUMA node
+    // before any batch is dealt into it.
+    shared.deques[me].lock().unwrap().reserve(DEQUE_SEED_CAPACITY);
     let mut rng = StealRng::new(me);
     let mut seen_epoch = 0u64;
     loop {

@@ -1,0 +1,203 @@
+//! Kernel-dispatch lockdown (docs/DETERMINISM.md "Kernel dispatch"):
+//! the scalar reference fold and the AVX2 path must be **bit-identical**
+//! — per kernel call on adversarial CSR shapes, and end to end on
+//! trained weights at 1/2/8 threads with the dispatch forced both ways.
+//! Plus the cache-aware chunk-target knob, which may never move a bit.
+//!
+//! `simd::force` and `cache::set_chunk_target_kib` are process-global,
+//! so every test that touches them serializes on [`dispatch_lock`] and
+//! restores the default state before releasing it.
+
+use ranksvm::coordinator::{train, Method, TrainConfig};
+use ranksvm::data::synthetic;
+use ranksvm::linalg::simd::{self, Kernel};
+use ranksvm::linalg::CsrMatrix;
+use ranksvm::runtime::cache;
+use ranksvm::util::rng::Rng;
+use std::sync::Mutex;
+
+/// One lock for all process-global dispatch state in this binary.
+fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the kernel dispatch pinned to `k`, restoring lazy
+/// resolution afterwards (also on panic-free early returns).
+fn with_kernel<T>(k: Kernel, f: impl FnOnce() -> T) -> T {
+    simd::force(Some(k));
+    let out = f();
+    simd::force(None);
+    out
+}
+
+/// Adversarial value pool: denormals, ±0.0, huge and tiny magnitudes —
+/// everything that could expose a rounding-order difference between the
+/// two paths (NaN excluded by the crate's NaN-free data contract).
+fn adversarial_value(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f64::MIN_POSITIVE / 2.0,  // subnormal
+        3 => -f64::MIN_POSITIVE / 4.0, // subnormal
+        4 => 1e300,
+        5 => -1e-300,
+        _ => rng.normal(),
+    }
+}
+
+/// A CSR fixture with deliberately nasty row shapes: empty rows, a fully
+/// dense row, rows of every `len % 4` remainder class, adversarial
+/// values throughout.
+fn adversarial_matrix(rng: &mut Rng, rows: usize, cols: usize) -> CsrMatrix {
+    let mut triplets = Vec::new();
+    for r in 0..rows {
+        let nnz = match r % 7 {
+            0 => 0,    // empty row
+            1 => cols, // dense row
+            k => k,    // remainder classes 1..=6 around the 4-wide unroll
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        while seen.len() < nnz {
+            seen.insert(rng.below(cols));
+        }
+        for c in seen {
+            triplets.push((r, c, adversarial_value(rng)));
+        }
+    }
+    CsrMatrix::from_triplets(rows, cols, triplets)
+}
+
+#[test]
+fn forced_kernels_agree_bitwise_on_adversarial_matrices() {
+    let _guard = dispatch_lock();
+    let mut rng = Rng::new(0xD1FF);
+    for (rows, cols) in [(1usize, 1usize), (23, 5), (64, 64), (301, 17)] {
+        let x = adversarial_matrix(&mut rng, rows, cols);
+        let w: Vec<f64> = (0..cols).map(|_| adversarial_value(&mut rng)).collect();
+        let v: Vec<f64> = (0..rows).map(|_| adversarial_value(&mut rng)).collect();
+
+        let (mut p_s, mut p_v) = (vec![0.0; rows], vec![0.0; rows]);
+        with_kernel(Kernel::Scalar, || x.matvec(&w, &mut p_s));
+        with_kernel(Kernel::Simd, || x.matvec(&w, &mut p_v));
+        for (r, (a, b)) in p_s.iter().zip(&p_v).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{rows}x{cols} matvec row {r}");
+        }
+
+        let (mut g_s, mut g_v) = (vec![0.0; cols], vec![0.0; cols]);
+        with_kernel(Kernel::Scalar, || x.matvec_t(&v, &mut g_s));
+        with_kernel(Kernel::Simd, || x.matvec_t(&v, &mut g_v));
+        for (c, (a, b)) in g_s.iter().zip(&g_v).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{rows}x{cols} matvec_t col {c}");
+        }
+
+        for r in 0..rows {
+            let a = with_kernel(Kernel::Scalar, || x.row_dot(r, &w));
+            let b = with_kernel(Kernel::Simd, || x.row_dot(r, &w));
+            assert_eq!(a.to_bits(), b.to_bits(), "{rows}x{cols} row_dot {r}");
+        }
+    }
+}
+
+/// The acceptance differential: whole training runs, dispatch forced
+/// scalar and SIMD, at 1/2/8 threads, on a global and a grouped fixture
+/// — every weight vector byte-identical. (On hosts without AVX2 the
+/// forced-SIMD wrappers fall through to scalar, so the assertion is
+/// trivially true there; CI runs the leg on AVX2 hardware.)
+#[test]
+fn trained_weights_are_byte_identical_across_kernels_and_threads() {
+    let _guard = dispatch_lock();
+    for (ds, tag) in [
+        (synthetic::cadata_like(400, 2101), "global"),
+        (synthetic::queries(15, 16, 6, 2102), "grouped"),
+    ] {
+        let mut reference: Option<Vec<f64>> = None;
+        for threads in [1usize, 2, 8] {
+            let cfg = TrainConfig {
+                method: Method::Tree,
+                lambda: 0.1,
+                epsilon: 1e-3,
+                n_threads: threads,
+                ..Default::default()
+            };
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let out = with_kernel(kernel, || train(&ds, &cfg).unwrap());
+                assert!(out.converged, "{tag}: {threads} threads, {}", kernel.name());
+                match &reference {
+                    None => reference = Some(out.model.w),
+                    Some(w) => assert_eq!(
+                        &out.model.w,
+                        w,
+                        "{tag}: {threads} threads, {} kernel diverged",
+                        kernel.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Forcing a kernel pins dispatch; releasing it re-resolves to something
+/// runnable; forcing SIMD on a scalar-only host is a safe no-op.
+#[test]
+fn force_pins_and_releases_the_dispatch() {
+    let _guard = dispatch_lock();
+    with_kernel(Kernel::Scalar, || assert_eq!(simd::active(), Kernel::Scalar));
+    with_kernel(Kernel::Simd, || assert_eq!(simd::active(), Kernel::Simd));
+    // After release, lazy resolution must yield a runnable kernel again.
+    if simd::active() == Kernel::Simd {
+        assert!(simd::simd_supported());
+    }
+}
+
+/// Forced-kernel passes land on the matching registry counter — the
+/// observability story for "which path did my run take".
+#[test]
+fn kernel_passes_hit_the_dispatch_counters() {
+    let _guard = dispatch_lock();
+    let x = CsrMatrix::from_triplets(3, 4, vec![(0, 1, 2.0), (2, 3, -1.0)]);
+    let w = vec![1.0; 4];
+    let mut p = vec![0.0; 3];
+    let before = ranksvm::obs::metrics::KERNEL_SCALAR_PASSES.get();
+    with_kernel(Kernel::Scalar, || x.matvec(&w, &mut p));
+    let after = ranksvm::obs::metrics::KERNEL_SCALAR_PASSES.get();
+    assert!(after > before, "scalar pass not counted: {before} → {after}");
+    if simd::simd_supported() {
+        let before = ranksvm::obs::metrics::KERNEL_SIMD_PASSES.get();
+        with_kernel(Kernel::Simd, || x.matvec(&w, &mut p));
+        let after = ranksvm::obs::metrics::KERNEL_SIMD_PASSES.get();
+        assert!(after > before, "simd pass not counted: {before} → {after}");
+    }
+}
+
+/// The cache-aware chunk target is a pure speed knob: absurdly small and
+/// absurdly large targets must train byte-identical models (chunk counts
+/// shape integer-exact decompositions only — docs/DETERMINISM.md).
+#[test]
+fn chunk_target_cannot_change_any_trained_bit() {
+    let _guard = dispatch_lock();
+    let ds = synthetic::cadata_like(500, 2203);
+    let mut reference: Option<Vec<f64>> = None;
+    for kib in [0usize, 4, 64, 1 << 20] {
+        // Through the config, the way the CLI wires --chunk-target-kib
+        // (train() installs it process-globally at startup).
+        let cfg = TrainConfig {
+            method: Method::Tree,
+            lambda: 0.1,
+            epsilon: 1e-3,
+            n_threads: 4,
+            chunk_target_kib: kib,
+            ..Default::default()
+        };
+        let out = train(&ds, &cfg).unwrap();
+        match &reference {
+            None => reference = Some(out.model.w),
+            Some(w) => assert_eq!(&out.model.w, w, "chunk target {kib} KiB moved a bit"),
+        }
+    }
+    cache::set_chunk_target_kib(0);
+    // And the sizing rule itself engages: a big working set at a small
+    // target yields more chunks than the adaptive floor.
+    let floor = ranksvm::linalg::ops::adaptive_chunks(4);
+    assert!(cache::chunks_for(64 << 20, 256 * 1024, floor) > floor);
+}

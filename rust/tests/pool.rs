@@ -7,7 +7,7 @@
 use ranksvm::compute::{ComputeBackend, NativeBackend, ParallelBackend};
 use ranksvm::coordinator::{train, Method, TrainConfig};
 use ranksvm::data::{libsvm, synthetic};
-use ranksvm::linalg::ops::{argsort, argsort_into, par_argsort_into, PAR_SORT_MIN};
+use ranksvm::linalg::ops::{argsort, argsort_into, par_argsort_into, SortScratch, PAR_SORT_MIN};
 use ranksvm::losses::{count_comparable_pairs, RankingOracle, ShardedTreeOracle, TreeOracle};
 use ranksvm::runtime::WorkerPool;
 use ranksvm::util::rng::Rng;
@@ -93,7 +93,7 @@ fn par_argsort_matches_serial_across_repeated_pool_use() {
     for threads in [1usize, 2, 8] {
         let pool = WorkerPool::new(threads);
         let mut idx = Vec::new();
-        let mut scratch = Vec::new();
+        let mut scratch = SortScratch::default();
         for round in 0..10 {
             let m = PAR_SORT_MIN / 2 + rng.below(3 * PAR_SORT_MIN);
             let v: Vec<f64> = match round % 3 {

@@ -172,6 +172,31 @@ fn converter_output_is_chunk_size_invariant_and_bounded() {
     }
 }
 
+/// Regression for the spill-copy read buffer: it used to be clamped to
+/// 8 MiB no matter what chunk size was requested, silently splitting one
+/// configured read into many. A conversion whose value spill exceeds
+/// 8 MiB, copied with a >8 MiB chunk request, must produce bytes
+/// identical to the default conversion (and the buffer sizing itself is
+/// unit-pinned in `data/store/writer.rs`).
+#[test]
+fn chunk_requests_above_8mib_copy_big_spills_byte_identically() {
+    let ds = synthetic::reuters_like_with(40_000, 2000, 30, 92);
+    let text = tmp("bigspill.libsvm");
+    libsvm::write(&ds, &text).unwrap();
+    let out_default = tmp("bigspill_default.pstore");
+    let out_big = tmp("bigspill_big.pstore");
+    let stats = convert_libsvm(&text, &out_default, &ConvertOptions::default()).unwrap();
+    // The value spill really is bigger than the old 8 MiB buffer cap.
+    assert!(stats.nnz * 8 > 8 << 20, "fixture too small: nnz={}", stats.nnz);
+    let big = ConvertOptions { chunk_bytes: 32 << 20, n_threads: 1 };
+    convert_libsvm(&text, &out_big, &big).unwrap();
+    assert_eq!(
+        std::fs::read(&out_default).unwrap(),
+        std::fs::read(&out_big).unwrap(),
+        "a >8 MiB chunk request changed the output bytes"
+    );
+}
+
 #[test]
 fn corrupted_stores_are_rejected() {
     let ds = synthetic::queries(6, 10, 4, 77);
