@@ -25,7 +25,13 @@
 //! Dispatch is resolved once per process (`RANKSVM_KERNEL` env override
 //! `auto`/`scalar`/`simd`, then CPU feature detection — AVX2 on x86_64,
 //! scalar everywhere else) and cached in one atomic; [`force`] lets
-//! tests and benches pin a path. Each kernel *pass* (a whole matvec /
+//! tests and benches pin a path. Neither resolution nor [`force`] ever
+//! hands out [`Kernel::Simd`] on a host that cannot run it, and because
+//! the kernel entry points are safe pub fns taking a caller-supplied
+//! [`Kernel`], each `Simd` arm re-checks the cached cpuid word before
+//! entering its `target_feature` body anyway — a stray `Kernel::Simd`
+//! value degrades to the bit-identical scalar fold, never to illegal
+//! instructions. Each kernel *pass* (a whole matvec /
 //! gradient scatter, not each row) bumps a registry counter
 //! (`ranksvm_kernel_*_passes_total`, docs/OBSERVABILITY.md "Kernel
 //! dispatch") so the chosen path is visible in `--trace` runs and serve
@@ -100,9 +106,14 @@ fn encode(k: Kernel) -> u8 {
 
 /// Pin the dispatch decision (tests / benches), or `None` to drop back
 /// to lazy env + feature resolution. Forcing [`Kernel::Simd`] on a host
-/// without AVX2 support makes the wrappers fall through to the scalar
-/// reference — results are identical either way.
+/// without AVX2 support downgrades to [`Kernel::Scalar`], exactly like
+/// `RANKSVM_KERNEL=simd` — [`active`] never hands out a kernel this
+/// host cannot execute, and the two are bit-identical anyway.
 pub fn force(k: Option<Kernel>) {
+    let k = match k {
+        Some(Kernel::Simd) if !simd_supported() => Some(Kernel::Scalar),
+        other => other,
+    };
     STATE.store(k.map(encode).unwrap_or(UNRESOLVED), Ordering::Relaxed);
 }
 
@@ -143,13 +154,25 @@ const GATHER_MAX: usize = i32::MAX as usize;
 /// gather.
 #[inline]
 pub fn sparse_dot(k: Kernel, idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
+    assert_eq!(idx.len(), val.len(), "sparse_dot: idx/val length mismatch");
     match k {
         Kernel::Simd => {
             #[cfg(target_arch = "x86_64")]
             {
-                if w.len() <= GATHER_MAX {
-                    // SAFETY: `Kernel::Simd` is only resolved or forced
-                    // effective when AVX2 was detected at runtime.
+                // `k` is caller-supplied on a safe pub fn, so the
+                // dispatch invariant (resolve/force never hand out an
+                // unrunnable `Simd`) cannot carry the safety proof by
+                // itself: re-check the cached cpuid word, and bounds-
+                // check the gather indices — the scalar fold bounds-
+                // checks `w[idx[k]]` per element, and an out-of-bounds
+                // gather must panic the same way, never read wild.
+                if simd_supported()
+                    && w.len() <= GATHER_MAX
+                    && idx.iter().all(|&j| (j as usize) < w.len())
+                {
+                    // SAFETY: AVX2 verified just above; lengths are
+                    // asserted equal and every gather index is in
+                    // bounds for `w`, which fits i32 offsets.
                     return unsafe { x86::sparse_dot_avx2(idx, val, w) };
                 }
             }
@@ -163,15 +186,19 @@ pub fn sparse_dot(k: Kernel, idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
 /// [`crate::linalg::ops::dot`].
 #[inline]
 pub fn dense_dot(k: Kernel, a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), b.len(), "dense_dot: length mismatch");
     match k {
         Kernel::Simd => {
             #[cfg(target_arch = "x86_64")]
             {
-                // SAFETY: Simd is only effective with AVX2 detected.
-                return unsafe { x86::dense_dot_avx2(a, b) };
+                // Caller-supplied `k`: re-check the cached cpuid word
+                // before the `target_feature` body (see sparse_dot).
+                if simd_supported() {
+                    // SAFETY: AVX2 verified just above; lengths
+                    // asserted equal.
+                    return unsafe { x86::dense_dot_avx2(a, b) };
+                }
             }
-            #[cfg(not(target_arch = "x86_64"))]
             dense_dot_scalar(a, b)
         }
         Kernel::Scalar => dense_dot_scalar(a, b),
@@ -185,14 +212,23 @@ pub fn dense_dot(k: Kernel, a: &[f64], b: &[f64]) -> f64 {
 /// historical scalar loop exactly.
 #[inline]
 pub fn scatter_axpy(k: Kernel, idx: &[u32], val: &[f64], alpha: f64, out: &mut [f64]) {
+    assert_eq!(idx.len(), val.len(), "scatter_axpy: idx/val length mismatch");
     match k {
         Kernel::Simd => {
             #[cfg(target_arch = "x86_64")]
             {
-                // SAFETY: Simd is only effective with AVX2 detected.
-                return unsafe { x86::scatter_axpy_avx2(idx, val, alpha, out) };
+                // Caller-supplied `k`: re-check the cached cpuid word
+                // before the `target_feature` body (see sparse_dot).
+                // Out-of-bounds `idx` needs no pre-scan here — the
+                // AVX2 body indexes `out` through safe bounds-checked
+                // subscripts, panicking on the same entry, after the
+                // same prior side effects, as the scalar loop.
+                if simd_supported() {
+                    // SAFETY: AVX2 verified just above; lengths
+                    // asserted equal.
+                    return unsafe { x86::scatter_axpy_avx2(idx, val, alpha, out) };
+                }
             }
-            #[cfg(not(target_arch = "x86_64"))]
             scatter_axpy_scalar(idx, val, alpha, out)
         }
         Kernel::Scalar => scatter_axpy_scalar(idx, val, alpha, out),
@@ -258,7 +294,9 @@ mod x86 {
     use std::arch::x86_64::*;
 
     /// # Safety
-    /// Caller must have verified AVX2 support and `w.len() <= i32::MAX`.
+    /// Caller must have verified AVX2 support, `idx.len() == val.len()`,
+    /// `w.len() <= i32::MAX`, and that every `idx` entry is in bounds
+    /// for `w` (the gather takes no bounds checks).
     #[target_feature(enable = "avx2")]
     pub unsafe fn sparse_dot_avx2(idx: &[u32], val: &[f64], w: &[f64]) -> f64 {
         debug_assert_eq!(idx.len(), val.len());
@@ -284,7 +322,7 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support and `a.len() == b.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dense_dot_avx2(a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
@@ -306,7 +344,9 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support and
+    /// `idx.len() == val.len()` (out-of-range `idx` entries panic via
+    /// the bounds-checked `out` subscript, same as the scalar loop).
     #[target_feature(enable = "avx2")]
     pub unsafe fn scatter_axpy_avx2(idx: &[u32], val: &[f64], alpha: f64, out: &mut [f64]) {
         debug_assert_eq!(idx.len(), val.len());
@@ -437,5 +477,63 @@ mod tests {
         if active() == Kernel::Simd {
             assert!(simd_supported());
         }
+    }
+
+    #[test]
+    fn force_never_pins_an_unrunnable_kernel() {
+        // force(Simd) on a non-AVX2 host must downgrade to Scalar, so
+        // active() can always be executed as-is. (Runs concurrently
+        // with other tests in this binary, but the invariant holds
+        // under any interleaving: no store ever encodes an unrunnable
+        // Simd.)
+        force(Some(Kernel::Simd));
+        let pinned = active();
+        force(None);
+        if simd_supported() {
+            assert_eq!(pinned, Kernel::Simd);
+        } else {
+            assert_eq!(pinned, Kernel::Scalar);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn sparse_dot_rejects_mismatched_lengths_in_release() {
+        // Release-mode assert, not debug_assert: a mismatch must never
+        // reach the 4-wide loads.
+        sparse_dot(active(), &[0, 1, 2, 3], &[1.0; 3], &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn dense_dot_rejects_mismatched_lengths_in_release() {
+        dense_dot(active(), &[1.0; 5], &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn scatter_axpy_rejects_mismatched_lengths_in_release() {
+        let mut out = vec![0.0; 4];
+        scatter_axpy(active(), &[0, 1, 2, 3], &[1.0; 3], 2.0, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "index out of bounds")]
+    fn sparse_dot_panics_on_out_of_bounds_index_even_when_forced_simd() {
+        // An index past w.len() must panic exactly like the scalar
+        // fold's bounds-checked subscript — never feed the AVX2 gather.
+        let idx = [0u32, 9, 1, 2];
+        let val = [1.0f64; 4];
+        let w = [1.0f64; 3];
+        sparse_dot(Kernel::Simd, &idx, &val, &w);
+    }
+
+    #[test]
+    #[should_panic(expected = "index out of bounds")]
+    fn scatter_axpy_panics_on_out_of_bounds_index_even_when_forced_simd() {
+        let idx = [0u32, 9, 1, 2];
+        let val = [1.0f64; 4];
+        let mut out = vec![0.0f64; 3];
+        scatter_axpy(Kernel::Simd, &idx, &val, 1.0, &mut out);
     }
 }

@@ -23,12 +23,20 @@ fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
 }
 
 /// Run `f` with the kernel dispatch pinned to `k`, restoring lazy
-/// resolution afterwards (also on panic-free early returns).
+/// resolution afterwards — including when `f` panics. Without the drop
+/// guard, one failing assertion would leave the kernel globally forced
+/// for every later test in this binary ([`dispatch_lock`] deliberately
+/// ignores poisoning), silently pinning "auto" tests to one path.
 fn with_kernel<T>(k: Kernel, f: impl FnOnce() -> T) -> T {
+    struct Unforce;
+    impl Drop for Unforce {
+        fn drop(&mut self) {
+            simd::force(None);
+        }
+    }
+    let _restore = Unforce;
     simd::force(Some(k));
-    let out = f();
-    simd::force(None);
-    out
+    f()
 }
 
 /// Adversarial value pool: denormals, ±0.0, huge and tiny magnitudes —
@@ -101,9 +109,9 @@ fn forced_kernels_agree_bitwise_on_adversarial_matrices() {
 
 /// The acceptance differential: whole training runs, dispatch forced
 /// scalar and SIMD, at 1/2/8 threads, on a global and a grouped fixture
-/// — every weight vector byte-identical. (On hosts without AVX2 the
-/// forced-SIMD wrappers fall through to scalar, so the assertion is
-/// trivially true there; CI runs the leg on AVX2 hardware.)
+/// — every weight vector byte-identical. (On hosts without AVX2,
+/// `force(Simd)` downgrades to scalar, so the assertion is trivially
+/// true there; CI runs the leg on AVX2 hardware.)
 #[test]
 fn trained_weights_are_byte_identical_across_kernels_and_threads() {
     let _guard = dispatch_lock();
@@ -138,12 +146,18 @@ fn trained_weights_are_byte_identical_across_kernels_and_threads() {
 }
 
 /// Forcing a kernel pins dispatch; releasing it re-resolves to something
-/// runnable; forcing SIMD on a scalar-only host is a safe no-op.
+/// runnable; forcing SIMD on a scalar-only host safely downgrades to
+/// scalar rather than pinning a kernel the host cannot execute.
 #[test]
 fn force_pins_and_releases_the_dispatch() {
     let _guard = dispatch_lock();
     with_kernel(Kernel::Scalar, || assert_eq!(simd::active(), Kernel::Scalar));
-    with_kernel(Kernel::Simd, || assert_eq!(simd::active(), Kernel::Simd));
+    let runnable = if simd::simd_supported() {
+        Kernel::Simd
+    } else {
+        Kernel::Scalar
+    };
+    with_kernel(Kernel::Simd, || assert_eq!(simd::active(), runnable));
     // After release, lazy resolution must yield a runnable kernel again.
     if simd::active() == Kernel::Simd {
         assert!(simd::simd_supported());
