@@ -1,0 +1,174 @@
+//! Model-selection sweep — the parallel warm-started λ-path engine
+//! (`coordinator::modelsel`, docs/DETERMINISM.md "model selection").
+//!
+//! Fixture: cadata-like global ranking data. Three runs over the same
+//! k-fold × λ grid: the serial cold reference (`cv_serial`, warm start
+//! off — every (fold, λ) cell trained from scratch), the serial warm
+//! path (each λ seeded by the previous point's cutting-plane bundle),
+//! and the parallel warm sweep (`cv_sweep`) on every available worker.
+//! Before timing anything the bench asserts the determinism contract —
+//! the parallel warm report must be bit-identical to the serial warm
+//! report, fold models included — and that warm and cold paths select
+//! the same λ with the warm path spending no more solver iterations.
+//! The tracked snapshot `BENCH_modelsel_sweep.json` is written through
+//! the shared envelope; `RANKSVM_SNAPSHOT_SCHEMA_ONLY=1` emits the
+//! placeholder schema and exits.
+
+mod common;
+
+use common::{fmt_secs, full_scale, header, record};
+use ranksvm::coordinator::{cv_serial, cv_sweep, CvConfig, CvReport, Method, TrainConfig};
+use ranksvm::data::synthetic;
+use ranksvm::util::json::Json;
+
+/// Snapshot fixture parameters (key set is part of the schema gate).
+/// `kernel` records the resolved compute-kernel dispatch the timings
+/// ran on (docs/OBSERVABILITY.md "Kernel dispatch").
+fn params(m: usize, folds: usize, lambdas: usize, threads: usize) -> Json {
+    Json::obj(vec![
+        ("m", m.into()),
+        ("folds", folds.into()),
+        ("lambdas", lambdas.into()),
+        ("threads", threads.into()),
+        ("kernel", ranksvm::linalg::simd::active().name().into()),
+    ])
+}
+
+/// One snapshot metric row (null values in schema-only mode).
+fn metric_row(
+    cold_secs: Json,
+    warm_secs: Json,
+    sweep_secs: Json,
+    cold_iters: Json,
+    warm_iters: Json,
+) -> Json {
+    Json::obj(vec![
+        ("cold_secs", cold_secs),
+        ("warm_secs", warm_secs),
+        ("sweep_secs", sweep_secs),
+        ("cold_iters", cold_iters),
+        ("warm_iters", warm_iters),
+    ])
+}
+
+/// The parallel engine is *defined* to reproduce the serial one — check
+/// every field the report carries, fold models byte-for-byte.
+fn assert_identical(a: &CvReport, b: &CvReport) {
+    assert_eq!(a.selected_lambda, b.selected_lambda, "selected λ diverged");
+    assert_eq!(a.total_iterations, b.total_iterations, "iteration totals diverged");
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.lambda, pb.lambda);
+        assert_eq!(pa.fold_errors, pb.fold_errors, "λ={} fold errors diverged", pa.lambda);
+        assert_eq!(pa.fold_aucs, pb.fold_aucs, "λ={} fold AUCs diverged", pa.lambda);
+        assert_eq!(pa.fold_iterations, pb.fold_iterations);
+        assert_eq!(pa.fold_weights, pb.fold_weights, "λ={} fold models diverged", pa.lambda);
+    }
+}
+
+fn main() {
+    let threads = ranksvm::util::resolve_threads(0);
+    let (m, folds) = if full_scale() { (20_000, 5) } else { (3_000, 3) };
+    let grid = [1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+    if common::schema_only() {
+        let n = || Json::Null;
+        common::write_snapshot(
+            "modelsel_sweep",
+            true,
+            params(m, folds, grid.len(), threads),
+            vec![metric_row(n(), n(), n(), n(), n())],
+        );
+        return;
+    }
+    let ds = synthetic::cadata_like(m, 42);
+    let base = TrainConfig { method: Method::Tree, n_threads: threads, ..Default::default() };
+    let warm_cfg = CvConfig::new(base.clone(), grid.to_vec(), folds, 7);
+    let cold_cfg = CvConfig { warm_start: false, ..warm_cfg.clone() };
+
+    header(&format!(
+        "Model selection: {folds}-fold × {} λ path, m = {m}, {threads} threads",
+        grid.len()
+    ));
+
+    let t = std::time::Instant::now();
+    let cold = cv_serial(&ds, &cold_cfg).unwrap();
+    let t_cold = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let warm = cv_serial(&ds, &warm_cfg).unwrap();
+    let t_warm = t.elapsed().as_secs_f64();
+
+    let t = std::time::Instant::now();
+    let sweep = cv_sweep(&ds, &warm_cfg).unwrap();
+    let t_sweep = t.elapsed().as_secs_f64();
+
+    // Contracts before the table: parallel ≡ serial, warm ≤ cold work,
+    // both paths agree on the winner.
+    assert_identical(&warm, &sweep);
+    assert_eq!(
+        cold.selected_lambda, warm.selected_lambda,
+        "warm and cold paths disagree on λ"
+    );
+    assert!(
+        warm.total_iterations <= cold.total_iterations,
+        "warm start spent more iterations ({}) than cold ({})",
+        warm.total_iterations,
+        cold.total_iterations
+    );
+
+    println!(
+        "{:>24} {:>12} {:>12} {:>12}",
+        "engine", "wall", "iters", "vs cold"
+    );
+    println!(
+        "{:>24} {:>12} {:>12} {:>12}",
+        "serial cold", fmt_secs(t_cold), cold.total_iterations, "1.00×"
+    );
+    println!(
+        "{:>24} {:>12} {:>12} {:>11.2}×",
+        "serial warm",
+        fmt_secs(t_warm),
+        warm.total_iterations,
+        t_cold / t_warm.max(1e-12)
+    );
+    println!(
+        "{:>24} {:>12} {:>12} {:>11.2}×",
+        format!("parallel warm ({threads}t)"),
+        fmt_secs(t_sweep),
+        sweep.total_iterations,
+        t_cold / t_sweep.max(1e-12)
+    );
+    println!(
+        "selected λ = {} (all engines agree); warm saved {} iterations",
+        warm.selected_lambda,
+        cold.total_iterations - warm.total_iterations
+    );
+
+    let rec = vec![
+        ("bench", Json::Str("modelsel_sweep".into())),
+        ("m", m.into()),
+        ("folds", folds.into()),
+        ("lambdas", grid.len().into()),
+        ("threads", threads.into()),
+        ("cold_secs", t_cold.into()),
+        ("warm_secs", t_warm.into()),
+        ("sweep_secs", t_sweep.into()),
+        ("cold_iters", cold.total_iterations.into()),
+        ("warm_iters", warm.total_iterations.into()),
+        ("selected_lambda", warm.selected_lambda.into()),
+    ];
+    record("modelsel_sweep", Json::obj(rec));
+
+    common::write_snapshot(
+        "modelsel_sweep",
+        false,
+        params(m, folds, grid.len(), threads),
+        vec![metric_row(
+            t_cold.into(),
+            t_warm.into(),
+            t_sweep.into(),
+            cold.total_iterations.into(),
+            warm.total_iterations.into(),
+        )],
+    );
+}

@@ -90,6 +90,27 @@ pub struct IterStats {
     pub oracle_secs: f64,
 }
 
+/// A reusable cutting-plane model: the planes and offsets accumulated
+/// by a finished [`optimize_warm`] run, plus its best iterate.
+///
+/// Each plane `⟨·, aᵢ⟩ + bᵢ` is a first-order minorant of the
+/// *empirical risk* `R_emp` alone — λ never enters a cut, only the
+/// master problem's regularizer — so a bundle collected at one λ is a
+/// valid lower model of `R_emp` at **every** λ. That is what makes
+/// warm-starting a regularization path sound: see the convergence
+/// contract on [`optimize_warm`].
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    /// Cutting-plane gradients `aᵢ` (dense, `dim()`-length each).
+    pub planes: Vec<Vec<f64>>,
+    /// Matching offsets `bᵢ = R(wᵢ) − ⟨wᵢ, aᵢ⟩`.
+    pub offsets: Vec<f64>,
+    /// Best iterate `w_b` of the run that produced the bundle (a
+    /// convenient Newton-style seed for solvers that cannot consume
+    /// planes).
+    pub w: Vec<f64>,
+}
+
 /// Optimization result.
 #[derive(Clone, Debug)]
 pub struct BmrmResult {
@@ -126,16 +147,95 @@ pub fn optimize_observed<O: ScoreOracle>(
     w0: Vec<f64>,
     observer: &mut dyn FnMut(&IterStats, &mut O),
 ) -> BmrmResult {
+    optimize_warm_observed(oracle, cfg, w0, None, observer).0
+}
+
+/// [`optimize`] seeded from a previous run's cutting-plane model — the
+/// warm-start entry point for regularization-path sweeps
+/// (`coordinator::modelsel`).
+///
+/// With `warm = None` this is *exactly* [`optimize`]: the cold path is
+/// bit-identical, plus the returned [`Bundle`] for chaining. With
+/// `warm = Some(bundle)` the bundle's planes are preloaded into a fresh
+/// master problem at the new λ (Gram columns recomputed; the QP dual is
+/// λ-dependent, so α is re-solved from scratch) and the first iterate
+/// `w_1` is the preloaded master's minimizer instead of `w0`.
+///
+/// # Convergence contract
+///
+/// Warm and cold starts reach the **same ε-optimum**. Every preloaded
+/// plane minorizes `R_emp` (planes never depend on λ), so the master's
+/// lower bound satisfies `J_t(w_t) ≤ J* = min J` throughout, exactly as
+/// in a cold run, and the termination test `J(w_b) − J_t(w_t) < ε`
+/// therefore guarantees `J(w_b) ≤ J* + ε` on both paths. The two final
+/// objectives differ by at most ε (each is within `[J*, J* + ε]`);
+/// the *iterates* may differ, the *guarantee* does not. Warm starts
+/// change only how many oracle calls the guarantee costs —
+/// `BmrmResult::iterations` counts oracle calls made by *this* run
+/// (preloaded planes are free), which is what the model-selection
+/// differential tests compare.
+///
+/// The returned bundle contains the preloaded planes *plus* this run's
+/// new cuts, so chaining along a sorted λ path accumulates one growing
+/// model of `R_emp`.
+pub fn optimize_warm<O: ScoreOracle>(
+    oracle: &mut O,
+    cfg: &BmrmConfig,
+    w0: Vec<f64>,
+    warm: Option<&Bundle>,
+) -> (BmrmResult, Bundle) {
+    optimize_warm_observed(oracle, cfg, w0, warm, &mut |_, _| {})
+}
+
+/// [`optimize_warm`] with the per-iteration observer of
+/// [`optimize_observed`].
+pub fn optimize_warm_observed<O: ScoreOracle>(
+    oracle: &mut O,
+    cfg: &BmrmConfig,
+    w0: Vec<f64>,
+    warm: Option<&Bundle>,
+    observer: &mut dyn FnMut(&IterStats, &mut O),
+) -> (BmrmResult, Bundle) {
     let n = oracle.dim();
     assert_eq!(w0.len(), n);
     let lambda = cfg.lambda;
 
     let mut qp = qp::BundleQp::new(lambda);
-    // Stored plane vectors a_i (needed for Gram columns and w(α)).
+    // Stored plane vectors a_i (needed for Gram columns and w(α)) and
+    // their offsets b_i (kept so the bundle can be handed on).
     let mut planes: Vec<Vec<f64>> = Vec::new();
+    let mut offsets: Vec<f64> = Vec::new();
 
     let mut w_b = w0.clone();
     let mut w_cur = w0;
+
+    // Warm start: preload the previous run's planes into the new master
+    // problem and move the first iterate to its minimizer. j_best stays
+    // +∞ — the best-iterate track only ever holds points this run has
+    // actually evaluated, so the gap test below keeps its cold-start
+    // meaning.
+    if let Some(bundle) = warm {
+        debug_assert_eq!(bundle.planes.len(), bundle.offsets.len());
+        for (a_i, &b_i) in bundle.planes.iter().zip(&bundle.offsets) {
+            assert_eq!(a_i.len(), n, "warm-start plane dimension mismatch");
+            let mut col: Vec<f64> = planes.iter().map(|aj| ops::dot(a_i, aj)).collect();
+            col.push(ops::dot(a_i, a_i));
+            planes.push(a_i.clone());
+            offsets.push(b_i);
+            qp.add_plane(b_i, col);
+        }
+        if !planes.is_empty() {
+            qp.solve(cfg.qp_tol, cfg.qp_max_sweeps);
+            let alpha = qp.alpha();
+            let mut w_next = vec![0.0; n];
+            for (k, ai) in planes.iter().enumerate() {
+                if alpha[k] != 0.0 {
+                    ops::axpy(-alpha[k] / (2.0 * lambda), ai, &mut w_next);
+                }
+            }
+            w_cur = w_next;
+        }
+    }
     // Scores at w_b, kept for the line search.
     let mut p_b: Option<Vec<f64>> = None;
 
@@ -205,6 +305,7 @@ pub fn optimize_observed<O: ScoreOracle>(
         let mut col: Vec<f64> = planes.iter().map(|ai| ops::dot(&a_t, ai)).collect();
         col.push(ops::dot(&a_t, &a_t));
         planes.push(a_t);
+        offsets.push(b_t);
         qp.add_plane(b_t, col);
 
         // Master problem (line 8): w_t = argmin J_t via the dual.
@@ -238,15 +339,19 @@ pub fn optimize_observed<O: ScoreOracle>(
         }
     }
 
-    BmrmResult {
-        w: w_b,
-        objective: j_best,
-        gap,
-        iterations,
-        converged,
-        trace,
-        oracle_secs_total,
-    }
+    let bundle = Bundle { planes, offsets, w: w_b.clone() };
+    (
+        BmrmResult {
+            w: w_b,
+            objective: j_best,
+            gap,
+            iterations,
+            converged,
+            trace,
+            oracle_secs_total,
+        },
+        bundle,
+    )
 }
 
 #[cfg(test)]
@@ -356,6 +461,72 @@ mod tests {
         let bits = |w: &[f64]| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&res.w), bits(&res2.w));
         assert_eq!(res.objective.to_bits(), res2.objective.to_bits());
+    }
+
+    #[test]
+    fn warm_none_is_bit_identical_to_cold() {
+        let target = vec![3.0, -1.0, 2.0, 0.5];
+        let cfg = BmrmConfig { lambda: 0.5, epsilon: 1e-8, max_iter: 500, ..Default::default() };
+        let mut o1 = QuadOracle { target: target.clone() };
+        let cold = optimize(&mut o1, &cfg, vec![0.0; 4]);
+        let mut o2 = QuadOracle { target: target.clone() };
+        let (warm_none, bundle) = optimize_warm(&mut o2, &cfg, vec![0.0; 4], None);
+        let bits = |w: &[f64]| w.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&cold.w), bits(&warm_none.w));
+        assert_eq!(cold.objective.to_bits(), warm_none.objective.to_bits());
+        assert_eq!(cold.iterations, warm_none.iterations);
+        // The bundle records one (plane, offset) pair per oracle call.
+        assert_eq!(bundle.planes.len(), warm_none.iterations);
+        assert_eq!(bundle.offsets.len(), warm_none.iterations);
+        assert_eq!(bits(&bundle.w), bits(&warm_none.w));
+    }
+
+    #[test]
+    fn warm_start_reaches_same_optimum_no_more_expensively() {
+        // λ path: solve at λ₁ cold, then λ₂ both cold and warm-started
+        // from the λ₁ bundle. The convergence contract: both ends land
+        // within ε of J*(λ₂), so the two objectives differ by ≤ ε; the
+        // warm run may not need more oracle calls than the cold one.
+        let target = vec![4.0, -2.0, 1.0, 3.0, -1.5];
+        let eps = 1e-9;
+        let cfg1 = BmrmConfig { lambda: 0.5, epsilon: eps, max_iter: 1000, ..Default::default() };
+        let mut o = QuadOracle { target: target.clone() };
+        let (_r1, bundle) = optimize_warm(&mut o, &cfg1, vec![0.0; 5], None);
+
+        let cfg2 = BmrmConfig { lambda: 0.1, ..cfg1.clone() };
+        let mut oc = QuadOracle { target: target.clone() };
+        let cold = optimize(&mut oc, &cfg2, vec![0.0; 5]);
+        let mut ow = QuadOracle { target: target.clone() };
+        let (warm, grown) = optimize_warm(&mut ow, &cfg2, vec![0.0; 5], Some(&bundle));
+
+        assert!(cold.converged && warm.converged);
+        assert!(
+            (warm.objective - cold.objective).abs() <= eps,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        for (wi, ti) in warm.w.iter().zip(&target) {
+            let expect = ti / (1.0 + cfg2.lambda);
+            assert!((wi - expect).abs() < 1e-3, "{wi} vs {expect}");
+        }
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm start cost more oracle calls ({} > {})",
+            warm.iterations,
+            cold.iterations
+        );
+        // Chaining: the returned bundle holds preloaded + new planes.
+        assert_eq!(grown.planes.len(), bundle.planes.len() + warm.iterations);
+    }
+
+    #[test]
+    #[should_panic(expected = "warm-start plane dimension mismatch")]
+    fn warm_start_rejects_wrong_dimension() {
+        let bundle = Bundle { planes: vec![vec![1.0; 3]], offsets: vec![0.0], w: vec![0.0; 3] };
+        let mut oracle = QuadOracle { target: vec![1.0, 2.0] };
+        let cfg = BmrmConfig::default();
+        let _ = optimize_warm(&mut oracle, &cfg, vec![0.0; 2], Some(&bundle));
     }
 
     #[test]

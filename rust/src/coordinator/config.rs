@@ -151,7 +151,10 @@ pub struct TrainConfig {
     pub method: Method,
     pub backend: BackendKind,
     /// Regularizer weight λ in `R_emp + λ‖w‖²` (paper: 1e-1 for Cadata,
-    /// 1e-5 for Reuters).
+    /// 1e-5 for Reuters). When the right value is unknown, sweep a grid
+    /// with k-fold CV instead of guessing: [`super::modelsel::cv_sweep`]
+    /// / `ranksvm cv` run the whole λ path warm-started and in parallel,
+    /// and report the winner per ranking metric.
     pub lambda: f64,
     /// BMRM gap tolerance ε (paper: 1e-3; for PRSVM the Newton decrement
     /// tolerance 1e-6 is derived as `epsilon * 1e-3`).

@@ -75,6 +75,41 @@ pub fn run_probe_path(
     Ok(())
 }
 
+/// Child-side entry for a CV sweep over a real file: run the parallel
+/// λ-path engine and report peak RSS. Folds are zero-copy index views
+/// into the one mapping (`coordinator::modelsel`), so a store's CV peak
+/// must stay close to a plain training's — the bounded-memory
+/// regression test in `tests/modelsel.rs` pins the ratio.
+pub fn run_probe_cv(
+    path: &str,
+    method: Method,
+    lambdas: &[f64],
+    folds: usize,
+    max_iter: usize,
+    no_verify: bool,
+) -> Result<()> {
+    let loaded = crate::data::load_auto_with(path, !no_verify)?;
+    let ds = loaded.view();
+    let base = TrainConfig { method, max_iter, ..Default::default() };
+    let cfg = crate::coordinator::CvConfig::new(base, lambdas.to_vec(), folds, 42);
+    let report = crate::coordinator::cv_sweep(ds, &cfg)?;
+    let peak = crate::util::peak_rss_kib().context("VmHWM unavailable")?;
+    crate::obs::log::data(
+        &Json::obj(vec![
+            ("dataset", ds.name().into()),
+            ("format", if loaded.is_store() { "pstore" } else { "libsvm" }.into()),
+            ("m", ds.len().into()),
+            ("method", method.name().into()),
+            ("folds", folds.into()),
+            ("points", report.points.len().into()),
+            ("iterations", report.total_iterations.into()),
+            ("peak_rss_kib", (peak as usize).into()),
+        ])
+        .to_string(),
+    );
+    Ok(())
+}
+
 /// Locate the `ranksvm` CLI binary for probe spawning: `$RANKSVM_BIN`,
 /// else a `ranksvm` sibling of the current executable (bench binaries
 /// live in `target/release/deps/`, the CLI one level up), else

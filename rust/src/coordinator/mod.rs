@@ -17,7 +17,10 @@ pub mod trainer;
 
 pub use config::{BackendKind, Method, Normalize, TrainConfig};
 pub use model::RankModel;
-pub use modelsel::{cross_validate, select_lambda, CvPoint};
+pub use modelsel::{
+    cross_validate, cv_serial, cv_sweep, kfold_indices, select_by_metric, select_lambda,
+    CvConfig, CvMetric, CvPoint, CvReport,
+};
 pub use trainer::{evaluate, evaluate_scoring, train, TrainOutcome};
 
 /// Re-exported so coordinator users see one model-persistence surface.

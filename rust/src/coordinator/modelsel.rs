@@ -1,29 +1,161 @@
-//! Model selection: k-fold cross-validation over the regularization path.
+//! Model selection: a parallel, warm-started k-fold sweep over the
+//! regularization path.
 //!
 //! The paper fixes λ per dataset ("observed to lead to good test
-//! performance"); a framework user needs the machinery that produces such
-//! a choice. Query-grouped data is split by whole queries (splitting a
-//! query across folds would leak its per-query offset).
+//! performance"); a framework user needs the machinery that produces
+//! such a choice. This module runs the full k-fold × λ grid as one task
+//! set on the shared [`runtime::pool::WorkerPool`](crate::runtime::pool):
+//! each *fold chain* (one fold, every λ) is a pool task, and within a
+//! chain the λ path is walked in **descending order** with the previous
+//! point's cutting-plane bundle warm-starting the next
+//! ([`bmrm::optimize_warm`] — see its convergence contract: warm and
+//! cold starts reach the same ε-optimum, warm just gets there with
+//! fewer oracle calls).
+//!
+//! # Zero-copy folds
+//!
+//! Fold construction never copies the dataset. A fold is a list of row
+//! indices into the one (possibly memory-mapped) [`DatasetView`]; the
+//! fold oracle scores held-in rows by per-row dot products on the
+//! borrowed [`CsrView`] and scatters subgradients row-by-row, so CV of
+//! a larger-than-RAM `.pstore` stays bounded-memory (the only per-fold
+//! allocations are gathered label/qid vectors and the weight/plane
+//! dense vectors — all `O(m + dim)`, never `O(nnz)`).
+//!
+//! The one documented exception: Newton-family losses (`prsvm`,
+//! `prsvm-tree`) run through a compute backend that consumes the real
+//! feature matrix, so their chains gather one owned train-fold
+//! `Dataset` each ("materialized pairs" already dwarf that copy). Their
+//! warm start seeds `w₀` from the previous λ's solution instead of a
+//! cutting-plane bundle.
+//!
+//! # Determinism
+//!
+//! The sweep obeys the bit-identity contract (docs/DETERMINISM.md):
+//! fold chains are independent tasks writing disjoint result slots
+//! (invariant 2), every float reduction inside a chain is the serial
+//! trainer's own, and assembly walks slots in input-λ order — so
+//! [`cv_sweep`] at any thread count produces bytes identical to
+//! [`cv_serial`], which `tests/modelsel.rs` and the CI cv-matrix leg
+//! pin. Query-grouped data is split by whole queries (splitting a query
+//! across folds would leak its per-query offset).
 
-use super::config::TrainConfig;
-use super::trainer::{evaluate, train};
-use crate::data::Dataset;
+use super::config::{Normalize, TrainConfig};
+use super::trainer::{bmrm_config, newton_config, squared_oracle};
+use crate::bmrm::{self, Bundle, ScoreOracle};
+use crate::compute::ParallelBackend;
+use crate::data::{Dataset, DatasetRef, DatasetView};
+use crate::linalg::{simd, CsrMatrix, CsrView};
+use crate::losses::registry::OracleCtx;
+use crate::losses::{count_comparable_pairs, GroupIndex, RankingOracle};
+use crate::metrics;
+use crate::newton;
+use crate::obs;
+use crate::runtime::{Task, WorkerPool};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
 
-/// One (λ, per-fold errors) row of a CV sweep.
+/// Which per-fold metric [`select_by_metric`] optimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CvMetric {
+    /// Mean pairwise ranking error (eq. 1) — minimized. The default.
+    Error,
+    /// Mean AUC (grouped: per-query Wilcoxon) — maximized.
+    Auc,
+    /// Mean precision@k — maximized.
+    PrecisionAtK,
+}
+
+impl CvMetric {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "error" => CvMetric::Error,
+            "auc" => CvMetric::Auc,
+            "precision" | "precision-at-k" | "p@k" => CvMetric::PrecisionAtK,
+            other => anyhow::bail!(
+                "unknown CV metric {other:?} (expected error | auc | precision)"
+            ),
+        })
+    }
+
+    /// Canonical report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CvMetric::Error => "error",
+            CvMetric::Auc => "auc",
+            CvMetric::PrecisionAtK => "precision_at_k",
+        }
+    }
+}
+
+/// Full configuration of a CV sweep.
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    /// Everything but λ (method, ε, iteration cap, threads, …).
+    pub base: TrainConfig,
+    /// The λ grid, in the caller's order (the report preserves it).
+    pub lambdas: Vec<f64>,
+    pub folds: usize,
+    /// Fold-split seed ([`kfold_indices`]).
+    pub seed: u64,
+    /// Warm-start each λ from the previous point on the sorted path.
+    /// Off reproduces independent cold trainings (the differential
+    /// tests compare both modes).
+    pub warm_start: bool,
+    /// Selection criterion for [`CvReport::selected_lambda`].
+    pub metric: CvMetric,
+    /// `k` for the precision@k column.
+    pub k: usize,
+}
+
+impl CvConfig {
+    /// Sweep defaults on top of a base training config.
+    pub fn new(base: TrainConfig, lambdas: Vec<f64>, folds: usize, seed: u64) -> Self {
+        CvConfig { base, lambdas, folds, seed, warm_start: true, metric: CvMetric::Error, k: 10 }
+    }
+}
+
+/// One λ row of a CV sweep: per-fold metrics plus their means. Fold
+/// vectors are indexed by fold id; `fold_weights` keeps the trained
+/// fold models so differential tests can byte-compare them (the CLI
+/// report omits them).
 #[derive(Clone, Debug)]
 pub struct CvPoint {
     pub lambda: f64,
     pub fold_errors: Vec<f64>,
+    pub fold_aucs: Vec<f64>,
+    pub fold_precisions: Vec<f64>,
+    /// Solver iterations each fold spent on this λ (BMRM oracle calls
+    /// or Newton steps) — the warm-start savings ledger.
+    pub fold_iterations: Vec<usize>,
+    pub fold_weights: Vec<Vec<f64>>,
     pub mean_error: f64,
+    pub mean_auc: f64,
+    pub mean_precision_at_k: f64,
+    /// Total solver iterations across folds for this λ.
+    pub iterations: usize,
 }
 
-/// Deterministic k-fold index split. Grouped data splits by distinct qid.
-pub fn kfold_indices(ds: &Dataset, folds: usize, seed: u64) -> Vec<Vec<usize>> {
+/// What a sweep returns: one [`CvPoint`] per λ in input order, the
+/// winning λ under the configured metric, and the sweep-wide iteration
+/// total (the quantity warm-starting shrinks).
+#[derive(Clone, Debug)]
+pub struct CvReport {
+    pub points: Vec<CvPoint>,
+    pub selected_lambda: f64,
+    pub total_iterations: usize,
+}
+
+/// Deterministic k-fold index split. Grouped data splits by distinct
+/// qid so every query stays whole. The assignment is a pure function of
+/// `(m or qid multiset, folds, seed)` — byte-stable across platforms
+/// and releases, pinned by a recorded fixture in `tests/modelsel.rs`.
+pub fn kfold_indices(ds: &dyn DatasetView, folds: usize, seed: u64) -> Vec<Vec<usize>> {
     assert!(folds >= 2, "need at least 2 folds");
     let mut rng = Rng::new(seed);
-    match &ds.qid {
+    match ds.qid() {
         None => {
             let mut idx: Vec<usize> = (0..ds.len()).collect();
             rng.shuffle(&mut idx);
@@ -35,7 +167,7 @@ pub fn kfold_indices(ds: &Dataset, folds: usize, seed: u64) -> Vec<Vec<usize>> {
         }
         Some(qid) => {
             let mut queries: Vec<u64> = {
-                let mut q = qid.clone();
+                let mut q = qid.to_vec();
                 q.sort_unstable();
                 q.dedup();
                 q
@@ -55,55 +187,352 @@ pub fn kfold_indices(ds: &Dataset, folds: usize, seed: u64) -> Vec<Vec<usize>> {
     }
 }
 
-/// Sweep λ over `lambdas` with `folds`-fold CV; returns one [`CvPoint`]
-/// per λ, in input order.
+/// Everything one (fold, λ) cell produces, in sorted-path order.
+struct FoldCell {
+    error: f64,
+    auc: f64,
+    precision: f64,
+    iterations: usize,
+    w: Vec<f64>,
+}
+
+/// Zero-copy BMRM fold oracle: scores and gradients touch only the
+/// train rows of the shared matrix view, by index; risk delegates to
+/// the registry-built score-space oracle over the gathered fold labels.
+struct FoldOracle<'a> {
+    x: CsrView<'a>,
+    rows: &'a [usize],
+    inner: Box<dyn RankingOracle>,
+    y: &'a [f64],
+    n_pairs: f64,
+    dim: usize,
+}
+
+impl ScoreOracle for FoldOracle<'_> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn scores(&mut self, w: &[f64]) -> Vec<f64> {
+        self.rows.iter().map(|&r| self.x.row_dot(r, w)).collect()
+    }
+    fn risk_at(&mut self, p: &[f64]) -> (f64, Vec<f64>) {
+        let out = self.inner.eval(p, self.y, self.n_pairs);
+        (out.loss, out.coeffs)
+    }
+    fn grad(&mut self, coeffs: &[f64]) -> Vec<f64> {
+        let kern = simd::active();
+        let mut out = vec![0.0; self.dim];
+        for (i, &r) in self.rows.iter().enumerate() {
+            if coeffs[i] != 0.0 {
+                let (idx, val) = self.x.row(r);
+                simd::scatter_axpy(kern, idx, val, coeffs[i], &mut out);
+            }
+        }
+        out
+    }
+}
+
+/// Validated sweep plan: the fold split and the (input slot, λ) path
+/// sorted by descending λ (strong regularization first — the classical
+/// warm-start direction: each solution is a good bundle/seed for the
+/// slightly less constrained next problem).
+struct CvPrep {
+    fold_idx: Vec<Vec<usize>>,
+    path: Vec<(usize, f64)>,
+}
+
+fn prep(cfg: &CvConfig) -> Result<()> {
+    ensure!(cfg.folds >= 2, "cv needs at least 2 folds, got {}", cfg.folds);
+    ensure!(!cfg.lambdas.is_empty(), "cv needs at least one lambda");
+    for &l in &cfg.lambdas {
+        ensure!(l.is_finite() && l > 0.0, "cv lambdas must be finite and positive, got {l}");
+    }
+    ensure!(
+        matches!(cfg.base.normalize, Normalize::None),
+        "cv does not support --normalize: fold views are zero-copy index views, \
+         so normalize the input once (`ranksvm convert` a normalized store) instead"
+    );
+    Ok(())
+}
+
+fn plan(ds: &dyn DatasetView, cfg: &CvConfig) -> Result<CvPrep> {
+    prep(cfg)?;
+    let mut path: Vec<(usize, f64)> = cfg.lambdas.iter().copied().enumerate().collect();
+    path.sort_by(|a, b| b.1.total_cmp(&a.1));
+    Ok(CvPrep { fold_idx: kfold_indices(ds, cfg.folds, cfg.seed), path })
+}
+
+/// Gather an owned train-fold dataset (the Newton-family exception to
+/// the zero-copy rule — see the module docs).
+fn gather_dataset(
+    x: CsrView<'_>,
+    y: Vec<f64>,
+    qid: Option<Vec<u64>>,
+    rows: &[usize],
+    dim: usize,
+    name: String,
+) -> Dataset {
+    let mut triplets = Vec::new();
+    for (rn, &r) in rows.iter().enumerate() {
+        let (idx, val) = x.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            triplets.push((rn, c as usize, v));
+        }
+    }
+    Dataset::new(CsrMatrix::from_triplets(rows.len(), dim, triplets), y, qid, name)
+}
+
+/// Train one fold across the whole sorted λ path, warm-starting each
+/// point from the previous one. This is the unit of parallelism — both
+/// engines call exactly this function, which is what makes
+/// [`cv_sweep`] bit-identical to [`cv_serial`].
+fn run_fold_chain(
+    x: CsrView<'_>,
+    y: &[f64],
+    qid: Option<&[u64]>,
+    cfg: &CvConfig,
+    fold_idx: &[Vec<usize>],
+    f: usize,
+    lambdas_desc: &[f64],
+) -> Vec<FoldCell> {
+    let test_rows: &[usize] = &fold_idx[f];
+    let train_rows: Vec<usize> = (0..fold_idx.len())
+        .filter(|&g| g != f)
+        .flat_map(|g| fold_idx[g].iter().copied())
+        .collect();
+    let dim = x.cols();
+
+    // Gathered fold-local labels/groups: the only per-fold copies
+    // (`O(m)`), features stay borrowed row-index views.
+    let y_tr: Vec<f64> = train_rows.iter().map(|&r| y[r]).collect();
+    let qid_tr: Option<Vec<u64>> = qid.map(|q| train_rows.iter().map(|&r| q[r]).collect());
+    let y_te: Vec<f64> = test_rows.iter().map(|&r| y[r]).collect();
+    let qid_te: Option<Vec<u64>> = qid.map(|q| test_rows.iter().map(|&r| q[r]).collect());
+
+    let measure = |w: &[f64], iterations: usize| -> FoldCell {
+        let p: Vec<f64> = test_rows.iter().map(|&r| x.row_dot(r, w)).collect();
+        let (error, auc, precision) = match &qid_te {
+            Some(q) => (
+                metrics::grouped_pairwise_error(&p, &y_te, q),
+                metrics::grouped_auc(&p, &y_te, q),
+                metrics::grouped_precision_at_k(&p, &y_te, q, cfg.k, 0.0),
+            ),
+            None => (
+                metrics::pairwise_error(&p, &y_te),
+                metrics::auc(&p, &y_te),
+                metrics::precision_at_k(&p, &y_te, cfg.k, 0.0),
+            ),
+        };
+        FoldCell { error, auc, precision, iterations, w: w.to_vec() }
+    };
+
+    let mut cells = Vec::with_capacity(lambdas_desc.len());
+
+    if train_rows.is_empty() {
+        // Degenerate split (e.g. fewer queries than folds leaves a fold
+        // holding everything): nothing to train on — the zero model
+        // scores the held-out rows at every λ.
+        let w = vec![0.0; dim];
+        for _ in lambdas_desc {
+            obs::metrics::CV_FOLD_TRAININGS.inc();
+            cells.push(measure(&w, 0));
+        }
+        return cells;
+    }
+
+    let spec = cfg.base.method.spec();
+    if let Some(kind) = spec.newton {
+        let owned = gather_dataset(x, y_tr, qid_tr, &train_rows, dim, format!("cv{f}train"));
+        let chain_pool = Arc::new(WorkerPool::new(1));
+        let backend = Box::new(ParallelBackend::with_pool(Arc::clone(&chain_pool)));
+        let mut oracle = squared_oracle(kind, &owned, backend);
+        let mut w_prev: Option<Vec<f64>> = None;
+        for &lambda in lambdas_desc {
+            let tcfg = TrainConfig { lambda, ..cfg.base.clone() };
+            let ncfg = newton_config(&tcfg);
+            let w0 = match (&w_prev, cfg.warm_start) {
+                (Some(w), true) => w.clone(),
+                _ => vec![0.0; dim],
+            };
+            let res = newton::optimize(&mut oracle, &ncfg, w0);
+            obs::metrics::CV_FOLD_TRAININGS.inc();
+            cells.push(measure(&res.w, res.iterations));
+            w_prev = Some(res.w);
+        }
+        return cells;
+    }
+
+    // BMRM family: registry ctors consume only labels/group structure
+    // (never `ds.x()` — their oracles live in score space), so an empty
+    // matrix view over the gathered fold labels is a sound context.
+    let zero_indptr = vec![0u64; y_tr.len() + 1];
+    let fctx = DatasetRef {
+        x: CsrView::new_unchecked(y_tr.len(), dim, &zero_indptr, &[], &[]),
+        y: &y_tr,
+        qid: qid_tr.as_deref(),
+        name: format!("cv{f}train"),
+    };
+    let index = fctx.qid.map(|q| Arc::new(GroupIndex::build(q, &y_tr)));
+    let n_pairs = match &index {
+        Some(gi) => gi.total_pairs(),
+        None => count_comparable_pairs(&y_tr) as f64,
+    };
+    // A chain is itself a pool task, and `WorkerPool::run` is
+    // non-reentrant — so the oracle gets its own inline (0-worker)
+    // pool rather than the sweep's.
+    let chain_pool = Arc::new(WorkerPool::new(1));
+    let ctor = spec.bmrm.expect("non-Newton registry losses carry a BMRM oracle constructor");
+    let inner = ctor(OracleCtx { ds: &fctx, index, pool: &chain_pool });
+    let mut oracle =
+        FoldOracle { x, rows: &train_rows, inner, y: &y_tr, n_pairs, dim };
+    let mut bundle: Option<Bundle> = None;
+    for &lambda in lambdas_desc {
+        let tcfg = TrainConfig { lambda, ..cfg.base.clone() };
+        let bcfg = bmrm_config(&tcfg);
+        let warm = if cfg.warm_start { bundle.as_ref() } else { None };
+        let (res, grown) = bmrm::optimize_warm(&mut oracle, &bcfg, vec![0.0; dim], warm);
+        obs::metrics::CV_FOLD_TRAININGS.inc();
+        obs::metrics::CV_BMRM_ITERS.add(res.iterations as u64);
+        cells.push(measure(&res.w, res.iterations));
+        bundle = Some(grown);
+    }
+    cells
+}
+
+/// Stitch per-fold chains back into input-λ-ordered [`CvPoint`]s and
+/// pick the winner. Pure serial assembly, identical for both engines.
+fn assemble(cfg: &CvConfig, prep: &CvPrep, mut per_fold: Vec<Vec<FoldCell>>) -> CvReport {
+    let folds = cfg.folds;
+    let mut points: Vec<Option<CvPoint>> = (0..cfg.lambdas.len()).map(|_| None).collect();
+    for (pos, &(slot, lambda)) in prep.path.iter().enumerate() {
+        let mut fold_errors = Vec::with_capacity(folds);
+        let mut fold_aucs = Vec::with_capacity(folds);
+        let mut fold_precisions = Vec::with_capacity(folds);
+        let mut fold_iterations = Vec::with_capacity(folds);
+        let mut fold_weights = Vec::with_capacity(folds);
+        for chain in per_fold.iter_mut() {
+            let cell = &mut chain[pos];
+            fold_errors.push(cell.error);
+            fold_aucs.push(cell.auc);
+            fold_precisions.push(cell.precision);
+            fold_iterations.push(cell.iterations);
+            fold_weights.push(std::mem::take(&mut cell.w));
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / folds as f64;
+        let iterations = fold_iterations.iter().sum();
+        points[slot] = Some(CvPoint {
+            lambda,
+            mean_error: mean(&fold_errors),
+            mean_auc: mean(&fold_aucs),
+            mean_precision_at_k: mean(&fold_precisions),
+            fold_errors,
+            fold_aucs,
+            fold_precisions,
+            fold_iterations,
+            fold_weights,
+            iterations,
+        });
+    }
+    let points: Vec<CvPoint> =
+        points.into_iter().map(|p| p.expect("every path slot assembled")).collect();
+    let selected_lambda = select_by_metric(&points, cfg.metric);
+    let total_iterations = points.iter().map(|p| p.iterations).sum();
+    CvReport { points, selected_lambda, total_iterations }
+}
+
+/// Serial reference engine: fold chains run one after another on the
+/// calling thread. The parallel engine is defined to match this
+/// bit-for-bit.
+pub fn cv_serial(ds: &dyn DatasetView, cfg: &CvConfig) -> Result<CvReport> {
+    let prep = plan(ds, cfg)?;
+    obs::metrics::CV_SWEEPS.inc();
+    ds.prefetch();
+    let (x, y, qid) = (ds.x(), ds.y(), ds.qid());
+    let lambdas_desc: Vec<f64> = prep.path.iter().map(|&(_, l)| l).collect();
+    let per_fold: Vec<Vec<FoldCell>> = (0..cfg.folds)
+        .map(|f| run_fold_chain(x, y, qid, cfg, &prep.fold_idx, f, &lambdas_desc))
+        .collect();
+    Ok(assemble(cfg, &prep, per_fold))
+}
+
+/// Parallel sweep engine: one pool task per fold chain, disjoint result
+/// slots, input-order assembly — bit-identical to [`cv_serial`] at any
+/// `--threads` (docs/DETERMINISM.md; pinned by `tests/modelsel.rs` and
+/// the CI cv-matrix leg).
+pub fn cv_sweep(ds: &dyn DatasetView, cfg: &CvConfig) -> Result<CvReport> {
+    let prep = plan(ds, cfg)?;
+    obs::metrics::CV_SWEEPS.inc();
+    ds.prefetch();
+    let (x, y, qid) = (ds.x(), ds.y(), ds.qid());
+    let lambdas_desc: Vec<f64> = prep.path.iter().map(|&(_, l)| l).collect();
+    let pool = WorkerPool::new(cfg.base.resolved_threads());
+    let mut slots: Vec<Option<Vec<FoldCell>>> = (0..cfg.folds).map(|_| None).collect();
+    {
+        let fold_idx = &prep.fold_idx;
+        let lambdas_desc = &lambdas_desc;
+        let cfg_ref = &*cfg;
+        let tasks: Vec<Task<'_>> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(f, slot)| {
+                let task: Task<'_> = Box::new(move || {
+                    *slot = Some(run_fold_chain(x, y, qid, cfg_ref, fold_idx, f, lambdas_desc));
+                });
+                task
+            })
+            .collect();
+        pool.run(tasks);
+    }
+    let per_fold: Vec<Vec<FoldCell>> =
+        slots.into_iter().map(|s| s.expect("every fold task ran")).collect();
+    Ok(assemble(cfg, &prep, per_fold))
+}
+
+/// Compatibility sweep: serial, cold-started, error-selected — one
+/// [`CvPoint`] per λ in input order. The differential battery uses this
+/// as the reference the parallel warm engine must reproduce point-wise.
 pub fn cross_validate(
-    ds: &Dataset,
+    ds: &dyn DatasetView,
     base: &TrainConfig,
     lambdas: &[f64],
     folds: usize,
     seed: u64,
 ) -> Result<Vec<CvPoint>> {
-    let fold_idx = kfold_indices(ds, folds, seed);
-    // Pre-materialize fold datasets once (not per λ).
-    let splits: Vec<(Dataset, Dataset)> = (0..folds)
-        .map(|f| {
-            let test_rows = &fold_idx[f];
-            let train_rows: Vec<usize> =
-                (0..folds).filter(|&g| g != f).flat_map(|g| fold_idx[g].iter().copied()).collect();
-            (
-                ds.subset(&train_rows, &format!("cv{f}train")),
-                ds.subset(test_rows, &format!("cv{f}test")),
-            )
-        })
-        .collect();
-    let mut out = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
-        let mut fold_errors = Vec::with_capacity(folds);
-        for (tr, te) in &splits {
-            let cfg = TrainConfig { lambda, ..base.clone() };
-            let res = train(tr, &cfg)?;
-            fold_errors.push(evaluate(&res.model, te));
-        }
-        let mean_error = fold_errors.iter().sum::<f64>() / folds as f64;
-        out.push(CvPoint { lambda, fold_errors, mean_error });
-    }
-    Ok(out)
+    let cfg = CvConfig {
+        warm_start: false,
+        ..CvConfig::new(base.clone(), lambdas.to_vec(), folds, seed)
+    };
+    Ok(cv_serial(ds, &cfg)?.points)
 }
 
-/// Pick the λ minimizing mean CV error (ties → larger λ, i.e. the
-/// simpler model).
-pub fn select_lambda(points: &[CvPoint]) -> f64 {
+/// Pick the λ optimizing `metric`'s mean (error minimized, AUC and
+/// precision maximized); ties → larger λ, i.e. the simpler model.
+pub fn select_by_metric(points: &[CvPoint], metric: CvMetric) -> f64 {
     assert!(!points.is_empty());
+    let value = |p: &CvPoint| match metric {
+        CvMetric::Error => p.mean_error,
+        CvMetric::Auc => p.mean_auc,
+        CvMetric::PrecisionAtK => p.mean_precision_at_k,
+    };
+    let better = |a: f64, b: f64| match metric {
+        CvMetric::Error => a < b - 1e-12,
+        CvMetric::Auc | CvMetric::PrecisionAtK => a > b + 1e-12,
+    };
     let mut best = &points[0];
     for p in points {
-        if p.mean_error < best.mean_error - 1e-12
-            || ((p.mean_error - best.mean_error).abs() <= 1e-12 && p.lambda > best.lambda)
-        {
+        let (v, bv) = (value(p), value(best));
+        if better(v, bv) || ((v - bv).abs() <= 1e-12 && p.lambda > best.lambda) {
             best = p;
         }
     }
     best.lambda
+}
+
+/// Pick the λ minimizing mean CV error (ties → larger λ, i.e. the
+/// simpler model). Equivalent to [`select_by_metric`] with
+/// [`CvMetric::Error`].
+pub fn select_lambda(points: &[CvPoint]) -> f64 {
+    select_by_metric(points, CvMetric::Error)
 }
 
 #[cfg(test)]
@@ -159,14 +588,61 @@ mod tests {
             "λ=1e3 should clearly underperform: {points:?}"
         );
         assert!(chosen.mean_error < 0.25, "winner should rank well: {points:?}");
+        // The derived columns came along for every point.
+        for p in &points {
+            assert_eq!(p.fold_errors.len(), 3);
+            assert_eq!(p.fold_aucs.len(), 3);
+            assert_eq!(p.fold_weights.len(), 3);
+            assert!((p.mean_auc - (1.0 - p.mean_error)).abs() < 1e-12);
+        }
+    }
+
+    fn point(lambda: f64, mean_error: f64, mean_auc: f64) -> CvPoint {
+        CvPoint {
+            lambda,
+            fold_errors: vec![mean_error],
+            fold_aucs: vec![mean_auc],
+            fold_precisions: vec![0.5],
+            fold_iterations: vec![1],
+            fold_weights: vec![vec![0.0]],
+            mean_error,
+            mean_auc,
+            mean_precision_at_k: 0.5,
+            iterations: 1,
+        }
     }
 
     #[test]
     fn select_lambda_tie_breaks_to_simpler() {
-        let points = vec![
-            CvPoint { lambda: 0.01, fold_errors: vec![0.2], mean_error: 0.2 },
-            CvPoint { lambda: 1.0, fold_errors: vec![0.2], mean_error: 0.2 },
-        ];
+        let points = vec![point(0.01, 0.2, 0.8), point(1.0, 0.2, 0.8)];
         assert_eq!(select_lambda(&points), 1.0);
+    }
+
+    #[test]
+    fn select_by_metric_maximizes_auc() {
+        let points = vec![point(0.01, 0.3, 0.9), point(1.0, 0.2, 0.7)];
+        assert_eq!(select_by_metric(&points, CvMetric::Error), 1.0);
+        assert_eq!(select_by_metric(&points, CvMetric::Auc), 0.01);
+    }
+
+    #[test]
+    fn cv_rejects_bad_grids() {
+        let ds = synthetic::cadata_like(30, 3);
+        let base = TrainConfig { method: Method::Tree, ..Default::default() };
+        let bad = CvConfig::new(base.clone(), vec![], 3, 1);
+        assert!(cv_serial(&ds, &bad).is_err());
+        let bad = CvConfig::new(base.clone(), vec![0.0], 3, 1);
+        assert!(cv_serial(&ds, &bad).is_err());
+        let bad = CvConfig::new(base.clone(), vec![0.1], 1, 1);
+        assert!(cv_serial(&ds, &bad).is_err());
+        let bad = CvConfig {
+            base: TrainConfig {
+                normalize: Normalize::L2Col,
+                method: Method::Tree,
+                ..Default::default()
+            },
+            ..CvConfig::new(base, vec![0.1], 3, 1)
+        };
+        assert!(cv_serial(&ds, &bad).is_err());
     }
 }

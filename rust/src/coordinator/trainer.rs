@@ -237,6 +237,46 @@ fn make_xla_backend(_cfg: &TrainConfig) -> Result<Box<dyn ComputeBackend>> {
     )
 }
 
+/// The Newton solver configuration a [`TrainConfig`] maps to — shared
+/// by [`train`] and the CV engine (`coordinator::modelsel`) so a fold
+/// training inside a sweep runs the *identical* solver a standalone
+/// `train` call would.
+pub(crate) fn newton_config(cfg: &TrainConfig) -> NewtonConfig {
+    NewtonConfig {
+        lambda: cfg.lambda,
+        // Paper §5.1: Newton decrement 1e-6 ~ BMRM ε 1e-3.
+        decrement_tol: cfg.epsilon * 1e-3,
+        max_iter: cfg.max_iter,
+        ..Default::default()
+    }
+}
+
+/// The BMRM configuration a [`TrainConfig`] maps to (same sharing
+/// rationale as [`newton_config`]).
+pub(crate) fn bmrm_config(cfg: &TrainConfig) -> BmrmConfig {
+    BmrmConfig {
+        lambda: cfg.lambda,
+        epsilon: cfg.epsilon,
+        max_iter: cfg.max_iter,
+        line_search: cfg.line_search,
+        ..Default::default()
+    }
+}
+
+/// Instantiate the squared-hinge Hessian oracle a [`NewtonKind`] tags —
+/// the registry's one documented constructor asymmetry (docs/LOSSES.md),
+/// shared by [`train`] and the CV engine.
+pub(crate) fn squared_oracle<'a>(
+    kind: NewtonKind,
+    ds: &'a dyn DatasetView,
+    backend: Box<dyn ComputeBackend>,
+) -> SquaredDatasetOracle<'a> {
+    match kind {
+        NewtonKind::MaterializedPairs => SquaredDatasetOracle::new(ds, backend),
+        NewtonKind::SumTree => SquaredDatasetOracle::new_tree(ds, backend),
+    }
+}
+
 /// Per-column ℓ2 norms of a training set: `sqrt(Σ_i x_ij²)` per column.
 /// Consumes the source's cached column statistics when present (a v3
 /// pallas store — no data scan at all), otherwise recomputes them with
@@ -318,17 +358,8 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
     // `LossSpec` (docs/LOSSES.md), not editing this function.
     let spec = cfg.method.spec();
     let outcome = if let Some(kind) = spec.newton {
-        let mut oracle = match kind {
-            NewtonKind::MaterializedPairs => SquaredDatasetOracle::new(ds, backend),
-            NewtonKind::SumTree => SquaredDatasetOracle::new_tree(ds, backend),
-        };
-        let ncfg = NewtonConfig {
-            lambda: cfg.lambda,
-            // Paper §5.1: Newton decrement 1e-6 ~ BMRM ε 1e-3.
-            decrement_tol: cfg.epsilon * 1e-3,
-            max_iter: cfg.max_iter,
-            ..Default::default()
-        };
+        let mut oracle = squared_oracle(kind, ds, backend);
+        let ncfg = newton_config(cfg);
         let res = newton::optimize(&mut oracle, &ncfg, vec![0.0; ds.dim()]);
         // Newton-family runs have no BMRM iterations to trace; a
         // requested trace still gets its start/end envelope
@@ -382,13 +413,7 @@ pub fn train(ds: &dyn DatasetView, cfg: &TrainConfig) -> Result<TrainOutcome> {
         let ctor = spec.bmrm.expect("non-Newton registry losses carry a BMRM oracle constructor");
         let inner = ctor(OracleCtx { ds, index, pool: &pool });
         let mut oracle = DatasetOracle::new(ds, backend, inner, n_pairs);
-        let bcfg = BmrmConfig {
-            lambda: cfg.lambda,
-            epsilon: cfg.epsilon,
-            max_iter: cfg.max_iter,
-            line_search: cfg.line_search,
-            ..Default::default()
-        };
+        let bcfg = bmrm_config(cfg);
         // Structured run trace (`train --trace`): one JSONL event per
         // BMRM iteration, written from the observer *between*
         // iterations. The observer only reads solver state — a traced

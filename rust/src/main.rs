@@ -5,6 +5,8 @@
 //! - `train`      — train a model on a libsvm/pstore file or a synthetic set
 //! - `eval`       — ranking quality of a saved model on a dataset
 //!   (pairwise error, AUC, precision@k — grouped means when qids exist)
+//! - `cv`         — parallel warm-started k-fold sweep over a λ grid;
+//!   one JSON path report line (byte-identical for every `--threads`)
 //! - `losses`     — list the registered losses (one JSON line each)
 //! - `predict`    — one score per line for a dataset (raw features; a
 //!   model's recorded `--normalize` norms are applied automatically)
@@ -64,6 +66,16 @@ USAGE:
                     (pairwise_error + auc + precision_at_k JSON; metrics
                       are per-query means when the data carries qids;
                       --k sets the precision cutoff, default 10)
+  ranksvm cv        (--data F | --synthetic K --m M) [--loss NAME]
+                    [--lambdas L1,L2,..] [--folds K] [--seed S]
+                    [--metric error|auc|precision] [--k K] [--threads T]
+                    [--epsilon E] [--max-iter I] [--cold] [--trace OUT.jsonl]
+                    (k-fold CV over the λ grid as one pool-scheduled
+                      warm-started path sweep; prints one JSON path report
+                      with error/auc/precision@k per λ. The report carries
+                      no thread or timing fields — bytes are identical for
+                      every --threads value. --cold disables warm starts;
+                      --trace writes one cv_point JSONL line per λ)
   ranksvm losses    (one JSON line per registered loss: name, aliases,
                       solver family, parallel substrate, normalization)
   ranksvm predict   --model MODEL (--data F | --synthetic K --m M)
@@ -81,6 +93,8 @@ USAGE:
                     (cached per-column stats; --limit 0 prints all columns)
   ranksvm info      (--data F | --synthetic K --m M)
   ranksvm mem-probe (--dataset K | --data F) --m M --method NAME [--lambda L] [--max-iter I]
+                    [--cv [--lambdas L1,L2,..] [--folds K]]  (probe a CV sweep
+                      instead of one training — the zero-copy-folds memory check)
   ranksvm perf      [--sizes N,N,..] [--reps R] [--synthetic K]
                     [--method tree|tree-fenwick|sharded|par-sort] [--threads T]
   ranksvm report    --trace RUN.jsonl
@@ -261,6 +275,90 @@ fn cmd_eval(args: &Args) -> Result<()> {
             ("auc", auc.into()),
             ("k", k.into()),
             ("precision_at_k", prec.into()),
+        ])
+        .to_string()
+    );
+    Ok(())
+}
+
+/// `ranksvm cv` — the parallel warm-started λ-path sweep
+/// (`coordinator::modelsel`). Prints exactly one JSON path report line.
+/// The report deliberately carries **no** thread counts and **no**
+/// wall-clock fields: the CI cv-matrix leg runs the same sweep at
+/// `--threads 1/2/8` and byte-compares the three reports
+/// (docs/DETERMINISM.md).
+fn cmd_cv(args: &Args) -> Result<()> {
+    use ranksvm::coordinator::{cv_sweep, CvConfig, CvMetric};
+    let loaded = load_dataset(args)?;
+    let ds = loaded.view();
+    let method = parse_loss(args)?;
+    let base = TrainConfig {
+        method,
+        epsilon: args.f64_or("epsilon", 1e-3)?,
+        max_iter: args.usize_or("max-iter", 2000)?,
+        n_threads: args.usize_or("threads", 0)?,
+        chunk_target_kib: args.usize_or("chunk-target-kib", 0)?,
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    let lambdas = args.f64_list_or("lambdas", &[1e-4, 1e-3, 1e-2, 1e-1, 1.0])?;
+    let folds = args.usize_or("folds", 5)?;
+    let seed = args.u64_or("seed", 42)?;
+    let cfg = CvConfig {
+        warm_start: !args.flag("cold"),
+        metric: CvMetric::parse(&args.str_or("metric", "error"))?,
+        k: args.usize_or("k", 10)?,
+        ..CvConfig::new(base, lambdas, folds, seed)
+    };
+    let report = cv_sweep(ds, &cfg)?;
+    // Optional per-point trace, written *after* the sweep so the engine
+    // itself stays observation-free (these files are cv_point JSONL,
+    // not training traces — `ranksvm report` does not render them).
+    if let Some(path) = args.get("trace") {
+        use ranksvm::obs::trace::{cv_point_event, CvPointInfo, TraceSink};
+        let mut sink = TraceSink::create(path)?;
+        for p in &report.points {
+            sink.event(&cv_point_event(&CvPointInfo {
+                lambda: p.lambda,
+                mean_error: p.mean_error,
+                mean_auc: p.mean_auc,
+                mean_precision_at_k: p.mean_precision_at_k,
+                iterations: p.iterations,
+                selected: p.lambda == report.selected_lambda,
+            }))?;
+        }
+        sink.finish()?;
+    }
+    let points: Vec<Json> = report
+        .points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("lambda", p.lambda.into()),
+                ("mean_error", p.mean_error.into()),
+                ("mean_auc", p.mean_auc.into()),
+                ("mean_precision_at_k", p.mean_precision_at_k.into()),
+                ("iterations", p.iterations.into()),
+                ("fold_errors", Json::Arr(p.fold_errors.iter().map(|&e| e.into()).collect())),
+            ])
+        })
+        .collect();
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("schema", Json::Str("ranksvm-cv-path".into())),
+            ("schema_version", Json::Int(1)),
+            ("dataset", Json::Str(ds.name().to_string())),
+            ("m", ds.len().into()),
+            ("loss", Json::Str(method.name().to_string())),
+            ("folds", cfg.folds.into()),
+            ("seed", Json::Int(cfg.seed as i64)),
+            ("warm_start", cfg.warm_start.into()),
+            ("metric", Json::Str(cfg.metric.name().to_string())),
+            ("k", cfg.k.into()),
+            ("points", Json::Arr(points)),
+            ("selected_lambda", report.selected_lambda.into()),
+            ("total_iterations", report.total_iterations.into()),
         ])
         .to_string()
     );
@@ -610,6 +708,20 @@ fn cmd_mem_probe(args: &Args) -> Result<()> {
     let method = parse_loss(args)?;
     let lambda = args.f64_or("lambda", 1e-4)?;
     let max_iter = args.usize_or("max-iter", 10)?;
+    if args.flag("cv") {
+        // CV-sweep probe: the zero-copy-folds memory regression test
+        // compares this child's peak against a plain training probe.
+        let path = args.get("data").context("mem-probe --cv needs --data")?;
+        let lambdas = args.f64_list_or("lambdas", &[1e-2, 1e-1])?;
+        return memprobe::run_probe_cv(
+            path,
+            method,
+            &lambdas,
+            args.usize_or("folds", 3)?,
+            max_iter,
+            args.flag("no-verify"),
+        );
+    }
     if let Some(path) = args.get("data") {
         // Probe a real file (text or store) — the out-of-core story's
         // memory accounting.
@@ -631,6 +743,7 @@ fn run() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
+        Some("cv") => cmd_cv(&args),
         Some("predict") => cmd_predict(&args),
         Some("serve") => cmd_serve(&args),
         Some("gen-data") => cmd_gen_data(&args),

@@ -68,30 +68,18 @@ pub fn auc(pred: &[f64], y: &[f64]) -> f64 {
 }
 
 /// Query-grouped pairwise error: eq. (1) per group, averaged over groups
-/// that contain at least one comparable pair (paper §2).
+/// that contain at least one comparable pair (paper §2). Groups
+/// accumulate in first-seen qid order — *not* hash order — so the float
+/// sum is reproducible across processes (the `ranksvm cv` reports are
+/// byte-compared across runs; docs/DETERMINISM.md).
 pub fn grouped_pairwise_error(pred: &[f64], y: &[f64], qid: &[u64]) -> f64 {
-    assert_eq!(pred.len(), y.len());
-    assert_eq!(pred.len(), qid.len());
-    let mut groups: std::collections::HashMap<u64, Vec<usize>> = std::collections::HashMap::new();
-    for (i, &q) in qid.iter().enumerate() {
-        groups.entry(q).or_default().push(i);
-    }
-    let mut sum = 0.0;
-    let mut count = 0usize;
-    for idx in groups.values() {
-        let yg: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-        if crate::losses::count_comparable_pairs(&yg) == 0 {
-            continue;
-        }
-        let pg: Vec<f64> = idx.iter().map(|&i| pred[i]).collect();
-        sum += pairwise_error(&pg, &yg);
-        count += 1;
-    }
-    if count == 0 {
-        0.0
-    } else {
-        sum / count as f64
-    }
+    grouped_mean(
+        pred,
+        y,
+        qid,
+        |yg| crate::losses::count_comparable_pairs(yg) > 0,
+        |pg, yg| pairwise_error(pg, yg),
+    )
 }
 
 /// Partition example indices by qid, groups in first-seen order (the

@@ -183,6 +183,15 @@ pub static SERVE_REQUEST_LATENCY_US: Histogram = Histogram::new(LATENCY_BUCKETS_
 /// Requests per executed batch.
 pub static SERVE_BATCH_SIZE: Histogram = Histogram::new(BATCH_SIZE_BUCKETS);
 
+// ------------------------------------------------------------ modelsel
+/// CV sweeps started (`cv_serial` / `cv_sweep` engine runs).
+pub static CV_SWEEPS: Counter = Counter::new();
+/// (fold, λ) cells processed by CV engines.
+pub static CV_FOLD_TRAININGS: Counter = Counter::new();
+/// BMRM iterations spent inside CV fold trainings — warm-started paths
+/// grow this slower than cold ones (tests/modelsel.rs differential).
+pub static CV_BMRM_ITERS: Counter = Counter::new();
+
 /// What a registry entry points at.
 pub enum Kind {
     Counter(&'static Counter),
@@ -308,6 +317,24 @@ pub static REGISTRY: &[MetricDef] = &[
         unit: "requests",
         help: "requests per executed serve batch",
         kind: Kind::Histogram(&SERVE_BATCH_SIZE),
+    },
+    MetricDef {
+        name: "ranksvm_cv_sweeps_total",
+        unit: "sweeps",
+        help: "cross-validation sweeps started",
+        kind: Kind::Counter(&CV_SWEEPS),
+    },
+    MetricDef {
+        name: "ranksvm_cv_fold_trainings_total",
+        unit: "trainings",
+        help: "(fold, lambda) cells processed by CV engines",
+        kind: Kind::Counter(&CV_FOLD_TRAININGS),
+    },
+    MetricDef {
+        name: "ranksvm_cv_bmrm_iters_total",
+        unit: "iterations",
+        help: "BMRM iterations spent inside CV fold trainings",
+        kind: Kind::Counter(&CV_BMRM_ITERS),
     },
 ];
 

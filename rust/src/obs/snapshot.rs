@@ -2,9 +2,9 @@
 //! (docs/OBSERVABILITY.md "Bench snapshots").
 //!
 //! Every bench binary (`serve_qps`, `skew_balance`,
-//! `fig1_iteration_cost`, `convert_throughput`) emits its committed
-//! snapshot through [`bench_snapshot`], so the perf trajectory
-//! accumulates records with one comparable shape:
+//! `fig1_iteration_cost`, `convert_throughput`, `modelsel_sweep`) emits
+//! its committed snapshot through [`bench_snapshot`], so the perf
+//! trajectory accumulates records with one comparable shape:
 //!
 //! ```json
 //! {"schema":"ranksvm-bench-snapshot","schema_version":1,

@@ -155,6 +155,49 @@ pub fn end_event(e: &EndInfo) -> Json {
     ])
 }
 
+/// Fields of the standalone `cv_point` event, in emission order. Not
+/// part of a training trace: `ranksvm cv --trace` writes one
+/// `cv_point` line per λ into its own JSONL file after the sweep
+/// completes (the engine itself stays observation-free so the sweep is
+/// bit-identical with tracing on or off). `ranksvm report` renders
+/// training traces only and rejects these files.
+pub static CV_POINT_FIELDS: &[&str] = &[
+    "event",
+    "schema_version",
+    "lambda",
+    "mean_error",
+    "mean_auc",
+    "mean_precision_at_k",
+    "iterations",
+    "selected",
+];
+
+/// Per-λ summary stamped on a `cv_point` event.
+pub struct CvPointInfo {
+    pub lambda: f64,
+    pub mean_error: f64,
+    pub mean_auc: f64,
+    pub mean_precision_at_k: f64,
+    /// Solver iterations summed over folds at this λ.
+    pub iterations: usize,
+    /// Whether this λ won the sweep's selection metric.
+    pub selected: bool,
+}
+
+/// Build a `cv_point` event (keys exactly [`CV_POINT_FIELDS`]).
+pub fn cv_point_event(p: &CvPointInfo) -> Json {
+    Json::Obj(vec![
+        ("event".into(), "cv_point".into()),
+        ("schema_version".into(), Json::Int(TRACE_SCHEMA_VERSION)),
+        ("lambda".into(), p.lambda.into()),
+        ("mean_error".into(), p.mean_error.into()),
+        ("mean_auc".into(), p.mean_auc.into()),
+        ("mean_precision_at_k".into(), p.mean_precision_at_k.into()),
+        ("iterations".into(), p.iterations.into()),
+        ("selected".into(), p.selected.into()),
+    ])
+}
+
 /// Compute the per-iteration phase split: current cumulative
 /// [`PhaseTimes`] minus the previously seen totals (which are updated
 /// in place). Phase order follows the oracle's registration order.
@@ -327,6 +370,15 @@ mod tests {
             oracle_secs: 0.05,
         });
         assert_eq!(keys(&end), END_FIELDS);
+        let cv = cv_point_event(&CvPointInfo {
+            lambda: 0.1,
+            mean_error: 0.2,
+            mean_auc: 0.8,
+            mean_precision_at_k: 0.5,
+            iterations: 17,
+            selected: true,
+        });
+        assert_eq!(keys(&cv), CV_POINT_FIELDS);
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //! than workers* (per query-group run, per sorted-order chunk — see
 //! [`super::plan::WorkPlan`] and `losses/sharded.rs`), so a worker that
 //! finishes early drains the stragglers' queues instead of idling.
+//! Model selection rides the same pool one level up: `ranksvm cv`
+//! submits each (fold × λ-path) chain as one task
+//! ([`crate::coordinator::modelsel`]), so a whole CV sweep is a single
+//! batch over the shared dataset view. `run` is non-reentrant, which is
+//! why those chains hand their inner oracles a 1-thread (inline) pool.
 //!
 //! **Scheduling-order freedom.** Stealing makes the execution order and
 //! the task→thread assignment nondeterministic, but no result bit can

@@ -102,6 +102,22 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Comma-separated f64 list, e.g. `--lambdas 1e-3,1e-2,0.1`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        anyhow!("--{name} expects comma-separated numbers, got {s:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +157,16 @@ mod tests {
         let a = args(&["--sizes", "1,2,30"]);
         assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 2, 30]);
         assert_eq!(a.usize_list_or("other", &[5]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = args(&["--lambdas", "1e-3,0.5, 2"]);
+        assert_eq!(a.f64_list_or("lambdas", &[]).unwrap(), vec![1e-3, 0.5, 2.0]);
+        assert_eq!(a.f64_list_or("other", &[0.25]).unwrap(), vec![0.25]);
+        let bad = args(&["--lambdas", "1,zap"]);
+        let err = bad.f64_list_or("lambdas", &[]).unwrap_err().to_string();
+        assert!(err.contains("--lambdas") && err.contains("zap"), "{err}");
     }
 
     #[test]

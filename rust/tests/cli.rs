@@ -138,6 +138,8 @@ fn cli_bad_flag_values_exit_2_naming_flag() {
         &["train", "--synthetic", "cadata", "--m", "100", "--lambda", "zap"][..],
         &["perf", "--sizes", "10,oops"][..],
         &["mem-probe", "--m", "x.y"][..],
+        &["cv", "--synthetic", "cadata", "--m", "60", "--lambdas", "1,zap"][..],
+        &["cv", "--synthetic", "cadata", "--m", "60", "--folds", "two"][..],
     ] {
         let out = Command::new(bin().unwrap()).args(args).output().expect("spawn ranksvm");
         assert_eq!(out.status.code(), Some(2), "{args:?}");
@@ -176,6 +178,65 @@ fn cli_rejects_bad_inputs() {
     // nonexistent file
     let (ok, _, _) = run(&["info", "--data", "/nonexistent/file.libsvm"]);
     assert!(!ok);
+}
+
+#[test]
+fn cli_cv_reports_the_lambda_path() {
+    if bin().is_none() {
+        return;
+    }
+    let sweep = |threads: &str| {
+        run(&[
+            "cv",
+            "--synthetic",
+            "cadata",
+            "--m",
+            "200",
+            "--loss",
+            "tree",
+            "--lambdas",
+            "1e-3,1e-1",
+            "--folds",
+            "3",
+            "--seed",
+            "7",
+            "--metric",
+            "auc",
+            "--threads",
+            threads,
+        ])
+    };
+    let (ok, stdout, err) = sweep("2");
+    assert!(ok, "cv failed: {err}");
+    // One JSON path report line with the pinned schema and fields.
+    assert!(stdout.contains("\"schema\":\"ranksvm-cv-path\""), "{stdout}");
+    assert!(stdout.contains("\"schema_version\":1"), "{stdout}");
+    assert!(stdout.contains("\"loss\":\"tree\""), "{stdout}");
+    assert!(stdout.contains("\"metric\":\"auc\""), "{stdout}");
+    assert!(stdout.contains("\"points\":["), "{stdout}");
+    assert!(stdout.contains("\"lambda\":"), "{stdout}");
+    assert!(stdout.contains("\"mean_error\":"), "{stdout}");
+    assert!(stdout.contains("\"mean_auc\":"), "{stdout}");
+    assert!(stdout.contains("\"mean_precision_at_k\":"), "{stdout}");
+    assert!(stdout.contains("\"fold_errors\":["), "{stdout}");
+    assert!(stdout.contains("\"selected_lambda\":"), "{stdout}");
+    assert!(stdout.contains("\"total_iterations\":"), "{stdout}");
+    // The report must carry no thread counts and no wall-clock fields:
+    // CI byte-diffs the reports across --threads 1/2/8.
+    assert!(!stdout.contains("thread"), "{stdout}");
+    assert!(!stdout.contains("secs"), "{stdout}");
+    // And the determinism contract end to end: another thread count,
+    // byte-identical report.
+    let (ok, stdout8, err) = sweep("8");
+    assert!(ok, "cv --threads 8 failed: {err}");
+    assert_eq!(stdout, stdout8, "cv report must be thread-count-invariant");
+
+    // Unknown metric: exit 2, one readable line naming the value.
+    let (ok, _, err) =
+        run(&["cv", "--synthetic", "cadata", "--m", "60", "--metric", "bogus"]);
+    assert!(!ok);
+    assert!(err.contains("bogus") && err.contains("metric"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "stderr: {err}");
 }
 
 #[test]

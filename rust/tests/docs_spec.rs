@@ -353,14 +353,37 @@ fn observability_histogram_bounds_match_the_constants() {
 
 #[test]
 fn observability_trace_tables_match_the_field_lists() {
-    use ranksvm::obs::trace::{END_FIELDS, ITER_FIELDS, START_FIELDS, TRACE_SCHEMA_VERSION};
+    use ranksvm::obs::trace::{
+        CV_POINT_FIELDS, END_FIELDS, ITER_FIELDS, START_FIELDS, TRACE_SCHEMA_VERSION,
+    };
     let doc = obs_text();
     assert_eq!(field_rows(&doc, "`start` event"), START_FIELDS);
     assert_eq!(field_rows(&doc, "`iter` event"), ITER_FIELDS);
     assert_eq!(field_rows(&doc, "`end` event"), END_FIELDS);
+    assert_eq!(field_rows(&doc, "`cv_point` event"), CV_POINT_FIELDS);
     assert!(
         doc.contains(&format!("trace schema_version is {TRACE_SCHEMA_VERSION}")),
         "trace schema version prose"
+    );
+}
+
+#[test]
+fn model_selection_docs_pin_the_cv_contract() {
+    // README documents the subcommand…
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md");
+    let readme = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    assert!(readme.contains("## Model selection"), "README needs a Model selection section");
+    assert!(readme.contains("ranksvm cv"), "README must show the cv subcommand");
+    assert!(readme.contains("--lambdas"), "README must document the λ grid flag");
+    // …and docs/DETERMINISM.md carries the model-selection row of the
+    // "Who relies on what" table plus its enforcement pointer.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/DETERMINISM.md");
+    let det = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    assert!(det.contains("model selection"), "DETERMINISM.md needs the model-selection row");
+    assert!(det.contains("cv_sweep"), "DETERMINISM.md must name the parallel engine");
+    assert!(
+        det.contains("tests/modelsel.rs"),
+        "DETERMINISM.md must point at the CV determinism battery"
     );
 }
 

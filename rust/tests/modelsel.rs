@@ -1,0 +1,278 @@
+//! CV determinism battery (docs/DETERMINISM.md "model selection").
+//!
+//! Pins the three contracts the λ-path engine advertises:
+//!
+//! 1. **Fold splits are byte-stable.** `kfold_indices` is a pure
+//!    function of `(m or qid multiset, folds, seed)` — the exact
+//!    assignments are recorded here as fixtures, so any RNG or
+//!    shuffle-order change shows up as a diff, not as silently moved
+//!    rows.
+//! 2. **The parallel sweep is the serial sweep.** `cv_sweep` at 1/2/8
+//!    threads must reproduce `cv_serial` bit-for-bit — every metric,
+//!    every iteration count, every fold model byte-compared.
+//! 3. **Warm starts change the cost, not the answer.** Along a 4-point
+//!    λ path the warm and cold engines select the same λ, land on
+//!    ε-close held-out metrics, and the warm path spends strictly
+//!    fewer total solver iterations.
+//!
+//! Plus the bounded-memory regression: CV of a `.pstore` must not
+//! materialize per-fold dataset copies (child-process peak-RSS probe).
+
+use ranksvm::coordinator::{
+    cross_validate, cv_serial, cv_sweep, kfold_indices, memprobe, CvConfig, CvReport, Method,
+    TrainConfig,
+};
+use ranksvm::data::store::{convert_libsvm, ConvertOptions};
+use ranksvm::data::{libsvm, synthetic, Dataset};
+use ranksvm::linalg::CsrMatrix;
+use ranksvm::obs::metrics::{CV_BMRM_ITERS, CV_FOLD_TRAININGS, CV_SWEEPS};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ranksvm_modelsel_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A minimal m-row dataset (features are irrelevant to the splitter).
+fn rows_only(m: usize, qid: Option<Vec<u64>>) -> Dataset {
+    let triplets: Vec<(usize, usize, f64)> = (0..m).map(|i| (i, 0, i as f64)).collect();
+    let x = CsrMatrix::from_triplets(m, 1, triplets);
+    let y: Vec<f64> = (0..m).map(|i| i as f64).collect();
+    Dataset::new(x, y, qid, "fixture".to_string())
+}
+
+// ------------------------------------------------- recorded fold splits
+
+#[test]
+fn global_kfold_split_matches_recorded_fixture() {
+    // Recorded for (m = 10, folds = 3, seed = 7). If this diff ever
+    // fires, the split function changed: that silently reassigns every
+    // CV result ever produced, so it must be a deliberate,
+    // fixture-updating decision — never an accident.
+    let ds = rows_only(10, None);
+    let folds = kfold_indices(&ds, 3, 7);
+    assert_eq!(folds, vec![vec![3, 4, 2, 0], vec![8, 6, 5], vec![9, 7, 1]]);
+    // And it is a pure function: same inputs, same bytes, every call.
+    assert_eq!(folds, kfold_indices(&ds, 3, 7));
+    assert_ne!(folds, kfold_indices(&ds, 3, 8), "seed must matter");
+}
+
+#[test]
+fn grouped_kfold_split_matches_recorded_fixture() {
+    // Recorded for (qid multiset below, folds = 3, seed = 42). Grouped
+    // splits move whole queries: fold 0 holds queries {0, 1}, fold 1
+    // holds {3, 4}, fold 2 holds {2} — row indices in dataset order.
+    let qid = vec![0, 0, 0, 1, 1, 2, 2, 2, 2, 3, 3, 3, 4, 4];
+    let ds = rows_only(qid.len(), Some(qid));
+    let folds = kfold_indices(&ds, 3, 42);
+    assert_eq!(
+        folds,
+        vec![vec![0, 1, 2, 3, 4], vec![9, 10, 11, 12, 13], vec![5, 6, 7, 8]]
+    );
+}
+
+// ------------------------------------------- parallel ≡ serial sweeps
+
+/// Every field the report carries, fold models byte-for-byte (`f64`
+/// equality on `Vec<f64>` is exact — no tolerance anywhere here).
+fn assert_reports_identical(a: &CvReport, b: &CvReport, tag: &str) {
+    assert_eq!(a.selected_lambda, b.selected_lambda, "{tag}: selected λ");
+    assert_eq!(a.total_iterations, b.total_iterations, "{tag}: iteration totals");
+    assert_eq!(a.points.len(), b.points.len(), "{tag}");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.lambda, pb.lambda, "{tag}");
+        assert_eq!(pa.fold_errors, pb.fold_errors, "{tag}: λ={} errors", pa.lambda);
+        assert_eq!(pa.fold_aucs, pb.fold_aucs, "{tag}: λ={} AUCs", pa.lambda);
+        assert_eq!(pa.fold_precisions, pb.fold_precisions, "{tag}: λ={}", pa.lambda);
+        assert_eq!(pa.fold_iterations, pb.fold_iterations, "{tag}: λ={}", pa.lambda);
+        assert_eq!(pa.fold_weights, pb.fold_weights, "{tag}: λ={} fold models", pa.lambda);
+        assert_eq!(pa.mean_error.to_bits(), pb.mean_error.to_bits(), "{tag}");
+        assert_eq!(pa.mean_auc.to_bits(), pb.mean_auc.to_bits(), "{tag}");
+        assert_eq!(
+            pa.mean_precision_at_k.to_bits(),
+            pb.mean_precision_at_k.to_bits(),
+            "{tag}"
+        );
+    }
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial_at_any_thread_count() {
+    let grouped = synthetic::queries(9, 8, 4, 3);
+    let global = synthetic::cadata_like(150, 11);
+    let lambdas = vec![1e-3, 1e-1, 1e-2]; // deliberately unsorted input order
+    for (ds, tag) in [(&grouped, "grouped"), (&global, "global")] {
+        for warm in [true, false] {
+            let base = TrainConfig { method: Method::Tree, ..Default::default() };
+            let cfg =
+                CvConfig { warm_start: warm, ..CvConfig::new(base, lambdas.clone(), 3, 5) };
+            let reference = cv_serial(ds, &cfg).unwrap();
+            for threads in [1usize, 2, 8] {
+                let tcfg = CvConfig {
+                    base: TrainConfig { n_threads: threads, ..cfg.base.clone() },
+                    ..cfg.clone()
+                };
+                let sweep = cv_sweep(ds, &tcfg).unwrap();
+                assert_reports_identical(
+                    &reference,
+                    &sweep,
+                    &format!("{tag} warm={warm} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cold_sweep_reproduces_the_cross_validate_reference() {
+    // `cross_validate` is the serial, cold, error-selected compat entry
+    // point; a cold `cv_sweep` must reproduce its points exactly.
+    let ds = synthetic::cadata_like(200, 4);
+    let base = TrainConfig { method: Method::Tree, ..Default::default() };
+    let lambdas = [1e-3, 1e-2, 1e-1];
+    let reference = cross_validate(&ds, &base, &lambdas, 3, 11).unwrap();
+    let cfg = CvConfig {
+        warm_start: false,
+        ..CvConfig::new(
+            TrainConfig { n_threads: 4, ..base },
+            lambdas.to_vec(),
+            3,
+            11,
+        )
+    };
+    let sweep = cv_sweep(&ds, &cfg).unwrap();
+    assert_eq!(reference.len(), sweep.points.len());
+    for (pa, pb) in reference.iter().zip(&sweep.points) {
+        assert_eq!(pa.lambda, pb.lambda);
+        assert_eq!(pa.fold_errors, pb.fold_errors);
+        assert_eq!(pa.fold_weights, pb.fold_weights);
+        assert_eq!(pa.iterations, pb.iterations);
+    }
+}
+
+// ----------------------------------------------- warm ≡ cold answers
+
+/// The warm-start differential on a 4-point path: same selected λ,
+/// ε-close held-out metrics, strictly fewer total solver iterations.
+/// Iteration totals come from the reports (deterministic per run), not
+/// from the process-global counters — other tests in this binary touch
+/// those concurrently.
+fn warm_cold_differential(ds: &Dataset, tag: &str) {
+    let lambdas = vec![0.3, 0.1, 0.03, 0.01];
+    let base = TrainConfig { method: Method::Tree, ..Default::default() };
+    let warm_cfg = CvConfig::new(base, lambdas, 3, 9);
+    let cold_cfg = CvConfig { warm_start: false, ..warm_cfg.clone() };
+    let warm = cv_serial(ds, &warm_cfg).unwrap();
+    let cold = cv_serial(ds, &cold_cfg).unwrap();
+
+    assert_eq!(
+        warm.selected_lambda, cold.selected_lambda,
+        "{tag}: warm and cold paths must select the same λ"
+    );
+    for (pw, pc) in warm.points.iter().zip(&cold.points) {
+        assert_eq!(pw.lambda, pc.lambda);
+        // Both runs are ε-optimal for the same objective, so held-out
+        // metrics agree to well within the BMRM tolerance's effect.
+        assert!(
+            (pw.mean_error - pc.mean_error).abs() < 0.05,
+            "{tag}: λ={}: warm error {} vs cold {}",
+            pw.lambda,
+            pw.mean_error,
+            pc.mean_error
+        );
+        assert!(
+            (pw.mean_auc - pc.mean_auc).abs() < 0.05,
+            "{tag}: λ={}: warm AUC {} vs cold {}",
+            pw.lambda,
+            pw.mean_auc,
+            pc.mean_auc
+        );
+    }
+    assert!(
+        warm.total_iterations < cold.total_iterations,
+        "{tag}: warm path must be strictly cheaper: warm {} vs cold {}",
+        warm.total_iterations,
+        cold.total_iterations
+    );
+}
+
+#[test]
+fn warm_path_matches_cold_with_fewer_iterations_global() {
+    warm_cold_differential(&synthetic::cadata_like(300, 8), "global");
+}
+
+#[test]
+fn warm_path_matches_cold_with_fewer_iterations_grouped() {
+    warm_cold_differential(&synthetic::queries(10, 10, 4, 1), "grouped");
+}
+
+#[test]
+fn cv_counters_are_monotone() {
+    // The process-global telemetry counters are shared across the whole
+    // test binary, so only monotonicity is assertable here; exact
+    // warm-vs-cold accounting lives in the differential above.
+    let before = (CV_SWEEPS.get(), CV_FOLD_TRAININGS.get(), CV_BMRM_ITERS.get());
+    let ds = synthetic::cadata_like(80, 2);
+    let base = TrainConfig { method: Method::Tree, ..Default::default() };
+    let cfg = CvConfig::new(base, vec![1e-2, 1e-1], 2, 3);
+    let report = cv_serial(&ds, &cfg).unwrap();
+    assert!(report.total_iterations > 0);
+    assert!(CV_SWEEPS.get() >= before.0 + 1);
+    assert!(CV_FOLD_TRAININGS.get() >= before.1 + 4, "2 folds × 2 λ");
+    assert!(CV_BMRM_ITERS.get() >= before.2 + report.total_iterations as u64);
+}
+
+// ------------------------------------------------ bounded-memory CV
+
+/// Regression for the owned per-fold dataset copies the first CV
+/// implementation made: fold views are row-index views into the one
+/// mmap'd store, so a CV sweep's peak RSS must stay close to a plain
+/// single training's — an engine that gathered k-1 train folds (×
+/// concurrent fold chains) would blow well past the payload-sized
+/// slack this asserts.
+#[test]
+fn cv_of_a_store_is_bounded_memory() {
+    let Ok(bin) = memprobe::find_cli_bin() else {
+        eprintln!("skipping: ranksvm binary not built (cargo build --release)");
+        return;
+    };
+    let ds = synthetic::reuters_like_with(40_000, 4000, 30, 17);
+    let text = tmp("cvmem.libsvm");
+    libsvm::write(&ds, &text).unwrap();
+    let pst = tmp("cvmem.pstore");
+    convert_libsvm(&text, &pst, &ConvertOptions::default()).unwrap();
+    let payload_kib = std::fs::metadata(&pst).unwrap().len() / 1024;
+
+    let probe = |extra: &[&str]| -> u64 {
+        let mut args = vec![
+            "mem-probe",
+            "--data",
+            pst.to_str().unwrap(),
+            "--method",
+            "tree",
+            "--max-iter",
+            "5",
+            "--no-verify",
+        ];
+        args.extend_from_slice(extra);
+        let out = std::process::Command::new(&bin).args(&args).output().expect("spawn ranksvm");
+        assert!(
+            out.status.success(),
+            "ranksvm {args:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+        memprobe::parse_peak(&stdout).unwrap_or_else(|| panic!("no peak in: {stdout}"))
+    };
+
+    let train_peak = probe(&[]);
+    let cv_peak = probe(&["--cv", "--lambdas", "1e-2,1e-1", "--folds", "3"]);
+    // O(m + dim) fold state, never O(nnz): half a payload of slack
+    // absorbs allocator noise while still catching fold copies (which
+    // would cost ≥ (k-1)/k of the payload per concurrent chain).
+    assert!(
+        cv_peak < train_peak + payload_kib / 2 + 4096,
+        "CV peak {cv_peak} KiB vs train peak {train_peak} KiB \
+         (payload {payload_kib} KiB) — per-fold dataset copies are back?"
+    );
+}

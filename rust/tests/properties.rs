@@ -505,6 +505,74 @@ fn prop_rlevel_equals_tree() {
     });
 }
 
+/// Property: registry-wide CV — `cross_validate` under every registered
+/// loss survives degenerate folds: a fold holding a single query, more
+/// folds than distinct queries (an empty test fold, and train splits
+/// missing whole queries), all-tied labels (zero comparable pairs for
+/// the pairwise family, one class for TopPush), and per-query-constant
+/// labels (zero *effective* pairs in every group). No loss may panic,
+/// and every reported metric must come back finite — degenerate groups
+/// contribute zero, never NaN, so the JSON path report stays
+/// well-formed. Iterates the registry, not a hardcoded list: a new
+/// loss inherits the obligation by existing.
+#[test]
+fn prop_registry_cv_survives_degenerate_folds() {
+    use ranksvm::coordinator::{cross_validate, Method, TrainConfig};
+    use ranksvm::data::Dataset;
+    use ranksvm::linalg::CsrMatrix;
+    for_cases(2, |rng| {
+        let m = 10 + rng.below(14);
+        let mut fixtures: Vec<(Dataset, &str)> = Vec::new();
+        let x = {
+            let mut cols: Vec<f64> = Vec::new();
+            for _ in 0..m {
+                cols.push(rng.normal());
+            }
+            move || -> CsrMatrix {
+                let triplets: Vec<(usize, usize, f64)> =
+                    (0..m).map(|i| (i, i % 3, cols[i])).collect();
+                CsrMatrix::from_triplets(m, 3, triplets)
+            }
+        };
+        // 2 queries (one a singleton) under 3 folds: a single-query
+        // fold, an empty test fold, and train splits losing a query.
+        let qid: Vec<u64> = (0..m).map(|i| if i == 0 { 7 } else { 3 }).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.below(3) as f64).collect();
+        fixtures.push((Dataset::new(x(), y, Some(qid), "deg"), "single-query-fold"));
+        // All-tied labels: zero comparable pairs / one TopPush class.
+        let tied = vec![1.0; m];
+        fixtures.push((Dataset::new(x(), tied.clone(), None, "deg"), "all-tied-global"));
+        let qid: Vec<u64> = (0..m).map(|i| (i as u64) % 4).collect();
+        fixtures.push((Dataset::new(x(), tied, Some(qid.clone()), "deg"), "all-tied-grouped"));
+        // Labels constant within each query: pairs exist globally but
+        // every group is vacuous (zero effective pairs).
+        let y: Vec<f64> = qid.iter().map(|&q| q as f64).collect();
+        fixtures.push((Dataset::new(x(), y, Some(qid), "deg"), "zero-effective-pairs"));
+        for (ds, tag) in &fixtures {
+            for &meth in Method::all() {
+                let base = TrainConfig {
+                    method: meth,
+                    epsilon: 1e-2,
+                    max_iter: 15,
+                    ..Default::default()
+                };
+                let points = cross_validate(ds, &base, &[1e-2, 1e-1], 3, rng.next_u64())
+                    .unwrap_or_else(|e| panic!("{} on {tag}: {e}", meth.name()));
+                assert_eq!(points.len(), 2, "{} on {tag}", meth.name());
+                for p in &points {
+                    for v in [p.mean_error, p.mean_auc, p.mean_precision_at_k] {
+                        assert!(
+                            v.is_finite(),
+                            "{} on {tag}: non-finite metric {v}",
+                            meth.name()
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Property: loss is translation-invariant in scores (only differences
 /// p_i − p_j enter eq. 4), and scales the subgradient coherently.
 #[test]
